@@ -1,0 +1,6 @@
+"""Build-time Python for ScatterMoE: L1 Pallas kernels + L2 JAX model.
+
+Nothing in this package is imported at serving time — ``aot.py`` lowers all
+entry points to HLO text once (``make artifacts``) and the Rust coordinator
+executes the artifacts via PJRT.
+"""

@@ -1,0 +1,27 @@
+"""L1 — Pallas kernels for ScatterMoE (build-time only, AOT-lowered).
+
+Core primitives (the paper's contribution):
+  - :mod:`.scatter2scatter` — fused gather → grouped GEMM → scatter.
+  - :mod:`.group_xty`       — grouped Xᵀ·∇Y for per-expert weight grads.
+  - :mod:`.grouping`        — standalone group/scatter copy kernels.
+
+Baselines (everything the paper benchmarks against):
+  - :mod:`.padded_grouped`  — Megablocks-style copy + pad + grouped GEMM.
+  - :mod:`.naive`           — HF-style dense/per-expert loop.
+  - :mod:`.dense`           — plain dense MLP.
+
+Substrate:
+  - :mod:`.indexing`        — routing, expert sort, padded block indices.
+  - :mod:`.ref`             — pure-jnp oracles (ground truth for pytest).
+"""
+
+from . import (  # noqa: F401
+    dense,
+    group_xty,
+    grouping,
+    indexing,
+    naive,
+    padded_grouped,
+    ref,
+    scatter2scatter,
+)

@@ -1,0 +1,143 @@
+"""Standalone group / scatter copy kernels (paper §3.1 steps 2 and 4).
+
+ScatterMoE's forward pass never calls these — that is the whole point of
+``scatter2scatter``.  They exist for:
+
+  * the backward pass (Algorithm 2 groups ``X`` and the weighted ``∇Y``
+    once per ParallelLinear),
+  * the Megablocks-style baseline (which *must* copy), and
+  * unit benchmarks isolating the cost of the copies the paper avoids.
+
+Both kernels use the same padded-index-block grid as ``scatter2scatter``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import indexing
+
+DEFAULT_BLOCK = 128
+
+
+def _copy_kernel(
+    block_row_start_ref,
+    block_row_end_ref,
+    order_ref,
+    weights_ref,  # (Tk,) slot-major routing weights, or None
+    x_ref,
+    y_ref,
+    *,
+    block_m: int,
+    k: int,
+    direction: str,  # "group" | "scatter"
+    weighted: bool,
+):
+    m = pl.program_id(0)
+    row_start = block_row_start_ref[m]
+    row_end = block_row_end_ref[m]
+    tk = order_ref.shape[0]
+
+    g = row_start + jnp.arange(block_m, dtype=jnp.int32)
+    mask = g < row_end
+    g_safe = jnp.where(mask, g, 0)
+    slots = order_ref[g_safe]
+
+    if direction == "group":
+        # grouped position g <- token row order[g] // k
+        in_rows = slots // k if k > 1 else slots
+        out_rows = g_safe
+    else:
+        # slot order[g] <- grouped row g
+        in_rows = g_safe
+        out_rows = slots
+
+    tile = x_ref[in_rows]
+    if weighted:
+        tile = tile * weights_ref[slots][:, None]
+    out_rows = jnp.where(mask, out_rows, tk)  # dump row for padding
+    y_ref[out_rows] = tile.astype(y_ref.dtype)
+
+
+def _launch_copy(
+    x: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    weights_flat: jax.Array | None,
+    *,
+    k: int,
+    direction: str,
+    block_m: int,
+) -> jax.Array:
+    tk = order.shape[0]
+    d = x.shape[-1]
+    binfo = indexing.padded_block_info(expert_offsets, expert_counts, tk, block_m)
+    nb = binfo.block_expert.shape[0]
+    weighted = weights_flat is not None
+    if weights_flat is None:
+        weights_flat = jnp.ones((tk,), x.dtype)
+    kernel = functools.partial(
+        _copy_kernel,
+        block_m=block_m,
+        k=k,
+        direction=direction,
+        weighted=weighted,
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda m: (0,)),
+            pl.BlockSpec((nb,), lambda m: (0,)),
+            pl.BlockSpec((tk,), lambda m: (0,)),
+            pl.BlockSpec((tk,), lambda m: (0,)),
+            pl.BlockSpec((x.shape[0], d), lambda m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tk + 1, d), lambda m: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tk + 1, d), x.dtype),
+        interpret=True,
+    )(binfo.block_row_start, binfo.block_row_end, order, weights_flat, x)
+    return y[:tk]
+
+
+def group(
+    x: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    k: int,
+    weights_flat: jax.Array | None = None,
+    block_m: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Copy scattered tokens into grouped (expert-sorted) order.
+
+    ``weights_flat`` is the slot-major ``(T*k,)`` routing weight vector; when
+    given, each copied row is pre-scaled (used to build the weighted ∇Ȳ of
+    Algorithm 2 in a single pass).
+    """
+    return _launch_copy(
+        x, order, expert_offsets, expert_counts, weights_flat,
+        k=k, direction="group", block_m=block_m,
+    )
+
+
+def scatter(
+    y_grouped: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    weights_flat: jax.Array | None = None,
+    block_m: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Copy grouped rows back to slot order (inverse of :func:`group`)."""
+    return _launch_copy(
+        y_grouped, order, expert_offsets, expert_counts, weights_flat,
+        k=1, direction="scatter", block_m=block_m,
+    )

@@ -1,0 +1,226 @@
+"""Routing / sorting / padded-block-index substrate for ScatterMoE.
+
+This module implements the host-side bookkeeping the paper describes in
+section 3.1: instead of materialising a padded, expert-sorted copy of the
+token embeddings in HBM (what Megablocks does), ScatterMoE sorts the
+*indices* of the tokens and pads the *index blocks* so that every kernel
+grid block touches exactly one expert.  The embeddings themselves are only
+ever gathered tile-by-tile inside the kernel.
+
+All functions here are pure ``jnp`` with static shapes so they trace into
+the same XLA module as the Pallas kernels (everything is AOT-lowered once;
+nothing here runs in Python at serving time).
+
+Glossary used across the code base (matches the paper's notation):
+
+- ``T``      number of tokens (batch and time flattened).
+- ``k``      experts per token (top-k).
+- ``E``      number of experts.
+- ``slot``   a (token, choice) pair, flat index ``s = t * k + i`` with
+             ``i < k``; there are ``T * k`` slots.
+- ``order``  (``o`` in the paper) the expert-sorted permutation of slots:
+             ``order[g]`` is the slot stored at *grouped* position ``g``.
+- ``expert_offsets`` exclusive prefix sum of per-expert counts; expert
+             ``e`` owns grouped positions ``[offsets[e], offsets[e+1])``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RouteInfo(NamedTuple):
+    """Everything the kernels need to know about one routing decision."""
+
+    #: ``(T, k)`` router combine weights (softmax over the selected k).
+    weights: jax.Array
+    #: ``(T, k)`` selected expert ids, int32.
+    expert_idx: jax.Array
+    #: ``(T * k,)`` expert-sorted slot permutation (``o`` in the paper).
+    order: jax.Array
+    #: ``(E + 1,)`` exclusive prefix sum of per-expert counts, int32.
+    expert_offsets: jax.Array
+    #: ``(E,)`` per-expert token counts, int32.
+    expert_counts: jax.Array
+
+
+class BlockInfo(NamedTuple):
+    """Padded *index* blocks for a Pallas grid (the paper's key trick).
+
+    ``num_blocks`` is static: ``ceil(Tk / block_size) + E`` upper-bounds the
+    number of (expert, block) pairs for any routing outcome, so the grid
+    shape never depends on router output.  Blocks past ``total_blocks`` are
+    empty (``row_start == row_end``) and fully masked inside the kernel.
+    """
+
+    #: ``(num_blocks,)`` expert id of each grid block, int32.
+    block_expert: jax.Array
+    #: ``(num_blocks,)`` first grouped position covered by the block.
+    block_row_start: jax.Array
+    #: ``(num_blocks,)`` one-past-last *valid* grouped position of the block.
+    block_row_end: jax.Array
+
+
+def num_padded_blocks(num_tokens: int, k: int, num_experts: int, block_size: int) -> int:
+    """Static upper bound on grid blocks: every expert may waste < 1 block."""
+    return math.ceil(num_tokens * k / block_size) + num_experts
+
+
+def _topk_iterative(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k via k argmax passes.
+
+    ``jax.lax.top_k`` lowers to the modern ``topk(..., largest=true)`` HLO
+    op which the XLA 0.5.1 text parser (the Rust runtime's XLA) rejects;
+    k argmax+mask passes lower to plain reduces that round-trip cleanly,
+    and k is small (≤ 32) everywhere in this code base.
+    """
+    vals, idxs = [], []
+    masked = logits
+    neg_inf = jnp.asarray(-jnp.inf, logits.dtype)
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)
+        val = jnp.take_along_axis(masked, idx[..., None], axis=-1)[..., 0]
+        idxs.append(idx)
+        vals.append(val)
+        onehot = jax.nn.one_hot(idx, logits.shape[-1], dtype=jnp.bool_)
+        masked = jnp.where(onehot, neg_inf, masked)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def topk_router(
+    logits: jax.Array, k: int, *, normalize: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routing as used by Mixtral: softmax over the *selected* logits.
+
+    Args:
+        logits: ``(T, E)`` router logits.
+        k: experts per token.
+        normalize: renormalise the top-k weights to sum to one (Mixtral
+            convention).  If ``False`` the raw softmax mass is kept
+            (Switch/ST-MoE convention).
+
+    Returns:
+        ``(weights, expert_idx)`` both ``(T, k)``; weights are f32 and
+        expert ids int32, ordered by decreasing router score.
+    """
+    top_logits, expert_idx = _topk_iterative(logits, k)
+    if normalize:
+        weights = jax.nn.softmax(top_logits, axis=-1)
+    else:
+        full = jax.nn.softmax(logits, axis=-1)
+        weights = jnp.take_along_axis(full, expert_idx, axis=-1)
+    return weights.astype(jnp.float32), expert_idx.astype(jnp.int32)
+
+
+def sort_tokens_by_expert(expert_idx: jax.Array, num_experts: int) -> RouteInfo:
+    """Build the grouped ordering ``o`` and per-expert segment offsets.
+
+    The sort is stable so that, within an expert, slots remain in
+    chronological order — this matters for reproducibility and for the
+    scatter step's write locality.
+    """
+    tk = expert_idx.size
+    flat = expert_idx.reshape(tk)
+    order = jnp.argsort(flat, stable=True).astype(jnp.int32)
+    counts = jnp.bincount(flat, length=num_experts).astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    return RouteInfo(
+        weights=jnp.zeros(expert_idx.shape, jnp.float32),  # filled by caller
+        expert_idx=expert_idx.astype(jnp.int32),
+        order=order,
+        expert_offsets=offsets,
+        expert_counts=counts,
+    )
+
+
+def route(logits: jax.Array, k: int, num_experts: int, *, normalize: bool = True) -> RouteInfo:
+    """Full routing step: top-k selection + expert sort (paper §3.1 step 1-2).
+
+    Only *indices* are produced; no token embedding is copied.
+    """
+    weights, expert_idx = topk_router(logits, k, normalize=normalize)
+    info = sort_tokens_by_expert(expert_idx, num_experts)
+    return info._replace(weights=weights)
+
+
+def padded_block_info(
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    tokens_times_k: int,
+    block_size: int,
+) -> BlockInfo:
+    """Compute the padded (expert, block) grid — the heart of ScatterMoE.
+
+    Megablocks pads the *data*: every expert segment is rounded up to a
+    block multiple inside a freshly allocated HBM array.  ScatterMoE pads
+    the *blocks*: expert ``e`` with ``c_e`` rows contributes
+    ``ceil(c_e / B)`` grid blocks, the last one partially masked.  The
+    grouped array itself stays compact (``Tk`` rows, zero padding bytes).
+
+    All outputs have the static length :func:`num_padded_blocks`.
+    """
+    num_experts = expert_counts.shape[0]
+    nb = num_padded_blocks(tokens_times_k, 1, num_experts, block_size)
+    # 'tokens_times_k' already includes k; pass k=1 above to avoid double count.
+    blocks_per_expert = (expert_counts + block_size - 1) // block_size
+    # first grid-block id of each expert
+    block_cum = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(blocks_per_expert).astype(jnp.int32)]
+    )
+    total_blocks = block_cum[-1]
+    m = jnp.arange(nb, dtype=jnp.int32)
+    # expert owning grid block m: searchsorted over the per-expert block ranges
+    block_expert = (
+        jnp.searchsorted(block_cum, m, side="right").astype(jnp.int32) - 1
+    )
+    block_expert = jnp.clip(block_expert, 0, num_experts - 1)
+    j = m - block_cum[block_expert]  # block index *within* the expert
+    row_start = expert_offsets[block_expert] + j * block_size
+    seg_end = expert_offsets[block_expert] + expert_counts[block_expert]
+    row_end = jnp.minimum(row_start + block_size, seg_end)
+    # blocks past the real total are empty
+    valid = m < total_blocks
+    row_start = jnp.where(valid, row_start, 0).astype(jnp.int32)
+    row_end = jnp.where(valid, row_end, 0).astype(jnp.int32)
+    return BlockInfo(
+        block_expert=block_expert,
+        block_row_start=row_start,
+        block_row_end=row_end,
+    )
+
+
+def padded_group_sizes(expert_counts: jax.Array, block_size: int) -> jax.Array:
+    """Per-expert sizes after Megablocks-style *data* padding (baseline).
+
+    Used by the padded-grouped baseline kernel and by the analytic memory
+    model: ``sum(padded_group_sizes)`` rows are materialised in HBM versus
+    ScatterMoE's ``Tk``.
+    """
+    return ((expert_counts + block_size - 1) // block_size * block_size).astype(
+        jnp.int32
+    )
+
+
+def slot_to_token(order: jax.Array, k: int) -> jax.Array:
+    """Map grouped positions to source *token* rows (``o[g] // k``)."""
+    return (order // k).astype(jnp.int32)
+
+
+def load_balance_loss(logits: jax.Array, expert_idx: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-Transformer auxiliary load-balancing loss (Fedus et al. 2022).
+
+    ``E * sum_e f_e * P_e`` where ``f_e`` is the fraction of slots routed to
+    expert ``e`` and ``P_e`` the mean router probability of ``e``.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    mean_prob = probs.mean(axis=0)
+    tk = expert_idx.size
+    counts = jnp.bincount(expert_idx.reshape(tk), length=num_experts)
+    frac = counts.astype(jnp.float32) / tk
+    return num_experts * jnp.sum(frac * mean_prob)

@@ -1,0 +1,107 @@
+"""Naive SMoE baselines (the paper's "Naive HF impl." comparison point).
+
+Two flavours, both deliberately inefficient in the ways the paper's
+introduction describes:
+
+* :func:`naive_dense_moe` — the XLA-static-shape analogue of HuggingFace's
+  ``MixtralSparseMoeBlock`` loop: every token is pushed through **every**
+  expert and the router weights mask the result.  Under ``jit`` (static
+  shapes) the HF per-expert dynamic gather is not expressible, so the
+  masked-dense form is the faithful "what a naive user writes" baseline;
+  it wastes an ``E/k`` factor of FLOPs, which is why it loses exactly like
+  the HF loop loses on GPU.  (Substitution documented in DESIGN.md §2.)
+
+* :func:`capacity_moe` — the classic TPU/Switch-Transformer baseline with a
+  fixed per-expert *capacity*: tokens beyond capacity are **dropped**, and
+  under-used experts compute on zero padding.  This reproduces the
+  behaviour the paper's introduction criticises about fixed-capacity
+  implementations.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_dense_moe(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    weights: jax.Array,
+    expert_idx: jax.Array,
+    *,
+    activation=jax.nn.silu,
+) -> jax.Array:
+    """Every token through every expert; router weights select/combine."""
+    num_experts = w1.shape[0]
+    # (T, E) dense combine matrix built from the top-k routing decision
+    t, k = expert_idx.shape
+    dense_w = jnp.zeros((t, num_experts), x.dtype)
+    dense_w = dense_w.at[jnp.arange(t)[:, None], expert_idx].add(weights)
+    h = jnp.einsum("ti,eio->teo", x, w1)
+    h = activation(h)
+    y = jnp.einsum("teo,eod->ted", h, w2)
+    return jnp.einsum("te,ted->td", dense_w, y)
+
+
+def expert_capacity(tokens: int, k: int, num_experts: int, capacity_factor: float) -> int:
+    """Switch-Transformer capacity: ``ceil(cf · T·k / E)`` (static)."""
+    return int(math.ceil(capacity_factor * tokens * k / num_experts))
+
+
+def capacity_moe(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    weights: jax.Array,
+    expert_idx: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    capacity_factor: float = 1.25,
+    activation=jax.nn.silu,
+) -> jax.Array:
+    """Fixed-capacity MoE with token dropping (Switch/TPU style).
+
+    Expert ``e`` processes its first ``C`` routed slots (chronological
+    order, thanks to the stable sort); the rest are *dropped* — their
+    contribution to the output is zero, exactly as in capacity-constrained
+    implementations.  Unused capacity computes on zero padding.
+    """
+    t, k = expert_idx.shape
+    tk = t * k
+    num_experts = w1.shape[0]
+    cap = expert_capacity(t, k, num_experts, capacity_factor)
+
+    # (E, C) slot gather table: entry j of expert e is its j-th routed slot
+    j = jnp.arange(cap, dtype=jnp.int32)
+    gpos = expert_offsets[:-1, None] + j[None, :]  # grouped positions
+    valid = j[None, :] < expert_counts[:, None]
+    gpos_safe = jnp.clip(gpos, 0, tk - 1)
+    slots = jnp.where(valid, order[gpos_safe], tk)  # Tk = "dropped" marker
+
+    token_of_slot = jnp.where(slots < tk, slots // k, 0)
+    xg = x[token_of_slot] * valid[..., None]  # (E, C, d_model), zero padded
+
+    h = activation(jnp.einsum("eci,eio->eco", xg, w1))
+    y = jnp.einsum("eco,eod->ecd", h, w2)  # (E, C, d_model)
+
+    # scatter back to slot order; dropped slots keep zero output
+    out_slots = jnp.zeros((tk + 1, x.shape[-1]), x.dtype)
+    out_slots = out_slots.at[slots.reshape(-1)].set(y.reshape(-1, y.shape[-1]))
+    out_slots = out_slots[:tk].reshape(t, k, -1)
+    return jnp.einsum("tk,tkd->td", weights, out_slots)
+
+
+def dropped_fraction(
+    expert_counts: jax.Array, tokens: int, k: int, capacity_factor: float
+) -> jax.Array:
+    """Fraction of routed slots dropped by :func:`capacity_moe` (metric)."""
+    num_experts = expert_counts.shape[0]
+    cap = expert_capacity(tokens, k, num_experts, capacity_factor)
+    dropped = jnp.maximum(expert_counts - cap, 0).sum()
+    return dropped.astype(jnp.float32) / (tokens * k)

@@ -1,0 +1,298 @@
+"""Megablocks-style *padded grouped* baseline (what the paper improves on).
+
+Megablocks (Gale et al., 2023) computes an SMoE layer as:
+
+    1. **group copy**: materialise an expert-sorted copy of the tokens in
+       HBM, padding every expert segment up to a block multiple,
+    2. **grouped GEMM** over the padded, contiguous segments,
+    3. **scatter copy** of the results back to token order.
+
+Steps 1 and 3 allocate `sum_e ceil(c_e/B)·B` rows — strictly more than the
+compact ``T·k`` rows ScatterMoE touches, and the padding grows with the
+number of experts (paper §4.2: this is why Megablocks' throughput drops at
+high granularity).  This module reproduces exactly that pipeline with three
+separate Pallas kernel launches and a *materialised* padded intermediate,
+so the benchmarks measure the cost the paper attributes to it.
+
+The padded array length must be static: it is the worst case
+``ceil(Tk/B)·B + E·B`` (every expert wastes < 1 block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import indexing
+
+DEFAULT_BLOCK_M = 128
+
+
+def padded_rows(tokens_times_k: int, num_experts: int, block_m: int) -> int:
+    """Static size of the materialised padded array (rows)."""
+    return indexing.num_padded_blocks(tokens_times_k, 1, num_experts, block_m) * block_m
+
+
+def _group_padded_kernel(
+    block_row_start_ref,
+    block_row_end_ref,
+    order_ref,
+    x_ref,       # (T, d) scattered tokens
+    xpad_ref,    # (block_m, d) output block m of the padded array
+    *,
+    block_m: int,
+    k: int,
+):
+    m = pl.program_id(0)
+    row_start = block_row_start_ref[m]
+    row_end = block_row_end_ref[m]
+    g = row_start + jnp.arange(block_m, dtype=jnp.int32)
+    mask = g < row_end
+    g_safe = jnp.where(mask, g, 0)
+    slots = order_ref[g_safe]
+    in_rows = slots // k if k > 1 else slots
+    tile = x_ref[in_rows]
+    # zero padding rows — Megablocks materialises these zeros in HBM
+    xpad_ref[...] = jnp.where(mask[:, None], tile, 0.0).astype(xpad_ref.dtype)
+
+
+def group_padded(
+    x: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    k: int,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> jax.Array:
+    """Step 1: the HBM group-copy into a padded, expert-sorted array."""
+    tk = order.shape[0]
+    num_experts = expert_counts.shape[0]
+    d = x.shape[-1]
+    binfo = indexing.padded_block_info(expert_offsets, expert_counts, tk, block_m)
+    nb = binfo.block_expert.shape[0]
+    kernel = functools.partial(_group_padded_kernel, block_m=block_m, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda m: (0,)),
+            pl.BlockSpec((nb,), lambda m: (0,)),
+            pl.BlockSpec((tk,), lambda m: (0,)),
+            pl.BlockSpec((x.shape[0], d), lambda m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda m: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * block_m, d), x.dtype),
+        interpret=True,
+    )(binfo.block_row_start, binfo.block_row_end, order, x)
+
+
+def _padded_gemm_kernel(
+    block_expert_ref,
+    xpad_ref,  # (P, d_in) — the whole padded array
+    w_ref,     # (E, d_in, d_out)
+    ypad_ref,  # (P, d_out)
+    *,
+    block_m: int,
+):
+    # Full refs + in-kernel row ranges: the HLO interpreter's *blocked*
+    # BlockSpec path materialises per-step slices and is ~15x slower than
+    # reading through a full ref (see EXPERIMENTS.md §Perf) — on real TPU
+    # hardware this choice corresponds to letting the Mosaic pipeline DMA
+    # the rows, so the structure is unchanged.
+    m = pl.program_id(0)
+    expert = block_expert_ref[m]
+    rows = m * block_m + jnp.arange(block_m, dtype=jnp.int32)
+    x_tile = xpad_ref[rows]
+    w_tile = w_ref[expert]
+    ypad_ref[rows] = jnp.dot(
+        x_tile, w_tile, preferred_element_type=jnp.float32
+    ).astype(ypad_ref.dtype)
+
+
+def padded_gemm(
+    x_padded: jax.Array,
+    w: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    tokens_times_k: int,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> jax.Array:
+    """Step 2: grouped GEMM over the padded array (no gathers — data is
+    already sorted; the padding rows burn real FLOPs, as in Megablocks)."""
+    num_experts, d_in, d_out = w.shape
+    binfo = indexing.padded_block_info(
+        expert_offsets, expert_counts, tokens_times_k, block_m
+    )
+    nb = binfo.block_expert.shape[0]
+    p = x_padded.shape[0]
+    kernel = functools.partial(_padded_gemm_kernel, block_m=block_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda m: (0,)),
+            pl.BlockSpec((p, d_in), lambda m: (0, 0)),
+            pl.BlockSpec((num_experts, d_in, d_out), lambda m: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((p, d_out), lambda m: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, d_out), x_padded.dtype),
+        interpret=True,
+    )(binfo.block_expert, x_padded, w)
+
+
+def _scatter_from_padded_kernel(
+    block_row_start_ref,
+    block_row_end_ref,
+    order_ref,
+    ypad_ref,  # (P, d) — the whole padded result (full ref, see above)
+    y_ref,     # (Tk+1, d) slot-ordered output (+ dump row)
+    *,
+    block_m: int,
+):
+    m = pl.program_id(0)
+    row_start = block_row_start_ref[m]
+    row_end = block_row_end_ref[m]
+    tk = order_ref.shape[0]
+    g = row_start + jnp.arange(block_m, dtype=jnp.int32)
+    mask = g < row_end
+    g_safe = jnp.where(mask, g, 0)
+    out_rows = jnp.where(mask, order_ref[g_safe], tk)
+    pad_rows = m * block_m + jnp.arange(block_m, dtype=jnp.int32)
+    y_ref[out_rows] = ypad_ref[pad_rows].astype(y_ref.dtype)
+
+
+def scatter_from_padded(
+    y_padded: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> jax.Array:
+    """Step 3: the HBM scatter-copy back to slot order."""
+    tk = order.shape[0]
+    d = y_padded.shape[-1]
+    binfo = indexing.padded_block_info(expert_offsets, expert_counts, tk, block_m)
+    nb = binfo.block_expert.shape[0]
+    kernel = functools.partial(_scatter_from_padded_kernel, block_m=block_m)
+    y = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda m: (0,)),
+            pl.BlockSpec((nb,), lambda m: (0,)),
+            pl.BlockSpec((tk,), lambda m: (0,)),
+            pl.BlockSpec((y_padded.shape[0], d), lambda m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tk + 1, d), lambda m: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tk + 1, d), y_padded.dtype),
+        interpret=True,
+    )(binfo.block_row_start, binfo.block_row_end, order, y_padded)
+    return y[:tk]
+
+
+def padded_parallel_linear_raw(
+    x: jax.Array,
+    w: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    k: int,
+    grouped_in: bool = False,
+    grouped_out: bool = False,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> jax.Array:
+    """The full Megablocks-style pipeline: group → padded GEMM → scatter.
+
+    Returns the same value as :func:`..scatter2scatter.scatter2scatter`
+    (slot order, or grouped order when ``grouped_out``) — only the *cost*
+    differs: two extra materialised copies plus padding FLOPs.  Forward
+    only (no VJP) — use :func:`padded_parallel_linear` in training code.
+    """
+    tk = order.shape[0]
+    if grouped_in:
+        # already grouped: still copy into the padded layout (Megablocks
+        # keeps its blocked-sparse layout between the two MLP GEMMs)
+        xp = group_padded(
+            x, jnp.arange(tk, dtype=jnp.int32), expert_offsets, expert_counts,
+            k=1, block_m=block_m,
+        )
+    else:
+        xp = group_padded(
+            x, order, expert_offsets, expert_counts, k=k, block_m=block_m
+        )
+    yp = padded_gemm(xp, w, expert_offsets, expert_counts, tk, block_m=block_m)
+    if grouped_out:
+        # compact the padded result back to the dense grouped layout
+        return scatter_from_padded(
+            yp, jnp.arange(tk, dtype=jnp.int32), expert_offsets, expert_counts,
+            block_m=block_m,
+        )
+    return scatter_from_padded(
+        yp, order, expert_offsets, expert_counts, block_m=block_m
+    )
+
+
+def _padded_offsets(expert_counts: jax.Array, block_m: int) -> jax.Array:
+    sizes = indexing.padded_group_sizes(expert_counts, block_m)
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes).astype(jnp.int32)]
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def padded_parallel_linear(x, w, order, expert_offsets, expert_counts,
+                           k: int, block_m: int = DEFAULT_BLOCK_M):
+    """Differentiable Megablocks-style ParallelLinear (scattered in/out).
+
+    The hand-written backward mirrors Megablocks' own: gradients are
+    grouped into the *padded* layout (materialised copies), the ∇W GEMM
+    runs over padded segments, and ∇X is scattered back — so training
+    benchmarks charge the baseline its real copy + padding costs.
+    ``x`` is ``(T, d)`` for ``k>1`` fan-out or ``(T·k, d)`` slot-major for
+    ``k=1``.
+    """
+    y, _ = _ppl_fwd(x, w, order, expert_offsets, expert_counts, k, block_m)
+    return y
+
+
+def _ppl_fwd(x, w, order, expert_offsets, expert_counts, k, block_m):
+    tk = order.shape[0]
+    xp = group_padded(x, order, expert_offsets, expert_counts, k=k,
+                      block_m=block_m)
+    yp = padded_gemm(xp, w, expert_offsets, expert_counts, tk, block_m=block_m)
+    y = scatter_from_padded(yp, order, expert_offsets, expert_counts,
+                            block_m=block_m)
+    return y, (x, w, order, expert_offsets, expert_counts, xp)
+
+
+def _ppl_bwd(k, block_m, res, dy):
+    from .group_xty import group_xty  # local import: avoid cycle
+
+    x, w, order, expert_offsets, expert_counts, xp = res
+    tk = order.shape[0]
+    num_experts = w.shape[0]
+    poffsets = _padded_offsets(expert_counts, block_m)
+    # Megablocks backward: group the slot-grads into the padded layout
+    dyp = group_padded(dy, order, expert_offsets, expert_counts, k=1,
+                       block_m=block_m)
+    dw = group_xty(xp, dyp, poffsets, num_experts, block_m=block_m)
+    dxp = padded_gemm(dyp, jnp.swapaxes(w, 1, 2), expert_offsets,
+                      expert_counts, tk, block_m=block_m)
+    dx_slots = scatter_from_padded(dxp, order, expert_offsets, expert_counts,
+                                   block_m=block_m)
+    if k > 1:
+        t = x.shape[0]
+        dx = dx_slots.reshape(t, k, -1).sum(axis=1)
+    else:
+        dx = dx_slots
+    return (dx, dw, None, None, None)
+
+
+padded_parallel_linear.defvjp(_ppl_fwd, _ppl_bwd)

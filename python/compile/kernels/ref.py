@@ -1,0 +1,120 @@
+"""Pure-``jnp`` oracles for every kernel in this package.
+
+These are the correctness ground truth: deliberately simple, allocation-
+heavy, O(T·E) where convenient — never used at runtime, only by pytest and
+by ``aot.py``'s self-checks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter2scatter_ref(
+    x: jax.Array,
+    w: jax.Array,
+    order: jax.Array,
+    expert_idx_flat: jax.Array,
+    *,
+    k: int,
+    grouped_in: bool = False,
+    grouped_out: bool = False,
+) -> jax.Array:
+    """Direct (gather → per-row expert GEMV → scatter) computation.
+
+    ``expert_idx_flat`` is the *slot-major* expert assignment ``(T*k,)``
+    (i.e. ``expert_idx.reshape(-1)`` before any sorting).
+    """
+    tk = order.shape[0]
+    # expert of the row stored at grouped position g
+    expert_by_g = expert_idx_flat[order]
+    if grouped_in:
+        x_rows = x  # already grouped: row g of x belongs to grouped pos g
+    else:
+        src = order // k if k > 1 else order
+        x_rows = x[src]  # gather scattered tokens into grouped order
+    w_by_g = w[expert_by_g]  # (Tk, d_in, d_out)
+    y_grouped = jnp.einsum("gi,gio->go", x_rows, w_by_g)
+    if grouped_out:
+        return y_grouped
+    # scatter grouped rows back to slot order
+    out = jnp.zeros((tk, w.shape[-1]), y_grouped.dtype)
+    return out.at[order].set(y_grouped)
+
+
+def group_ref(
+    x: jax.Array, order: jax.Array, *, k: int, weights: jax.Array | None = None
+) -> jax.Array:
+    """Grouping copy: grouped position g gets token row ``order[g] // k``.
+
+    With ``weights`` (slot-major ``(T*k,)``), each copied row is scaled by
+    its routing weight — used for grouping ∇Y in the backward pass.
+    """
+    src = order // k if k > 1 else order
+    out = x[src]
+    if weights is not None:
+        out = out * weights[order][:, None]
+    return out
+
+
+def scatter_ref(
+    y_grouped: jax.Array, order: jax.Array, *, weights: jax.Array | None = None
+) -> jax.Array:
+    """Scatter copy: slot ``order[g]`` receives grouped row g (opt. scaled)."""
+    out = jnp.zeros_like(y_grouped)
+    vals = y_grouped
+    if weights is not None:
+        vals = vals * weights[order][:, None]
+    return out.at[order].set(vals)
+
+
+def group_xty_ref(
+    x_grouped: jax.Array,
+    dy_grouped: jax.Array,
+    expert_offsets: jax.Array,
+    num_experts: int,
+) -> jax.Array:
+    """Per-expert ∇W = X̄ᵉᵀ · ∇Ȳᵉ over each grouped segment."""
+    tk = x_grouped.shape[0]
+    g = jnp.arange(tk)
+    seg = jnp.searchsorted(expert_offsets[1:], g, side="right")
+    onehot = jax.nn.one_hot(seg, num_experts, dtype=x_grouped.dtype)  # (Tk, E)
+    return jnp.einsum("ge,gi,go->eio", onehot, x_grouped, dy_grouped)
+
+
+def moe_mlp_ref(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    weights: jax.Array,
+    expert_idx: jax.Array,
+    *,
+    activation=jax.nn.silu,
+) -> jax.Array:
+    """Dense-einsum SMoE MLP: every token through every selected expert.
+
+    ``Y_t = Σ_i  p[t,i] · f_{e[t,i]}(X_t)`` with ``f_e`` a 1-hidden-layer MLP.
+    """
+    h = jnp.einsum("ti,eio->teo", x, w1)  # (T, E, d_expert)
+    h = activation(h)
+    y_all = jnp.einsum("teo,eod->ted", h, w2)  # (T, E, d_model)
+    sel = jnp.take_along_axis(y_all, expert_idx[..., None], axis=1)  # (T, k, d)
+    return jnp.einsum("tk,tkd->td", weights, sel)
+
+
+def parallel_linear_ref(
+    x: jax.Array,
+    w: jax.Array,
+    weights: jax.Array,
+    expert_idx: jax.Array,
+) -> jax.Array:
+    """Combined ParallelLinear fwd: slot GEMVs + weighted sum (Algorithm 1)."""
+    y_all = jnp.einsum("ti,eio->teo", x, w)
+    sel = jnp.take_along_axis(y_all, expert_idx[..., None], axis=1)
+    return jnp.einsum("tk,tkd->td", weights, sel)
+
+
+def dense_mlp_ref(x: jax.Array, w1: jax.Array, w2: jax.Array, *, activation=jax.nn.silu):
+    """Plain dense MLP (Fig 6 baseline)."""
+    return activation(x @ w1) @ w2

@@ -1,0 +1,177 @@
+"""``scatter2scatter`` — the core fused Pallas kernel of ScatterMoE.
+
+One kernel performs, per grid block:
+
+    1. read the *padded index block* (which expert, which grouped rows),
+    2. gather the input rows straight from the scattered (or grouped)
+       source array into VMEM — no HBM copy of the token array is ever made,
+    3. run the expert's GEMM tile on the gathered rows (MXU work),
+    4. write the result rows either grouped (contiguous segment) or
+       scattered (back to slot order) — again without an intermediate copy.
+
+This is the Pallas/TPU re-think of the paper's Triton kernel: Triton's
+thread-block SMEM staging becomes VMEM blocks, the tensor-core WMMA becomes
+an MXU ``jnp.dot``, and the padded index array is consumed by in-kernel
+``pl.load`` / ``pl.store`` with a row mask (the paper pads *indices*, never
+data).  The four grouped/scattered combinations of Figure 2 are all
+expressed by the ``grouped_in`` / ``grouped_out`` flags.
+
+The kernel must be run with ``interpret=True`` on this image (real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute);
+the structure — BlockSpec over the output feature dim, padded block grid
+over rows — is the real-TPU schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import indexing
+
+#: default rows per grid block; multiples of 8 (f32 sublane) and ideally of
+#: 128 (MXU systolic dimension) on real hardware.
+DEFAULT_BLOCK_M = 128
+#: default output-feature columns per grid block (VMEM tile width).
+DEFAULT_BLOCK_N = 512
+
+
+def _s2s_kernel(
+    # scalar-ish metadata (full arrays, VMEM)
+    block_expert_ref,
+    block_row_start_ref,
+    block_row_end_ref,
+    order_ref,
+    # tensors
+    x_ref,  # (rows_in, d_in)    scattered tokens or grouped rows
+    w_ref,  # (E, d_in, block_n) expert weight tile (blocked over d_out)
+    y_ref,  # (rows_out, block_n) output tile (blocked over d_out)
+    *,
+    block_m: int,
+    k: int,
+    grouped_in: bool,
+    grouped_out: bool,
+):
+    m = pl.program_id(0)
+    expert = block_expert_ref[m]
+    row_start = block_row_start_ref[m]
+    row_end = block_row_end_ref[m]
+    tk = order_ref.shape[0]
+
+    # grouped positions handled by this block, and the padding mask
+    g = row_start + jnp.arange(block_m, dtype=jnp.int32)
+    mask = g < row_end
+    g_safe = jnp.where(mask, g, 0)
+
+    # map grouped position -> source row
+    if grouped_in:
+        in_rows = g_safe
+    else:
+        slots = order_ref[g_safe]
+        # scattered inputs are token-major: slot s reads token s // k
+        in_rows = slots // k if k > 1 else slots
+
+    # 2. gather the tile (HBM -> VMEM, no intermediate grouped copy)
+    x_tile = x_ref[in_rows]  # (block_m, d_in)
+    x_tile = jnp.where(mask[:, None], x_tile, 0.0)
+
+    # 3. expert GEMM tile on the MXU
+    w_tile = w_ref[expert]  # (d_in, block_n)
+    acc = jnp.dot(x_tile, w_tile, preferred_element_type=jnp.float32)
+
+    # 4. write, grouped (contiguous) or scattered (slot order).  Padding
+    #    rows are redirected to the dump row ``tk`` (sliced off by the host
+    #    wrapper) — the write itself needs no mask, mirroring the paper's
+    #    "pad the indices, not the data".
+    if grouped_out:
+        out_rows = g_safe
+    else:
+        out_rows = order_ref[g_safe]
+    out_rows = jnp.where(mask, out_rows, tk)
+    y_ref[out_rows] = acc.astype(y_ref.dtype)
+
+
+def scatter2scatter(
+    x: jax.Array,
+    w: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    k: int,
+    grouped_in: bool = False,
+    grouped_out: bool = False,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused gather → grouped GEMM → scatter (paper Algorithm 1 core).
+
+    Args:
+        x: ``(T, d_in)`` scattered tokens if ``grouped_in=False``; otherwise
+            ``(T*k, d_in)`` rows already in grouped (expert-sorted) order.
+        w: ``(E, d_in, d_out)`` per-expert transforms.
+        order: ``(T*k,)`` expert-sorted slot permutation (``o``).
+        expert_offsets: ``(E+1,)`` grouped segment offsets.
+        expert_counts: ``(E,)`` per-expert counts.
+        k: top-k fan-out (1 when the rows of ``x`` are already slot-major).
+        grouped_in / grouped_out: the four combinations of paper Figure 2.
+        block_m / block_n: VMEM tile shape.
+
+    Returns:
+        ``(T*k, d_out)`` — grouped order if ``grouped_out`` else slot order.
+    """
+    tk = order.shape[0]
+    num_experts, d_in, d_out = w.shape
+    out_dtype = out_dtype or x.dtype
+    if d_out % block_n != 0:
+        block_n = d_out  # small models: single feature tile
+    binfo = indexing.padded_block_info(expert_offsets, expert_counts, tk, block_m)
+    nb = binfo.block_expert.shape[0]
+
+    kernel = functools.partial(
+        _s2s_kernel,
+        block_m=block_m,
+        k=k,
+        grouped_in=grouped_in,
+        grouped_out=grouped_out,
+    )
+    grid = (nb, d_out // block_n)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb,), lambda m, n: (0,)),
+            pl.BlockSpec((nb,), lambda m, n: (0,)),
+            pl.BlockSpec((nb,), lambda m, n: (0,)),
+            pl.BlockSpec((tk,), lambda m, n: (0,)),
+            pl.BlockSpec((x.shape[0], d_in), lambda m, n: (0, 0)),
+            pl.BlockSpec((num_experts, d_in, block_n), lambda m, n: (0, 0, n)),
+        ],
+        # one extra "dump" row absorbs the padded index writes
+        out_specs=pl.BlockSpec((tk + 1, block_n), lambda m, n: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((tk + 1, d_out), out_dtype),
+        interpret=True,
+    )(
+        binfo.block_expert,
+        binfo.block_row_start,
+        binfo.block_row_end,
+        order,
+        x,
+        w,
+    )
+    return y[:tk]
+
+
+def combine(y_slots: jax.Array, weights: jax.Array) -> jax.Array:
+    """Paper Algorithm 1 epilogue: per-token weighted sum over the k slots.
+
+    ``y_slots`` is slot-major ``(T*k, d)``; the reshape/bmm is left to XLA
+    (it fuses into a single pass), matching the paper's ``view`` + ``bmm``.
+    """
+    t, k = weights.shape
+    y = y_slots.reshape(t, k, -1)
+    return jnp.einsum("tk,tkd->td", weights, y)

@@ -1,0 +1,152 @@
+"""Analytic TPU performance model for the ScatterMoE kernels.
+
+`interpret=True` gives CPU-numpy timings that say nothing about real-TPU
+behaviour, so (DESIGN.md §7) kernel efficiency on hardware is *estimated*
+from the BlockSpec structure: VMEM residency per grid step and MXU
+utilisation from tile shapes.  The paper's A100 results translate to the
+same kind of roofline argument: ScatterMoE's fused kernel is GEMM-bound,
+while padding/copies push Megablocks toward the memory roofline.
+
+Model assumptions (TPU v4-lite-ish, f32; bf16 doubles MXU rate):
+  * MXU: 128x128 systolic array, one 128x128x128 MAC pass / 128 cycles.
+  * VMEM: ~16 MiB/core usable; a kernel whose per-step working set
+    exceeds it cannot be scheduled without smaller blocks.
+  * HBM: ~1.2 TB/s, overlappable with compute (double buffering).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+MXU_DIM = 128
+VMEM_BYTES = 16 * 1024 * 1024
+HBM_BYTES_PER_SEC = 1.2e12
+MXU_MACS_PER_SEC = 275e12 / 2  # f32 ~ half of bf16 peak
+
+
+@dataclass
+class KernelEstimate:
+    """Per-grid-step resource estimate for one kernel configuration."""
+
+    name: str
+    vmem_bytes: int
+    gemm_macs: int
+    hbm_bytes: int
+    mxu_util: float
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    @property
+    def compute_time_s(self) -> float:
+        return self.gemm_macs / MXU_MACS_PER_SEC if self.gemm_macs else 0.0
+
+    @property
+    def memory_time_s(self) -> float:
+        return self.hbm_bytes / HBM_BYTES_PER_SEC
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_time_s >= self.memory_time_s else "memory"
+
+
+def _mxu_tile_util(m: int, k: int, n: int) -> float:
+    """Fraction of MXU MAC slots doing useful work for an (m,k)x(k,n) tile."""
+    eff = 1.0
+    for dim in (m, k, n):
+        pad = math.ceil(dim / MXU_DIM) * MXU_DIM
+        eff *= dim / pad
+    return eff
+
+
+def scatter2scatter_estimate(
+    *, block_m: int, d_in: int, d_out: int, block_n: int | None = None,
+    dtype_bytes: int = 4, avg_fill: float = 1.0,
+) -> KernelEstimate:
+    """Per-grid-step estimate for the fused scatter2scatter kernel.
+
+    ``avg_fill`` is the mean fraction of valid rows per padded index
+    block (1.0 = perfectly block-aligned routing; the static lower bound
+    for balanced routing at block 128 and E=32, T=2048·4 is ~0.94).
+    """
+    bn = block_n or d_out
+    vmem = (
+        block_m * d_in * dtype_bytes          # gathered X tile
+        + d_in * bn * dtype_bytes             # W[e] tile
+        + block_m * bn * dtype_bytes          # output tile
+        + block_m * 4 * 3                     # index vectors
+    )
+    macs = block_m * d_in * bn
+    useful = int(macs * avg_fill)
+    hbm = (
+        block_m * d_in * dtype_bytes          # gather reads
+        + d_in * bn * dtype_bytes             # weight tile read
+        + block_m * bn * dtype_bytes          # scatter writes
+    )
+    util = _mxu_tile_util(block_m, d_in, bn) * avg_fill
+    return KernelEstimate("scatter2scatter", vmem, useful, hbm, util)
+
+
+def padded_pipeline_estimate(
+    *, block_m: int, d_in: int, d_out: int, dtype_bytes: int = 4,
+    pad_ratio: float = 0.0,
+) -> KernelEstimate:
+    """Megablocks-style pipeline per-step estimate: identical GEMM tile
+    plus the materialised group/scatter copies (extra HBM traffic) and
+    padding FLOPs (``pad_ratio`` = padded_rows/Tk - 1)."""
+    bn = d_out
+    vmem = (
+        block_m * d_in * dtype_bytes
+        + d_in * bn * dtype_bytes
+        + block_m * bn * dtype_bytes
+    )
+    macs = int(block_m * d_in * bn * (1.0 + pad_ratio))
+    # copies: X in+out (group), Y in+out (scatter) on top of GEMM traffic
+    hbm = (
+        2 * block_m * d_in * dtype_bytes * (1.0 + pad_ratio)
+        + d_in * bn * dtype_bytes
+        + 2 * block_m * bn * dtype_bytes * (1.0 + pad_ratio)
+        + block_m * (d_in + bn) * dtype_bytes
+    )
+    util = _mxu_tile_util(block_m, d_in, bn) / (1.0 + pad_ratio)
+    return KernelEstimate("padded_grouped", vmem, macs, int(hbm), util)
+
+
+def roofline_ratio(scatter: KernelEstimate, padded: KernelEstimate) -> float:
+    """Estimated TPU speedup of scatter over the padded pipeline."""
+    t_s = max(scatter.compute_time_s, scatter.memory_time_s)
+    t_p = max(padded.compute_time_s, padded.memory_time_s)
+    return t_p / t_s if t_s > 0 else float("inf")
+
+
+def report(d_model: int = 4096, d_expert: int = 2048, block_m: int = 128,
+           num_experts: int = 32, tokens_k: int = 245760) -> str:
+    """Human-readable estimate at the paper's unit config (EXPERIMENTS §Perf)."""
+    # balanced routing: per-expert rows, average fill of the last block
+    per = tokens_k / num_experts
+    fill = per / (math.ceil(per / block_m) * block_m)
+    pad_ratio = 1.0 / fill - 1.0
+    s = scatter2scatter_estimate(
+        block_m=block_m, d_in=d_model, d_out=d_expert, block_n=512,
+        avg_fill=fill,
+    )
+    p = padded_pipeline_estimate(
+        block_m=block_m, d_in=d_model, d_out=d_expert, pad_ratio=pad_ratio
+    )
+    lines = [
+        f"config: d_model={d_model} d_expert={d_expert} block_m={block_m} "
+        f"E={num_experts} Tk={tokens_k} fill={fill:.3f}",
+        f"scatter2scatter: VMEM {s.vmem_bytes/2**20:.2f} MiB (fits: {s.fits_vmem}), "
+        f"MXU util {s.mxu_util:.2f}, {s.bound}-bound",
+        f"padded pipeline: VMEM {p.vmem_bytes/2**20:.2f} MiB, "
+        f"MXU util {p.mxu_util:.2f}, {p.bound}-bound",
+        f"estimated TPU speedup (scatter/padded): {roofline_ratio(s, p):.2f}x "
+        f"(paper measures 1.1-1.4x on A100 at this scale)",
+    ]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

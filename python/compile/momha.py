@@ -1,0 +1,205 @@
+"""Mixture of Multi-head Attention — MoMHA (paper §3.3, Algorithm 4).
+
+The Tan et al. (2023) variant reproduced by the paper: key and value
+projections are **dense and shared** across experts (``h_expert`` heads),
+while the query and output projections are per-expert SMoE transforms.
+Selecting ``k`` of ``E`` experts yields ``k · h_expert`` active query heads
+attending over the shared key heads — structurally Grouped-Query Attention
+where each MoMHA expert plays the role of a GQA group.
+
+The ScatterMoE advantage demonstrated here (Figure 3): because
+``ParallelLinear`` supports scattered→scattered transforms, the embeddings
+stay in **chronological order** through the whole block — positional
+embeddings (RoPE) and the attention itself need no re-sorting, and no
+group/scatter copy pair is inserted around the attention like a
+Megablocks-based MoA requires.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import indexing
+from .kernels.padded_grouped import padded_parallel_linear
+from .parallel_linear import parallel_linear
+
+
+class MoMHAParams(NamedTuple):
+    """Parameter bundle for one MoMHA layer."""
+
+    router: jax.Array  # (d_model, E)
+    wq: jax.Array      # (E, d_model, h_expert * d_head)  per-expert queries
+    wk: jax.Array      # (d_model, h_expert * d_head)     shared keys
+    wv: jax.Array      # (d_model, h_expert * d_head)     shared values
+    wo: jax.Array      # (E, h_expert * d_head, d_model)  per-expert output
+
+
+def init_momha(
+    key: jax.Array, d_model: int, num_experts: int, h_expert: int, d_head: int
+) -> MoMHAParams:
+    """He-style init for one MoMHA layer."""
+    kr, kq, kk, kv, ko = jax.random.split(key, 5)
+    d_out = h_expert * d_head
+    s_in = d_model ** -0.5
+    return MoMHAParams(
+        router=jax.random.normal(kr, (d_model, num_experts), jnp.float32) * s_in,
+        wq=jax.random.normal(kq, (num_experts, d_model, d_out), jnp.float32) * s_in,
+        wk=jax.random.normal(kk, (d_model, d_out), jnp.float32) * s_in,
+        wv=jax.random.normal(kv, (d_model, d_out), jnp.float32) * s_in,
+        wo=jax.random.normal(ko, (num_experts, d_out, d_model), jnp.float32)
+        * (d_out ** -0.5),
+    )
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding over the last dim (pairs of channels).
+
+    ``x``: ``(..., T, n_heads, d_head)``; ``positions``: ``(T,)``.
+    """
+    d_head = x.shape[-1]
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (T, 1, half) broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def momha(
+    x: jax.Array,
+    params: MoMHAParams,
+    *,
+    k: int,
+    h_expert: int,
+    d_head: int,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    block_m: int = 128,
+    impl: str = "scatter",
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 4 forward.
+
+    Args:
+        x: ``(B, T, d_model)`` — batch-time ordered, contiguous.
+        k: experts (GQA groups) per token.
+        h_expert: heads per expert; active heads ``h = k · h_expert``.
+        positions: ``(T,)`` RoPE positions (defaults to ``arange(T)``).
+        impl: ``"scatter"`` keeps chronological order through both
+            ParallelLinear transforms (Figure 3); ``"padded"`` is the
+            Megablocks-'dense'-config baseline of §4.4, which inserts the
+            redundant group/scatter copy pair around the attention.
+
+    Returns:
+        ``(y, aux_loss)`` with ``y`` of shape ``(B, T, d_model)``.
+    """
+    b, t, d_model = x.shape
+    num_experts = params.router.shape[-1]
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)
+
+    # ---- routing on flattened batch-time (paper: "flatten and proceed") --
+    xf = x.reshape(b * t, d_model)
+    route = indexing.route(xf @ params.router, k, num_experts)
+
+    # ---- shared K/V (dense) and per-expert Q (scattered → scattered) ----
+    kv_shape = (b, t, h_expert, d_head)
+    keys = rope((x @ params.wk).reshape(kv_shape), positions)
+    values = (x @ params.wv).reshape(kv_shape)
+
+    if impl == "scatter":
+        q_slots = parallel_linear(
+            xf, params.wq, route.order, route.expert_offsets,
+            route.expert_counts, k=k, in_layout="tokens",
+            out_layout="slots", block_m=block_m,
+        )  # (B·T·k, h_expert·d_head), chronological slot order — no re-sort
+    else:
+        # Megablocks-style: group copy → padded GEMM → scatter copy back
+        q_slots = padded_parallel_linear(
+            xf, params.wq, route.order, route.expert_offsets,
+            route.expert_counts, k, block_m,
+        )
+    q = q_slots.reshape(b, t, k, h_expert, d_head)
+    q = rope(q.reshape(b, t, k * h_expert, d_head), positions).reshape(
+        b, t, k, h_expert, d_head
+    )
+
+    # ---- GQA-style attention: expert-slot queries share the K/V heads ----
+    scale = d_head ** -0.5
+    scores = jnp.einsum("btkhd,bshd->bkhts", q, keys) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkhts,bshd->btkhd", probs, values)
+
+    # ---- per-expert output transform + weighted combine (scattered) ----
+    o_slots = o.reshape(b * t * k, h_expert * d_head)
+    if impl == "scatter":
+        y = parallel_linear(
+            o_slots, params.wo, route.order, route.expert_offsets,
+            route.expert_counts, k=k, combine_weights=route.weights,
+            in_layout="slots", out_layout="tokens", block_m=block_m,
+        )
+    else:
+        y_slots = padded_parallel_linear(
+            o_slots, params.wo, route.order, route.expert_offsets,
+            route.expert_counts, 1, block_m,
+        )
+        y = jnp.einsum(
+            "tk,tkd->td", route.weights, y_slots.reshape(b * t, k, -1)
+        )
+    aux = indexing.load_balance_loss(
+        xf @ params.router, route.expert_idx, num_experts
+    )
+    return y.reshape(b, t, d_model), aux
+
+
+def momha_ref(
+    x: jax.Array,
+    params: MoMHAParams,
+    *,
+    k: int,
+    h_expert: int,
+    d_head: int,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Dense oracle: compute every expert's Q/O and select (pytest truth)."""
+    b, t, d_model = x.shape
+    num_experts = params.router.shape[-1]
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)
+    xf = x.reshape(b * t, d_model)
+    route = indexing.route(xf @ params.router, k, num_experts)
+
+    kv_shape = (b, t, h_expert, d_head)
+    keys = rope((x @ params.wk).reshape(kv_shape), positions)
+    values = (x @ params.wv).reshape(kv_shape)
+
+    # all experts' queries: (B, T, E, h_expert, d_head)
+    q_all = jnp.einsum("btd,edh->bteh", x, params.wq).reshape(
+        b, t, num_experts, h_expert, d_head
+    )
+    q_all = rope(
+        q_all.reshape(b, t, num_experts * h_expert, d_head), positions
+    ).reshape(b, t, num_experts, h_expert, d_head)
+    scale = d_head ** -0.5
+    scores = jnp.einsum("btehd,bshd->behts", q_all, keys) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_all = jnp.einsum("behts,bshd->btehd", probs, values)
+    y_all = jnp.einsum(
+        "bteh,ehm->btem",
+        o_all.reshape(b, t, num_experts, h_expert * d_head),
+        params.wo,
+    )
+    eidx = route.expert_idx.reshape(b, t, k)
+    wts = route.weights.reshape(b, t, k)
+    sel = jnp.take_along_axis(y_all, eidx[..., None], axis=2)  # (B,T,k,d)
+    return jnp.einsum("btk,btkd->btd", wts, sel)

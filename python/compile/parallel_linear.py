@@ -1,0 +1,175 @@
+"""``ParallelLinear`` — the paper's core module (Algorithms 1 and 2).
+
+A grouped linear transform over scattered or grouped vectors, with a
+hand-written backward pass (``jax.custom_vjp``) that follows Algorithm 2:
+
+* ``∇p``  via a batched dot between ``∇Y`` and the saved pre-combine ``Ŷ``,
+* ``∇Ȳ``  via **one** weighted grouping copy,
+* ``X̄``   via **at most one** grouping copy (zero when the input was
+  already grouped — the SMoE-MLP configuration of §3.2.2),
+* ``∇W``  via the grouped :func:`~compile.kernels.group_xty.group_xty`,
+* ``∇X``  via a second ``scatter2scatter`` with ``Wᵀ``.
+
+Input layouts (generalising the paper's ``grouped_in`` flag so the same
+primitive serves the MLP *and* the attention module):
+
+* ``"tokens"``  — ``(T, d_in)``; slot ``s`` reads token ``s // k``
+  (the fan-out case: first MLP transform, MoMHA query transform).
+* ``"slots"``   — ``(T·k, d_in)`` slot-major; slot ``s`` reads row ``s``
+  (MoMHA output transform — attention output is already per-slot).
+* ``"grouped"`` — ``(T·k, d_in)`` expert-sorted (second MLP transform).
+
+Output layouts: ``"slots"``, ``"grouped"``, or ``"tokens"`` (= slots + the
+Algorithm 1 weighted-combine epilogue; requires ``combine_weights``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import grouping
+from .kernels.group_xty import group_xty
+from .kernels.scatter2scatter import combine, scatter2scatter
+
+Layout = Literal["tokens", "slots", "grouped"]
+
+
+def _s2s_layout(x, w, order, offsets, counts, *, k: int, in_layout: Layout,
+                grouped_out: bool, block_m: int):
+    """Dispatch an input layout to the kernel's (k, grouped_in) encoding."""
+    if in_layout == "tokens":
+        return scatter2scatter(x, w, order, offsets, counts, k=k,
+                               grouped_in=False, grouped_out=grouped_out,
+                               block_m=block_m)
+    if in_layout == "slots":
+        return scatter2scatter(x, w, order, offsets, counts, k=1,
+                               grouped_in=False, grouped_out=grouped_out,
+                               block_m=block_m)
+    return scatter2scatter(x, w, order, offsets, counts, k=1,
+                           grouped_in=True, grouped_out=grouped_out,
+                           block_m=block_m)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9)
+)
+def _parallel_linear(x, w, p, order, offsets, counts,
+                     k: int, in_layout: Layout, out_layout: Layout,
+                     block_m: int):
+    y, _ = _pl_fwd(x, w, p, order, offsets, counts,
+                   k, in_layout, out_layout, block_m)
+    return y
+
+
+def _pl_fwd(x, w, p, order, offsets, counts,
+            k, in_layout, out_layout, block_m):
+    grouped_out = out_layout == "grouped"
+    y_hat = _s2s_layout(x, w, order, offsets, counts, k=k,
+                        in_layout=in_layout, grouped_out=grouped_out,
+                        block_m=block_m)
+    if out_layout == "tokens":
+        y = combine(y_hat, p)  # Algorithm 1: view + bmm epilogue
+        residuals = (x, w, p, order, offsets, counts, y_hat)
+    else:
+        y = y_hat
+        residuals = (x, w, p, order, offsets, counts, None)
+    return y, residuals
+
+
+def _pl_bwd(k, in_layout, out_layout, block_m, residuals, dy):
+    x, w, p, order, offsets, counts, y_hat = residuals
+    num_experts = w.shape[0]
+
+    # --- ∇p and the (single, weighted) grouping of ∇Y — Algorithm 2 top ---
+    if out_layout == "tokens":
+        t = p.shape[0]
+        dp = jnp.einsum("td,tkd->tk", dy, y_hat.reshape(t, k, -1))
+        p_flat = p.reshape(-1)
+        # grouped row g  =  p[o[g]] · dy[o[g] // k]   (weight and group)
+        dy_grouped = grouping.group(
+            dy, order, offsets, counts, k=k, weights_flat=p_flat,
+            block_m=block_m,
+        )
+    else:
+        dp = None
+        if out_layout == "grouped":
+            dy_grouped = dy
+        else:  # slots
+            dy_grouped = grouping.group(
+                dy, order, offsets, counts, k=1, block_m=block_m
+            )
+
+    # --- X̄: group the inputs only if they were not grouped already ---
+    if in_layout == "grouped":
+        x_grouped = x  # §3.2.2: the MLP's second transform reuses H̄ as-is
+    else:
+        k_in = k if in_layout == "tokens" else 1
+        x_grouped = grouping.group(
+            x, order, offsets, counts, k=k_in, block_m=block_m
+        )
+
+    # --- ∇W = X̄ᵀ ∇Ȳ per expert ---
+    dw = group_xty(x_grouped, dy_grouped, offsets, num_experts,
+                   block_m=block_m)
+
+    # --- ∇X = scatter2scatter(∇Ȳ, Wᵀ) back to the input layout ---
+    wt = jnp.swapaxes(w, 1, 2)
+    dx = _s2s_layout(dy_grouped, wt, order, offsets, counts, k=1,
+                     in_layout="grouped",
+                     grouped_out=(in_layout == "grouped"),
+                     block_m=block_m)
+    if in_layout == "tokens":
+        # fan-in: token t accumulates its k slot gradients
+        t = x.shape[0]
+        dx = dx.reshape(t, k, -1).sum(axis=1)
+
+    dp_out = dp if dp is not None else jnp.zeros_like(p)
+    return (dx, dw, dp_out, None, None, None)
+
+
+_parallel_linear.defvjp(_pl_fwd, _pl_bwd)
+
+
+def parallel_linear(
+    x: jax.Array,
+    w: jax.Array,
+    order: jax.Array,
+    expert_offsets: jax.Array,
+    expert_counts: jax.Array,
+    *,
+    k: int,
+    combine_weights: jax.Array | None = None,
+    in_layout: Layout = "tokens",
+    out_layout: Layout = "slots",
+    block_m: int = 128,
+) -> jax.Array:
+    """ParallelLinear forward (Algorithm 1) with a hand-written backward.
+
+    Args:
+        x: input rows, layout per ``in_layout`` (see module docstring).
+        w: ``(E, d_in, d_out)`` expert transforms.
+        order / expert_offsets / expert_counts: routing metadata from
+            :func:`compile.kernels.indexing.route`.
+        k: top-k fan-out of the routing decision.
+        combine_weights: ``(T, k)`` routing weights ``p``; required iff
+            ``out_layout == "tokens"``.
+        in_layout / out_layout: vector layouts (paper Figure 2 plus the
+            combined-output case).
+
+    Returns:
+        ``(T, d_out)`` for ``out_layout="tokens"``, else ``(T·k, d_out)``.
+    """
+    if (out_layout == "tokens") != (combine_weights is not None):
+        raise ValueError("combine_weights must be given exactly when out_layout='tokens'")
+    if combine_weights is None:
+        # p participates in custom_vjp signature; pass a zero dummy
+        t = x.shape[0] if in_layout == "tokens" else x.shape[0] // k
+        combine_weights = jnp.zeros((t, k), x.dtype)
+    return _parallel_linear(
+        x, w, combine_weights, order, expert_offsets, expert_counts,
+        k, in_layout, out_layout, block_m,
+    )

@@ -1,0 +1,203 @@
+"""SMoE Multi-layer Perceptron (paper Algorithm 3) and its baselines.
+
+The ScatterMoE configuration chains two ParallelLinear transforms as
+scattered→**grouped** then **grouped**→scattered: the hidden activations
+live in grouped order, so each transform needs at most one grouping copy
+in the backward pass (§3.2.2) and the forward pass needs none at all.
+
+Every baseline the paper benchmarks against is also provided behind the
+same signature so the bench harness can swap implementations:
+
+====================  =====================================================
+``impl="scatter"``    ScatterMoE (this paper)
+``impl="padded"``     Megablocks-style grouped GEMM with materialised
+                      padded copies (MB (Sparse) / MB (Mem. eff.) analogue)
+``impl="naive"``      HF-style all-experts dense compute
+``impl="capacity"``   Switch-style fixed capacity with token dropping
+``impl="dense"``      plain dense MLP with the same *active* parameters
+====================  =====================================================
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import indexing, naive, padded_grouped
+from .kernels.dense import dense_mlp
+from .kernels.group_xty import group_xty
+from .parallel_linear import parallel_linear
+
+
+def scatter_moe_mlp(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    route: indexing.RouteInfo,
+    *,
+    k: int,
+    activation: Callable = jax.nn.silu,
+    block_m: int = 128,
+) -> jax.Array:
+    """Algorithm 3: ``PL(tokens→grouped) → act → PL(grouped→tokens)``."""
+    h = parallel_linear(
+        x, w1, route.order, route.expert_offsets, route.expert_counts,
+        k=k, in_layout="tokens", out_layout="grouped", block_m=block_m,
+    )
+    h = activation(h)
+    return parallel_linear(
+        h, w2, route.order, route.expert_offsets, route.expert_counts,
+        k=k, combine_weights=route.weights,
+        in_layout="grouped", out_layout="tokens", block_m=block_m,
+    )
+
+
+def _padded_offsets(expert_counts: jax.Array, block_m: int) -> jax.Array:
+    """(E+1,) segment offsets in the *padded* layout (block aligned)."""
+    sizes = indexing.padded_group_sizes(expert_counts, block_m)
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes).astype(jnp.int32)]
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _padded_moe_mlp(x, w1, w2, p, order, offsets, counts, k: int, block_m: int):
+    y, _ = _padded_fwd(x, w1, w2, p, order, offsets, counts, k, block_m)
+    return y
+
+
+def _padded_fwd(x, w1, w2, p, order, offsets, counts, k, block_m):
+    """Megablocks-style forward: the padded intermediates (and their padding
+    FLOPs) are *materialised*, exactly the cost the paper attributes to MB."""
+    tk = order.shape[0]
+    xp = padded_grouped.group_padded(
+        x, order, offsets, counts, k=k, block_m=block_m
+    )  # HBM copy #1 (padded)
+    h1p = padded_grouped.padded_gemm(xp, w1, offsets, counts, tk, block_m=block_m)
+    hp = jax.nn.silu(h1p)
+    yp = padded_grouped.padded_gemm(hp, w2, offsets, counts, tk, block_m=block_m)
+    y_slots = padded_grouped.scatter_from_padded(
+        yp, order, offsets, counts, block_m=block_m
+    )  # HBM copy #2
+    t = p.shape[0]
+    y = jnp.einsum("tk,tkd->td", p, y_slots.reshape(t, k, -1))
+    return y, (x, w1, w2, p, order, offsets, counts, xp, h1p, hp, y_slots)
+
+
+def _padded_bwd(k, block_m, res, dy):
+    """Megablocks-style backward: grouped ops stay in the padded layout
+    (so the padded buffers and their FLOPs appear here too, as in MB)."""
+    x, w1, w2, p, order, offsets, counts, xp, h1p, hp, y_slots = res
+    t = p.shape[0]
+    tk = order.shape[0]
+    num_experts = w1.shape[0]
+    poffsets = _padded_offsets(counts, block_m)
+
+    dp = jnp.einsum("td,tkd->tk", dy, y_slots.reshape(t, k, -1))
+    # weighted slot grads, then a padded group copy (MB groups here too)
+    dy_slots = (dy[:, None, :] * p[..., None]).reshape(tk, -1)
+    dyp = padded_grouped.group_padded(
+        dy_slots, order, offsets, counts, k=1, block_m=block_m
+    )
+    dw2 = group_xty(hp, dyp, poffsets, num_experts, block_m=block_m)
+    dhp = padded_grouped.padded_gemm(
+        dyp, jnp.swapaxes(w2, 1, 2), offsets, counts, tk, block_m=block_m
+    )
+    # silu'(z) = sigmoid(z) * (1 + z * (1 - sigmoid(z)))
+    sig = jax.nn.sigmoid(h1p)
+    dh1p = dhp * sig * (1.0 + h1p * (1.0 - sig))
+    dw1 = group_xty(xp, dh1p, poffsets, num_experts, block_m=block_m)
+    dxp = padded_grouped.padded_gemm(
+        dh1p, jnp.swapaxes(w1, 1, 2), offsets, counts, tk, block_m=block_m
+    )
+    dx_slots = padded_grouped.scatter_from_padded(
+        dxp, order, offsets, counts, block_m=block_m
+    )
+    dx = dx_slots.reshape(t, k, -1).sum(axis=1)
+    return (dx, dw1, dw2, dp, None, None, None)
+
+
+_padded_moe_mlp.defvjp(_padded_fwd, _padded_bwd)
+
+
+def padded_moe_mlp(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    route: indexing.RouteInfo,
+    *,
+    k: int,
+    activation: Callable = jax.nn.silu,  # noqa: ARG001 — fixed to silu in vjp
+    block_m: int = 128,
+) -> jax.Array:
+    """Megablocks-style MLP: group-copy in, padded GEMM, act, padded GEMM,
+    scatter-copy out, combine — with a hand-written padded backward."""
+    return _padded_moe_mlp(
+        x, w1, w2, route.weights, route.order, route.expert_offsets,
+        route.expert_counts, k, block_m,
+    )
+
+
+def moe_mlp(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    route: indexing.RouteInfo,
+    *,
+    k: int,
+    impl: str = "scatter",
+    activation: Callable = jax.nn.silu,
+    block_m: int = 128,
+    capacity_factor: float = 1.25,
+) -> jax.Array:
+    """Uniform entry point over all MLP implementations (see module doc)."""
+    if impl == "scatter":
+        return scatter_moe_mlp(
+            x, w1, w2, route, k=k, activation=activation, block_m=block_m
+        )
+    if impl == "padded":
+        return padded_moe_mlp(
+            x, w1, w2, route, k=k, activation=activation, block_m=block_m
+        )
+    if impl == "naive":
+        return naive.naive_dense_moe(
+            x, w1, w2, route.weights, route.expert_idx, activation=activation
+        )
+    if impl == "capacity":
+        return naive.capacity_moe(
+            x, w1, w2, route.weights, route.expert_idx, route.order,
+            route.expert_offsets, route.expert_counts,
+            capacity_factor=capacity_factor, activation=activation,
+        )
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def routed_moe_mlp(
+    x: jax.Array,
+    router_w: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    *,
+    k: int,
+    impl: str = "scatter",
+    activation: Callable = jax.nn.silu,
+    block_m: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Router + MoE MLP; returns ``(y, aux_load_balance_loss)``."""
+    num_experts = w1.shape[0]
+    logits = x @ router_w
+    route = indexing.route(logits, k, num_experts)
+    y = moe_mlp(x, w1, w2, route, k=k, impl=impl, activation=activation,
+                block_m=block_m)
+    aux = indexing.load_balance_loss(logits, route.expert_idx, num_experts)
+    return y, aux
+
+
+def dense_mlp_baseline(
+    x: jax.Array, w1: jax.Array, w2: jax.Array, *, block_m: int = 128
+) -> jax.Array:
+    """Fig 6's dense comparison (re-exported for the bench harness)."""
+    return dense_mlp(x, w1, w2, block_m=block_m)

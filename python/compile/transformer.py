@@ -1,0 +1,383 @@
+"""Mixtral-style decoder LM built on ScatterMoE (the paper's §4 test bed).
+
+A composable model definition: RMSNorm → attention (dense MHA or MoMHA) →
+RMSNorm → SMoE MLP, pre-norm residual blocks, tied embeddings.  The MLP
+implementation is selected by config (``scatter`` / ``padded`` / ``naive``
+/ ``capacity`` / ``dense``) so the Fig-4a training benchmark can swap the
+SMoE layer like the paper swaps HF ⇄ Megablocks ⇄ ScatterMoE.
+
+Also provides the full training step (cross-entropy + Adam) that
+``aot.py`` lowers for the Rust training driver — Python never runs during
+training; Rust feeds token batches to the compiled step.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import momha as momha_mod
+from .kernels import indexing
+from .smoe_mlp import dense_mlp_baseline, moe_mlp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the LM (defaults: tiny smoke config)."""
+
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 32
+    # SMoE MLP
+    num_experts: int = 8
+    top_k: int = 2
+    d_expert: int = 256
+    mlp_impl: str = "scatter"
+    # attention: "dense" MHA or "momha"
+    attn_impl: str = "dense"
+    momha_h_expert: int = 2
+    # misc
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    aux_loss_coef: float = 0.01
+    block_m: int = 128
+    capacity_factor: float = 1.25
+
+    @property
+    def active_params_mlp(self) -> int:
+        return 2 * self.top_k * self.d_model * self.d_expert
+
+    def param_count(self) -> int:
+        """Total parameter count (for reporting)."""
+        embed = self.vocab_size * self.d_model
+        per_layer_attn = (
+            4 * self.d_model * self.n_heads * self.d_head
+            if self.attn_impl == "dense"
+            else (
+                self.d_model * self.num_experts
+                + 2 * self.num_experts * self.d_model
+                * self.momha_h_expert * self.d_head
+                + 2 * self.d_model * self.momha_h_expert * self.d_head
+            )
+        )
+        per_layer_mlp = (
+            self.d_model * self.num_experts
+            + 2 * self.num_experts * self.d_model * self.d_expert
+        )
+        norms = (2 * self.n_layers + 1) * self.d_model
+        return embed + self.n_layers * (per_layer_attn + per_layer_mlp) + norms
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    """Initialise the parameter pytree (flat dict of arrays)."""
+    params: dict[str, Any] = {}
+    key, ek = jax.random.split(key)
+    params["embed"] = (
+        jax.random.normal(ek, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+    )
+    s = cfg.d_model ** -0.5
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        key, k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 8)
+        if cfg.attn_impl == "dense":
+            hd = cfg.n_heads * cfg.d_head
+            params[p + "wq"] = jax.random.normal(k1, (cfg.d_model, hd)) * s
+            params[p + "wk"] = jax.random.normal(k2, (cfg.d_model, hd)) * s
+            params[p + "wv"] = jax.random.normal(k3, (cfg.d_model, hd)) * s
+            params[p + "wo"] = jax.random.normal(k4, (hd, cfg.d_model)) * (hd ** -0.5)
+        else:
+            mp = momha_mod.init_momha(
+                k1, cfg.d_model, cfg.num_experts, cfg.momha_h_expert, cfg.d_head
+            )
+            params[p + "attn_router"] = mp.router
+            params[p + "wq"] = mp.wq
+            params[p + "wk"] = mp.wk
+            params[p + "wv"] = mp.wv
+            params[p + "wo"] = mp.wo
+        if cfg.mlp_impl == "dense":
+            dff = cfg.top_k * cfg.d_expert  # same *active* params
+            params[p + "w1"] = jax.random.normal(k5, (cfg.d_model, dff)) * s
+            params[p + "w2"] = jax.random.normal(k6, (dff, cfg.d_model)) * (
+                dff ** -0.5
+            )
+        else:
+            params[p + "router"] = jax.random.normal(
+                k7, (cfg.d_model, cfg.num_experts)
+            ) * s
+            params[p + "w1"] = (
+                jax.random.normal(k5, (cfg.num_experts, cfg.d_model, cfg.d_expert))
+                * s
+            )
+            params[p + "w2"] = jax.random.normal(
+                k6, (cfg.num_experts, cfg.d_expert, cfg.d_model)
+            ) * (cfg.d_expert ** -0.5)
+        params[p + "norm1"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[p + "norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    params["norm_f"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return {k: v.astype(jnp.float32) for k, v in params.items()}
+
+
+def _dense_attention(
+    x: jax.Array, params: dict, prefix: str, cfg: ModelConfig,
+    positions: jax.Array,
+) -> jax.Array:
+    b, t, _ = x.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    q = (x @ params[prefix + "wq"]).reshape(b, t, nh, dh)
+    k = (x @ params[prefix + "wk"]).reshape(b, t, nh, dh)
+    v = (x @ params[prefix + "wv"]).reshape(b, t, nh, dh)
+    q = momha_mod.rope(q, positions, theta=cfg.rope_theta)
+    k = momha_mod.rope(k, positions, theta=cfg.rope_theta)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) * (dh ** -0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    o = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(scores, -1), v)
+    return o.reshape(b, t, nh * dh) @ params[prefix + "wo"]
+
+
+def _mlp(
+    x: jax.Array, params: dict, prefix: str, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    if cfg.mlp_impl == "dense":
+        y = dense_mlp_baseline(
+            xf, params[prefix + "w1"], params[prefix + "w2"],
+            block_m=cfg.block_m,
+        )
+        return y.reshape(b, t, d), jnp.zeros((), jnp.float32)
+    logits = xf @ params[prefix + "router"]
+    route = indexing.route(logits, cfg.top_k, cfg.num_experts)
+    y = moe_mlp(
+        xf, params[prefix + "w1"], params[prefix + "w2"], route,
+        k=cfg.top_k, impl=cfg.mlp_impl, block_m=cfg.block_m,
+        capacity_factor=cfg.capacity_factor,
+    )
+    aux = indexing.load_balance_loss(logits, route.expert_idx, cfg.num_experts)
+    return y.reshape(b, t, d), aux
+
+
+def forward(
+    params: dict, tokens: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """LM forward: ``tokens (B, T) int32`` → ``(logits (B,T,V), aux_loss)``."""
+    b, t = tokens.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = params["embed"][tokens]
+    aux_total = jnp.zeros((), jnp.float32)
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        h = rms_norm(x, params[p + "norm1"], cfg.rms_eps)
+        if cfg.attn_impl == "dense":
+            attn_out = _dense_attention(h, params, p, cfg, positions)
+        else:
+            mp = momha_mod.MoMHAParams(
+                router=params[p + "attn_router"], wq=params[p + "wq"],
+                wk=params[p + "wk"], wv=params[p + "wv"], wo=params[p + "wo"],
+            )
+            attn_out, attn_aux = momha_mod.momha(
+                h, mp, k=cfg.top_k, h_expert=cfg.momha_h_expert,
+                d_head=cfg.d_head, positions=positions, block_m=cfg.block_m,
+            )
+            aux_total = aux_total + attn_aux
+        x = x + attn_out
+        h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
+        mlp_out, aux = _mlp(h, params, p, cfg)
+        aux_total = aux_total + aux
+        x = x + mlp_out
+    x = rms_norm(x, params["norm_f"], cfg.rms_eps)
+    logits = x @ params["embed"].T  # tied head
+    return logits, aux_total
+
+
+def loss_fn(
+    params: dict, tokens: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Next-token cross entropy (+ aux) over ``tokens (B, T+1)``."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    ce = nll.mean()
+    return ce + cfg.aux_loss_coef * aux, ce
+
+
+# ----------------------- KV-cache serving path -----------------------------
+#
+# The paper notes ScatterMoE "does not implement a specialised kernel for
+# speeding up decoding"; like the paper we route each decoded token through
+# the same SMoE MLP kernels.  Attention, however, uses a standard KV cache
+# (dense MHA configs only — the serving model).  Caches are stacked over
+# layers so the whole state is two arrays: (L, B, Tmax, nh, dh).
+#
+# Everything is **per-slot**: prompts are right-padded to the static prompt
+# width, `prompt_lens` selects each slot's true last logits, and decode
+# takes a per-slot position vector — this is what lets the Rust coordinator
+# do continuous batching (refill one finished slot without disturbing the
+# others).  Padded-tail cache entries are progressively overwritten by
+# decode writes before the per-slot mask can ever expose them.
+
+
+def _rope_per_slot(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """RoPE for one step per slot: ``x (B, nh, dh)``, ``pos (B,)``."""
+    d_head = x.shape[-1]
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[:, None].astype(jnp.float32) * freqs[None, :]  # (B, half)
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,
+    prompt_lens: jax.Array,
+    cfg: ModelConfig,
+    max_len: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Run the (right-padded) prompts, return ``(last_logits, kc, vc)``.
+
+    ``tokens``: ``(B, P)`` int32, right-padded; ``prompt_lens``: ``(B,)``
+    true lengths.  ``last_logits[b]`` is taken at ``prompt_lens[b] - 1``.
+    """
+    assert cfg.attn_impl == "dense", "KV serving path requires dense MHA"
+    b, t = tokens.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = params["embed"][tokens]
+    k_cache = jnp.zeros((cfg.n_layers, b, max_len, nh, dh), jnp.float32)
+    v_cache = jnp.zeros((cfg.n_layers, b, max_len, nh, dh), jnp.float32)
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        h = rms_norm(x, params[p + "norm1"], cfg.rms_eps)
+        q = (h @ params[p + "wq"]).reshape(b, t, nh, dh)
+        kk = (h @ params[p + "wk"]).reshape(b, t, nh, dh)
+        vv = (h @ params[p + "wv"]).reshape(b, t, nh, dh)
+        q = momha_mod.rope(q, positions, theta=cfg.rope_theta)
+        kk = momha_mod.rope(kk, positions, theta=cfg.rope_theta)
+        k_cache = k_cache.at[layer, :, :t].set(kk)
+        v_cache = v_cache.at[layer, :, :t].set(vv)
+        scores = jnp.einsum("bthd,bshd->bhts", q, kk) * (dh ** -0.5)
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        o = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(scores, -1), vv)
+        x = x + o.reshape(b, t, nh * dh) @ params[p + "wo"]
+        h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
+        mlp_out, _ = _mlp(h, params, p, cfg)
+        x = x + mlp_out
+    x = rms_norm(x, params["norm_f"], cfg.rms_eps)
+    logits = x @ params["embed"].T  # (B, P, V)
+    last = jnp.clip(prompt_lens - 1, 0, t - 1)
+    last_logits = jnp.take_along_axis(
+        logits, last[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    return last_logits, k_cache, v_cache
+
+
+def decode_step(
+    params: dict,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step with **per-slot** positions (continuous batching).
+
+    ``tokens``: ``(B,)`` the last token of each slot; ``pos``: ``(B,)``
+    int32 — slot ``b``'s new KV entries are written at ``pos[b]`` and its
+    attention sees cache positions ``<= pos[b]``.
+    Returns ``(logits (B, V), k_cache', v_cache')``.
+    """
+    b = tokens.shape[0]
+    nh, dh = cfg.n_heads, cfg.d_head
+    max_len = k_cache.shape[2]
+    barange = jnp.arange(b)
+    x = params["embed"][tokens][:, None, :]  # (B, 1, d)
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        h = rms_norm(x, params[p + "norm1"], cfg.rms_eps)
+        q = (h[:, 0] @ params[p + "wq"]).reshape(b, nh, dh)
+        kk = (h[:, 0] @ params[p + "wk"]).reshape(b, nh, dh)
+        vv = (h[:, 0] @ params[p + "wv"]).reshape(b, nh, dh)
+        q = _rope_per_slot(q, pos, cfg.rope_theta)
+        kk = _rope_per_slot(kk, pos, cfg.rope_theta)
+        k_cache = k_cache.at[layer, barange, pos].set(kk)
+        v_cache = v_cache.at[layer, barange, pos].set(vv)
+        keys, vals = k_cache[layer], v_cache[layer]  # (B, Tmax, nh, dh)
+        scores = jnp.einsum("bhd,bshd->bhs", q, keys) * (dh ** -0.5)
+        live = jnp.arange(max_len)[None, :] <= pos[:, None]  # (B, Tmax)
+        scores = jnp.where(live[:, None, :], scores, -jnp.inf)
+        o = jnp.einsum("bhs,bshd->bhd", jax.nn.softmax(scores, -1), vals)
+        x = x + (o.reshape(b, nh * dh) @ params[p + "wo"])[:, None, :]
+        h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
+        mlp_out, _ = _mlp(h, params, p, cfg)
+        x = x + mlp_out
+    x = rms_norm(x, params["norm_f"], cfg.rms_eps)
+    logits = x[:, 0] @ params["embed"].T
+    return logits, k_cache, v_cache
+
+
+# --------------------------- Adam (from scratch) ---------------------------
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: dict) -> tuple[dict, dict]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return zeros, jax.tree.map(jnp.zeros_like, params)
+
+
+def adam_update(
+    params: dict, grads: dict, m: dict, v: dict, step: jax.Array,
+    opt: AdamConfig,
+) -> tuple[dict, dict, dict]:
+    """One Adam step with global-norm clipping; ``step`` is 1-based."""
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    m = jax.tree.map(lambda a, g: opt.beta1 * a + (1 - opt.beta1) * g, m, grads)
+    v = jax.tree.map(
+        lambda a, g: opt.beta2 * a + (1 - opt.beta2) * jnp.square(g), v, grads
+    )
+    t = step.astype(jnp.float32)
+    mhat_scale = 1.0 / (1.0 - opt.beta1 ** t)
+    vhat_scale = 1.0 / (1.0 - opt.beta2 ** t)
+    params = jax.tree.map(
+        lambda p, mm, vv: p
+        - opt.lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + opt.eps),
+        params, m, v,
+    )
+    return params, m, v
+
+
+def train_step(
+    params: dict, m: dict, v: dict, step: jax.Array, tokens: jax.Array,
+    cfg: ModelConfig, opt: AdamConfig,
+) -> tuple[dict, dict, dict, jax.Array]:
+    """Full training step: grads → clip → Adam.  Returns new state + CE."""
+    (_, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, tokens, cfg
+    )
+    params, m, v = adam_update(params, grads, m, v, step, opt)
+    return params, m, v, ce

@@ -1,0 +1,35 @@
+"""Shared fixtures/utilities for the ScatterMoE python test suite."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import indexing
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(42)
+
+
+def make_route(key, t: int, e: int, k: int) -> indexing.RouteInfo:
+    """Random routing decision for tests."""
+    logits = jax.random.normal(key, (t, e), jnp.float32)
+    return indexing.route(logits, k, e)
+
+
+def make_skewed_route(key, t: int, e: int, k: int, hot: int = 0):
+    """Heavily imbalanced routing (one very hot expert) — the regime where
+    padding-based implementations waste the most."""
+    logits = jax.random.normal(key, (t, e), jnp.float32)
+    logits = logits.at[:, hot].add(4.0)
+    return indexing.route(logits, k, e)
+
+
+def assert_allclose(a, b, atol=1e-4, rtol=1e-4, msg=""):
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=atol, rtol=rtol, err_msg=msg
+    )

@@ -1,0 +1,100 @@
+"""aot.py: artifact registry sanity and a lower-one-artifact smoke test."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+def test_build_artifacts_unique_names():
+    arts = aot.build_artifacts()
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names))
+    assert len(arts) > 50  # every figure is covered
+
+
+def test_every_figure_has_artifacts():
+    arts = aot.build_artifacts()
+    figures = {a.meta.get("figure") for a in arts}
+    for fig in ["4a", "4b", "5", "6", "8", "table1", "e2e", "serve"]:
+        assert fig in figures, fig
+
+
+def test_manifest_entry_roundtrip(tmp_path):
+    arts = [a for a in aot.build_artifacts() if a.name == "mlp_fwd_scatter_fig4b"]
+    entry = aot.lower_artifact(arts[0], str(tmp_path))
+    assert os.path.exists(tmp_path / entry["file"])
+    assert entry["inputs"][0] == {
+        "name": "x",
+        "shape": [aot.FIG4B["T"], aot.FIG4B["d_model"]],
+        "dtype": "f32",
+    }
+    assert entry["outputs"][0]["shape"] == [aot.FIG4B["T"], aot.FIG4B["d_model"]]
+    json.dumps(entry)  # serialisable
+
+
+def test_hlo_text_has_no_new_topk_op(tmp_path):
+    """Regression: the XLA-0.5.1 parser rejects the modern `topk` HLO op;
+    routing must lower to argmax reduces instead."""
+    arts = [a for a in aot.build_artifacts() if a.name == "mlp_fwd_scatter_fig4b"]
+    entry = aot.lower_artifact(arts[0], str(tmp_path))
+    text = (tmp_path / entry["file"]).read_text()
+    assert " topk(" not in text
+
+
+def test_lm_artifact_param_names_sorted():
+    arts = {a.name: a for a in aot.build_artifacts()}
+    meta = arts["lm_bench_train_scatter"].meta
+    names = meta["param_names"]
+    assert names == sorted(names)
+    # train artifact inputs: step, tokens, params, m.*, v.*
+    ins = arts["lm_bench_train_scatter"].inputs
+    assert ins[0][0] == "step" and ins[1][0] == "tokens"
+    n = len(names)
+    assert [i[0] for i in ins[2:2 + n]] == names
+    assert [i[0] for i in ins[2 + n:2 + 2 * n]] == ["m." + x for x in names]
+
+
+def test_train_artifact_executes_and_reduces_loss():
+    """Execute the lowered lm_bench train step via jax on its input specs:
+    loss must fall over a handful of steps (catches silent lowering bugs
+    before the slower rust-side e2e)."""
+    from compile import transformer as tr
+    arts = {a.name: a for a in aot.build_artifacts()}
+    art = arts["lm_serve_init"]
+    params_flat = jax.jit(art.fn)(jnp.array(0, jnp.uint32))
+    names = art.meta["param_names"]
+    assert len(params_flat) == len(names)
+
+    step_art = None
+    for a in aot.build_artifacts():
+        if a.name == "lm_bench_train_scatter":
+            step_art = a
+    # serve cfg has no train artifact; use bench cfg end-to-end instead
+    cfg = aot.LM_BENCH
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    m, v = tr.init_opt_state(params)
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (aot.LM_BENCH_BATCH, aot.LM_BENCH_SEQ + 1),
+        0, cfg.vocab_size,
+    )
+    flat = [x for _, x in aot.flatten_params(params)]
+    mflat = [x for _, x in aot.flatten_params(m)]
+    vflat = [x for _, x in aot.flatten_params(v)]
+    fn = jax.jit(step_art.fn)
+    losses = []
+    for s in range(1, 4):
+        out = fn(jnp.array(s, jnp.int32), toks, *flat, *mflat, *vflat)
+        losses.append(float(out[0]))
+        n = len(flat)
+        flat = list(out[1:1 + n])
+        mflat = list(out[1 + n:1 + 2 * n])
+        vflat = list(out[1 + 2 * n:1 + 3 * n])
+    assert losses[-1] < losses[0], losses

@@ -1,0 +1,148 @@
+"""Routing / sorting / padded-block-index invariants (hypothesis-driven).
+
+These invariants are the foundation of every kernel: if the padded block
+grid double-covers or misses a grouped position, all downstream GEMMs are
+silently wrong.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import indexing
+
+
+@st.composite
+def routing_cases(draw):
+    e = draw(st.integers(2, 16))
+    k = draw(st.integers(1, min(4, e)))
+    t = draw(st.integers(1, 300))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return t, e, k, seed
+
+
+@given(routing_cases())
+@settings(max_examples=12, deadline=None)
+def test_route_is_permutation(case):
+    t, e, k, seed = case
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    info = indexing.route(logits, k, e)
+    order = np.asarray(info.order)
+    assert sorted(order.tolist()) == list(range(t * k))
+
+
+@given(routing_cases())
+@settings(max_examples=12, deadline=None)
+def test_route_counts_and_offsets(case):
+    t, e, k, seed = case
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    info = indexing.route(logits, k, e)
+    counts = np.asarray(info.expert_counts)
+    offsets = np.asarray(info.expert_offsets)
+    assert counts.sum() == t * k
+    assert offsets[0] == 0 and offsets[-1] == t * k
+    np.testing.assert_array_equal(np.diff(offsets), counts)
+    # order really is expert-sorted
+    eflat = np.asarray(info.expert_idx).reshape(-1)
+    sorted_experts = eflat[np.asarray(info.order)]
+    assert (np.diff(sorted_experts) >= 0).all()
+
+
+@given(routing_cases())
+@settings(max_examples=12, deadline=None)
+def test_route_weights_normalized(case):
+    t, e, k, seed = case
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    info = indexing.route(logits, k, e)
+    np.testing.assert_allclose(
+        np.asarray(info.weights).sum(-1), np.ones(t), atol=1e-5
+    )
+    # weights sorted by decreasing router score
+    w = np.asarray(info.weights)
+    assert (np.diff(w, axis=-1) <= 1e-6).all()
+
+
+def test_topk_matches_lax():
+    """Iterative argmax (HLO-0.5.1-safe) ≡ jax.lax.top_k."""
+    logits = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    for k in [1, 2, 5, 16]:
+        v_ref, i_ref = jax.lax.top_k(logits, k)
+        v, i = indexing._topk_iterative(logits, k)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+@given(routing_cases(), st.sampled_from([8, 32, 128]))
+@settings(max_examples=12, deadline=None)
+def test_padded_block_info_covers_exactly(case, block):
+    """Every grouped position is covered by exactly one block; blocks never
+    cross expert boundaries; block count is within the static bound."""
+    t, e, k, seed = case
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    info = indexing.route(logits, k, e)
+    binfo = indexing.padded_block_info(
+        info.expert_offsets, info.expert_counts, t * k, block
+    )
+    starts = np.asarray(binfo.block_row_start)
+    ends = np.asarray(binfo.block_row_end)
+    experts = np.asarray(binfo.block_expert)
+    offsets = np.asarray(info.expert_offsets)
+
+    covered = np.zeros(t * k, dtype=int)
+    for s, en, ex in zip(starts, ends, experts):
+        assert en - s <= block
+        if en > s:
+            covered[s:en] += 1
+            # block stays inside its expert's segment
+            assert offsets[ex] <= s and en <= offsets[ex + 1]
+    np.testing.assert_array_equal(covered, np.ones(t * k, dtype=int))
+
+
+def test_padded_block_info_empty_experts():
+    """Experts with zero tokens contribute zero blocks."""
+    counts = jnp.array([5, 0, 0, 3], jnp.int32)
+    offsets = jnp.array([0, 5, 5, 5, 8], jnp.int32)
+    binfo = indexing.padded_block_info(offsets, counts, 8, 4)
+    starts = np.asarray(binfo.block_row_start)
+    ends = np.asarray(binfo.block_row_end)
+    sizes = ends - starts
+    assert sizes.sum() == 8
+    assert (np.asarray(binfo.block_expert)[sizes > 0] != 1).all()
+    assert (np.asarray(binfo.block_expert)[sizes > 0] != 2).all()
+
+
+def test_padded_group_sizes():
+    counts = jnp.array([5, 0, 7, 8], jnp.int32)
+    sizes = np.asarray(indexing.padded_group_sizes(counts, 4))
+    np.testing.assert_array_equal(sizes, [8, 0, 8, 8])
+
+
+def test_load_balance_loss_uniform_is_one():
+    """Perfectly uniform routing gives loss ≈ 1 (Switch convention)."""
+    t, e = 512, 8
+    logits = jnp.zeros((t, e))
+    expert_idx = (jnp.arange(t * 1) % e).reshape(t, 1).astype(jnp.int32)
+    loss = indexing.load_balance_loss(logits, expert_idx, e)
+    np.testing.assert_allclose(float(loss), 1.0, atol=1e-4)
+
+
+def test_load_balance_loss_collapsed_is_e():
+    t, e = 512, 8
+    logits = jnp.full((t, e), -10.0).at[:, 0].set(10.0)
+    expert_idx = jnp.zeros((t, 1), jnp.int32)
+    loss = indexing.load_balance_loss(logits, expert_idx, e)
+    np.testing.assert_allclose(float(loss), e, rtol=1e-3)
+
+
+def test_num_padded_blocks_is_static_bound():
+    for t, k, e, b in [(1, 1, 2, 8), (300, 4, 16, 32), (64, 2, 8, 128)]:
+        nb = indexing.num_padded_blocks(t, k, e, b)
+        logits = jax.random.normal(jax.random.PRNGKey(0), (t, e))
+        info = indexing.route(logits, min(k, e), e)
+        per_expert = np.ceil(np.asarray(info.expert_counts) / b).sum()
+        assert per_expert <= nb

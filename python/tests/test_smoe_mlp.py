@@ -1,0 +1,147 @@
+"""SMoE MLP: implementation equivalence (the Table-1 property) and the
+padded baseline's hand-written backward vs autodiff oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import indexing, ref
+from compile.smoe_mlp import dense_mlp_baseline, moe_mlp, routed_moe_mlp
+
+from .conftest import assert_allclose, make_route, make_skewed_route
+
+
+@st.composite
+def mlp_cases(draw):
+    e = draw(st.integers(2, 8))
+    k = draw(st.integers(1, min(4, e)))
+    t = draw(st.integers(2, 120))
+    d = draw(st.sampled_from([8, 16]))
+    dh = draw(st.sampled_from([8, 32]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return t, e, k, d, dh, seed
+
+
+def _setup(t, e, k, d, dh, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, k1, k2 = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (t, d), jnp.float32)
+    w1 = jax.random.normal(k1, (e, d, dh), jnp.float32) * 0.2
+    w2 = jax.random.normal(k2, (e, dh, d), jnp.float32) * 0.2
+    info = make_route(key, t, e, k)
+    return x, w1, w2, info
+
+
+@given(mlp_cases())
+@settings(max_examples=10, deadline=None)
+def test_all_impls_agree(case):
+    """scatter ≡ padded ≡ naive ≡ oracle (implementation equivalence —
+    the exact property Table 1 of the paper demonstrates)."""
+    x, w1, w2, info = _setup(*case)
+    k = case[2]
+    want = ref.moe_mlp_ref(x, w1, w2, info.weights, info.expert_idx)
+    for impl in ["scatter", "padded", "naive"]:
+        got = moe_mlp(x, w1, w2, info, k=k, impl=impl, block_m=16)
+        assert_allclose(got, want, msg=impl)
+
+
+def test_capacity_impl_no_drop_agrees():
+    x, w1, w2, info = _setup(90, 4, 2, 8, 16, 3)
+    want = ref.moe_mlp_ref(x, w1, w2, info.weights, info.expert_idx)
+    got = moe_mlp(x, w1, w2, info, k=2, impl="capacity", capacity_factor=8.0)
+    assert_allclose(got, want)
+
+
+def test_capacity_impl_drops_tokens():
+    """With cf < 1 under skewed routing, outputs differ (tokens dropped)."""
+    key = jax.random.PRNGKey(5)
+    t, e, k = 128, 8, 2
+    info = make_skewed_route(key, t, e, k)
+    x = jax.random.normal(key, (t, 8), jnp.float32)
+    w1 = jax.random.normal(key, (e, 8, 16), jnp.float32)
+    w2 = jax.random.normal(key, (e, 16, 8), jnp.float32)
+    full = moe_mlp(x, w1, w2, info, k=k, impl="naive")
+    dropped = moe_mlp(x, w1, w2, info, k=k, impl="capacity", capacity_factor=0.5)
+    assert float(jnp.abs(full - dropped).max()) > 1e-3
+
+
+@given(mlp_cases())
+@settings(max_examples=10, deadline=None)
+def test_scatter_train_grads_match_naive(case):
+    """Grads through ScatterMoE's custom backward ≡ autodiff through the
+    naive implementation (same math, different kernels)."""
+    x, w1, w2, info = _setup(*case)
+    k = case[2]
+    tgt = jax.random.normal(jax.random.PRNGKey(99), x.shape, jnp.float32)
+
+    def loss(impl):
+        def f(x, w1, w2):
+            y = moe_mlp(x, w1, w2, info, k=k, impl=impl, block_m=16)
+            return 0.5 * jnp.mean((y - tgt) ** 2)
+        return f
+
+    v1, g1 = jax.value_and_grad(loss("scatter"), argnums=(0, 1, 2))(x, w1, w2)
+    v2, g2 = jax.value_and_grad(loss("naive"), argnums=(0, 1, 2))(x, w1, w2)
+    assert_allclose(v1, v2, atol=1e-4, rtol=1e-4)
+    for a, b, n in zip(g1, g2, ["dx", "dw1", "dw2"]):
+        assert_allclose(a, b, atol=1e-3, rtol=1e-3, msg=n)
+
+
+@given(mlp_cases())
+@settings(max_examples=10, deadline=None)
+def test_padded_train_grads_match_naive(case):
+    """The Megablocks-baseline's hand-written padded backward is also
+    numerically correct (so Fig-4a training comparisons are fair)."""
+    x, w1, w2, info = _setup(*case)
+    k = case[2]
+    tgt = jax.random.normal(jax.random.PRNGKey(98), x.shape, jnp.float32)
+
+    def loss(impl):
+        def f(x, w1, w2):
+            y = moe_mlp(x, w1, w2, info, k=k, impl=impl, block_m=16)
+            return 0.5 * jnp.mean((y - tgt) ** 2)
+        return f
+
+    v1, g1 = jax.value_and_grad(loss("padded"), argnums=(0, 1, 2))(x, w1, w2)
+    v2, g2 = jax.value_and_grad(loss("naive"), argnums=(0, 1, 2))(x, w1, w2)
+    assert_allclose(v1, v2, atol=1e-4, rtol=1e-4)
+    for a, b, n in zip(g1, g2, ["dx", "dw1", "dw2"]):
+        assert_allclose(a, b, atol=1e-3, rtol=1e-3, msg=n)
+
+
+def test_routed_moe_mlp_returns_aux():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 16), jnp.float32)
+    rw = jax.random.normal(key, (16, 4), jnp.float32)
+    w1 = jax.random.normal(key, (4, 16, 8), jnp.float32)
+    w2 = jax.random.normal(key, (4, 8, 16), jnp.float32)
+    y, aux = routed_moe_mlp(x, rw, w1, w2, k=2, block_m=16)
+    assert y.shape == (64, 16)
+    assert float(aux) >= 0.9  # load-balance loss is ~1 when balanced
+
+
+def test_dense_baseline_matches_ref():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (70, 16), jnp.float32)
+    w1 = jax.random.normal(key, (16, 32), jnp.float32)
+    w2 = jax.random.normal(key, (32, 16), jnp.float32)
+    assert_allclose(
+        dense_mlp_baseline(x, w1, w2, block_m=32),
+        ref.dense_mlp_ref(x, w1, w2),
+        atol=1e-5,
+    )
+
+
+def test_unknown_impl_raises():
+    key = jax.random.PRNGKey(0)
+    info = make_route(key, 8, 2, 1)
+    x = jnp.ones((8, 4))
+    w1 = jnp.ones((2, 4, 4))
+    w2 = jnp.ones((2, 4, 4))
+    with pytest.raises(ValueError):
+        moe_mlp(x, w1, w2, info, k=1, impl="nope")

@@ -1,0 +1,56 @@
+"""Analytic TPU model sanity checks (the L1 §Perf deliverable)."""
+
+from __future__ import annotations
+
+from compile.kernels import tpu_estimate as te
+
+
+def test_paper_unit_config_fits_vmem():
+    est = te.scatter2scatter_estimate(
+        block_m=128, d_in=4096, d_out=2048, block_n=512
+    )
+    assert est.fits_vmem, f"{est.vmem_bytes / 2**20:.1f} MiB exceeds VMEM"
+
+
+def test_util_drops_with_misaligned_tiles():
+    aligned = te.scatter2scatter_estimate(block_m=128, d_in=4096, d_out=2048)
+    ragged = te.scatter2scatter_estimate(block_m=100, d_in=4096, d_out=2048)
+    assert ragged.mxu_util < aligned.mxu_util
+
+
+def test_fill_scales_useful_macs():
+    full = te.scatter2scatter_estimate(
+        block_m=128, d_in=512, d_out=512, avg_fill=1.0
+    )
+    half = te.scatter2scatter_estimate(
+        block_m=128, d_in=512, d_out=512, avg_fill=0.5
+    )
+    assert half.gemm_macs == full.gemm_macs // 2
+    assert half.mxu_util < full.mxu_util
+
+
+def test_padded_pipeline_pays_more_hbm():
+    s = te.scatter2scatter_estimate(block_m=128, d_in=4096, d_out=2048)
+    p = te.padded_pipeline_estimate(
+        block_m=128, d_in=4096, d_out=2048, pad_ratio=0.1
+    )
+    assert p.hbm_bytes > s.hbm_bytes
+
+
+def test_roofline_predicts_scatter_wins():
+    s = te.scatter2scatter_estimate(
+        block_m=128, d_in=4096, d_out=2048, block_n=512
+    )
+    p = te.padded_pipeline_estimate(
+        block_m=128, d_in=4096, d_out=2048, pad_ratio=0.06
+    )
+    # pure-bandwidth limit upper-bounds the on-hardware gap (the paper's
+    # measured 1.1-1.4x sits below it because the GEMMs are partly
+    # compute-bound on A100)
+    r = te.roofline_ratio(s, p)
+    assert 1.0 < r < 5.0, r
+
+
+def test_report_renders():
+    text = te.report()
+    assert "scatter2scatter" in text and "estimated TPU speedup" in text

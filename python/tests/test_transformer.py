@@ -1,0 +1,169 @@
+"""Transformer LM: shapes, training dynamics, implementation equivalence
+and the KV-cache serving path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import transformer as tr
+
+from .conftest import assert_allclose
+
+TINY = tr.ModelConfig(
+    vocab_size=64, d_model=32, n_layers=2, n_heads=2, d_head=16,
+    num_experts=4, top_k=2, d_expert=32, mlp_impl="scatter", block_m=16,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return tr.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def test_param_count_matches_config(tiny_params):
+    actual = sum(int(np.prod(v.shape)) for v in tiny_params.values())
+    assert actual == TINY.param_count()
+
+
+def test_forward_shapes(tiny_params):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 11), 0, 64)
+    logits, aux = tr.forward(tiny_params, toks, TINY)
+    assert logits.shape == (3, 11, 64)
+    assert aux.shape == ()
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_mlp_impls_same_function(tiny_params):
+    """All MLP backends define the same LM function (Table-1 property)."""
+    import dataclasses
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0, 64)
+    base, _ = tr.forward(tiny_params, toks, TINY)
+    for impl in ["padded", "naive"]:
+        cfg = dataclasses.replace(TINY, mlp_impl=impl)
+        got, _ = tr.forward(tiny_params, toks, cfg)
+        assert_allclose(got, base, atol=2e-3, rtol=2e-3, msg=impl)
+
+
+def test_train_step_reduces_loss(tiny_params):
+    params = tiny_params
+    m, v = tr.init_opt_state(params)
+    opt = tr.AdamConfig(lr=1e-2)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (4, 17), 0, 64)
+    step_fn = jax.jit(
+        lambda p, m, v, s, t: tr.train_step(p, m, v, s, t, TINY, opt)
+    )
+    first = last = None
+    for s in range(1, 13):
+        params, m, v, ce = step_fn(params, m, v, jnp.array(s, jnp.int32), toks)
+        if first is None:
+            first = float(ce)
+        last = float(ce)
+    assert last < first - 0.3, (first, last)
+
+
+def test_momha_attention_config():
+    import dataclasses
+    cfg = dataclasses.replace(TINY, attn_impl="momha", momha_h_expert=2, n_layers=1)
+    params = tr.init_params(cfg, jax.random.PRNGKey(4))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0, 64)
+    logits, aux = tr.forward(params, toks, cfg)
+    assert logits.shape == (2, 8, 64)
+    assert float(aux) > 0.0
+
+
+def test_prefill_decode_matches_full_forward(tiny_params):
+    """Greedy continuation via the KV-cache path ≡ full re-forward."""
+    b, t_prompt, max_len = 2, 7, 16
+    toks = jax.random.randint(jax.random.PRNGKey(6), (b, t_prompt), 0, 64)
+    lens = jnp.full((b,), t_prompt, jnp.int32)
+    logits, kc, vc = tr.prefill(tiny_params, toks, lens, TINY, max_len)
+    full_logits, _ = tr.forward(tiny_params, toks, TINY)
+    assert_allclose(logits, full_logits[:, -1], atol=2e-3, rtol=2e-3)
+
+    # decode 3 tokens greedily and compare against full forward each step
+    seq = toks
+    pos = t_prompt
+    for _ in range(3):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+        logits, kc, vc = tr.decode_step(
+            tiny_params, kc, vc, jnp.full((b,), pos, jnp.int32), nxt, TINY
+        )
+        want, _ = tr.forward(tiny_params, seq, TINY)
+        assert_allclose(logits, want[:, -1], atol=5e-3, rtol=5e-3)
+        pos += 1
+
+
+def test_prefill_ragged_prompts_match_per_row():
+    """Right-padded ragged prompts: each slot's last-logits equal an
+    unpadded forward of its own prompt (continuous-batching contract)."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    p_width = 9
+    lens = [4, 9, 6]
+    key = jax.random.PRNGKey(7)
+    rows = [jax.random.randint(key, (l,), 1, 64) for l in lens]
+    padded = jnp.stack([
+        jnp.pad(r, (0, p_width - r.shape[0])) for r in rows
+    ]).astype(jnp.int32)
+    logits, _, _ = tr.prefill(
+        params, padded, jnp.array(lens, jnp.int32), TINY, 16
+    )
+    for b, r in enumerate(rows):
+        want, _ = tr.forward(params, r[None], TINY)
+        assert_allclose(logits[b], want[0, -1], atol=2e-3, rtol=2e-3)
+
+
+def test_decode_per_slot_positions_independent():
+    """Slots at different positions decode as if batched alone."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    b, max_len = 2, 16
+    t1, t2 = 5, 8
+    k1 = jax.random.PRNGKey(8)
+    r1 = jax.random.randint(k1, (t1,), 1, 64).astype(jnp.int32)
+    r2 = jax.random.randint(jax.random.PRNGKey(9), (t2,), 1, 64).astype(jnp.int32)
+    width = max(t1, t2)
+    padded = jnp.stack([
+        jnp.pad(r1, (0, width - t1)), jnp.pad(r2, (0, width - t2))
+    ])
+    lens = jnp.array([t1, t2], jnp.int32)
+    logits, kc, vc = tr.prefill(params, padded, lens, TINY, max_len)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    step_logits, _, _ = tr.decode_step(params, kc, vc, lens, nxt, TINY)
+    # compare each slot vs a solo full forward over its true sequence
+    for b_i, (r, t) in enumerate([(r1, t1), (r2, t2)]):
+        seq = jnp.concatenate([r, nxt[b_i:b_i + 1]])[None]
+        want, _ = tr.forward(params, seq, TINY)
+        assert_allclose(step_logits[b_i], want[0, -1], atol=5e-3, rtol=5e-3)
+
+
+def test_adam_update_moves_params(tiny_params):
+    grads = jax.tree.map(jnp.ones_like, tiny_params)
+    m, v = tr.init_opt_state(tiny_params)
+    opt = tr.AdamConfig(lr=1e-3)
+    new, m, v = tr.adam_update(
+        tiny_params, grads, m, v, jnp.array(1, jnp.int32), opt
+    )
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), tiny_params, new
+    )
+    assert all(d > 0 for d in jax.tree.leaves(moved))
+
+
+def test_adam_grad_clip():
+    """Huge grads are clipped to grad_clip global norm before the update."""
+    params = {"w": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4,), 1e6)}
+    m, v = tr.init_opt_state(params)
+    opt = tr.AdamConfig(lr=1.0, grad_clip=1.0)
+    new, _, _ = tr.adam_update(params, grads, m, v, jnp.array(1, jnp.int32), opt)
+    assert bool(jnp.isfinite(new["w"]).all())
+
+
+def test_loss_fn_is_finite(tiny_params):
+    toks = jax.random.randint(jax.random.PRNGKey(8), (2, 13), 0, 64)
+    total, ce = tr.loss_fn(tiny_params, toks, TINY)
+    assert bool(jnp.isfinite(total)) and bool(jnp.isfinite(ce))
+    assert float(total) >= float(ce)  # aux term is non-negative

@@ -1,0 +1,87 @@
+//! Design ablation (DESIGN.md §7): GEMM row-block size vs padding waste
+//! and memory, across routing-imbalance regimes.
+//!
+//! The paper fixes block 128 (the MXU/tensor-core native tile).  This
+//! ablation quantifies the trade-off that choice encodes: bigger blocks
+//! raise MXU utilisation per pass but waste more padding on imbalanced
+//! experts — the effect behind Fig 5's Megablocks degradation.  Uses the
+//! analytic models only (no kernel execution), so it also documents the
+//! *mechanism* independently of interpret-mode noise.
+
+use scattermoe::benchkit::{write_report, Measurement};
+use scattermoe::coordinator::ExpertStats;
+use scattermoe::memmodel::{padded_footprint, scatter_footprint, MlpShape};
+use scattermoe::rng::Rng;
+
+fn skewed_counts(slots: usize, e: usize, hot_frac: f64, rng: &mut Rng) -> Vec<usize> {
+    let hot = (slots as f64 * hot_frac) as usize;
+    let mut counts = vec![0usize; e];
+    counts[0] = hot;
+    for _ in 0..slots - hot {
+        counts[1 + rng.below((e - 1) as u64) as usize] += 1;
+    }
+    counts
+}
+
+fn main() -> anyhow::Result<()> {
+    let base = MlpShape {
+        tokens: 8192,
+        k: 4,
+        num_experts: 64,
+        d_model: 512,
+        d_expert: 256,
+        block: 128,
+        dtype_bytes: 4,
+    };
+    let mut rng = Rng::new(11);
+    let mut rows = Vec::new();
+
+    println!(
+        "ablation: T={} k={} E={} — padding waste & memory ratio by (block, skew)",
+        base.tokens, base.k, base.num_experts
+    );
+    println!(
+        "{:>6} {:>10} {:>14} {:>16} {:>16}",
+        "block", "skew", "pad waste", "scatter/padded", "scatter/padded"
+    );
+    println!(
+        "{:>6} {:>10} {:>14} {:>16} {:>16}",
+        "", "", "(rows)", "(inference)", "(training)"
+    );
+    for &block in &[8usize, 32, 128, 512] {
+        for &(label, hot) in &[("balanced", 0.0f64), ("mild", 0.3), ("hot-expert", 0.7)] {
+            let shape = MlpShape { block, ..base };
+            let counts = if hot == 0.0 {
+                shape.balanced_counts()
+            } else {
+                skewed_counts(shape.slots(), shape.num_experts, hot, &mut rng)
+            };
+            let mut stats = ExpertStats::new(shape.num_experts);
+            stats.record_counts(&counts.iter().map(|&c| c as u64).collect::<Vec<_>>());
+            let waste = stats.padding_waste(block as u64);
+            let inf = scatter_footprint(&shape, false).total() as f64
+                / padded_footprint(&shape, &counts, false).total() as f64;
+            let tr = scatter_footprint(&shape, true).total() as f64
+                / padded_footprint(&shape, &counts, true).total() as f64;
+            println!(
+                "{:>6} {:>10} {:>13.1}% {:>15.1}% {:>15.1}%",
+                block, label, waste * 100.0, inf * 100.0, tr * 100.0
+            );
+            rows.push(Measurement {
+                name: format!("block{block}-{label}"),
+                runs: 1,
+                p5: waste,
+                median: inf,
+                p95: tr,
+                units_per_iter: 0.0,
+            });
+        }
+    }
+    println!(
+        "\nreading: ScatterMoE's ratio *improves* (falls) with both block size and\n\
+         skew because only the padded baseline materialises the wasted rows —\n\
+         the paper's Fig 5 mechanism, isolated."
+    );
+    write_report("bench_reports/ablation_block_size.json", "ablation", &rows);
+    Ok(())
+}

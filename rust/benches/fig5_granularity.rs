@@ -1,0 +1,70 @@
+//! Figure 5 — granularity scaling: k ∈ {1,2,4,8,16}, E = 8k, fixed
+//! active parameters (d_expert = d_ff / k, so G = k).
+//!
+//! Paper: ScatterMoE's throughput relative to Megablocks *grows* with G
+//! (padding waste grows with E), and the gap is larger for inference
+//! (forward-only) than training.
+
+use scattermoe::benchkit::{print_table, write_report, BenchOpts};
+use scattermoe::figbench::{bench_artifact, open, paper_check};
+
+const KS: [usize; 5] = [1, 2, 4, 8, 16];
+
+fn main() -> anyhow::Result<()> {
+    let rt = open()?;
+    let opts = BenchOpts::default();
+    let spec = rt.spec("mlp_fwd_scatter_fig5_k1")?.clone();
+    let tokens = spec.meta_usize("T").unwrap() as f64;
+    println!(
+        "Fig 5 config: T={} d_model={} d_ff(active)={} ; E=8k, d_expert=d_ff/k",
+        spec.meta_usize("T").unwrap(),
+        spec.meta_usize("d_model").unwrap(),
+        spec.meta_usize("d_expert").unwrap(), // k=1: d_expert == d_ff
+    );
+
+    // the fixed-active-params dense reference (the paper's relative axis)
+    let dense = bench_artifact(&rt, "mlp_fwd_dense_fig5", "dense (active params)", tokens, opts)?;
+
+    let mut rows = vec![dense];
+    for mode in ["fwd", "train"] {
+        for impl_ in ["scatter", "padded"] {
+            for k in KS {
+                let name = format!("mlp_{mode}_{impl_}_fig5_k{k}");
+                rows.push(bench_artifact(
+                    &rt,
+                    &name,
+                    &format!("{impl_} {mode} G={k} (E={})", 8 * k),
+                    tokens,
+                    opts,
+                )?);
+            }
+        }
+    }
+    print_table(
+        "Fig 5: granularity sweep (tokens/s, relative to dense active-params)",
+        &rows,
+        Some("dense (active params)"),
+    );
+
+    // the paper's claim: scatter/padded ratio grows with G
+    let tp = |n: String| rows.iter().find(|m| m.name == n).unwrap().throughput();
+    println!("\nscatter ÷ padded by granularity:");
+    let mut first_fwd = 0.0;
+    let mut last_fwd = 0.0;
+    for k in KS {
+        let rf = tp(format!("scatter fwd G={k} (E={})", 8 * k))
+            / tp(format!("padded fwd G={k} (E={})", 8 * k));
+        let rt_ = tp(format!("scatter train G={k} (E={})", 8 * k))
+            / tp(format!("padded train G={k} (E={})", 8 * k));
+        println!("  G={k:<3} fwd {rf:5.2}x   train {rt_:5.2}x");
+        if k == KS[0] {
+            first_fwd = rf;
+        }
+        if k == KS[KS.len() - 1] {
+            last_fwd = rf;
+        }
+    }
+    paper_check("gap grows with G (fwd, G=16 vs G=1)", 1.5, last_fwd / first_fwd);
+    write_report("bench_reports/fig5.json", "5", &rows);
+    Ok(())
+}

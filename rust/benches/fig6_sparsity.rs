@@ -1,0 +1,61 @@
+//! Figure 6 — decreasing sparsity: growing k at fixed E = 64, compared
+//! to a fully dense MLP with d_ff = E · d_expert (same *total* params).
+//!
+//! Paper: both SMoE implementations beat the big dense model while k is
+//! small; by k ≈ 30 the SMoE overhead (routing, sorting, copies) eats
+//! the sparsity advantage and throughput approaches the dense line.
+
+use scattermoe::benchkit::{print_table, write_report, BenchOpts};
+use scattermoe::figbench::{bench_artifact, open, paper_check};
+
+const KS: [usize; 6] = [2, 4, 8, 16, 24, 30];
+
+fn main() -> anyhow::Result<()> {
+    let rt = open()?;
+    let opts = BenchOpts::default();
+    let spec = rt.spec("mlp_fwd_scatter_fig6_k2")?.clone();
+    let tokens = spec.meta_usize("T").unwrap() as f64;
+    println!(
+        "Fig 6 config: T={} d_model={} E=64 d_expert={} ; dense d_ff = {}",
+        spec.meta_usize("T").unwrap(),
+        spec.meta_usize("d_model").unwrap(),
+        spec.meta_usize("d_expert").unwrap(),
+        64 * spec.meta_usize("d_expert").unwrap(),
+    );
+
+    let dense = bench_artifact(
+        &rt, "mlp_fwd_dense_fig6", "dense (total params)", tokens, opts,
+    )?;
+    let mut rows = vec![dense];
+    for impl_ in ["scatter", "padded"] {
+        for k in KS {
+            rows.push(bench_artifact(
+                &rt,
+                &format!("mlp_fwd_{impl_}_fig6_k{k}"),
+                &format!("{impl_} k={k}"),
+                tokens,
+                opts,
+            )?);
+        }
+    }
+    print_table(
+        "Fig 6: decreasing sparsity (tokens/s, relative to equal-total-params dense)",
+        &rows,
+        Some("dense (total params)"),
+    );
+
+    let tp = |n: String| rows.iter().find(|m| m.name == n).unwrap().throughput();
+    let dense_tp = rows[0].throughput();
+    let k_small = tp(format!("scatter k={}", KS[0])) / dense_tp;
+    let k_large = tp(format!("scatter k={}", KS[KS.len() - 1])) / dense_tp;
+    paper_check("sparse >> dense at small k", 4.0, k_small);
+    paper_check("advantage shrinks by k=30 (rel. to small k)", 0.25, k_large / k_small);
+    // scatter stays at or above padded across the sweep
+    let mut ok = true;
+    for k in KS {
+        ok &= tp(format!("scatter k={k}")) >= 0.9 * tp(format!("padded k={k}"));
+    }
+    println!("scatter >= padded across sweep: {}", if ok { "yes" } else { "NO" });
+    write_report("bench_reports/fig6.json", "6", &rows);
+    Ok(())
+}

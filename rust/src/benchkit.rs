@@ -1,0 +1,166 @@
+//! Benchmark harness substrate (no `criterion` offline).
+//!
+//! Mirrors the paper's measurement protocol (§4.1): warmup, then N timed
+//! runs, reporting the **median and the 5th/95th percentiles**.  Results
+//! can be printed as aligned tables and dumped as JSON for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::config::Json;
+use crate::metrics::Histogram;
+
+/// One measured series (e.g. "scatter fwd @ k=4").
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub runs: usize,
+    /// seconds per iteration
+    pub p5: f64,
+    pub median: f64,
+    pub p95: f64,
+    /// optional work units per iteration (tokens, requests, …)
+    pub units_per_iter: f64,
+}
+
+impl Measurement {
+    /// Work units per second at the median.
+    pub fn throughput(&self) -> f64 {
+        if self.median <= 0.0 {
+            0.0
+        } else {
+            self.units_per_iter / self.median
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("runs".into(), Json::from(self.runs));
+        m.insert("p5_s".into(), Json::from(self.p5));
+        m.insert("median_s".into(), Json::from(self.median));
+        m.insert("p95_s".into(), Json::from(self.p95));
+        m.insert("units_per_iter".into(), Json::from(self.units_per_iter));
+        m.insert("throughput".into(), Json::from(self.throughput()));
+        Json::Obj(m)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub runs: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        // The paper uses 100 runs on an A100; our single-CPU-core PJRT
+        // substrate uses fewer by default (override with SCATTERMOE_RUNS).
+        let runs = std::env::var("SCATTERMOE_RUNS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(15);
+        BenchOpts { warmup: 2, runs }
+    }
+}
+
+/// Time `f` per the protocol; `units_per_iter` scales throughput.
+pub fn bench<F: FnMut()>(
+    name: &str, opts: BenchOpts, units_per_iter: f64, mut f: F,
+) -> Measurement {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..opts.runs {
+        let t = Instant::now();
+        f();
+        h.record(t.elapsed().as_secs_f64());
+    }
+    let (p5, median, p95) = h.paper_summary();
+    Measurement { name: name.into(), runs: opts.runs, p5, median, p95, units_per_iter }
+}
+
+/// Aligned table of measurements, one row per series, with a relative
+/// column versus a baseline row (the paper's "relative throughput" axes).
+pub fn print_table(title: &str, rows: &[Measurement], baseline: Option<&str>) {
+    println!("\n=== {title} ===");
+    let base_tp = baseline
+        .and_then(|b| rows.iter().find(|r| r.name == b))
+        .map(|r| r.throughput());
+    println!(
+        "{:<36} {:>10} {:>10} {:>10} {:>14} {:>9}",
+        "series", "p5 (ms)", "med (ms)", "p95 (ms)", "units/s", "rel"
+    );
+    for r in rows {
+        let rel = match base_tp {
+            Some(b) if b > 0.0 => format!("{:.2}x", r.throughput() / b),
+            _ => "-".into(),
+        };
+        println!(
+            "{:<36} {:>10.2} {:>10.2} {:>10.2} {:>14.1} {:>9}",
+            r.name,
+            r.p5 * 1e3,
+            r.median * 1e3,
+            r.p95 * 1e3,
+            r.throughput(),
+            rel
+        );
+    }
+}
+
+/// Dump measurements as a JSON report next to the bench binary's output.
+pub fn write_report(path: &str, figure: &str, rows: &[Measurement]) {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("figure".into(), Json::Str(figure.into()));
+    obj.insert(
+        "measurements".into(),
+        Json::Arr(rows.iter().map(|m| m.to_json()).collect()),
+    );
+    let text = Json::Obj(obj).to_string_pretty();
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("warning: could not write bench report {path}: {e}");
+    } else {
+        println!("report -> {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_runs() {
+        let mut n = 0;
+        let opts = BenchOpts { warmup: 3, runs: 5 };
+        // sleep keeps timings above clock granularity so the percentile
+        // ordering is meaningful (sub-tick timings can tie arbitrarily)
+        let m = bench("t", opts, 10.0, || {
+            n += 1;
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert_eq!(n, 8);
+        assert_eq!(m.runs, 5);
+        assert!(m.p5 <= m.median && m.median <= m.p95);
+    }
+
+    #[test]
+    fn throughput_scales_with_units() {
+        let opts = BenchOpts { warmup: 0, runs: 3 };
+        let m = bench("t", opts, 100.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(m.throughput() > 0.0 && m.throughput() < 100.0 / 0.002 * 1.5);
+    }
+
+    #[test]
+    fn report_roundtrip(){
+        let m = bench("x", BenchOpts { warmup: 0, runs: 2 }, 1.0, || {});
+        let j = m.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("runs").unwrap().as_usize(), Some(2));
+    }
+}

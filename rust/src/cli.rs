@@ -1,0 +1,243 @@
+//! Declarative CLI flag parser substrate (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults, and an auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Builder-style argument parser.
+pub struct Cli {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(String, String)>,
+}
+
+/// Parsed argument values.
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.into(),
+            about: about.into(),
+            flags: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Register `--name <value>` with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a required `--name <value>`.
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` switch (default false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Register a positional argument (for help text only).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s += &format!(" <{p}>");
+        }
+        s += " [FLAGS]\n\nFLAGS:\n";
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) if !d.is_empty() => format!(" (default: {d})"),
+                _ => " (required)".to_string(),
+            };
+            s += &format!("  --{:<18} {}{}\n", f.name, f.help, d);
+        }
+        s += "  --help               show this message\n";
+        s
+    }
+
+    /// Parse an explicit argv (without the program name).
+    pub fn parse_from(&self, argv: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for f in &self.flags {
+            if f.is_bool {
+                bools.insert(f.name.clone(), false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    bools.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} needs a value"))?
+                            .clone(),
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        for f in &self.flags {
+            if !f.is_bool && !values.contains_key(&f.name) {
+                return Err(format!("missing required flag --{}", f.name));
+            }
+        }
+        Ok(Args { values, bools, positionals })
+    }
+
+    /// Parse the process arguments; prints help/errors and exits on failure.
+    pub fn parse(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not registered"))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("steps", "100", "steps")
+            .flag("mode", "fast", "mode")
+            .switch("verbose", "verbosity")
+            .required("out", "output")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli()
+            .parse_from(&argv(&["--out", "x", "--steps=7", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 7);
+        assert_eq!(a.get("mode"), "fast");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(&argv(&["--steps", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse_from(&argv(&["--out", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let err = cli().parse_from(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--steps"));
+        assert!(err.contains("required"));
+    }
+}

@@ -1,0 +1,327 @@
+//! Continuous batcher over fixed-width decode slots.
+//!
+//! The AOT decode artifact has a static batch width `B` (XLA shapes are
+//! compile-time).  The batcher maps a dynamic request stream onto those
+//! `B` slots vLLM-style: when a sequence finishes, its slot is refilled
+//! from the admission queue at the next step boundary; empty slots decode
+//! padding that is masked out of the results.
+//!
+//! Invariants (property-tested in `tests/coordinator_props.rs`):
+//!   * a request occupies at most one slot, and every active slot holds
+//!     exactly one request;
+//!   * no request is lost: admitted = finished + active + queued;
+//!   * FIFO admission: requests enter slots in arrival order.
+
+use std::collections::VecDeque;
+
+use super::request::{FinishReason, Request, RequestId, Response};
+
+/// State of one decode slot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SlotState {
+    Empty,
+    /// Waiting for the prefill of its sequence.
+    Prefilling(RequestId),
+    /// Actively decoding.
+    Decoding(RequestId),
+}
+
+/// One decode slot of the static batch.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub state: SlotState,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub max_new: usize,
+    pub stop_token: Option<i32>,
+    pub started: Option<std::time::Instant>,
+    pub arrived: Option<std::time::Instant>,
+    pub first_token_at: Option<std::time::Instant>,
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot {
+            state: SlotState::Empty,
+            prompt: Vec::new(),
+            generated: Vec::new(),
+            max_new: 0,
+            stop_token: None,
+            started: None,
+            arrived: None,
+            first_token_at: None,
+        }
+    }
+
+    /// Total sequence length so far (prompt + generated).
+    pub fn seq_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+}
+
+/// Continuous batcher over `width` slots.
+pub struct Batcher {
+    slots: Vec<Slot>,
+    queue: VecDeque<Request>,
+    max_queue: usize,
+    admitted: u64,
+    finished: u64,
+    rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(width: usize, max_queue: usize) -> Self {
+        Batcher {
+            slots: (0..width).map(|_| Slot::empty()).collect(),
+            queue: VecDeque::new(),
+            max_queue,
+            admitted: 0,
+            finished: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admission control: enqueue or reject (backpressure signal).
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.max_queue {
+            self.rejected += 1;
+            return false;
+        }
+        self.admitted += 1;
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Fill empty slots from the queue (FIFO).  Returns the slot indices
+    /// that now need a prefill.
+    pub fn refill(&mut self) -> Vec<usize> {
+        let mut filled = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if slot.state != SlotState::Empty {
+                continue;
+            }
+            let Some(req) = self.queue.pop_front() else { break };
+            *slot = Slot {
+                state: SlotState::Prefilling(req.id),
+                prompt: req.prompt,
+                generated: Vec::new(),
+                max_new: req.params.max_new_tokens,
+                stop_token: req.params.stop_token,
+                started: Some(std::time::Instant::now()),
+                arrived: Some(req.arrived),
+                first_token_at: None,
+            };
+            filled.push(i);
+        }
+        filled
+    }
+
+    /// Mark a slot as prefilled and record its first sampled token.
+    pub fn complete_prefill(&mut self, idx: usize, first_token: i32) {
+        let slot = &mut self.slots[idx];
+        if let SlotState::Prefilling(id) = slot.state {
+            slot.state = SlotState::Decoding(id);
+            slot.generated.push(first_token);
+            slot.first_token_at = Some(std::time::Instant::now());
+        }
+    }
+
+    /// Indices currently decoding.
+    pub fn decoding_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.state, SlotState::Decoding(_)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Record one decoded token for a slot; returns a [`Response`] if the
+    /// sequence finished (slot becomes Empty).
+    pub fn push_token(&mut self, idx: usize, token: i32) -> Option<Response> {
+        let slot = &mut self.slots[idx];
+        let SlotState::Decoding(id) = slot.state else {
+            return None;
+        };
+        slot.generated.push(token);
+        let hit_stop = slot.stop_token == Some(token);
+        let hit_len = slot.generated.len() >= slot.max_new;
+        if !(hit_stop || hit_len) {
+            return None;
+        }
+        let now = std::time::Instant::now();
+        let arrived = slot.arrived.unwrap_or(now);
+        let resp = Response {
+            id,
+            tokens: std::mem::take(&mut slot.generated),
+            finish: if hit_stop { FinishReason::Stop } else { FinishReason::Length },
+            ttft: slot
+                .first_token_at
+                .map(|t| (t - arrived).as_secs_f64())
+                .unwrap_or(0.0),
+            latency: (now - arrived).as_secs_f64(),
+            prompt_len: slot.prompt.len(),
+        };
+        *slot = Slot::empty();
+        self.finished += 1;
+        Some(resp)
+    }
+
+    /// Abort everything in a slot and the queue (drain/shutdown).
+    pub fn abort_all(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        for slot in &mut self.slots {
+            if let SlotState::Decoding(id) | SlotState::Prefilling(id) = slot.state {
+                out.push(Response {
+                    id,
+                    tokens: std::mem::take(&mut slot.generated),
+                    finish: FinishReason::Aborted,
+                    ttft: 0.0,
+                    latency: 0.0,
+                    prompt_len: slot.prompt.len(),
+                });
+                *slot = Slot::empty();
+                self.finished += 1;
+            }
+        }
+        for req in self.queue.drain(..) {
+            out.push(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                finish: FinishReason::Aborted,
+                ttft: 0.0,
+                latency: 0.0,
+                prompt_len: req.prompt.len(),
+            });
+            self.finished += 1;
+        }
+        out
+    }
+
+    /// Conservation counters: (admitted, finished, active, queued).
+    pub fn accounting(&self) -> (u64, u64, u64, u64) {
+        let active = self
+            .slots
+            .iter()
+            .filter(|s| s.state != SlotState::Empty)
+            .count() as u64;
+        (self.admitted, self.finished, active, self.queue.len() as u64)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// True when no work remains anywhere.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.slots.iter().all(|s| s.state == SlotState::Empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+
+    fn req(id: u64, len: usize, max_new: usize) -> Request {
+        Request::new(
+            id,
+            vec![1; len],
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn refill_is_fifo() {
+        let mut b = Batcher::new(2, 16);
+        for i in 0..4 {
+            assert!(b.submit(req(i, 3, 4)));
+        }
+        let filled = b.refill();
+        assert_eq!(filled, vec![0, 1]);
+        match (&b.slots()[0].state, &b.slots()[1].state) {
+            (SlotState::Prefilling(a), SlotState::Prefilling(c)) => {
+                assert_eq!(a.0, 0);
+                assert_eq!(c.0, 1);
+            }
+            s => panic!("{s:?}"),
+        }
+        assert_eq!(b.queue_len(), 2);
+    }
+
+    #[test]
+    fn finish_by_length_frees_slot() {
+        let mut b = Batcher::new(1, 4);
+        b.submit(req(7, 2, 2));
+        b.refill();
+        b.complete_prefill(0, 10);
+        assert_eq!(b.decoding_slots(), vec![0]);
+        let done = b.push_token(0, 11);
+        let resp = done.expect("finished at max_new=2");
+        assert_eq!(resp.tokens, vec![10, 11]);
+        assert_eq!(resp.finish, FinishReason::Length);
+        assert!(b.idle());
+    }
+
+    #[test]
+    fn finish_by_stop_token() {
+        let mut b = Batcher::new(1, 4);
+        let mut r = req(9, 1, 100);
+        r.params.stop_token = Some(99);
+        b.submit(r);
+        b.refill();
+        b.complete_prefill(0, 5);
+        assert!(b.push_token(0, 6).is_none());
+        let resp = b.push_token(0, 99).unwrap();
+        assert_eq!(resp.finish, FinishReason::Stop);
+    }
+
+    #[test]
+    fn queue_backpressure_rejects() {
+        let mut b = Batcher::new(1, 2);
+        assert!(b.submit(req(1, 1, 1)));
+        assert!(b.submit(req(2, 1, 1)));
+        assert!(!b.submit(req(3, 1, 1)));
+        assert_eq!(b.rejected(), 1);
+    }
+
+    #[test]
+    fn conservation_accounting() {
+        let mut b = Batcher::new(2, 8);
+        for i in 0..5 {
+            b.submit(req(i, 1, 1));
+        }
+        b.refill();
+        let (adm, fin, act, q) = b.accounting();
+        assert_eq!(adm, 5);
+        assert_eq!(fin + act + q, 5);
+    }
+
+    #[test]
+    fn abort_drains_everything() {
+        let mut b = Batcher::new(2, 8);
+        for i in 0..5 {
+            b.submit(req(i, 1, 4));
+        }
+        b.refill();
+        b.complete_prefill(0, 1);
+        let aborted = b.abort_all();
+        assert_eq!(aborted.len(), 5);
+        assert!(b.idle());
+        let (adm, fin, act, q) = b.accounting();
+        assert_eq!((adm, fin, act, q), (5, 5, 0, 0));
+    }
+}

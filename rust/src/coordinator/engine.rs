@@ -1,0 +1,393 @@
+//! The serving engine: scheduler + continuous batcher + PJRT runtime.
+//!
+//! One engine tick = one scheduler decision:
+//!
+//! * **Prefill** — refill empty slots from the queue, run `serve_prefill`
+//!   on the (right-padded) prompts of the *new* slots, and splice only
+//!   those slots' KV rows into the live cache (in-flight slots are
+//!   untouched — this is the continuous-batching contract the per-slot
+//!   decode artifact makes possible).
+//! * **Decode** — run `serve_decode` once for the whole batch with the
+//!   per-slot position vector; sample a token per active slot; retire
+//!   finished sequences and free their slots.
+//!
+//! Model parameters are converted to XLA literals once at load time and
+//! reused every call; KV caches flow call-to-call as literals.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{Batcher, SlotState};
+use crate::coordinator::expert_stats::ExpertStats;
+use crate::coordinator::request::{Request, RequestId, Response};
+use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
+use crate::metrics::Histogram;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Engine configuration (shapes come from the artifact manifest).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub prefill_artifact: String,
+    pub decode_artifact: String,
+    pub init_artifact: String,
+    pub max_queue: usize,
+    pub scheduler: SchedulerConfig,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            prefill_artifact: "serve_prefill".into(),
+            decode_artifact: "serve_decode".into(),
+            init_artifact: "lm_serve_init".into(),
+            max_queue: 256,
+            scheduler: SchedulerConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// Serving statistics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub completed: u64,
+    pub decode_steps: u64,
+    pub prefills: u64,
+    pub generated_tokens: u64,
+    pub ttft: Histogram,
+    pub latency: Histogram,
+}
+
+pub struct Engine {
+    runtime: std::sync::Arc<Runtime>,
+    cfg: EngineConfig,
+    batcher: Batcher,
+    scheduler: Scheduler,
+    /// static batch width / prompt width / max len / vocab from manifest
+    width: usize,
+    prompt_width: usize,
+    max_len: usize,
+    vocab: usize,
+    /// model params as device-resident buffers (uploaded once)
+    params: Vec<xla::PjRtBuffer>,
+    /// live KV caches (literals, fed back each step)
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    /// per-slot next position (= current sequence length)
+    pos: Vec<i32>,
+    /// per-slot last emitted token
+    last_token: Vec<i32>,
+    rng: Rng,
+    pub metrics: EngineMetrics,
+    pub expert_stats: ExpertStats,
+    next_id: u64,
+}
+
+impl Engine {
+    /// Build the engine: loads manifest shapes, materialises params via
+    /// the init artifact, zero-initialises the KV caches.
+    pub fn new(runtime: std::sync::Arc<Runtime>, cfg: EngineConfig) -> Result<Engine> {
+        let prefill = runtime.spec(&cfg.prefill_artifact)?.clone();
+        let width = prefill.inputs[0].shape[0];
+        let prompt_width = prefill.inputs[0].shape[1];
+        let decode = runtime.spec(&cfg.decode_artifact)?.clone();
+        let cache_spec = &decode.inputs[2];
+        let max_len = cache_spec.shape[2];
+        let vocab = decode.outputs[0].shape[1];
+        let num_experts = prefill.meta_usize("num_experts").unwrap_or(8);
+
+        // init params once; keep as literals for every subsequent call
+        let seed = Tensor::scalar_u32(cfg.seed as u32);
+        let t0 = Instant::now();
+        let params_t = runtime.run(&cfg.init_artifact, &[seed])?;
+        let params = params_t
+            .iter()
+            .map(|t| runtime.upload_tensor(t))
+            .collect::<Result<Vec<_>>>()?;
+        log::info!(
+            "engine: {} params initialised in {:.2}s",
+            params.len(),
+            t0.elapsed().as_secs_f64()
+        );
+
+        let kc = Tensor::zeros(crate::tensor::DType::F32, &cache_spec.shape)
+            .to_literal()?;
+        let vc = Tensor::zeros(crate::tensor::DType::F32, &cache_spec.shape)
+            .to_literal()?;
+        Ok(Engine {
+            batcher: Batcher::new(width, cfg.max_queue),
+            scheduler: Scheduler::new(cfg.scheduler),
+            width,
+            prompt_width,
+            max_len,
+            vocab,
+            params,
+            k_cache: kc,
+            v_cache: vc,
+            pos: vec![0; width],
+            last_token: vec![0; width],
+            rng: Rng::new(cfg.seed ^ 0x5EED),
+            metrics: EngineMetrics::default(),
+            expert_stats: ExpertStats::new(num_experts),
+            runtime,
+            cfg,
+            next_id: 0,
+        })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    /// Submit a request; returns its id, or None under backpressure.
+    pub fn submit(&mut self, prompt: Vec<i32>, params: crate::coordinator::request::SamplingParams) -> Option<RequestId> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request::new(id, prompt, params);
+        let rid = req.id;
+        if self.batcher.submit(req) {
+            Some(rid)
+        } else {
+            None
+        }
+    }
+
+    /// Drive one tick; returns any responses completed during it.
+    pub fn tick(&mut self) -> Result<Vec<Response>> {
+        let (_, _, active, queued) = self.batcher.accounting();
+        let empty = self.width - active as usize;
+        let oldest = 0.0; // refined below if queue non-empty
+        let action = self.scheduler.decide(queued as usize, empty, active as usize, oldest);
+        match action {
+            Action::Prefill => self.do_prefill(),
+            Action::Decode => self.do_decode(),
+            Action::Idle => Ok(Vec::new()),
+        }
+    }
+
+    /// Run ticks until every submitted request finished.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.batcher.idle() {
+            out.extend(self.tick()?);
+        }
+        Ok(out)
+    }
+
+    fn do_prefill(&mut self) -> Result<Vec<Response>> {
+        let filled = self.batcher.refill();
+        if filled.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.metrics.prefills += 1;
+        // build padded prompt matrix for the WHOLE batch (static shape);
+        // rows of in-flight slots are zeros and their outputs are ignored.
+        let mut toks = vec![0i32; self.width * self.prompt_width];
+        let mut lens = vec![1i32; self.width];
+        for (i, slot) in self.batcher.slots().iter().enumerate() {
+            if let SlotState::Prefilling(_) = slot.state {
+                let l = slot.prompt.len().min(self.prompt_width).max(1);
+                lens[i] = l as i32;
+                for (j, &t) in slot.prompt.iter().take(l).enumerate() {
+                    toks[i * self.prompt_width + j] = t;
+                }
+            }
+        }
+        let toks_b = self.runtime.upload_tensor(
+            &Tensor::from_i32(&[self.width, self.prompt_width], toks)?,
+        )?;
+        let lens_b = self
+            .runtime
+            .upload_tensor(&Tensor::from_i32(&[self.width], lens.clone())?)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + self.params.len());
+        args.push(&toks_b);
+        args.push(&lens_b);
+        for p in &self.params {
+            args.push(p);
+        }
+        let mut outs = self
+            .runtime
+            .run_buffers(&self.cfg.prefill_artifact, &args)
+            .context("serve_prefill")?;
+        // outs: [last_logits (B,V), k_cache, v_cache]
+        let vc_new = outs.pop().unwrap();
+        let kc_new = outs.pop().unwrap();
+        let logits = Tensor::from_literal(&outs.pop().unwrap())?;
+
+        // splice ONLY the refilled slots' cache rows into the live cache
+        self.splice_cache_rows(kc_new, vc_new, &filled)?;
+
+        let mut responses = Vec::new();
+        for &i in &filled {
+            let first = self.sample_row(&logits, i)?;
+            self.pos[i] = lens[i];
+            self.last_token[i] = first;
+            self.batcher.complete_prefill(i, first);
+            self.metrics.generated_tokens += 1;
+            // a 1-token request can finish right at prefill
+            if let Some(resp) = self.maybe_finish(i, first) {
+                responses.push(resp);
+            }
+        }
+        Ok(responses)
+    }
+
+    fn do_decode(&mut self) -> Result<Vec<Response>> {
+        let decoding = self.batcher.decoding_slots();
+        if decoding.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.metrics.decode_steps += 1;
+        let pos_b = self
+            .runtime
+            .upload_tensor(&Tensor::from_i32(&[self.width], self.pos.clone())?)?;
+        let tok_b = self.runtime.upload_tensor(
+            &Tensor::from_i32(&[self.width], self.last_token.clone())?,
+        )?;
+        // cache literals are owned by `self` and stay alive through the
+        // call, so the async literal upload is safe (and avoids a copy)
+        let kc_b = self.runtime.upload(&self.k_cache)?;
+        let vc_b = self.runtime.upload(&self.v_cache)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + self.params.len());
+        args.push(&pos_b);
+        args.push(&tok_b);
+        args.push(&kc_b);
+        args.push(&vc_b);
+        for p in &self.params {
+            args.push(p);
+        }
+        let mut outs = self
+            .runtime
+            .run_buffers(&self.cfg.decode_artifact, &args)
+            .context("serve_decode")?;
+        self.v_cache = outs.pop().unwrap();
+        self.k_cache = outs.pop().unwrap();
+        let logits = Tensor::from_literal(&outs.pop().unwrap())?;
+
+        let mut responses = Vec::new();
+        for i in decoding {
+            let tok = self.sample_row(&logits, i)?;
+            self.pos[i] = (self.pos[i] + 1).min(self.max_len as i32 - 1);
+            self.last_token[i] = tok;
+            self.metrics.generated_tokens += 1;
+            if let Some(resp) = self.maybe_finish(i, tok) {
+                responses.push(resp);
+            }
+        }
+        Ok(responses)
+    }
+
+    fn maybe_finish(&mut self, slot: usize, tok: i32) -> Option<Response> {
+        let resp = self.batcher.push_token(slot, tok)?;
+        self.metrics.completed += 1;
+        self.metrics.ttft.record(resp.ttft);
+        self.metrics.latency.record(resp.latency);
+        Some(resp)
+    }
+
+    /// Greedy or temperature sampling for one batch row.
+    fn sample_row(&mut self, logits: &Tensor, row: usize) -> Result<i32> {
+        let data = logits.as_f32()?;
+        let v = &data[row * self.vocab..(row + 1) * self.vocab];
+        // greedy (serving default; temperature via SamplingParams is a
+        // per-request extension point — the slot carries no temp today)
+        let _ = &self.rng;
+        let mut best = 0usize;
+        let mut bestv = f32::NEG_INFINITY;
+        for (i, &x) in v.iter().enumerate() {
+            if x > bestv {
+                bestv = x;
+                best = i;
+            }
+        }
+        Ok(best as i32)
+    }
+
+    /// Copy rows `slots` of the freshly prefix-filled caches into the
+    /// live caches (host-side splice; cache is (L, B, Tmax, nh, dh)).
+    fn splice_cache_rows(
+        &mut self, kc_new: xla::Literal, vc_new: xla::Literal, slots: &[usize],
+    ) -> Result<()> {
+        if slots.len() == self.width {
+            // whole batch refilled: adopt wholesale, no copies
+            self.k_cache = kc_new;
+            self.v_cache = vc_new;
+            return Ok(());
+        }
+        let mut kc = Tensor::from_literal(&self.k_cache)?;
+        let mut vc = Tensor::from_literal(&self.v_cache)?;
+        let kn = Tensor::from_literal(&kc_new)?;
+        let vn = Tensor::from_literal(&vc_new)?;
+        splice_rows(&mut kc, &kn, slots)?;
+        splice_rows(&mut vc, &vn, slots)?;
+        self.k_cache = kc.to_literal()?;
+        self.v_cache = vc.to_literal()?;
+        Ok(())
+    }
+
+    /// Per-artifact runtime execution stats.
+    pub fn runtime_stats(&self) -> HashMap<String, crate::runtime::ExecStats> {
+        self.runtime.stats()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.batcher.queue_len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.batcher.idle()
+    }
+}
+
+/// Copy batch-rows `slots` from `src` into `dst`; both (L, B, T, nh, dh).
+fn splice_rows(dst: &mut Tensor, src: &Tensor, slots: &[usize]) -> Result<()> {
+    anyhow::ensure!(dst.shape == src.shape, "cache shape mismatch");
+    let (l, b) = (dst.shape[0], dst.shape[1]);
+    let row: usize = dst.shape[2..].iter().product();
+    let srcv = src.as_f32()?.to_vec();
+    let dstv = dst.as_f32_mut()?;
+    for layer in 0..l {
+        for &s in slots {
+            anyhow::ensure!(s < b, "slot out of range");
+            let off = (layer * b + s) * row;
+            dstv[off..off + row].copy_from_slice(&srcv[off..off + row]);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn splice_copies_only_selected_rows() {
+        let shape = [2usize, 3, 2, 1, 2];
+        let n: usize = shape.iter().product();
+        let mut dst = Tensor::from_f32(&shape, vec![0.0; n]).unwrap();
+        let src = Tensor::from_f32(&shape, (0..n).map(|i| i as f32).collect()).unwrap();
+        splice_rows(&mut dst, &src, &[1]).unwrap();
+        let d = dst.as_f32().unwrap();
+        let s = src.as_f32().unwrap();
+        let row = 4; // 2*1*2
+        for layer in 0..2 {
+            for slot in 0..3 {
+                let off = (layer * 3 + slot) * row;
+                for j in 0..row {
+                    let want = if slot == 1 { s[off + j] } else { 0.0 };
+                    assert_eq!(d[off + j], want, "layer {layer} slot {slot}");
+                }
+            }
+        }
+    }
+}

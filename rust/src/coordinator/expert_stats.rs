@@ -1,0 +1,145 @@
+//! Per-expert routing load telemetry.
+//!
+//! The paper's performance story hinges on expert *imbalance*: padding-
+//! based implementations waste memory and FLOPs proportional to how
+//! unevenly the router spreads tokens (§1, §4.2).  This module makes that
+//! observable at serving time: per-expert token counts, load coefficient
+//! of variation, and the padding waste a block-padded implementation
+//! *would* have incurred on the observed distribution.
+
+/// Streaming per-expert load statistics.
+#[derive(Clone, Debug)]
+pub struct ExpertStats {
+    counts: Vec<u64>,
+    batches: u64,
+}
+
+impl ExpertStats {
+    pub fn new(num_experts: usize) -> Self {
+        ExpertStats { counts: vec![0; num_experts], batches: 0 }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Record one routing decision batch: `assignments[i]` = expert id.
+    pub fn record(&mut self, assignments: &[usize]) {
+        for &e in assignments {
+            if e < self.counts.len() {
+                self.counts[e] += 1;
+            }
+        }
+        self.batches += 1;
+    }
+
+    /// Record from pre-aggregated per-expert counts.
+    pub fn record_counts(&mut self, counts: &[u64]) {
+        for (c, &n) in self.counts.iter_mut().zip(counts) {
+            *c += n;
+        }
+        self.batches += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Fraction of all routed slots handled by each expert.
+    pub fn load_fractions(&self) -> Vec<f64> {
+        let total = self.total().max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / total).collect()
+    }
+
+    /// Coefficient of variation of the per-expert load (0 = perfectly
+    /// balanced; grows with imbalance).
+    pub fn load_cv(&self) -> f64 {
+        let n = self.counts.len() as f64;
+        if n == 0.0 || self.total() == 0 {
+            return 0.0;
+        }
+        let mean = self.total() as f64 / n;
+        let var = self
+            .counts
+            .iter()
+            .map(|&c| (c as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+
+    /// Padding waste ratio a Megablocks-style implementation would incur
+    /// at block size `b` on the observed per-expert totals: padded_rows /
+    /// actual_rows − 1.
+    pub fn padding_waste(&self, b: u64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let padded: u64 = self.counts.iter().map(|&c| c.div_ceil(b) * b).sum();
+        padded as f64 / total as f64 - 1.0
+    }
+
+    /// Expert ids sorted by descending load (hot-expert report).
+    pub fn hottest(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.counts.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(self.counts[i]));
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_load_cv_zero() {
+        let mut s = ExpertStats::new(4);
+        s.record(&[0, 1, 2, 3, 0, 1, 2, 3]);
+        assert!(s.load_cv() < 1e-9);
+        assert_eq!(s.total(), 8);
+    }
+
+    #[test]
+    fn imbalance_raises_cv() {
+        let mut bal = ExpertStats::new(4);
+        bal.record(&[0, 1, 2, 3]);
+        let mut skew = ExpertStats::new(4);
+        skew.record(&[0, 0, 0, 1]);
+        assert!(skew.load_cv() > bal.load_cv());
+    }
+
+    #[test]
+    fn padding_waste_zero_when_aligned() {
+        let mut s = ExpertStats::new(2);
+        s.record_counts(&[8, 16]);
+        assert!(s.padding_waste(8) < 1e-9);
+    }
+
+    #[test]
+    fn padding_waste_grows_with_fragmentation() {
+        // 16 experts with 1 token each at block 8: padded 128 vs real 16
+        let mut s = ExpertStats::new(16);
+        s.record_counts(&[1; 16]);
+        assert!((s.padding_waste(8) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hottest_sorted() {
+        let mut s = ExpertStats::new(3);
+        s.record_counts(&[5, 20, 1]);
+        assert_eq!(s.hottest(), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut s = ExpertStats::new(5);
+        s.record_counts(&[3, 9, 1, 0, 7]);
+        let sum: f64 = s.load_fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+}

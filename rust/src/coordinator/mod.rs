@@ -1,0 +1,30 @@
+//! The serving coordinator — L3 of the ScatterMoE stack.
+//!
+//! ScatterMoE's GPU contribution is a *kernel*; deployed, it lives inside
+//! a serving engine.  This module is that engine, in the vLLM-router
+//! mold, sized to the single-device PJRT testbed:
+//!
+//! * [`request`]  — request/response types, generation parameters.
+//! * [`batcher`]  — continuous batcher: admits requests into fixed-width
+//!   decode slots, refilling slots as sequences finish (the moral
+//!   equivalent of vLLM's continuous batching over a static-shape AOT
+//!   decode step).
+//! * [`scheduler`] — prefill/decode interleaving policy and admission
+//!   control with backpressure.
+//! * [`expert_stats`] — per-expert routing load telemetry (the paper's
+//!   imbalance story made observable: padding waste, load CV).
+//! * [`engine`]   — ties it together around [`crate::runtime::Runtime`]:
+//!   worker loop, tokenizer-in/tokenizer-out, latency metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod expert_stats;
+pub mod request;
+pub mod scheduler;
+pub mod trace;
+
+pub use batcher::{Batcher, Slot, SlotState};
+pub use engine::{Engine, EngineConfig};
+pub use expert_stats::ExpertStats;
+pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};
+pub use scheduler::{Scheduler, SchedulerConfig};

@@ -1,0 +1,100 @@
+//! Request/response types for the serving engine.
+
+use std::time::Instant;
+
+/// Unique request identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// Per-request generation parameters.
+#[derive(Clone, Debug)]
+pub struct SamplingParams {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy; otherwise softmax temperature.
+    pub temperature: f32,
+    /// Stop when this token is emitted (e.g. the tokenizer's EOS).
+    pub stop_token: Option<i32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { max_new_tokens: 32, temperature: 0.0, stop_token: None, seed: 0 }
+    }
+}
+
+/// An inference request (token ids in, token ids out).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
+        Request { id: RequestId(id), prompt, params, arrived: Instant::now() }
+    }
+}
+
+/// Why a sequence stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Emitted the stop token.
+    Stop,
+    /// Rejected or cancelled by the scheduler.
+    Aborted,
+}
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// time-to-first-token, seconds
+    pub ttft: f64,
+    /// total latency, seconds
+    pub latency: f64,
+    pub prompt_len: usize,
+}
+
+impl Response {
+    /// Decode throughput for this request (tokens/s after first token).
+    pub fn decode_rate(&self) -> f64 {
+        let decode_time = (self.latency - self.ttft).max(1e-9);
+        if self.tokens.len() <= 1 {
+            0.0
+        } else {
+            (self.tokens.len() - 1) as f64 / decode_time
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_sane() {
+        let p = SamplingParams::default();
+        assert!(p.max_new_tokens > 0);
+        assert_eq!(p.temperature, 0.0);
+    }
+
+    #[test]
+    fn decode_rate_counts_post_first_tokens() {
+        let r = Response {
+            id: RequestId(1),
+            tokens: vec![1, 2, 3, 4, 5],
+            finish: FinishReason::Length,
+            ttft: 0.5,
+            latency: 1.5,
+            prompt_len: 4,
+        };
+        assert!((r.decode_rate() - 4.0).abs() < 1e-9);
+    }
+}

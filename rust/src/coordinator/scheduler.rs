@@ -1,0 +1,124 @@
+//! Prefill/decode scheduling policy.
+//!
+//! The AOT artifacts expose two static-shape entry points: `serve_prefill`
+//! (whole-batch prompt pass that also seeds the KV caches) and
+//! `serve_decode` (one token for all slots).  The scheduler decides, at
+//! each engine tick, whether to run a prefill (new arrivals waiting and a
+//! batch-restart is worth it) or a decode step (sequences in flight).
+//!
+//! Because the serve artifacts prefill all `B` slots in one call (static
+//! shapes — the paper's own "capacity" discussion applies), a prefill
+//! restarts the batch: the policy therefore weighs queued work against
+//! in-flight work, with a waiting-time bound to keep TTFT tails in check.
+
+/// Scheduler tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Run a prefill as soon as this many slots could be filled.
+    pub min_fill: usize,
+    /// ... or once the oldest queued request waited this long (seconds).
+    pub max_wait_s: f64,
+    /// Never prefill while more than this fraction of slots decode.
+    pub max_active_frac: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { min_fill: 1, max_wait_s: 0.2, max_active_frac: 0.5 }
+    }
+}
+
+/// What the engine should do this tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    Prefill,
+    Decode,
+    Idle,
+}
+
+/// Pure decision function over the observable batch state.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Scheduler { cfg }
+    }
+
+    /// Decide the next action.
+    ///
+    /// * `queued` — requests waiting for a slot,
+    /// * `empty_slots` — free decode slots,
+    /// * `active` — slots currently decoding,
+    /// * `oldest_wait_s` — waiting time of the head-of-line request.
+    pub fn decide(
+        &self, queued: usize, empty_slots: usize, active: usize,
+        oldest_wait_s: f64,
+    ) -> Action {
+        let width = empty_slots + active;
+        if queued == 0 && active == 0 {
+            return Action::Idle;
+        }
+        let fillable = queued.min(empty_slots);
+        if fillable > 0 {
+            let starving = oldest_wait_s >= self.cfg.max_wait_s;
+            let below_active_bound =
+                (active as f64) <= self.cfg.max_active_frac * width as f64;
+            if fillable >= self.cfg.min_fill && (below_active_bound || starving) {
+                return Action::Prefill;
+            }
+        }
+        if active > 0 {
+            Action::Decode
+        } else if fillable > 0 {
+            // nothing decoding; fill regardless of thresholds
+            Action::Prefill
+        } else {
+            Action::Idle
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(SchedulerConfig { min_fill: 2, max_wait_s: 1.0, max_active_frac: 0.5 })
+    }
+
+    #[test]
+    fn idle_when_no_work() {
+        assert_eq!(sched().decide(0, 8, 0, 0.0), Action::Idle);
+    }
+
+    #[test]
+    fn prefill_when_queue_and_empty_batch() {
+        assert_eq!(sched().decide(5, 8, 0, 0.0), Action::Prefill);
+    }
+
+    #[test]
+    fn decode_when_batch_busy_and_queue_small() {
+        // 6 of 8 active (> 50%), only 1 fillable (< min_fill) → decode
+        assert_eq!(sched().decide(1, 2, 6, 0.0), Action::Decode);
+    }
+
+    #[test]
+    fn starvation_forces_prefill() {
+        // active above bound, but head-of-line waited too long
+        assert_eq!(sched().decide(2, 2, 6, 5.0), Action::Prefill);
+    }
+
+    #[test]
+    fn single_straggler_fills_when_idle() {
+        // queue=1 < min_fill but nothing decoding → prefill anyway
+        assert_eq!(sched().decide(1, 8, 0, 0.0), Action::Prefill);
+    }
+
+    #[test]
+    fn drains_in_flight_work() {
+        assert_eq!(sched().decide(0, 6, 2, 0.0), Action::Decode);
+    }
+}

@@ -1,0 +1,165 @@
+//! Workload trace generation for serving experiments.
+//!
+//! The paper benchmarks fixed batches; a serving deployment sees arrival
+//! *processes*.  This module generates reproducible request traces —
+//! Poisson, bursty (Markov-modulated), and closed-loop — used by the
+//! `serve` example and the scheduler ablations.
+
+use crate::rng::Rng;
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    /// arrival time in seconds from trace start
+    pub at: f64,
+    pub prompt_len: usize,
+    pub max_new: usize,
+}
+
+/// Arrival process shape.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Poisson with constant rate (req/s).
+    Poisson { rate: f64 },
+    /// Two-state Markov-modulated Poisson: calm/burst rates and mean
+    /// state dwell time.
+    Bursty { calm_rate: f64, burst_rate: f64, dwell_s: f64 },
+}
+
+/// Trace configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub n: usize,
+    pub arrival: Arrival,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub max_new_min: usize,
+    pub max_new_max: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n: 64,
+            arrival: Arrival::Poisson { rate: 8.0 },
+            prompt_min: 4,
+            prompt_max: 28,
+            max_new_min: 4,
+            max_new_max: 16,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a reproducible trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceItem> {
+    let mut rng = Rng::new(cfg.seed ^ 0x7EACE);
+    let mut t = 0.0f64;
+    let mut bursting = false;
+    let mut next_switch = 0.0f64;
+    (0..cfg.n)
+        .map(|_| {
+            let rate = match cfg.arrival {
+                Arrival::Poisson { rate } => rate,
+                Arrival::Bursty { calm_rate, burst_rate, dwell_s } => {
+                    if t >= next_switch {
+                        bursting = !bursting;
+                        next_switch = t + rng.exponential(1.0 / dwell_s.max(1e-9));
+                    }
+                    if bursting {
+                        burst_rate
+                    } else {
+                        calm_rate
+                    }
+                }
+            };
+            t += rng.exponential(rate);
+            let span = (cfg.prompt_max - cfg.prompt_min + 1) as u64;
+            let nspan = (cfg.max_new_max - cfg.max_new_min + 1) as u64;
+            TraceItem {
+                at: t,
+                prompt_len: cfg.prompt_min + rng.below(span) as usize,
+                max_new: cfg.max_new_min + rng.below(nspan) as usize,
+            }
+        })
+        .collect()
+}
+
+/// Offered load in tokens/s over the trace span (sizing aid).
+pub fn offered_load(trace: &[TraceItem]) -> f64 {
+    if trace.is_empty() {
+        return 0.0;
+    }
+    let tokens: usize = trace.iter().map(|r| r.prompt_len + r.max_new).sum();
+    let span = trace.last().unwrap().at.max(1e-9);
+    tokens as f64 / span
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.prompt_len, y.prompt_len);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_bounded() {
+        let cfg = TraceConfig { n: 200, ..Default::default() };
+        let tr = generate(&cfg);
+        for w in tr.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        for r in &tr {
+            assert!((cfg.prompt_min..=cfg.prompt_max).contains(&r.prompt_len));
+            assert!((cfg.max_new_min..=cfg.max_new_max).contains(&r.max_new));
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_respected() {
+        let cfg = TraceConfig {
+            n: 2000,
+            arrival: Arrival::Poisson { rate: 50.0 },
+            ..Default::default()
+        };
+        let tr = generate(&cfg);
+        let span = tr.last().unwrap().at;
+        let rate = 2000.0 / span;
+        assert!((35.0..70.0).contains(&rate), "{rate}");
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_than_poisson() {
+        let mk = |arrival| {
+            let tr = generate(&TraceConfig { n: 1500, arrival, ..Default::default() });
+            let gaps: Vec<f64> = tr.windows(2).map(|w| w[1].at - w[0].at).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+                / gaps.len() as f64;
+            var / (mean * mean) // squared coefficient of variation
+        };
+        let cv2_poisson = mk(Arrival::Poisson { rate: 10.0 });
+        let cv2_bursty = mk(Arrival::Bursty {
+            calm_rate: 2.0,
+            burst_rate: 50.0,
+            dwell_s: 1.0,
+        });
+        assert!(cv2_bursty > cv2_poisson, "{cv2_bursty} vs {cv2_poisson}");
+    }
+
+    #[test]
+    fn offered_load_positive() {
+        let tr = generate(&TraceConfig::default());
+        assert!(offered_load(&tr) > 0.0);
+    }
+}

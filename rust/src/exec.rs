@@ -1,0 +1,308 @@
+//! Thread-pool executor substrate (no `tokio` in the offline crate set).
+//!
+//! The coordinator needs: background workers, fan-out/fan-in over
+//! channels, and joinable task handles.  A fixed thread pool with
+//! `std::sync::mpsc` covers all of it; PJRT execution is a blocking C
+//! call anyway, so an async reactor would buy nothing on this testbed.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Fixed-size thread pool with FIFO dispatch.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("smoe-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let mut q = shared.queue.lock().unwrap();
+                            loop {
+                                if let Some(job) = q.pop_front() {
+                                    break Some(job);
+                                }
+                                if *shared.shutdown.lock().unwrap() {
+                                    break None;
+                                }
+                                q = shared.available.wait(q).unwrap();
+                            }
+                        };
+                        match job {
+                            Some(job) => job(),
+                            None => return,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Fire-and-forget.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.available.notify_one();
+    }
+
+    /// Spawn with a joinable result handle.
+    pub fn spawn<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        TaskHandle { rx }
+    }
+
+    /// Run `f` over items on the pool and collect results in order.
+    pub fn map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(I) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|it| {
+                let f = Arc::clone(&f);
+                self.spawn(move || f(it))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Join handle for a pooled task.
+pub struct TaskHandle<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> TaskHandle<T> {
+    /// Block until the task finishes.  Panics if the worker panicked.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("task panicked or pool shut down")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Bounded MPSC with blocking semantics — the coordinator's backpressure
+/// primitive (producers block once `capacity` items are in flight).
+pub struct BoundedQueue<T> {
+    inner: Arc<BqShared<T>>,
+}
+
+struct BqShared<T> {
+    q: Mutex<std::collections::VecDeque<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+    closed: Mutex<bool>,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            inner: Arc::new(BqShared {
+                q: Mutex::new(std::collections::VecDeque::new()),
+                cap,
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                closed: Mutex::new(false),
+            }),
+        }
+    }
+
+    /// Blocking push; returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if *self.inner.closed.lock().unwrap() {
+                return false;
+            }
+            if q.len() < self.inner.cap {
+                break;
+            }
+            q = self.inner.not_full.wait(q).unwrap();
+        }
+        q.push_back(item);
+        self.inner.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if *self.inner.closed.lock().unwrap() {
+                return None;
+            }
+            q = self.inner.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batch formation).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut q = self.inner.q.lock().unwrap();
+        let n = max.min(q.len());
+        let out: Vec<T> = q.drain(..n).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        *self.inner.closed.lock().unwrap() = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+/// Simple fan-in barrier: send N results, wait for all.
+pub fn fan_in<T: Send + 'static>(n: usize) -> (Sender<T>, impl FnOnce() -> Vec<T>) {
+    let (tx, rx) = channel();
+    let collect = move || (0..n).map(|_| rx.recv().expect("fan_in recv")).collect();
+    (tx, collect)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let n = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..64)
+            .map(|_| {
+                let n = Arc::clone(&n);
+                pool.spawn(move || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(n.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..20).collect(), |i: i32| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_queue_backpressure() {
+        let q = BoundedQueue::new(2);
+        q.push(1);
+        q.push(2);
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(3)); // blocks until pop
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        t.join().unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn bounded_queue_close_drains() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(8);
+        q.push(1);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        assert!(!q.push(9));
+    }
+
+    #[test]
+    fn drain_up_to_takes_prefix() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.drain_up_to(3), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn fan_in_collects() {
+        let pool = ThreadPool::new(2);
+        let (tx, collect) = fan_in::<usize>(5);
+        for i in 0..5 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                let _ = tx.send(i);
+            });
+        }
+        let mut got = collect();
+        got.sort();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+}

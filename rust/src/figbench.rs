@@ -1,0 +1,83 @@
+//! Shared plumbing for the paper-figure benchmark binaries
+//! (`rust/benches/fig*.rs`): random input synthesis from artifact specs,
+//! timed artifact execution, and paper-style relative reporting.
+
+use anyhow::Result;
+
+use crate::benchkit::{bench, BenchOpts, Measurement};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::{DType, Tensor};
+
+/// Random inputs matching an artifact's spec (f32 ~ N(0, scale); int
+/// inputs get small non-negative values; `tokens` get vocab-range ids).
+pub fn rand_args(rt: &Runtime, name: &str, rng: &mut Rng, scale: f32) -> Result<Vec<Tensor>> {
+    let spec = rt.spec(name)?.clone();
+    let vocab = spec.meta_usize("vocab_size").unwrap_or(64) as i32;
+    spec.inputs
+        .iter()
+        .map(|io| {
+            let n: usize = io.shape.iter().product();
+            Ok(match io.dtype {
+                DType::F32 => Tensor::from_f32(&io.shape, rng.normal_vec(n, scale))?,
+                DType::I32 => {
+                    let hi = if io.name.contains("token") { vocab } else { 2 };
+                    let data: Vec<i32> =
+                        (0..n).map(|_| rng.below(hi as u64) as i32).collect();
+                    Tensor::from_i32(&io.shape, data)?
+                }
+                DType::U32 => {
+                    let data: Vec<u32> =
+                        (0..n).map(|_| rng.below(4) as u32).collect();
+                    Tensor::from_u32(&io.shape, data)?
+                }
+            })
+        })
+        .collect()
+}
+
+/// Bench one artifact end-to-end through PJRT: compile (outside timing),
+/// then warmup + timed runs per the paper protocol.
+pub fn bench_artifact(
+    rt: &Runtime, name: &str, label: &str, units_per_iter: f64, opts: BenchOpts,
+) -> Result<Measurement> {
+    let mut rng = Rng::new(0xBEAC);
+    let args = rand_args(rt, name, &mut rng, 0.1)?;
+    let lits = rt.to_literals(&args)?;
+    let lit_refs: Vec<&xla::Literal> = lits.iter().collect();
+    rt.executable(name)?; // compile outside the timed region
+    let mut failed: Option<String> = None;
+    let m = bench(label, opts, units_per_iter, || {
+        if failed.is_none() {
+            if let Err(e) = rt.run_literals(name, &lit_refs) {
+                failed = Some(format!("{e:#}"));
+            }
+        }
+    });
+    if let Some(e) = failed {
+        anyhow::bail!("bench {name}: {e}");
+    }
+    Ok(m)
+}
+
+/// Open the default runtime for a bench binary.
+pub fn open() -> Result<std::sync::Arc<Runtime>> {
+    let dir = crate::default_artifact_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "no artifacts at {dir:?}; run `make artifacts` first"
+    );
+    Ok(std::sync::Arc::new(Runtime::open(&dir)?))
+}
+
+/// Print the paper-vs-measured comparison line used in EXPERIMENTS.md.
+pub fn paper_check(label: &str, paper: f64, measured: f64) {
+    let agree = (measured > 1.0) == (paper > 1.0);
+    println!(
+        "paper-check  {:<44} paper {:>6.2}x   measured {:>6.2}x   direction {}",
+        label,
+        paper,
+        measured,
+        if agree { "MATCHES" } else { "DIFFERS" }
+    );
+}

@@ -1,0 +1,56 @@
+//! # ScatterMoE — Rust coordinator and runtime
+//!
+//! Reproduction of *"Scattered Mixture-of-Experts Implementation"*
+//! (Tan, Shen, Panda, Courville, 2024) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1/L2** (build-time Python, `python/compile/`) author the Pallas
+//!   `scatter2scatter` kernels and the JAX models, AOT-lowered to HLO
+//!   text by `make artifacts`.
+//! * **L3** (this crate) owns everything at run time: the PJRT runtime
+//!   ([`runtime`]), the serving coordinator ([`coordinator`]), the
+//!   data-parallel training driver ([`train`]), the analytic HBM memory
+//!   model ([`memmodel`]) and the benchmark harness ([`benchkit`]).
+//!
+//! Python never runs on the request path: the Rust binary is fully
+//! self-contained once `artifacts/` is built.
+//!
+//! The offline crate environment ships no tokio / clap / serde /
+//! criterion / rand / proptest, so this crate carries its own substrates:
+//! [`exec`] (thread-pool executor), [`cli`], [`config`] (JSON),
+//! [`rng`], [`metrics`], [`benchkit`] and [`testkit`] (property testing).
+
+pub mod benchkit;
+pub mod cli;
+pub mod figbench;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod exec;
+pub mod memmodel;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod tokenizer;
+pub mod train;
+
+/// Repository-relative default artifact directory.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // honour $SCATTERMOE_ARTIFACTS, else walk up from cwd looking for
+    // an `artifacts/manifest.json`
+    if let Ok(dir) = std::env::var("SCATTERMOE_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

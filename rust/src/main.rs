@@ -1,0 +1,161 @@
+//! ScatterMoE launcher — the L3 leader binary.
+//!
+//! Subcommands:
+//!   info    — list artifacts and workload metadata from the manifest
+//!   verify  — parse + compile every artifact on the PJRT client
+//!   train   — run the training driver on an lm_* artifact pair
+//!   serve   — run the serving engine on a synthetic request trace
+//!
+//! See `examples/` for narrower end-to-end drivers and `rust/benches/`
+//! for the paper-figure benchmark harnesses.
+
+use anyhow::Result;
+use scattermoe::cli::Cli;
+use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
+use scattermoe::rng::Rng;
+use scattermoe::runtime::Runtime;
+use scattermoe::tokenizer::SyntheticCorpus;
+use scattermoe::train::Trainer;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(String::as_str).unwrap_or("info");
+    let rest = argv.get(1..).unwrap_or(&[]).to_vec();
+    match sub {
+        "info" => info(&rest),
+        "verify" => verify(&rest),
+        "train" => train(&rest),
+        "serve" => serve(&rest),
+        other => {
+            eprintln!(
+                "unknown subcommand '{other}'\nusage: scattermoe <info|verify|train|serve> [flags]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn artifacts_flag(cli: Cli) -> Cli {
+    cli.flag("artifacts", "", "artifact dir (default: auto-discover)")
+}
+
+fn open_runtime(dir_flag: &str) -> Result<std::sync::Arc<Runtime>> {
+    let dir = if dir_flag.is_empty() {
+        scattermoe::default_artifact_dir()
+    } else {
+        dir_flag.into()
+    };
+    Ok(std::sync::Arc::new(Runtime::open(&dir)?))
+}
+
+fn info(args: &[String]) -> Result<()> {
+    let cli = artifacts_flag(Cli::new("scattermoe info", "list artifacts"));
+    let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = open_runtime(a.get("artifacts"))?;
+    let m = rt.manifest();
+    println!("platform: {}", rt.platform());
+    println!("{} artifacts in {:?}:", m.len(), m.dir);
+    for name in m.names() {
+        let s = m.get(name)?;
+        println!(
+            "  {:<38} fig={:<7} impl={:<8} inputs={} outputs={}",
+            s.name,
+            s.meta_str("figure").unwrap_or("-"),
+            s.meta_str("impl").unwrap_or("-"),
+            s.inputs.len(),
+            s.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn verify(args: &[String]) -> Result<()> {
+    let cli = artifacts_flag(Cli::new("scattermoe verify", "compile all artifacts"))
+        .flag("only", "", "substring filter");
+    let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = open_runtime(a.get("artifacts"))?;
+    let filter = a.get("only").to_string();
+    let names: Vec<String> = rt
+        .manifest()
+        .names()
+        .filter(|n| filter.is_empty() || n.contains(&filter))
+        .map(String::from)
+        .collect();
+    for name in names {
+        let t = std::time::Instant::now();
+        rt.executable(&name)?;
+        println!("OK {:<40} ({:.2}s)", name, t.elapsed().as_secs_f64());
+    }
+    println!("all artifacts compile");
+    Ok(())
+}
+
+fn train(args: &[String]) -> Result<()> {
+    let cli = artifacts_flag(Cli::new("scattermoe train", "run the training driver"))
+        .flag("init", "lm_bench_init", "init artifact")
+        .flag("step", "lm_bench_train_scatter", "train-step artifact")
+        .flag("calls", "20", "artifact calls")
+        .flag("log-every", "5", "log cadence")
+        .flag("seed", "0", "corpus/init seed");
+    let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = open_runtime(a.get("artifacts"))?;
+    let mut tr = Trainer::new(rt, a.get("init"), a.get("step"), a.get_u64("seed"))?;
+    println!(
+        "training: {} tokens/call, corpus entropy floor {:.3} nats",
+        tr.batch_tokens(),
+        tr.loss_floor()
+    );
+    let log = tr.run(a.get_usize("calls"), a.get_usize("log-every"))?;
+    println!(
+        "done: {} calls, loss {:.4} -> {:.4}, {:.1} tokens/s",
+        log.losses.len(),
+        log.losses.first().copied().unwrap_or(f32::NAN),
+        log.losses.last().copied().unwrap_or(f32::NAN),
+        log.tokens_per_sec()
+    );
+    Ok(())
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let cli = artifacts_flag(Cli::new("scattermoe serve", "synthetic serving run"))
+        .flag("requests", "32", "number of requests")
+        .flag("max-new", "16", "tokens per request")
+        .flag("seed", "0", "workload seed");
+    let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = open_runtime(a.get("artifacts"))?;
+    let mut engine = Engine::new(rt, EngineConfig::default())?;
+    println!("engine up: {} slots, max_len {}", engine.width(), engine.max_len());
+
+    let mut corpus = SyntheticCorpus::new(512, a.get_u64("seed"));
+    let mut rng = Rng::new(a.get_u64("seed") ^ 0xF00D);
+    let n = a.get_usize("requests");
+    for _ in 0..n {
+        let prompt_len = 4 + rng.below(24) as usize;
+        let prompt = corpus.sample(prompt_len);
+        let params = SamplingParams {
+            max_new_tokens: a.get_usize("max-new"),
+            ..Default::default()
+        };
+        engine.submit(prompt, params);
+    }
+    let t0 = std::time::Instant::now();
+    let responses = engine.run_to_completion()?;
+    let dt = t0.elapsed().as_secs_f64();
+    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "served {} requests / {} tokens in {:.2}s  ({:.1} tok/s)",
+        responses.len(),
+        toks,
+        dt,
+        toks as f64 / dt
+    );
+    let m = &engine.metrics;
+    println!(
+        "ttft p50 {:.0} ms   latency p50 {:.0} ms   decode steps {}   prefills {}",
+        m.ttft.median() * 1e3,
+        m.latency.median() * 1e3,
+        m.decode_steps,
+        m.prefills
+    );
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Analytic HBM memory model for SMoE MLP implementations (Fig 4c).
+//!
+//! Counts the bytes each strategy *materialises* for one SMoE MLP layer,
+//! following the algorithms in the paper (§3.1–§3.2.2) and the Megablocks
+//! pipeline it compares against.  This is the substitution for the
+//! paper's `nvidia-smi` measurements (DESIGN.md §2): what Fig 4c compares
+//! is allocation *strategies*, and those are fully determined by the
+//! algorithm — validated live against XLA buffer assignment in
+//! `python/tests/test_memory.py`.
+//!
+//! Conventions: f32 (4 bytes); `T` tokens, fan-out `k`, `E` experts,
+//! `d_model`, `d_expert`, GEMM row-block `B`.  Input activations `X` are
+//! counted for every strategy (they are framework-owned); weights are
+//! excluded (identical across strategies).
+
+/// Layer/workload description.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpShape {
+    pub tokens: usize,
+    pub k: usize,
+    pub num_experts: usize,
+    pub d_model: usize,
+    pub d_expert: usize,
+    pub block: usize,
+    pub dtype_bytes: usize,
+}
+
+impl MlpShape {
+    /// The paper's Fig 4b/4c unit configuration.
+    pub fn paper_unit() -> Self {
+        MlpShape {
+            tokens: 30 * 2048,
+            k: 4,
+            num_experts: 32,
+            d_model: 4096,
+            d_expert: 2048,
+            block: 128,
+            dtype_bytes: 4,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.tokens * self.k
+    }
+
+    /// Padded rows under per-expert block alignment given the observed
+    /// per-expert counts (Megablocks materialises these rows).
+    pub fn padded_rows(&self, counts: &[usize]) -> usize {
+        counts
+            .iter()
+            .map(|&c| c.div_ceil(self.block) * self.block)
+            .sum()
+    }
+
+    /// Balanced per-expert counts (the default workload assumption).
+    pub fn balanced_counts(&self) -> Vec<usize> {
+        let per = self.slots() / self.num_experts;
+        let mut counts = vec![per; self.num_experts];
+        let rem = self.slots() - per * self.num_experts;
+        for c in counts.iter_mut().take(rem) {
+            *c += 1;
+        }
+        counts
+    }
+}
+
+/// One accounted allocation.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub label: &'static str,
+    pub bytes: usize,
+}
+
+/// Full footprint report for one (strategy, mode).
+#[derive(Clone, Debug)]
+pub struct Footprint {
+    pub strategy: &'static str,
+    pub training: bool,
+    pub allocations: Vec<Allocation>,
+}
+
+impl Footprint {
+    pub fn total(&self) -> usize {
+        self.allocations.iter().map(|a| a.bytes).sum()
+    }
+
+    pub fn print(&self) {
+        println!(
+            "--- {} ({}) : {:.2} GiB",
+            self.strategy,
+            if self.training { "training" } else { "inference" },
+            self.total() as f64 / (1u64 << 30) as f64
+        );
+        for a in &self.allocations {
+            println!(
+                "    {:<28} {:>10.1} MiB",
+                a.label,
+                a.bytes as f64 / (1u64 << 20) as f64
+            );
+        }
+    }
+}
+
+fn alloc(label: &'static str, rows: usize, cols: usize, b: usize) -> Allocation {
+    Allocation { label, bytes: rows * cols * b }
+}
+
+/// ScatterMoE (paper §3.2.2): no grouped copy of X in forward; hidden is
+/// grouped-compact; backward reuses the grouped arrays (Ŷ for ∇Y, X̄ for
+/// ∇X) — counted once each, as the paper's Algorithm 2 colouring shows.
+pub fn scatter_footprint(s: &MlpShape, training: bool) -> Footprint {
+    let b = s.dtype_bytes;
+    let tk = s.slots();
+    let mut a = vec![
+        alloc("X (input activations)", s.tokens, s.d_model, b),
+        Allocation { label: "routing indices (o, offsets)", bytes: (tk + s.num_experts + 1) * 4 },
+        alloc("H grouped (compact, Tk)", tk, s.d_expert, b),
+        alloc("Y_hat slots (pre-combine)", tk, s.d_model, b),
+        alloc("Y (combined output)", s.tokens, s.d_model, b),
+    ];
+    if training {
+        // backward workspace: one grouped copy of X (layer-1 dW), one
+        // weighted-grouped dY; both buffers are then REUSED for ∇X / ∇Y
+        // (Algorithm 2) so no further token-sized arrays appear.
+        a.push(alloc("bwd: X grouped (reused for dX)", tk, s.d_model, b));
+        a.push(alloc("bwd: dY grouped (reused)", tk, s.d_expert.max(s.d_model), b));
+    }
+    Footprint { strategy: "scatter", training, allocations: a }
+}
+
+/// Megablocks-style padded-grouped pipeline: group copy into a padded
+/// array, padded hidden, padded output, scatter copy back — all
+/// materialised, in forward *and* backward.
+pub fn padded_footprint(s: &MlpShape, counts: &[usize], training: bool) -> Footprint {
+    let b = s.dtype_bytes;
+    let tk = s.slots();
+    let p = s.padded_rows(counts);
+    let mut a = vec![
+        alloc("X (input activations)", s.tokens, s.d_model, b),
+        Allocation { label: "routing indices (o, offsets)", bytes: (tk + s.num_experts + 1) * 4 },
+        alloc("X padded copy (group)", p, s.d_model, b),
+        alloc("H padded", p, s.d_expert, b),
+        alloc("Y padded", p, s.d_model, b),
+        alloc("Y slots (scatter copy)", tk, s.d_model, b),
+        alloc("Y (combined output)", s.tokens, s.d_model, b),
+    ];
+    if training {
+        // backward stays in the padded layout (copies + padded grads)
+        a.push(alloc("bwd: dY padded (group)", p, s.d_model, b));
+        a.push(alloc("bwd: dH padded", p, s.d_expert, b));
+        a.push(alloc("bwd: dX padded -> scatter", p, s.d_model, b));
+    }
+    Footprint { strategy: "padded (Megablocks-style)", training, allocations: a }
+}
+
+/// Naive HF-style baseline: every token through every expert.
+pub fn naive_footprint(s: &MlpShape, training: bool) -> Footprint {
+    let b = s.dtype_bytes;
+    let te = s.tokens * s.num_experts;
+    let mut a = vec![
+        alloc("X (input activations)", s.tokens, s.d_model, b),
+        alloc("H all-experts (T*E)", te, s.d_expert, b),
+        alloc("Y all-experts (T*E)", te, s.d_model, b),
+        alloc("Y (combined output)", s.tokens, s.d_model, b),
+    ];
+    if training {
+        a.push(alloc("bwd: dH all-experts", te, s.d_expert, b));
+        a.push(alloc("bwd: dY all-experts", te, s.d_model, b));
+    }
+    Footprint { strategy: "naive (all experts)", training, allocations: a }
+}
+
+/// Switch-style capacity-factor baseline: fixed (E, C) buffers.
+pub fn capacity_footprint(s: &MlpShape, capacity_factor: f64, training: bool) -> Footprint {
+    let b = s.dtype_bytes;
+    let cap = ((capacity_factor * s.slots() as f64) / s.num_experts as f64).ceil()
+        as usize;
+    let ec = s.num_experts * cap;
+    let mut a = vec![
+        alloc("X (input activations)", s.tokens, s.d_model, b),
+        alloc("X gathered (E, C)", ec, s.d_model, b),
+        alloc("H (E, C)", ec, s.d_expert, b),
+        alloc("Y (E, C)", ec, s.d_model, b),
+        alloc("Y (combined output)", s.tokens, s.d_model, b),
+    ];
+    if training {
+        a.push(alloc("bwd: dH (E, C)", ec, s.d_expert, b));
+        a.push(alloc("bwd: dY (E, C)", ec, s.d_model, b));
+    }
+    Footprint { strategy: "capacity (Switch-style)", training, allocations: a }
+}
+
+/// Fig 4c headline ratio: scatter bytes / padded bytes.
+pub fn scatter_vs_padded_ratio(s: &MlpShape, counts: &[usize], training: bool) -> f64 {
+    scatter_footprint(s, training).total() as f64
+        / padded_footprint(s, counts, training).total() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_smaller_than_padded_always() {
+        let s = MlpShape::paper_unit();
+        let counts = s.balanced_counts();
+        for training in [false, true] {
+            let r = scatter_vs_padded_ratio(&s, &counts, training);
+            assert!(r < 1.0, "training={training} ratio={r}");
+        }
+    }
+
+    #[test]
+    fn paper_unit_ratios_in_figure_4c_ballpark() {
+        // Paper: ScatterMoE uses 66.2% of MB memory in training and
+        // 53.6% in inference.  The analytic model should land in the
+        // same regime (±15 points — it omits allocator slack).
+        let s = MlpShape::paper_unit();
+        let counts = s.balanced_counts();
+        let inf = scatter_vs_padded_ratio(&s, &counts, false);
+        let tr = scatter_vs_padded_ratio(&s, &counts, true);
+        assert!((0.35..0.75).contains(&inf), "inference ratio {inf}");
+        assert!((0.45..0.85).contains(&tr), "training ratio {tr}");
+        assert!(tr > inf, "training ratio should be milder (paper: 66% vs 54%)");
+    }
+
+    #[test]
+    fn padding_grows_with_expert_count() {
+        // Fig 5's mechanism: more experts at fixed active params → more
+        // padded rows → bigger Megablocks footprint.
+        let mk = |e: usize, k: usize| MlpShape {
+            tokens: 4096,
+            k,
+            num_experts: e,
+            d_model: 512,
+            d_expert: 1024 / k,
+            block: 128,
+            dtype_bytes: 4,
+        };
+        let s1 = mk(8, 1);
+        let s2 = mk(128, 16);
+        let p1 = s1.padded_rows(&s1.balanced_counts());
+        let p2 = s2.padded_rows(&s2.balanced_counts());
+        // normalise by slots (Tk differs)
+        let w1 = p1 as f64 / s1.slots() as f64;
+        let w2 = p2 as f64 / s2.slots() as f64;
+        assert!(w2 >= w1, "{w1} vs {w2}");
+    }
+
+    #[test]
+    fn skewed_counts_pad_more_than_balanced() {
+        let s = MlpShape { tokens: 1000, k: 2, num_experts: 16, d_model: 64,
+                           d_expert: 32, block: 128, dtype_bytes: 4 };
+        let balanced = s.balanced_counts();
+        // skew: all slots on one expert, others get 1 token each
+        let mut skew = vec![1usize; 16];
+        skew[0] = s.slots() - 15;
+        assert!(s.padded_rows(&skew) >= s.padded_rows(&balanced));
+    }
+
+    #[test]
+    fn naive_dwarfs_everything() {
+        let s = MlpShape::paper_unit();
+        let counts = s.balanced_counts();
+        let naive = naive_footprint(&s, false).total();
+        let padded = padded_footprint(&s, &counts, false).total();
+        assert!(naive > 2 * padded);
+    }
+
+    #[test]
+    fn capacity_scales_with_factor() {
+        let s = MlpShape::paper_unit();
+        let lo = capacity_footprint(&s, 1.0, false).total();
+        let hi = capacity_footprint(&s, 2.0, false).total();
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn balanced_counts_sum_to_slots() {
+        let s = MlpShape::paper_unit();
+        assert_eq!(s.balanced_counts().iter().sum::<usize>(), s.slots());
+    }
+}

@@ -1,0 +1,179 @@
+//! Metrics substrate: counters, gauges, and streaming histograms with the
+//! percentile summaries the paper reports (median, p5, p95).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic counter, safe to share across threads.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Sample reservoir with exact percentiles (fine for bench-scale N).
+#[derive(Clone, Default, Debug)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Linearly interpolated percentile on the sorted samples, `q ∈ [0,1]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (s.len() - 1) as f64 * q.clamp(0.0, 1.0);
+        let lo = pos.floor() as usize;
+        let frac = pos - lo as f64;
+        if lo + 1 < s.len() {
+            s[lo] * (1.0 - frac) + s[lo + 1] * frac
+        } else {
+            s[lo]
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// The paper's reporting triple: (p5, median, p95).
+    pub fn paper_summary(&self) -> (f64, f64, f64) {
+        (self.percentile(0.05), self.median(), self.percentile(0.95))
+    }
+}
+
+/// Throughput meter: items over a wall-clock window.
+pub struct Throughput {
+    start: std::time::Instant,
+    items: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: std::time::Instant::now(), items: Counter::default() }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.items.add(n);
+    }
+
+    /// Items per second since construction.
+    pub fn rate(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.items.get() as f64 / dt
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.items.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.median(), 50.5);
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(1.0), 100.0);
+        let (p5, med, p95) = h.paper_summary();
+        assert!(p5 <= med && med <= p95);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty_is_nan() {
+        let h = Histogram::new();
+        assert!(h.median().is_nan());
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let mut h = Histogram::new();
+        h.record(3.5);
+        assert_eq!(h.median(), 3.5);
+        assert_eq!(h.percentile(0.95), 3.5);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.add(10);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(t.total(), 10);
+        assert!(t.rate() > 0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! The PJRT execution engine: lazy-compiled executable cache + typed
+//! execute helpers over host tensors and device-resident buffers.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::tensor::Tensor;
+
+/// Cumulative execution statistics (per artifact).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// PJRT CPU runtime with an executable cache.
+///
+/// Thread-safe: the cache is mutex-guarded; `xla`'s client/executables
+/// are internally reference-counted.  All compiles are lazy — the first
+/// execution of an artifact pays its compile cost (recorded in stats).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+// The xla crate's raw pointers are managed by the PJRT runtime which is
+// thread-safe for compilation and execution on the CPU client.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(
+        &self, name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let spec = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .compile_secs += dt;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    fn validate_inputs(&self, spec: &ArtifactSpec, args: &[Tensor]) -> Result<()> {
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        for (io, t) in spec.inputs.iter().zip(args) {
+            if io.shape != t.shape || io.dtype != t.dtype {
+                bail!(
+                    "artifact '{}' input '{}' expects {:?}/{:?}, got {:?}/{:?}",
+                    spec.name, io.name, io.shape, io.dtype, t.shape, t.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns host tensors (the jax lowering
+    /// uses `return_tuple=True`, so the single output is un-tupled here).
+    pub fn run(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        self.validate_inputs(&spec, args)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let parts = self.run_literals(name, &refs)?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Convert host tensors to XLA literals once (cacheable by callers —
+    /// model params converted at load time are reused across every step).
+    pub fn to_literals(&self, tensors: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        tensors.iter().map(|t| t.to_literal()).collect()
+    }
+
+    /// Upload one literal to a caller-owned device buffer.
+    ///
+    /// IMPORTANT (1): always execute through [`Self::run_buffers`] /
+    /// [`Self::run_literals`], never `exe.execute::<Literal>` — the
+    /// crate's literal-execute path leaks its internally created input
+    /// device buffers (~input bytes per call, measured in
+    /// EXPERIMENTS.md §Perf L3); `execute_b` over caller-owned buffers
+    /// is leak-free and lets long-lived state (model params) stay
+    /// device-resident.
+    ///
+    /// IMPORTANT (2): `BufferFromHostLiteral` transfers *asynchronously*
+    /// — the literal must stay alive until the buffer is consumed by an
+    /// execution.  Use [`Self::upload_tensor`] (synchronous copy
+    /// semantics) whenever the source is a temporary.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("host->device upload")
+    }
+
+    /// Upload a host tensor with **synchronous copy** semantics
+    /// (`kImmutableOnlyDuringCall`): the source may be dropped as soon
+    /// as this returns.  This is the safe path for temporaries and for
+    /// long-lived device-resident state.
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        use crate::tensor::DType;
+        let buf = match t.dtype {
+            DType::F32 => self
+                .client
+                .buffer_from_host_buffer(t.as_f32()?, &t.shape, None),
+            DType::I32 => self
+                .client
+                .buffer_from_host_buffer(t.as_i32()?, &t.shape, None),
+            DType::U32 => self
+                .client
+                .buffer_from_host_buffer(t.as_u32()?, &t.shape, None),
+        };
+        buf.context("host->device upload (tensor)")
+    }
+
+    /// Hot-path execute over device buffers: returns the decomposed
+    /// output literals, which can be re-uploaded and fed to the next
+    /// call (train-step chaining, KV-cache decoding).
+    ///
+    /// Note: the published `xla` crate (0.1.6 / xla_extension 0.5.1)
+    /// returns multi-output computations as a *single tuple buffer*, so
+    /// state cannot stay device-resident across calls; decomposing the
+    /// tuple literal on host is the fastest path this wrapper exposes.
+    /// `aot.py` mitigates the per-call copy with scan-chunked train
+    /// steps (several optimizer steps per artifact call).
+    pub fn run_buffers(
+        &self, name: &str, args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.lock().unwrap();
+            let e = st.entry(name.to_string()).or_default();
+            e.executions += 1;
+            e.total_secs += dt;
+        }
+        Ok(parts)
+    }
+
+    /// Convenience execute over host literals: uploads to transient
+    /// device buffers (freed on return) and runs `execute_b`.
+    pub fn run_literals(
+        &self, name: &str, args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| self.upload(l))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(name, &refs)
+    }
+
+    /// Per-artifact execution stats snapshot.
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,189 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  One entry per lowered HLO module with full
+//! input/output specs and the bench metadata (figure, impl, workload
+//! parameters) the harness uses to regenerate the paper's tables.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Json;
+use crate::tensor::DType;
+
+/// Shape + dtype of one input or output.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    /// Flattened LM parameter names (lm_* artifacts only).
+    pub fn param_names(&self) -> Option<Vec<String>> {
+        self.meta.get("param_names").and_then(|v| v.str_vec())
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    let name = v
+        .get("name")
+        .and_then(|n| n.as_str())
+        .unwrap_or("")
+        .to_string();
+    let shape = v
+        .req("shape")?
+        .usize_vec()
+        .context("shape must be an int array")?;
+    let dtype = DType::parse(
+        v.req("dtype")?.as_str().context("dtype must be a string")?,
+    )?;
+    Ok(IoSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts`"))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for entry in json.req("artifacts")?.as_arr().context("artifacts array")? {
+            let name = entry.req("name")?.as_str().context("name")?.to_string();
+            let file = dir.join(entry.req("file")?.as_str().context("file")?);
+            if !file.exists() {
+                bail!("artifact file missing: {file:?}");
+            }
+            let inputs = entry
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = entry.get("meta").cloned().unwrap_or(Json::Null);
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name, file, inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// All artifacts whose meta `figure` equals `fig`.
+    pub fn by_figure<'a>(&'a self, fig: &'a str) -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(move |a| a.meta_str("figure") == Some(fig))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("smoe-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        write_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":[{"name":"a","file":"a.hlo.txt",
+              "inputs":[{"name":"x","shape":[2,3],"dtype":"f32"}],
+              "outputs":[{"shape":[2],"dtype":"s32"}],
+              "meta":{"figure":"4b","impl":"scatter","T":2}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("a").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.outputs[0].dtype, DType::I32);
+        assert_eq!(a.meta_str("impl"), Some("scatter"));
+        assert_eq!(a.meta_usize("T"), Some(2));
+        assert_eq!(m.by_figure("4b").count(), 1);
+        assert!(m.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("smoe-man2-{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"a","file":"gone.hlo.txt","inputs":[],"outputs":[]}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

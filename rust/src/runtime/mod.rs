@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (names, files, specs).
+//! * [`engine`]   — the [`engine::Runtime`]: PJRT CPU client, lazy
+//!   executable cache, typed execute helpers over host tensors and
+//!   device-resident buffers.
+//!
+//! Pattern adapted from `/opt/xla-example/load_hlo`: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{ExecStats, Runtime};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};

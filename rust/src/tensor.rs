@@ -1,0 +1,219 @@
+//! Host tensor type and conversion to/from XLA literals.
+//!
+//! The coordinator's boundary type: dense row-major arrays of `f32` /
+//! `i32` / `u32` with shape, convertible to `xla::Literal` for execution
+//! and back from result buffers.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type tag (matches the manifest's `dtype` strings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" | "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Data,
+}
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Tensor {
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        Self::check(shape, data.len())?;
+        Ok(Tensor { dtype: DType::F32, shape: shape.to_vec(), data: Data::F32(data) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        Self::check(shape, data.len())?;
+        Ok(Tensor { dtype: DType::I32, shape: shape.to_vec(), data: Data::I32(data) })
+    }
+
+    pub fn from_u32(shape: &[usize], data: Vec<u32>) -> Result<Tensor> {
+        Self::check(shape, data.len())?;
+        Ok(Tensor { dtype: DType::U32, shape: shape.to_vec(), data: Data::U32(data) })
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Data::F32(vec![0.0; n]),
+            DType::I32 => Data::I32(vec![0; n]),
+            DType::U32 => Data::U32(vec![0; n]),
+        };
+        Tensor { dtype, shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor { dtype: DType::I32, shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor { dtype: DType::U32, shape: vec![], data: Data::U32(vec![v]) }
+    }
+
+    fn check(shape: &[usize], len: usize) -> Result<()> {
+        let want: usize = shape.iter().product();
+        if want != len {
+            bail!("shape {shape:?} needs {want} elements, got {len}");
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            Data::U32(v) => Ok(v),
+            _ => bail!("tensor is not u32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to an XLA literal (host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v),
+            Data::I32(v) => xla::Literal::vec1(v),
+            Data::U32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims)
+            .with_context(|| format!("reshape literal to {:?}", self.shape))
+    }
+
+    /// Read an XLA literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => Data::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Data::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::U32 => Data::U32(lit.to_vec::<u32>()?),
+            other => bail!("unsupported literal type {other:?}"),
+        };
+        let dtype = match &data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::U32(_) => DType::U32,
+        };
+        Ok(Tensor { dtype, shape: dims, data })
+    }
+
+    /// Mean of an f32 tensor (reporting helper).
+    pub fn mean(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.is_empty() {
+            bail!("mean of empty tensor");
+        }
+        Ok(v.iter().sum::<f32>() / v.len() as f32)
+    }
+
+    /// Argmax along the last dim; returns indices shaped `shape[..-1]`.
+    pub fn argmax_last(&self) -> Result<Vec<usize>> {
+        let v = self.as_f32()?;
+        let last = *self.shape.last().context("argmax of scalar")?;
+        let rows = v.len() / last;
+        Ok((0..rows)
+            .map(|r| {
+                let row = &v[r * last..(r + 1) * last];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_len() {
+        let t = Tensor::zeros(DType::F32, &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::from_f32(&[2, 3], vec![0.0, 5.0, 1.0, 9.0, 2.0, 3.0]).unwrap();
+        assert_eq!(t.argmax_last().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("s32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 2]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+}

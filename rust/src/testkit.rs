@@ -1,0 +1,185 @@
+//! Property-testing substrate (no `proptest` offline): seeded generators
+//! plus greedy input shrinking, used for the coordinator invariants.
+//!
+//! ```ignore
+//! check(100, gen_vec(gen_u64(0..100), 0..50), |xs| {
+//!     let mut s = xs.clone(); s.sort();
+//!     prop_assert(s.len() == xs.len(), "len preserved")
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// A seeded generator of `T` values.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+    /// Candidate smaller versions of a failing input (greedy shrinking).
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Property outcome; use [`prop_assert`] to build.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Run `cases` random cases of `prop` over `gen`; on failure, shrink and
+/// panic with the minimal counterexample found.
+pub fn check<T, G, P>(cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let seed = std::env::var("SCATTERMOE_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let minimal = shrink_loop(&gen, &prop, input);
+            panic!(
+                "property failed (case {case}, seed {seed}): {msg}\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, G, P>(gen: &G, prop: &P, mut failing: T) -> T
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> PropResult,
+{
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&failing) {
+            if prop(&cand).is_err() {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ------------------------- generator combinators ---------------------------
+
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen<u64> for U64Range {
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.0 + rng.below(self.1 - self.0)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+pub struct VecGen<G> {
+    pub item: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
+    fn generate(&self, rng: &mut Rng) -> Vec<T> {
+        let len = self.min_len
+            + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| self.item.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // halve, drop-front, drop-back
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            out.push(v[1..].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // shrink one element
+        for (i, item) in v.iter().enumerate().take(8) {
+            for cand in self.item.shrink(item) {
+                let mut c = v.clone();
+                c[i] = cand;
+                out.push(c);
+            }
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<T: Clone, U: Clone, A: Gen<T>, B: Gen<U>> Gen<(T, U)> for PairGen<A, B> {
+    fn generate(&self, rng: &mut Rng) -> (T, U) {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &(T, U)) -> Vec<(T, U)> {
+        let mut out: Vec<(T, U)> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, U64Range(0, 100), |&x| prop_assert(x < 100, "bound"));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check(200, U64Range(0, 1000), |&x| prop_assert(x < 500, "x < 500"));
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecGen { item: U64Range(0, 10), min_len: 2, max_len: 6 };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((2..=6).contains(&v.len()));
+            assert!(v.iter().all(|&x| x < 10));
+        }
+    }
+
+    #[test]
+    fn shrink_candidates_are_smaller_or_equal() {
+        let g = VecGen { item: U64Range(0, 10), min_len: 0, max_len: 8 };
+        let mut rng = Rng::new(2);
+        let v = g.generate(&mut rng);
+        for c in g.shrink(&v) {
+            assert!(c.len() <= v.len());
+        }
+    }
+}

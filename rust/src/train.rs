@@ -1,0 +1,192 @@
+//! Training driver: drives the AOT `*_train_*` artifacts from Rust.
+//!
+//! Owns the flattened (params, m, v) optimizer state as XLA literals,
+//! generates token batches from the synthetic corpus, and executes the
+//! compiled train step — Python never runs.  Supports both single-step
+//! artifacts (`lm_*_train_<impl>`) and scan-chunked ones
+//! (`lm_*_train_chunk_<impl>`, several optimizer steps per call, which
+//! amortises the host round-trip the `xla` crate's tuple outputs force).
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::tokenizer::SyntheticCorpus;
+
+/// One training run's progress record.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    pub tokens_seen: u64,
+    pub wall_secs: f64,
+}
+
+impl TrainLog {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.tokens_seen as f64 / self.wall_secs
+        }
+    }
+}
+
+/// Driver around one `lm_*_train[_chunk]_*` artifact.
+pub struct Trainer {
+    runtime: std::sync::Arc<Runtime>,
+    artifact: String,
+    /// (params ++ m ++ v) as literals, in manifest order
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    batch: usize,
+    seq_plus1: usize,
+    chunk_steps: usize,
+    step: i32,
+    corpus: SyntheticCorpus,
+    vocab: usize,
+}
+
+impl Trainer {
+    /// Initialise from `<prefix>_init` + the given train artifact.
+    pub fn new(
+        runtime: std::sync::Arc<Runtime>, init_artifact: &str, train_artifact: &str,
+        seed: u64,
+    ) -> Result<Trainer> {
+        let spec = runtime.spec(train_artifact)?.clone();
+        let names = spec
+            .param_names()
+            .context("train artifact missing param_names meta")?;
+        let n_params = names.len();
+        let kind = spec.meta_str("kind").unwrap_or("");
+        let chunk_steps = if kind == "lm_train_chunk" {
+            spec.meta_usize("chunk_steps").unwrap_or(1)
+        } else {
+            1
+        };
+        // tokens input: single-step (B, S+1); chunked (C, B, S+1)
+        let tok_spec = &spec.inputs[1];
+        let (batch, seq_plus1) = if chunk_steps > 1 {
+            (tok_spec.shape[1], tok_spec.shape[2])
+        } else {
+            (tok_spec.shape[0], tok_spec.shape[1])
+        };
+        let vocab = spec.meta_usize("vocab_size").context("vocab_size meta")?;
+
+        // params from the init artifact; optimizer state starts at zero
+        let params_t = runtime
+            .run(init_artifact, &[Tensor::scalar_u32(seed as u32)])
+            .context("running init artifact")?;
+        if params_t.len() != n_params {
+            bail!(
+                "init artifact returned {} tensors, manifest lists {n_params} params",
+                params_t.len()
+            );
+        }
+        let mut state = runtime.to_literals(&params_t)?;
+        for t in &params_t {
+            state.push(Tensor::zeros(t.dtype, &t.shape).to_literal()?); // m
+        }
+        for t in &params_t {
+            state.push(Tensor::zeros(t.dtype, &t.shape).to_literal()?); // v
+        }
+        Ok(Trainer {
+            runtime,
+            artifact: train_artifact.to_string(),
+            state,
+            n_params,
+            batch,
+            seq_plus1,
+            chunk_steps,
+            step: 1,
+            corpus: SyntheticCorpus::new(vocab, seed ^ 0xC0 | 1),
+            vocab,
+        })
+    }
+
+    pub fn batch_tokens(&self) -> usize {
+        self.batch * (self.seq_plus1 - 1) * self.chunk_steps
+    }
+
+    pub fn chunk_steps(&self) -> usize {
+        self.chunk_steps
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Sample the next token batch from the corpus.
+    fn next_batch(&mut self) -> Result<Tensor> {
+        if self.chunk_steps > 1 {
+            let data = self
+                .corpus
+                .sample_batch(self.chunk_steps * self.batch, self.seq_plus1);
+            Tensor::from_i32(
+                &[self.chunk_steps, self.batch, self.seq_plus1], data,
+            )
+        } else {
+            let data = self.corpus.sample_batch(self.batch, self.seq_plus1);
+            Tensor::from_i32(&[self.batch, self.seq_plus1], data)
+        }
+    }
+
+    /// Run one artifact call (1 or `chunk_steps` optimizer steps).
+    /// Returns the mean cross-entropy of the call.
+    pub fn step(&mut self) -> Result<f32> {
+        let tokens = self.next_batch()?;
+        let step_l = Tensor::scalar_i32(self.step).to_literal()?;
+        let tok_l = tokens.to_literal()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + self.state.len());
+        args.push(&step_l);
+        args.push(&tok_l);
+        for s in &self.state {
+            args.push(s);
+        }
+        let mut outs = self.runtime.run_literals(&self.artifact, &args)?;
+        // outs: [loss(es), params.., m.., v..]
+        let n_state = 3 * self.n_params;
+        if outs.len() != 1 + n_state {
+            bail!("train artifact returned {} outputs, want {}", outs.len(), 1 + n_state);
+        }
+        let new_state: Vec<xla::Literal> = outs.split_off(1);
+        let loss_t = Tensor::from_literal(&outs[0])?;
+        self.state = new_state;
+        self.step += self.chunk_steps as i32;
+        loss_t.mean()
+    }
+
+    /// Train for `calls` artifact calls, logging every `log_every`.
+    pub fn run(&mut self, calls: usize, log_every: usize) -> Result<TrainLog> {
+        let mut log = TrainLog::default();
+        let t0 = std::time::Instant::now();
+        for c in 0..calls {
+            let loss = self.step()?;
+            log.losses.push(loss);
+            log.tokens_seen += self.batch_tokens() as u64;
+            if log_every > 0 && (c + 1) % log_every == 0 {
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "step {:>5}  loss {:.4}  ({:.1} tok/s)",
+                    self.step - 1,
+                    loss,
+                    log.tokens_seen as f64 / dt
+                );
+            }
+        }
+        log.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(log)
+    }
+
+    /// Current flattened parameters (downloads from literals).
+    pub fn params_tensors(&self) -> Result<Vec<Tensor>> {
+        self.state[..self.n_params]
+            .iter()
+            .map(Tensor::from_literal)
+            .collect()
+    }
+
+    /// Corpus conditional entropy (nats) — the loss floor for reporting.
+    pub fn loss_floor(&self) -> f64 {
+        self.corpus.conditional_entropy()
+    }
+}

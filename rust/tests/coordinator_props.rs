@@ -1,0 +1,197 @@
+//! Property-based tests (testkit) for the coordinator invariants.
+
+use scattermoe::coordinator::batcher::{Batcher, SlotState};
+use scattermoe::coordinator::request::{Request, SamplingParams};
+use scattermoe::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
+use scattermoe::memmodel::MlpShape;
+use scattermoe::testkit::{check, prop_assert, Gen, PairGen, U64Range, VecGen};
+
+fn mk_req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+    Request::new(
+        id,
+        vec![1; prompt_len.max(1)],
+        SamplingParams { max_new_tokens: max_new.max(1), ..Default::default() },
+    )
+}
+
+/// Drive a batcher with a random script of (ops) and check conservation.
+#[test]
+fn prop_batcher_conserves_requests() {
+    // script: per step, submit `s` requests then decode everything once
+    let gen = VecGen { item: U64Range(0, 4), min_len: 1, max_len: 24 };
+    check(60, gen, |script: &Vec<u64>| {
+        let mut b = Batcher::new(4, 1000);
+        let mut next_id = 0u64;
+        let mut finished = 0u64;
+        for &s in script {
+            for _ in 0..s {
+                assert!(b.submit(mk_req(next_id, 3, 2)));
+                next_id += 1;
+            }
+            for i in b.refill() {
+                b.complete_prefill(i, 7);
+            }
+            for i in b.decoding_slots() {
+                if b.push_token(i, 8).is_some() {
+                    finished += 1;
+                }
+            }
+            let (adm, fin, act, q) = b.accounting();
+            prop_assert(adm == next_id, "admitted == submitted")?;
+            prop_assert(fin + act + q == adm, "conservation")?;
+            let _ = fin;
+        }
+        // drain: everything eventually finishes
+        let mut guard = 0;
+        while !b.idle() {
+            for i in b.refill() {
+                b.complete_prefill(i, 7);
+            }
+            for i in b.decoding_slots() {
+                if b.push_token(i, 8).is_some() {
+                    finished += 1;
+                }
+            }
+            guard += 1;
+            prop_assert(guard < 10_000, "drain terminates")?;
+        }
+        prop_assert(finished == next_id, "all requests finish")
+    });
+}
+
+/// FIFO: the ids occupying slots after each refill never skip a queued
+/// earlier id.
+#[test]
+fn prop_batcher_fifo_admission() {
+    let gen = PairGen(U64Range(1, 6), U64Range(1, 30));
+    check(40, gen, |&(width, n): &(u64, u64)| {
+        let mut b = Batcher::new(width as usize, 1000);
+        for id in 0..n {
+            b.submit(mk_req(id, 2, 1));
+        }
+        let mut seen = Vec::new();
+        let mut guard = 0;
+        while !b.idle() {
+            for i in b.refill() {
+                if let SlotState::Prefilling(id) = b.slots()[i].state {
+                    seen.push(id.0);
+                }
+                b.complete_prefill(i, 3);
+            }
+            for i in b.decoding_slots() {
+                b.push_token(i, 4);
+            }
+            guard += 1;
+            prop_assert(guard < 10_000, "terminates")?;
+        }
+        let mut sorted = seen.clone();
+        sorted.sort();
+        prop_assert(seen == sorted, "slot entry order == arrival order")?;
+        prop_assert(seen.len() == n as usize, "all admitted")
+    });
+}
+
+/// The scheduler never decodes an empty batch and never prefills with
+/// nothing to fill.
+#[test]
+fn prop_scheduler_action_validity() {
+    let gen = VecGen { item: U64Range(0, 10), min_len: 4, max_len: 4 };
+    check(300, gen, |v: &Vec<u64>| {
+        let (queued, empty, active) = (v[0] as usize, v[1] as usize, v[2] as usize);
+        let wait = v[3] as f64 / 5.0;
+        let s = Scheduler::new(SchedulerConfig::default());
+        match s.decide(queued, empty, active, wait) {
+            Action::Decode => prop_assert(active > 0, "decode needs active slots"),
+            Action::Prefill => {
+                prop_assert(queued.min(empty) > 0, "prefill needs fillable slots")
+            }
+            Action::Idle => prop_assert(
+                active == 0 && queued.min(empty) == 0,
+                "idle only when nothing to do",
+            ),
+        }
+    });
+}
+
+/// Work conservation: with work available, the scheduler never idles.
+#[test]
+fn prop_scheduler_work_conserving() {
+    let gen = VecGen { item: U64Range(0, 12), min_len: 3, max_len: 3 };
+    check(300, gen, |v: &Vec<u64>| {
+        let (queued, empty, active) = (v[0] as usize, v[1] as usize, v[2] as usize);
+        let s = Scheduler::new(SchedulerConfig::default());
+        let a = s.decide(queued, empty, active, 0.0);
+        if active > 0 || queued.min(empty) > 0 {
+            prop_assert(a != Action::Idle, "work conserving")
+        } else {
+            Ok(())
+        }
+    });
+}
+
+/// Memory model: ScatterMoE footprint ≤ padded footprint for any shape
+/// and any count distribution (the Fig 4c ordering is universal).
+#[test]
+fn prop_memmodel_scatter_never_worse() {
+    let gen = VecGen { item: U64Range(1, 64), min_len: 4, max_len: 16 };
+    check(120, gen, |counts_raw: &Vec<u64>| {
+        let e = counts_raw.len();
+        let counts: Vec<usize> = counts_raw.iter().map(|&c| c as usize * 7).collect();
+        let slots: usize = counts.iter().sum();
+        let shape = MlpShape {
+            tokens: slots.max(1), // k=1 equivalent
+            k: 1,
+            num_experts: e,
+            d_model: 64,
+            d_expert: 32,
+            block: 16,
+            dtype_bytes: 4,
+        };
+        let sc = scattermoe::memmodel::scatter_footprint(&shape, true).total();
+        let pd = scattermoe::memmodel::padded_footprint(&shape, &counts, true).total();
+        prop_assert(sc <= pd, "scatter <= padded (training)")?;
+        let sc_i = scattermoe::memmodel::scatter_footprint(&shape, false).total();
+        let pd_i = scattermoe::memmodel::padded_footprint(&shape, &counts, false).total();
+        prop_assert(sc_i <= pd_i, "scatter <= padded (inference)")
+    });
+}
+
+/// JSON substrate: parse(serialize(x)) == x for random JSON-ish trees.
+#[test]
+fn prop_json_roundtrip() {
+    use scattermoe::config::Json;
+    struct JsonGen;
+    impl Gen<Json> for JsonGen {
+        fn generate(&self, rng: &mut scattermoe::rng::Rng) -> Json {
+            fn go(rng: &mut scattermoe::rng::Rng, depth: usize) -> Json {
+                match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.below(2) == 1),
+                    2 => Json::Num((rng.below(2_000_001) as f64 - 1e6) / 8.0),
+                    3 => Json::Str(
+                        (0..rng.below(12))
+                            .map(|_| {
+                                let c = rng.below(96) as u8 + 32;
+                                c as char
+                            })
+                            .collect(),
+                    ),
+                    4 => Json::Arr(
+                        (0..rng.below(5)).map(|_| go(rng, depth + 1)).collect(),
+                    ),
+                    _ => Json::Obj(
+                        (0..rng.below(5))
+                            .map(|i| (format!("k{i}"), go(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            go(rng, 0)
+        }
+    }
+    check(200, JsonGen, |j: &Json| {
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert(&back == j, "roundtrip equality")
+    });
+}

@@ -1,0 +1,146 @@
+//! Integration tests over real AOT artifacts (skipped, with a notice, if
+//! `make artifacts` has not been run).
+
+use std::sync::Arc;
+
+use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
+use scattermoe::rng::Rng;
+use scattermoe::runtime::Runtime;
+use scattermoe::tensor::Tensor;
+use scattermoe::tokenizer::SyntheticCorpus;
+use scattermoe::train::Trainer;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = scattermoe::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Runtime::open(&dir).expect("open runtime")))
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_f32(shape, rng.normal_vec(n, scale)).unwrap()
+}
+
+/// scatter ≡ naive ≡ padded through the compiled artifacts — the rust-
+/// side half of the Table-1 equivalence property.
+#[test]
+fn mlp_impls_agree_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.spec("mlp_fwd_scatter_fig4b").unwrap().clone();
+    let mut rng = Rng::new(42);
+    let args: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|io| rand_tensor(&mut rng, &io.shape, 0.1))
+        .collect();
+    let y_scatter = rt.run("mlp_fwd_scatter_fig4b", &args).unwrap();
+    let y_naive = rt.run("mlp_fwd_naive_fig4b", &args).unwrap();
+    let y_padded = rt.run("mlp_fwd_padded_fig4b", &args).unwrap();
+    let a = y_scatter[0].as_f32().unwrap();
+    for (name, other) in [("naive", &y_naive), ("padded", &y_padded)] {
+        let b = other[0].as_f32().unwrap();
+        let max_err = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "{name} max_err={max_err}");
+    }
+}
+
+/// Input validation: wrong shapes are rejected before execution.
+#[test]
+fn run_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt
+        .run("mlp_fwd_scatter_fig4b", &[Tensor::scalar_i32(1)])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("expects"));
+}
+
+/// The training driver reduces loss through the compiled step.
+#[test]
+fn trainer_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut tr = Trainer::new(rt, "lm_bench_init", "lm_bench_train_scatter", 0)
+        .expect("trainer");
+    let log = tr.run(8, 0).expect("train");
+    let first = log.losses.first().copied().unwrap();
+    let last = log.losses.last().copied().unwrap();
+    assert!(
+        last < first,
+        "loss should fall: {first} -> {last} ({:?})",
+        log.losses
+    );
+}
+
+/// Serving engine end-to-end on a small request burst: everything
+/// finishes, responses have sane shapes and metrics.
+#[test]
+fn engine_serves_burst() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(rt, EngineConfig::default()).expect("engine");
+    let mut corpus = SyntheticCorpus::new(512, 1);
+    let n = engine.width() + 3; // forces at least one slot refill
+    for _ in 0..n {
+        let prompt = corpus.sample(6);
+        let id = engine.submit(
+            prompt,
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        );
+        assert!(id.is_some());
+    }
+    let responses = engine.run_to_completion().expect("serve");
+    assert_eq!(responses.len(), n);
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 4, "every request decodes max_new tokens");
+        assert!(r.latency >= r.ttft);
+    }
+    assert!(engine.metrics.prefills >= 2, "refill implies a second prefill");
+    assert_eq!(engine.metrics.completed as usize, n);
+}
+
+/// Decode result must not depend on batch composition: a request decoded
+/// alongside others yields the same tokens as the same request alone
+/// (slot isolation — the continuous-batching correctness property).
+#[test]
+fn engine_slot_isolation() {
+    let Some(rt) = runtime() else { return };
+    let prompt = SyntheticCorpus::new(512, 7).sample(8);
+    let params = SamplingParams { max_new_tokens: 5, ..Default::default() };
+
+    // run alone
+    let mut solo = Engine::new(rt.clone(), EngineConfig::default()).unwrap();
+    solo.submit(prompt.clone(), params.clone());
+    let r_solo = solo.run_to_completion().unwrap().remove(0);
+
+    // run alongside a full batch of other prompts
+    let mut busy = Engine::new(rt, EngineConfig::default()).unwrap();
+    let mut corpus = SyntheticCorpus::new(512, 99);
+    let main_id = busy.submit(prompt, params.clone()).unwrap();
+    for _ in 0..busy.width() - 1 {
+        busy.submit(corpus.sample(10), params.clone());
+    }
+    let rs = busy.run_to_completion().unwrap();
+    let r_busy = rs.into_iter().find(|r| r.id == main_id).unwrap();
+    assert_eq!(r_solo.tokens, r_busy.tokens, "slot isolation violated");
+}
+
+/// Expert stats integration sanity: padding waste is non-negative and
+/// bounded for any recorded distribution.
+#[test]
+fn expert_stats_waste_bounds() {
+    use scattermoe::coordinator::ExpertStats;
+    let mut s = ExpertStats::new(8);
+    let mut rng = Rng::new(3);
+    for _ in 0..100 {
+        let a: Vec<usize> = (0..64).map(|_| rng.below(8) as usize).collect();
+        s.record(&a);
+    }
+    let w = s.padding_waste(128);
+    assert!(w >= 0.0);
+    assert!(s.load_cv() < 1.0);
+}
