@@ -9,7 +9,7 @@
 use anyhow::Result;
 use scattermoe::cli::Cli;
 use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
-use scattermoe::metrics::Histogram;
+use scattermoe::metrics::{fmt_bytes, Histogram};
 use scattermoe::rng::Rng;
 use scattermoe::runtime::Runtime;
 use scattermoe::tokenizer::SyntheticCorpus;
@@ -23,15 +23,21 @@ fn main() -> Result<()> {
     let a = cli.parse();
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
-    let mut engine = Engine::new(rt, EngineConfig::default())?;
+    let mut engine = Engine::new(rt.clone(), EngineConfig::default())?;
     println!(
-        "engine: {} decode slots, context {} — warming up compile caches…",
+        "engine: {} decode slots, context {} ({} KV cache, {} splice) — warming up compile caches…",
         engine.width(),
-        engine.max_len()
+        engine.max_len(),
+        scattermoe::metrics::fmt_bytes(engine.cache_bytes() as u64),
+        if engine.splices_on_device() { "on-device" } else { "HOST-FALLBACK" },
     );
     // warmup: compile prefill+decode before timing
     engine.submit(vec![3, 4, 5], SamplingParams { max_new_tokens: 2, ..Default::default() });
     engine.run_to_completion()?;
+    // before-counter: host↔device traffic up to the start of the timed run
+    let xfer_before = engine.transfer_totals();
+    let decode_before = rt.stats().get("serve_decode").cloned().unwrap_or_default();
+    let steps_before = engine.metrics.decode_steps;
 
     let n = a.get_usize("requests");
     let rate = a.get_f64("rate");
@@ -116,15 +122,72 @@ fn main() -> Result<()> {
         engine.metrics.decode_steps
     );
     for (name, st) in engine.runtime_stats() {
-        if st.executions > 0 {
+        // transfer-only entries (host-splice fallback, kv_cache_init)
+        // never execute but must still show their bytes
+        let moved_any = st.bytes_to_device + st.bytes_to_host + st.chain_bytes > 0;
+        if st.executions > 0 || moved_any {
+            let mean_ms = if st.executions > 0 {
+                format!("{:>7.1}", st.total_secs / st.executions as f64 * 1e3)
+            } else {
+                format!("{:>7}", "-")
+            };
             println!(
-                "  artifact {:<16} {:>4} execs  mean {:>7.1} ms  (compile {:.2}s)",
+                "  artifact {:<16} {:>4} execs  mean {} ms  (compile {:.2}s)  \
+                 up {:>9}  down {:>9}  chain {:>9}/{}",
                 name,
                 st.executions,
-                st.total_secs / st.executions as f64 * 1e3,
-                st.compile_secs
+                mean_ms,
+                st.compile_secs,
+                fmt_bytes(st.bytes_to_device),
+                fmt_bytes(st.bytes_to_host),
+                fmt_bytes(st.chain_bytes),
+                st.host_round_trips,
             );
         }
+    }
+
+    // after-counter: the device-resident-cache claim, measured.  Steady-
+    // state decode must move only the (B,) pos/token vectors up and the
+    // (B, V) logits down — O(vectors), not O(cache).  The per-step
+    // figure uses only decode-attributed bytes so prefill/splice traffic
+    // can't inflate (or mask) it.
+    let xfer_after = engine.transfer_totals();
+    let moved = xfer_after.since(&xfer_before);
+    let decode_after = rt.stats().get("serve_decode").cloned().unwrap_or_default();
+    let decode_moved = (decode_after.bytes_to_device - decode_before.bytes_to_device)
+        + (decode_after.bytes_to_host - decode_before.bytes_to_host)
+        + (decode_after.chain_bytes - decode_before.chain_bytes);
+    let steps = (engine.metrics.decode_steps - steps_before).max(1);
+    let per_step = decode_moved / steps;
+    let cache = engine.cache_bytes() as u64;
+    println!("\n=== host<->device transfer report ===");
+    println!(
+        "counters before: up {}  down {}  chain {}   after: up {}  down {}  chain {}",
+        fmt_bytes(xfer_before.bytes_to_device),
+        fmt_bytes(xfer_before.bytes_to_host),
+        fmt_bytes(xfer_before.chain_bytes),
+        fmt_bytes(xfer_after.bytes_to_device),
+        fmt_bytes(xfer_after.bytes_to_host),
+        fmt_bytes(xfer_after.chain_bytes),
+    );
+    println!(
+        "timed run moved {} total (prefill+splice+decode); decode alone: {}/step over {} steps   \
+         (KV cache is {}: decode moves {:.2}% of a per-tick cache round-trip)",
+        fmt_bytes(moved.total_bytes()),
+        fmt_bytes(per_step),
+        steps,
+        fmt_bytes(cache),
+        100.0 * per_step as f64 / (2.0 * cache as f64),
+    );
+    if moved.host_round_trips > 0 {
+        println!(
+            "WARNING: {} fallback tuple round-trips ({}) — outputs were not \
+             device-chainable; see Runtime::run_chained",
+            moved.host_round_trips,
+            fmt_bytes(moved.chain_bytes),
+        );
+    } else {
+        println!("cache stayed device-resident: 0 fallback round-trips");
     }
     Ok(())
 }

@@ -382,6 +382,15 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
         params = dict(zip(names, flat))
         return tr.decode_step(params, kc, vc, pos, tokens, cfg)
 
+    def kv_splice_fn(kc, vc, kc_new, vc_new, slot_mask):
+        # On-device row scatter for partial prefills: batch rows whose
+        # slot_mask entry is non-zero adopt the freshly prefilled cache,
+        # the rest keep the live cache.  Runs as one fused select so the
+        # Rust coordinator never downloads a cache to merge it (the
+        # continuous-batching hot path stays device-resident).
+        take = (slot_mask != 0)[None, :, None, None, None]
+        return (jnp.where(take, kc_new, kc), jnp.where(take, vc_new, vc))
+
     return [
         Artifact(
             name="serve_prefill", fn=prefill_fn,
@@ -395,6 +404,13 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
                     ("k_cache", cache_shape, F32), ("v_cache", cache_shape, F32)]
             + param_inputs,
             meta=dict(kind="serve_decode", **meta),
+        ),
+        Artifact(
+            name="kv_splice", fn=kv_splice_fn,
+            inputs=[("k_cache", cache_shape, F32), ("v_cache", cache_shape, F32),
+                    ("k_new", cache_shape, F32), ("v_new", cache_shape, F32),
+                    ("slot_mask", (SERVE_BATCH,), I32)],
+            meta=dict(kind="kv_splice", **meta),
         ),
     ]
 

@@ -62,6 +62,44 @@ def test_lm_artifact_param_names_sorted():
     assert [i[0] for i in ins[2 + n:2 + 2 * n]] == ["m." + x for x in names]
 
 
+def test_kv_splice_merges_only_masked_rows():
+    """The on-device partial-prefill merge: masked batch rows adopt the
+    new cache, unmasked rows keep the live cache — exactly the host-side
+    `splice_rows` contract the Rust engine falls back to."""
+    arts = {a.name: a for a in aot.build_artifacts()}
+    art = arts["kv_splice"]
+    assert [i[0] for i in art.inputs] == [
+        "k_cache", "v_cache", "k_new", "v_new", "slot_mask",
+    ]
+    shape = art.inputs[0][1]
+    assert shape[1] == aot.SERVE_BATCH
+    key = jax.random.PRNGKey(0)
+    kc = jax.random.normal(key, shape, jnp.float32)
+    vc = kc + 1.0
+    kn = kc * -2.0
+    vn = kc * 3.0
+    mask = np.zeros(aot.SERVE_BATCH, np.int32)
+    mask[[1, 4]] = 1
+    kc2, vc2 = jax.jit(art.fn)(kc, vc, kn, vn, jnp.asarray(mask))
+    for b in range(aot.SERVE_BATCH):
+        want_k, want_v = (kn, vn) if mask[b] else (kc, vc)
+        np.testing.assert_array_equal(np.asarray(kc2[:, b]), np.asarray(want_k[:, b]))
+        np.testing.assert_array_equal(np.asarray(vc2[:, b]), np.asarray(want_v[:, b]))
+
+
+def test_kv_splice_is_lowerable():
+    """kv_splice must lower to HLO text like every other serve artifact
+    (it is loaded through the same 0.5.1-era parser on the Rust side)."""
+    arts = [a for a in aot.build_artifacts() if a.name == "kv_splice"]
+    assert len(arts) == 1
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        entry = aot.lower_artifact(arts[0], d)
+        assert os.path.exists(os.path.join(d, entry["file"]))
+        assert len(entry["outputs"]) == 2
+        assert entry["outputs"][0]["shape"] == list(arts[0].inputs[0][1])
+
+
 def test_train_artifact_executes_and_reduces_loss():
     """Execute the lowered lm_bench train step via jax on its input specs:
     loss must fall over a handful of steps (catches silent lowering bugs

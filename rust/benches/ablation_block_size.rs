@@ -74,6 +74,7 @@ fn main() -> anyhow::Result<()> {
                 median: inf,
                 p95: tr,
                 units_per_iter: 0.0,
+                host_bytes_per_iter: 0.0,
             });
         }
     }

@@ -41,8 +41,11 @@ fn main() -> anyhow::Result<()> {
         let tokens = trainer.batch_tokens() as f64;
         trainer.step()?; // compile + first step outside timing
         let mut failed = None;
-        let m = bench(&format!("{impl_} train step"), opts, tokens, || {
+        let xfer0 = rt.transfer_totals();
+        let mut iters = 0u64;
+        let mut m = bench(&format!("{impl_} train step"), opts, tokens, || {
             if failed.is_none() {
+                iters += 1;
                 if let Err(e) = trainer.step() {
                     failed = Some(e);
                 }
@@ -50,6 +53,12 @@ fn main() -> anyhow::Result<()> {
         });
         if let Some(e) = failed {
             return Err(e);
+        }
+        // per-step host↔device traffic: the optimizer-state round-trip
+        // the scan-chunked artifacts amortise (see lm_e2e)
+        let moved = rt.transfer_totals().since(&xfer0);
+        if iters > 0 {
+            m.host_bytes_per_iter = moved.total_bytes() as f64 / iters as f64;
         }
         rows.push(m);
     }

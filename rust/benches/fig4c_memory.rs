@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
                 median: fp.total() as f64,
                 p95: fp.total() as f64,
                 units_per_iter: 0.0,
+                host_bytes_per_iter: 0.0,
             });
         }
     }

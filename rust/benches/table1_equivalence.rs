@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             median: s,
             p95: err,
             units_per_iter: 0.0,
+            host_bytes_per_iter: 0.0,
         });
     }
     let mut ppl_corpus_a = SyntheticCorpus::new(vocab, 0x99);
@@ -73,6 +74,7 @@ fn main() -> anyhow::Result<()> {
         median: ppl_s,
         p95: ppl_err,
         units_per_iter: 0.0,
+        host_bytes_per_iter: 0.0,
     });
 
     println!("\nmax accuracy abs error: {max_err:.5}   ppl abs error: {ppl_err:.5}");

@@ -20,6 +20,10 @@ pub struct Measurement {
     pub p95: f64,
     /// optional work units per iteration (tokens, requests, …)
     pub units_per_iter: f64,
+    /// host↔device bytes moved per iteration (0 for analytic series);
+    /// populated by [`crate::figbench::bench_artifact`] from the
+    /// runtime's transfer counters
+    pub host_bytes_per_iter: f64,
 }
 
 impl Measurement {
@@ -41,6 +45,10 @@ impl Measurement {
         m.insert("p95_s".into(), Json::from(self.p95));
         m.insert("units_per_iter".into(), Json::from(self.units_per_iter));
         m.insert("throughput".into(), Json::from(self.throughput()));
+        m.insert(
+            "host_bytes_per_iter".into(),
+            Json::from(self.host_bytes_per_iter),
+        );
         Json::Obj(m)
     }
 }
@@ -78,7 +86,15 @@ pub fn bench<F: FnMut()>(
         h.record(t.elapsed().as_secs_f64());
     }
     let (p5, median, p95) = h.paper_summary();
-    Measurement { name: name.into(), runs: opts.runs, p5, median, p95, units_per_iter }
+    Measurement {
+        name: name.into(),
+        runs: opts.runs,
+        p5,
+        median,
+        p95,
+        units_per_iter,
+        host_bytes_per_iter: 0.0,
+    }
 }
 
 /// Aligned table of measurements, one row per series, with a relative
@@ -88,16 +104,19 @@ pub fn print_table(title: &str, rows: &[Measurement], baseline: Option<&str>) {
     let base_tp = baseline
         .and_then(|b| rows.iter().find(|r| r.name == b))
         .map(|r| r.throughput());
-    println!(
+    // transfer column only when some series actually measured transfers
+    let with_xfer = rows.iter().any(|r| r.host_bytes_per_iter > 0.0);
+    print!(
         "{:<36} {:>10} {:>10} {:>10} {:>14} {:>9}",
         "series", "p5 (ms)", "med (ms)", "p95 (ms)", "units/s", "rel"
     );
+    println!("{}", if with_xfer { format!(" {:>12}", "xfer/iter") } else { String::new() });
     for r in rows {
         let rel = match base_tp {
             Some(b) if b > 0.0 => format!("{:.2}x", r.throughput() / b),
             _ => "-".into(),
         };
-        println!(
+        print!(
             "{:<36} {:>10.2} {:>10.2} {:>10.2} {:>14.1} {:>9}",
             r.name,
             r.p5 * 1e3,
@@ -105,6 +124,14 @@ pub fn print_table(title: &str, rows: &[Measurement], baseline: Option<&str>) {
             r.p95 * 1e3,
             r.throughput(),
             rel
+        );
+        println!(
+            "{}",
+            if with_xfer {
+                format!(" {:>12}", crate::metrics::fmt_bytes(r.host_bytes_per_iter as u64))
+            } else {
+                String::new()
+            }
         );
     }
 }

@@ -14,7 +14,8 @@
 
 use std::collections::VecDeque;
 
-use super::request::{FinishReason, Request, RequestId, Response};
+use super::request::{FinishReason, Request, RequestId, Response, SamplingParams};
+use crate::rng::Rng;
 
 /// State of one decode slot.
 #[derive(Clone, Debug, PartialEq)]
@@ -32,8 +33,12 @@ pub struct Slot {
     pub state: SlotState,
     pub prompt: Vec<i32>,
     pub generated: Vec<i32>,
-    pub max_new: usize,
-    pub stop_token: Option<i32>,
+    /// The request's full generation parameters (temperature / top-k /
+    /// stop / budget) — consumed per-token by the engine's sampler.
+    pub params: SamplingParams,
+    /// Private sampling stream seeded from `params.seed`, so a request's
+    /// generation never depends on which other slots are in flight.
+    pub rng: Rng,
     pub started: Option<std::time::Instant>,
     pub arrived: Option<std::time::Instant>,
     pub first_token_at: Option<std::time::Instant>,
@@ -45,8 +50,8 @@ impl Slot {
             state: SlotState::Empty,
             prompt: Vec::new(),
             generated: Vec::new(),
-            max_new: 0,
-            stop_token: None,
+            params: SamplingParams::default(),
+            rng: Rng::new(0),
             started: None,
             arrived: None,
             first_token_at: None,
@@ -93,6 +98,21 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Waiting time (seconds) of the head-of-line request, 0 when the
+    /// queue is empty.  FIFO admission means the front entry is the
+    /// oldest — this is the scheduler's starvation signal.
+    pub fn oldest_wait(&self) -> f64 {
+        self.queue
+            .front()
+            .map(|r| r.arrived.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Mutable access to one slot (per-token sampling state).
+    pub fn slot_mut(&mut self, idx: usize) -> &mut Slot {
+        &mut self.slots[idx]
+    }
+
     /// Admission control: enqueue or reject (backpressure signal).
     pub fn submit(&mut self, req: Request) -> bool {
         if self.queue.len() >= self.max_queue {
@@ -113,12 +133,14 @@ impl Batcher {
                 continue;
             }
             let Some(req) = self.queue.pop_front() else { break };
+            // xor with a salt so seed 0 doesn't collapse onto Rng(0)
+            let rng = Rng::new(req.params.seed ^ 0x5A17_5EED_0F5A_17ED);
             *slot = Slot {
                 state: SlotState::Prefilling(req.id),
                 prompt: req.prompt,
                 generated: Vec::new(),
-                max_new: req.params.max_new_tokens,
-                stop_token: req.params.stop_token,
+                params: req.params,
+                rng,
                 started: Some(std::time::Instant::now()),
                 arrived: Some(req.arrived),
                 first_token_at: None,
@@ -156,8 +178,8 @@ impl Batcher {
             return None;
         };
         slot.generated.push(token);
-        let hit_stop = slot.stop_token == Some(token);
-        let hit_len = slot.generated.len() >= slot.max_new;
+        let hit_stop = slot.params.stop_token == Some(token);
+        let hit_len = slot.generated.len() >= slot.params.max_new_tokens;
         if !(hit_stop || hit_len) {
             return None;
         }
@@ -296,6 +318,46 @@ mod tests {
         assert!(b.submit(req(2, 1, 1)));
         assert!(!b.submit(req(3, 1, 1)));
         assert_eq!(b.rejected(), 1);
+    }
+
+    #[test]
+    fn oldest_wait_reports_head_of_line() {
+        let mut b = Batcher::new(1, 8);
+        assert_eq!(b.oldest_wait(), 0.0, "empty queue waits nothing");
+        let mut old = req(1, 1, 1);
+        old.arrived = std::time::Instant::now() - std::time::Duration::from_secs(5);
+        b.submit(old);
+        b.submit(req(2, 1, 1)); // fresh request behind it
+        let w = b.oldest_wait();
+        assert!(w >= 5.0, "head-of-line wait should be ~5s, got {w}");
+        // head admitted to a slot -> the fresh request becomes oldest
+        b.refill();
+        assert!(b.oldest_wait() < 1.0);
+    }
+
+    #[test]
+    fn slot_carries_sampling_params() {
+        let mut b = Batcher::new(1, 8);
+        let mut r = req(3, 2, 7);
+        r.params.temperature = 0.8;
+        r.params.top_k = Some(5);
+        r.params.seed = 42;
+        b.submit(r);
+        b.refill();
+        let s = &b.slots()[0];
+        assert_eq!(s.params.temperature, 0.8);
+        assert_eq!(s.params.top_k, Some(5));
+        assert_eq!(s.params.max_new_tokens, 7);
+        // same seed -> identical per-slot stream (reproducibility)
+        let mut b2 = Batcher::new(1, 8);
+        let mut r2 = req(9, 2, 7);
+        r2.params.seed = 42;
+        b2.submit(r2);
+        b2.refill();
+        assert_eq!(
+            b.slot_mut(0).rng.next_u64(),
+            b2.slot_mut(0).rng.next_u64()
+        );
     }
 
     #[test]

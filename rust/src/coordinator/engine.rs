@@ -11,8 +11,16 @@
 //!   per-slot position vector; sample a token per active slot; retire
 //!   finished sequences and free their slots.
 //!
-//! Model parameters are converted to XLA literals once at load time and
-//! reused every call; KV caches flow call-to-call as literals.
+//! **Device residency.** Model parameters are uploaded once at load time;
+//! the KV caches live as `xla::PjRtBuffer`s and flow call-to-call without
+//! ever visiting the host: decode feeds the previous step's output cache
+//! buffers straight back as inputs, uploading only the `(B,)` position
+//! and last-token vectors and downloading only the `(B, V)` logits.
+//! Partial prefills merge the refilled slots' cache rows on-device through
+//! the `kv_splice` artifact (a mask-driven row scatter); if that artifact
+//! is absent from the manifest the engine falls back to a host-side
+//! splice, and the fallback's full-cache round-trip shows up in the
+//! runtime's transfer counters instead of being silently eaten.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -21,7 +29,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::expert_stats::ExpertStats;
-use crate::coordinator::request::{Request, RequestId, Response};
+use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
 use crate::metrics::Histogram;
 use crate::rng::Rng;
@@ -34,6 +42,9 @@ pub struct EngineConfig {
     pub prefill_artifact: String,
     pub decode_artifact: String,
     pub init_artifact: String,
+    /// On-device partial-prefill cache merge; host-splice fallback when
+    /// the manifest doesn't carry it (older artifact dirs).
+    pub splice_artifact: String,
     pub max_queue: usize,
     pub scheduler: SchedulerConfig,
     pub seed: u64,
@@ -45,6 +56,7 @@ impl Default for EngineConfig {
             prefill_artifact: "serve_prefill".into(),
             decode_artifact: "serve_decode".into(),
             init_artifact: "lm_serve_init".into(),
+            splice_artifact: "kv_splice".into(),
             max_queue: 256,
             scheduler: SchedulerConfig::default(),
             seed: 0,
@@ -59,6 +71,11 @@ pub struct EngineMetrics {
     pub decode_steps: u64,
     pub prefills: u64,
     pub generated_tokens: u64,
+    /// Partial-prefill cache merges executed on-device (`kv_splice`).
+    pub device_splices: u64,
+    /// Partial-prefill cache merges that round-tripped through the host
+    /// (artifact missing from the manifest).
+    pub host_splices: u64,
     pub ttft: Histogram,
     pub latency: Histogram,
 }
@@ -75,14 +92,17 @@ pub struct Engine {
     vocab: usize,
     /// model params as device-resident buffers (uploaded once)
     params: Vec<xla::PjRtBuffer>,
-    /// live KV caches (literals, fed back each step)
-    k_cache: xla::Literal,
-    v_cache: xla::Literal,
+    /// live KV caches — **device-resident**, chained output→input across
+    /// ticks; shape (L, B, Tmax, nh, dh) each
+    k_cache: xla::PjRtBuffer,
+    v_cache: xla::PjRtBuffer,
+    cache_shape: Vec<usize>,
+    /// whether the manifest carries the on-device splice artifact
+    has_device_splice: bool,
     /// per-slot next position (= current sequence length)
     pos: Vec<i32>,
     /// per-slot last emitted token
     last_token: Vec<i32>,
-    rng: Rng,
     pub metrics: EngineMetrics,
     pub expert_stats: ExpertStats,
     next_id: u64,
@@ -90,24 +110,33 @@ pub struct Engine {
 
 impl Engine {
     /// Build the engine: loads manifest shapes, materialises params via
-    /// the init artifact, zero-initialises the KV caches.
+    /// the init artifact, zero-initialises the KV caches on device.
     pub fn new(runtime: std::sync::Arc<Runtime>, cfg: EngineConfig) -> Result<Engine> {
         let prefill = runtime.spec(&cfg.prefill_artifact)?.clone();
         let width = prefill.inputs[0].shape[0];
         let prompt_width = prefill.inputs[0].shape[1];
         let decode = runtime.spec(&cfg.decode_artifact)?.clone();
         let cache_spec = &decode.inputs[2];
-        let max_len = cache_spec.shape[2];
+        let cache_shape = cache_spec.shape.clone();
+        let max_len = cache_shape[2];
         let vocab = decode.outputs[0].shape[1];
         let num_experts = prefill.meta_usize("num_experts").unwrap_or(8);
+        let has_device_splice = runtime.manifest().get(&cfg.splice_artifact).is_ok();
+        if !has_device_splice {
+            log::warn!(
+                "engine: artifact '{}' not in manifest — partial prefills \
+                 will splice KV rows through the host",
+                cfg.splice_artifact
+            );
+        }
 
-        // init params once; keep as literals for every subsequent call
+        // init params once; keep device-resident for every subsequent call
         let seed = Tensor::scalar_u32(cfg.seed as u32);
         let t0 = Instant::now();
         let params_t = runtime.run(&cfg.init_artifact, &[seed])?;
         let params = params_t
             .iter()
-            .map(|t| runtime.upload_tensor(t))
+            .map(|t| runtime.upload_tensor_for(&cfg.init_artifact, t))
             .collect::<Result<Vec<_>>>()?;
         log::info!(
             "engine: {} params initialised in {:.2}s",
@@ -115,10 +144,11 @@ impl Engine {
             t0.elapsed().as_secs_f64()
         );
 
-        let kc = Tensor::zeros(crate::tensor::DType::F32, &cache_spec.shape)
-            .to_literal()?;
-        let vc = Tensor::zeros(crate::tensor::DType::F32, &cache_spec.shape)
-            .to_literal()?;
+        // the caches are uploaded exactly once (zeros); afterwards they
+        // only ever move device→device through decode/prefill/splice
+        let zeros = Tensor::zeros(crate::tensor::DType::F32, &cache_shape);
+        let k_cache = runtime.upload_tensor_for("kv_cache_init", &zeros)?;
+        let v_cache = runtime.upload_tensor_for("kv_cache_init", &zeros)?;
         Ok(Engine {
             batcher: Batcher::new(width, cfg.max_queue),
             scheduler: Scheduler::new(cfg.scheduler),
@@ -127,11 +157,12 @@ impl Engine {
             max_len,
             vocab,
             params,
-            k_cache: kc,
-            v_cache: vc,
+            k_cache,
+            v_cache,
+            cache_shape,
+            has_device_splice,
             pos: vec![0; width],
             last_token: vec![0; width],
-            rng: Rng::new(cfg.seed ^ 0x5EED),
             metrics: EngineMetrics::default(),
             expert_stats: ExpertStats::new(num_experts),
             runtime,
@@ -148,8 +179,20 @@ impl Engine {
         self.max_len
     }
 
+    /// Total bytes of the two live KV caches (the traffic a host
+    /// round-trip per tick would cost — the quantity this engine avoids).
+    pub fn cache_bytes(&self) -> usize {
+        2 * self.cache_shape.iter().product::<usize>()
+            * crate::tensor::DType::F32.size_bytes()
+    }
+
+    /// True when partial prefills merge cache rows on-device.
+    pub fn splices_on_device(&self) -> bool {
+        self.has_device_splice
+    }
+
     /// Submit a request; returns its id, or None under backpressure.
-    pub fn submit(&mut self, prompt: Vec<i32>, params: crate::coordinator::request::SamplingParams) -> Option<RequestId> {
+    pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Option<RequestId> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request::new(id, prompt, params);
@@ -165,7 +208,8 @@ impl Engine {
     pub fn tick(&mut self) -> Result<Vec<Response>> {
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.width - active as usize;
-        let oldest = 0.0; // refined below if queue non-empty
+        // real head-of-line wait so the starvation bound can fire
+        let oldest = self.batcher.oldest_wait();
         let action = self.scheduler.decide(queued as usize, empty, active as usize, oldest);
         match action {
             Action::Prefill => self.do_prefill(),
@@ -202,26 +246,28 @@ impl Engine {
                 }
             }
         }
-        let toks_b = self.runtime.upload_tensor(
+        let toks_b = self.runtime.upload_tensor_for(
+            &self.cfg.prefill_artifact,
             &Tensor::from_i32(&[self.width, self.prompt_width], toks)?,
         )?;
-        let lens_b = self
-            .runtime
-            .upload_tensor(&Tensor::from_i32(&[self.width], lens.clone())?)?;
+        let lens_b = self.runtime.upload_tensor_for(
+            &self.cfg.prefill_artifact,
+            &Tensor::from_i32(&[self.width], lens.clone())?,
+        )?;
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + self.params.len());
         args.push(&toks_b);
         args.push(&lens_b);
         for p in &self.params {
             args.push(p);
         }
+        // outs: [last_logits (B,V) → host, k_cache / v_cache → chained]
         let mut outs = self
             .runtime
-            .run_buffers(&self.cfg.prefill_artifact, &args)
+            .run_chained(&self.cfg.prefill_artifact, &args, &[0])
             .context("serve_prefill")?;
-        // outs: [last_logits (B,V), k_cache, v_cache]
-        let vc_new = outs.pop().unwrap();
-        let kc_new = outs.pop().unwrap();
-        let logits = Tensor::from_literal(&outs.pop().unwrap())?;
+        let vc_new = outs.pop().unwrap().into_buffer()?;
+        let kc_new = outs.pop().unwrap().into_buffer()?;
+        let logits = outs.pop().unwrap().into_host()?;
 
         // splice ONLY the refilled slots' cache rows into the live cache
         self.splice_cache_rows(kc_new, vc_new, &filled)?;
@@ -247,31 +293,33 @@ impl Engine {
             return Ok(Vec::new());
         }
         self.metrics.decode_steps += 1;
-        let pos_b = self
-            .runtime
-            .upload_tensor(&Tensor::from_i32(&[self.width], self.pos.clone())?)?;
-        let tok_b = self.runtime.upload_tensor(
+        // steady-state host traffic: two (B,) i32 vectors up, one (B, V)
+        // logits matrix down — independent of the KV-cache size
+        let pos_b = self.runtime.upload_tensor_for(
+            &self.cfg.decode_artifact,
+            &Tensor::from_i32(&[self.width], self.pos.clone())?,
+        )?;
+        let tok_b = self.runtime.upload_tensor_for(
+            &self.cfg.decode_artifact,
             &Tensor::from_i32(&[self.width], self.last_token.clone())?,
         )?;
-        // cache literals are owned by `self` and stay alive through the
-        // call, so the async literal upload is safe (and avoids a copy)
-        let kc_b = self.runtime.upload(&self.k_cache)?;
-        let vc_b = self.runtime.upload(&self.v_cache)?;
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + self.params.len());
         args.push(&pos_b);
         args.push(&tok_b);
-        args.push(&kc_b);
-        args.push(&vc_b);
+        args.push(&self.k_cache);
+        args.push(&self.v_cache);
         for p in &self.params {
             args.push(p);
         }
+        // logits come down once; the cache buffers chain straight into
+        // the next tick without ever being materialized on host
         let mut outs = self
             .runtime
-            .run_buffers(&self.cfg.decode_artifact, &args)
+            .run_chained(&self.cfg.decode_artifact, &args, &[0])
             .context("serve_decode")?;
-        self.v_cache = outs.pop().unwrap();
-        self.k_cache = outs.pop().unwrap();
-        let logits = Tensor::from_literal(&outs.pop().unwrap())?;
+        self.v_cache = outs.pop().unwrap().into_buffer()?;
+        self.k_cache = outs.pop().unwrap().into_buffer()?;
+        let logits = outs.pop().unwrap().into_host()?;
 
         let mut responses = Vec::new();
         for i in decoding {
@@ -294,28 +342,22 @@ impl Engine {
         Some(resp)
     }
 
-    /// Greedy or temperature sampling for one batch row.
+    /// Sample one batch row with the slot's own [`SamplingParams`] and
+    /// private rng stream (greedy when `temperature == 0`).
     fn sample_row(&mut self, logits: &Tensor, row: usize) -> Result<i32> {
         let data = logits.as_f32()?;
         let v = &data[row * self.vocab..(row + 1) * self.vocab];
-        // greedy (serving default; temperature via SamplingParams is a
-        // per-request extension point — the slot carries no temp today)
-        let _ = &self.rng;
-        let mut best = 0usize;
-        let mut bestv = f32::NEG_INFINITY;
-        for (i, &x) in v.iter().enumerate() {
-            if x > bestv {
-                bestv = x;
-                best = i;
-            }
-        }
-        Ok(best as i32)
+        let slot = self.batcher.slot_mut(row);
+        let params = slot.params.clone();
+        Ok(sample_logits(v, &params, &mut slot.rng))
     }
 
-    /// Copy rows `slots` of the freshly prefix-filled caches into the
-    /// live caches (host-side splice; cache is (L, B, Tmax, nh, dh)).
+    /// Merge rows `slots` of the freshly prefilled caches into the live
+    /// caches.  On-device when `kv_splice` is in the manifest (a `(B,)`
+    /// 0/1 mask selects which batch rows to take from the new cache);
+    /// host-side row copy otherwise.
     fn splice_cache_rows(
-        &mut self, kc_new: xla::Literal, vc_new: xla::Literal, slots: &[usize],
+        &mut self, kc_new: xla::PjRtBuffer, vc_new: xla::PjRtBuffer, slots: &[usize],
     ) -> Result<()> {
         if slots.len() == self.width {
             // whole batch refilled: adopt wholesale, no copies
@@ -323,20 +365,50 @@ impl Engine {
             self.v_cache = vc_new;
             return Ok(());
         }
-        let mut kc = Tensor::from_literal(&self.k_cache)?;
-        let mut vc = Tensor::from_literal(&self.v_cache)?;
-        let kn = Tensor::from_literal(&kc_new)?;
-        let vn = Tensor::from_literal(&vc_new)?;
+        if self.has_device_splice {
+            let mut mask = vec![0i32; self.width];
+            for &s in slots {
+                anyhow::ensure!(s < self.width, "slot out of range");
+                mask[s] = 1;
+            }
+            let mask_b = self.runtime.upload_tensor_for(
+                &self.cfg.splice_artifact,
+                &Tensor::from_i32(&[self.width], mask)?,
+            )?;
+            let args: Vec<&xla::PjRtBuffer> =
+                vec![&self.k_cache, &self.v_cache, &kc_new, &vc_new, &mask_b];
+            let mut outs = self
+                .runtime
+                .run_buffers_to_buffers(&self.cfg.splice_artifact, &args)
+                .context("kv_splice")?;
+            self.v_cache = outs.pop().unwrap();
+            self.k_cache = outs.pop().unwrap();
+            self.metrics.device_splices += 1;
+            return Ok(());
+        }
+        // host fallback: four cache downloads + two uploads, all visible
+        // in the splice artifact's transfer counters
+        let name = self.cfg.splice_artifact.clone();
+        let mut kc = self.runtime.download_for(&name, &self.k_cache)?;
+        let mut vc = self.runtime.download_for(&name, &self.v_cache)?;
+        let kn = self.runtime.download_for(&name, &kc_new)?;
+        let vn = self.runtime.download_for(&name, &vc_new)?;
         splice_rows(&mut kc, &kn, slots)?;
         splice_rows(&mut vc, &vn, slots)?;
-        self.k_cache = kc.to_literal()?;
-        self.v_cache = vc.to_literal()?;
+        self.k_cache = self.runtime.upload_tensor_for(&name, &kc)?;
+        self.v_cache = self.runtime.upload_tensor_for(&name, &vc)?;
+        self.metrics.host_splices += 1;
         Ok(())
     }
 
     /// Per-artifact runtime execution stats.
     pub fn runtime_stats(&self) -> HashMap<String, crate::runtime::ExecStats> {
         self.runtime.stats()
+    }
+
+    /// Aggregate host↔device transfer counters (runtime passthrough).
+    pub fn transfer_totals(&self) -> crate::runtime::TransferTotals {
+        self.runtime.transfer_totals()
     }
 
     pub fn queue_len(&self) -> usize {
@@ -348,21 +420,63 @@ impl Engine {
     }
 }
 
+/// Sample a token id from one logits row per `params`:
+/// * `temperature == 0` — greedy argmax (the serving default), fully
+///   deterministic and rng-free;
+/// * otherwise — softmax at `temperature` over the `top_k` highest
+///   logits (ties broken toward the lower index), drawn from `rng`.
+pub fn sample_logits(row: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
+    debug_assert!(!row.is_empty());
+    if params.temperature <= 0.0 {
+        let mut best = 0usize;
+        let mut bestv = f32::NEG_INFINITY;
+        for (i, &x) in row.iter().enumerate() {
+            if x > bestv {
+                bestv = x;
+                best = i;
+            }
+        }
+        return best as i32;
+    }
+    // candidate set: indices sorted by logit desc (stable on ties);
+    // O(V log V) selection is fine at serving vocab sizes
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| {
+        row[b]
+            .partial_cmp(&row[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let k = params.top_k.unwrap_or(row.len()).clamp(1, row.len());
+    idx.truncate(k);
+    let max = row[idx[0]];
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((row[i] - max) / params.temperature).exp())
+        .collect();
+    idx[rng.categorical(&weights)] as i32
+}
+
 /// Copy batch-rows `slots` from `src` into `dst`; both (L, B, T, nh, dh).
-fn splice_rows(dst: &mut Tensor, src: &Tensor, slots: &[usize]) -> Result<()> {
+/// Returns the number of f32 elements copied — exactly
+/// `L * slots.len() * T * nh * dh`, i.e. proportional to the *refilled*
+/// rows, never the whole cache (asserted in tests).
+fn splice_rows(dst: &mut Tensor, src: &Tensor, slots: &[usize]) -> Result<usize> {
     anyhow::ensure!(dst.shape == src.shape, "cache shape mismatch");
     let (l, b) = (dst.shape[0], dst.shape[1]);
     let row: usize = dst.shape[2..].iter().product();
-    let srcv = src.as_f32()?.to_vec();
+    let srcv = src.as_f32()?;
     let dstv = dst.as_f32_mut()?;
+    let mut copied = 0usize;
     for layer in 0..l {
         for &s in slots {
             anyhow::ensure!(s < b, "slot out of range");
             let off = (layer * b + s) * row;
             dstv[off..off + row].copy_from_slice(&srcv[off..off + row]);
+            copied += row;
         }
     }
-    Ok(())
+    Ok(copied)
 }
 
 #[cfg(test)]
@@ -376,7 +490,7 @@ mod tests {
         let n: usize = shape.iter().product();
         let mut dst = Tensor::from_f32(&shape, vec![0.0; n]).unwrap();
         let src = Tensor::from_f32(&shape, (0..n).map(|i| i as f32).collect()).unwrap();
-        splice_rows(&mut dst, &src, &[1]).unwrap();
+        let copied = splice_rows(&mut dst, &src, &[1]).unwrap();
         let d = dst.as_f32().unwrap();
         let s = src.as_f32().unwrap();
         let row = 4; // 2*1*2
@@ -389,5 +503,88 @@ mod tests {
                 }
             }
         }
+        assert_eq!(copied, 2 * 1 * row, "one slot over two layers");
+    }
+
+    #[test]
+    fn splice_work_scales_with_slot_count_not_cache() {
+        // (L=4, B=8, T=16, nh=2, dh=8): splicing k slots must copy
+        // exactly k/B of the cache, regardless of cache size
+        let shape = [4usize, 8, 16, 2, 8];
+        let n: usize = shape.iter().product();
+        let src = Tensor::from_f32(&shape, vec![1.0; n]).unwrap();
+        let row: usize = shape[2..].iter().product();
+        for k in 1..=7usize {
+            let mut dst = Tensor::zeros(crate::tensor::DType::F32, &shape);
+            let slots: Vec<usize> = (0..k).collect();
+            let copied = splice_rows(&mut dst, &src, &slots).unwrap();
+            assert_eq!(copied, shape[0] * k * row, "k={k}");
+            assert!(copied < n, "k={k} must not copy the whole cache");
+            assert_eq!(copied * 8, n * k, "copied fraction = k/B");
+        }
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax_and_deterministic() {
+        let row = [0.1f32, 2.5, -1.0, 2.4];
+        let params = SamplingParams::default(); // temperature 0
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(sample_logits(&row, &params, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_with_top_k_1_is_argmax() {
+        let row = [0.3f32, -0.2, 4.0, 1.0];
+        let params = SamplingParams {
+            temperature: 1.3,
+            top_k: Some(1),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(sample_logits(&row, &params, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        // flat logits: top_k=2 keeps the two lowest indices (stable ties)
+        let row = [1.0f32; 6];
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: Some(2),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(11);
+        let mut seen = [0usize; 6];
+        for _ in 0..300 {
+            seen[sample_logits(&row, &params, &mut rng) as usize] += 1;
+        }
+        assert!(seen[0] > 0 && seen[1] > 0, "{seen:?}");
+        assert!(seen[2..].iter().all(|&c| c == 0), "{seen:?}");
+    }
+
+    #[test]
+    fn sampling_is_reproducible_per_seed() {
+        let row: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let params = SamplingParams { temperature: 0.8, ..Default::default() };
+        let draw = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::new(seed);
+            (0..20).map(|_| sample_logits(&row, &params, &mut rng)).collect()
+        };
+        assert_eq!(draw(3), draw(3));
+        assert_ne!(draw(3), draw(4), "different streams should diverge");
+    }
+
+    #[test]
+    fn nonzero_temperature_covers_more_than_argmax() {
+        let row = [1.0f32, 1.1, 0.9, 1.05];
+        let params = SamplingParams { temperature: 2.0, ..Default::default() };
+        let mut rng = Rng::new(5);
+        let distinct: std::collections::HashSet<i32> =
+            (0..200).map(|_| sample_logits(&row, &params, &mut rng)).collect();
+        assert!(distinct.len() > 1, "hot temperature must actually sample");
     }
 }

@@ -24,7 +24,7 @@ pub mod scheduler;
 pub mod trace;
 
 pub use batcher::{Batcher, Slot, SlotState};
-pub use engine::{Engine, EngineConfig};
+pub use engine::{sample_logits, Engine, EngineConfig, EngineMetrics};
 pub use expert_stats::ExpertStats;
 pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};
 pub use scheduler::{Scheduler, SchedulerConfig};

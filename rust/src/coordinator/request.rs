@@ -12,14 +12,25 @@ pub struct SamplingParams {
     pub max_new_tokens: usize,
     /// 0.0 = greedy; otherwise softmax temperature.
     pub temperature: f32,
+    /// Restrict sampling to the `k` highest logits (`None` = full vocab).
+    /// Ignored under greedy decoding.
+    pub top_k: Option<usize>,
     /// Stop when this token is emitted (e.g. the tokenizer's EOS).
     pub stop_token: Option<i32>,
+    /// Seeds the request's private sampling stream: generations are
+    /// reproducible per request, independent of batch composition.
     pub seed: u64,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        SamplingParams { max_new_tokens: 32, temperature: 0.0, stop_token: None, seed: 0 }
+        SamplingParams {
+            max_new_tokens: 32,
+            temperature: 0.0,
+            top_k: None,
+            stop_token: None,
+            seed: 0,
+        }
     }
 }
 

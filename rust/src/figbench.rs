@@ -37,7 +37,9 @@ pub fn rand_args(rt: &Runtime, name: &str, rng: &mut Rng, scale: f32) -> Result<
 }
 
 /// Bench one artifact end-to-end through PJRT: compile (outside timing),
-/// then warmup + timed runs per the paper protocol.
+/// then warmup + timed runs per the paper protocol.  The measurement
+/// carries the host↔device bytes moved per iteration (from the runtime's
+/// transfer counters), so copy costs are reported next to throughput.
 pub fn bench_artifact(
     rt: &Runtime, name: &str, label: &str, units_per_iter: f64, opts: BenchOpts,
 ) -> Result<Measurement> {
@@ -47,8 +49,11 @@ pub fn bench_artifact(
     let lit_refs: Vec<&xla::Literal> = lits.iter().collect();
     rt.executable(name)?; // compile outside the timed region
     let mut failed: Option<String> = None;
-    let m = bench(label, opts, units_per_iter, || {
+    let xfer0 = rt.transfer_totals();
+    let mut iters = 0u64;
+    let mut m = bench(label, opts, units_per_iter, || {
         if failed.is_none() {
+            iters += 1;
             if let Err(e) = rt.run_literals(name, &lit_refs) {
                 failed = Some(format!("{e:#}"));
             }
@@ -56,6 +61,10 @@ pub fn bench_artifact(
     });
     if let Some(e) = failed {
         anyhow::bail!("bench {name}: {e}");
+    }
+    let moved = rt.transfer_totals().since(&xfer0);
+    if iters > 0 {
+        m.host_bytes_per_iter = moved.total_bytes() as f64 / iters as f64;
     }
     Ok(m)
 }

@@ -15,6 +15,22 @@
 //! Python never runs on the request path: the Rust binary is fully
 //! self-contained once `artifacts/` is built.
 //!
+//! ## Device-resident serving state
+//!
+//! The paper's thesis — SMoE throughput is won by eliminating padding
+//! and copies — is applied to the serving loop itself.  Loop-carried
+//! state (model params, the stacked `(L, B, Tmax, nh, dh)` KV caches)
+//! lives as `xla::PjRtBuffer`s and is chained output→input across ticks
+//! via [`runtime::Runtime::run_chained`]; a decode tick stages only the
+//! `(B,)` position/last-token vectors up and the `(B, V)` logits down
+//! (downloaded once, never re-uploaded).  Partial prefills merge refilled slots' cache
+//! rows on-device through the `kv_splice` artifact (mask-driven row
+//! scatter authored in `python/compile/aot.py`), with a host-splice
+//! fallback when an older artifact dir lacks it.  Every byte that does
+//! cross the host↔device boundary is accounted per-artifact in
+//! [`runtime::ExecStats`] and surfaced by the benches — the
+//! copy-elimination claim is measured, not asserted.
+//!
 //! The offline crate environment ships no tokio / clap / serde /
 //! criterion / rand / proptest, so this crate carries its own substrates:
 //! [`exec`] (thread-pool executor), [`cli`], [`config`] (JSON),

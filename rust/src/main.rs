@@ -157,5 +157,15 @@ fn serve(args: &[String]) -> Result<()> {
         m.decode_steps,
         m.prefills
     );
+    let x = engine.transfer_totals();
+    println!(
+        "host<->device: up {}  down {}  chain {} ({} round-trips)   splices: {} device / {} host",
+        scattermoe::metrics::fmt_bytes(x.bytes_to_device),
+        scattermoe::metrics::fmt_bytes(x.bytes_to_host),
+        scattermoe::metrics::fmt_bytes(x.chain_bytes),
+        x.host_round_trips,
+        m.device_splices,
+        m.host_splices,
+    );
     Ok(())
 }

@@ -92,6 +92,22 @@ impl Histogram {
     }
 }
 
+/// Human-readable byte count (transfer-counter reporting).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0usize;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
 /// Throughput meter: items over a wall-clock window.
 pub struct Throughput {
     start: std::time::Instant,
@@ -166,6 +182,15 @@ mod tests {
         h.record(3.5);
         assert_eq!(h.median(), 3.5);
         assert_eq!(h.percentile(0.95), 3.5);
+    }
+
+    #[test]
+    fn fmt_bytes_scales_units() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.0 GiB");
     }
 
     #[test]

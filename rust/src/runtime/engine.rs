@@ -1,5 +1,16 @@
 //! The PJRT execution engine: lazy-compiled executable cache + typed
-//! execute helpers over host tensors and device-resident buffers.
+//! execute helpers over host tensors and device-resident buffers, with
+//! per-artifact host↔device transfer accounting.
+//!
+//! The hot-path contract (used by the serving coordinator) is
+//! [`Runtime::run_chained`]: inputs are caller-owned device buffers,
+//! outputs come back as device buffers that can be fed straight into
+//! the next call (or as host tensors for the outputs the caller
+//! consumes, downloaded once).  Loop-carried state (params, KV caches)
+//! therefore never crosses the PCIe/host boundary in steady state; only
+//! the small per-step vectors (positions, last tokens) are staged up and
+//! only the logits come down.  Every byte that does cross is counted in
+//! [`ExecStats`] so the copy-elimination claim is measured, not asserted.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -12,11 +23,105 @@ use super::manifest::{ArtifactSpec, Manifest};
 use crate::tensor::Tensor;
 
 /// Cumulative execution statistics (per artifact).
+///
+/// Transfer fields split three ways so tests can pin down *which* path
+/// moved bytes:
+/// * `bytes_to_device` — inputs explicitly staged by callers
+///   ([`Runtime::upload_tensor_for`], [`Runtime::run_literals`]).
+/// * `bytes_to_host` — results consumed on host: explicit downloads
+///   ([`Runtime::download_for`], [`Runtime::run_buffers`]) and the
+///   `host_idx` outputs of [`Runtime::run_chained`].
+/// * `chain_bytes` / `host_round_trips` — the compatibility path inside
+///   [`Runtime::run_chained`] when the underlying crate hands
+///   multi-output results back as one fused tuple buffer: the tuple is
+///   decomposed on host and the chained parts re-uploaded (both
+///   directions counted).  Zero on the direct device-to-device path.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
     pub executions: u64,
+    /// Wall time from dispatch through result materialization (PJRT
+    /// executions are async; timing through the download/untuple is the
+    /// only point compute is provably complete).
     pub total_secs: f64,
     pub compile_secs: f64,
+    /// Host→device bytes staged as inputs for this artifact.
+    pub bytes_to_device: u64,
+    /// Device→host bytes downloaded as results of this artifact.
+    pub bytes_to_host: u64,
+    /// Bytes round-tripped (both directions summed) through the host
+    /// solely to keep outputs chainable as buffers (fallback path).
+    pub chain_bytes: u64,
+    /// Number of fallback tuple decompositions (0 = fully device-resident).
+    pub host_round_trips: u64,
+    /// Wall time spent in the explicit transfer helpers
+    /// (`upload_tensor_for` / `download_for` / `run_literals` staging).
+    pub transfer_secs: f64,
+}
+
+/// One output of [`Runtime::run_chained`]: device-chainable buffer, or
+/// a host tensor for outputs the caller consumes on host (downloaded
+/// once, never re-uploaded).
+pub enum ExecOut {
+    Buffer(xla::PjRtBuffer),
+    Host(Tensor),
+}
+
+impl ExecOut {
+    pub fn into_buffer(self) -> Result<xla::PjRtBuffer> {
+        match self {
+            ExecOut::Buffer(b) => Ok(b),
+            ExecOut::Host(_) => bail!("output was materialized on host"),
+        }
+    }
+
+    pub fn into_host(self) -> Result<Tensor> {
+        match self {
+            ExecOut::Buffer(_) => bail!("output is device-resident"),
+            ExecOut::Host(t) => Ok(t),
+        }
+    }
+}
+
+/// Aggregate transfer counters over all artifacts (see [`ExecStats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransferTotals {
+    pub bytes_to_device: u64,
+    pub bytes_to_host: u64,
+    pub chain_bytes: u64,
+    pub host_round_trips: u64,
+    pub transfer_secs: f64,
+}
+
+impl TransferTotals {
+    /// All bytes that crossed the host↔device boundary.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_to_device + self.bytes_to_host + self.chain_bytes
+    }
+
+    /// Delta against an earlier snapshot (counters are monotonic).
+    pub fn since(&self, earlier: &TransferTotals) -> TransferTotals {
+        TransferTotals {
+            bytes_to_device: self.bytes_to_device - earlier.bytes_to_device,
+            bytes_to_host: self.bytes_to_host - earlier.bytes_to_host,
+            chain_bytes: self.chain_bytes - earlier.chain_bytes,
+            host_round_trips: self.host_round_trips - earlier.host_round_trips,
+            transfer_secs: self.transfer_secs - earlier.transfer_secs,
+        }
+    }
+}
+
+/// Sum per-artifact stats into one [`TransferTotals`] (pure; unit-tested
+/// without a PJRT client).
+pub fn sum_transfer_totals(stats: &HashMap<String, ExecStats>) -> TransferTotals {
+    let mut t = TransferTotals::default();
+    for s in stats.values() {
+        t.bytes_to_device += s.bytes_to_device;
+        t.bytes_to_host += s.bytes_to_host;
+        t.chain_bytes += s.chain_bytes;
+        t.host_round_trips += s.host_round_trips;
+        t.transfer_secs += s.transfer_secs;
+    }
+    t
 }
 
 /// PJRT CPU runtime with an executable cache.
@@ -110,6 +215,22 @@ impl Runtime {
         Ok(())
     }
 
+    fn record<F: FnOnce(&mut ExecStats)>(&self, name: &str, f: F) {
+        let mut st = self.stats.lock().unwrap();
+        f(st.entry(name.to_string()).or_default());
+    }
+
+    /// Manually account a transfer against an artifact name (used by the
+    /// engine's host-splice fallback, where the copies happen outside the
+    /// runtime's own helpers).
+    pub fn record_transfer(&self, name: &str, to_device: u64, to_host: u64, secs: f64) {
+        self.record(name, |e| {
+            e.bytes_to_device += to_device;
+            e.bytes_to_host += to_host;
+            e.transfer_secs += secs;
+        });
+    }
+
     /// Execute with host tensors; returns host tensors (the jax lowering
     /// uses `return_tuple=True`, so the single output is un-tupled here).
     pub fn run(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -132,13 +253,12 @@ impl Runtime {
 
     /// Upload one literal to a caller-owned device buffer.
     ///
-    /// IMPORTANT (1): always execute through [`Self::run_buffers`] /
-    /// [`Self::run_literals`], never `exe.execute::<Literal>` — the
-    /// crate's literal-execute path leaks its internally created input
-    /// device buffers (~input bytes per call, measured in
-    /// EXPERIMENTS.md §Perf L3); `execute_b` over caller-owned buffers
-    /// is leak-free and lets long-lived state (model params) stay
-    /// device-resident.
+    /// IMPORTANT (1): always execute through the `run_*` helpers, never
+    /// `exe.execute::<Literal>` — the crate's literal-execute path leaks
+    /// its internally created input device buffers (~input bytes per
+    /// call, measured in EXPERIMENTS.md §Perf L3); `execute_b` over
+    /// caller-owned buffers is leak-free and lets long-lived state
+    /// (model params, KV caches) stay device-resident.
     ///
     /// IMPORTANT (2): `BufferFromHostLiteral` transfers *asynchronously*
     /// — the literal must stay alive until the buffer is consumed by an
@@ -170,43 +290,163 @@ impl Runtime {
         buf.context("host->device upload (tensor)")
     }
 
-    /// Hot-path execute over device buffers: returns the decomposed
-    /// output literals, which can be re-uploaded and fed to the next
-    /// call (train-step chaining, KV-cache decoding).
+    /// [`Self::upload_tensor`] with the bytes accounted against `name`.
+    pub fn upload_tensor_for(&self, name: &str, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self.upload_tensor(t)?;
+        self.record_transfer(name, t.size_bytes() as u64, 0, t0.elapsed().as_secs_f64());
+        Ok(buf)
+    }
+
+    /// Download a device buffer to a host tensor, accounted against `name`.
+    pub fn download_for(&self, name: &str, buf: &xla::PjRtBuffer) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let lit = buf.to_literal_sync().context("device->host download")?;
+        let t = Tensor::from_literal(&lit)?;
+        self.record_transfer(name, 0, t.size_bytes() as u64, t0.elapsed().as_secs_f64());
+        Ok(t)
+    }
+
+    /// Execute over device buffers, bumping the execution counter;
+    /// returns the raw result row and the dispatch timestamp.  Callers
+    /// record `total_secs` once their results are materialized, so the
+    /// timing spans dispatch *through* result availability (PJRT
+    /// executions are asynchronous — dispatch time alone would
+    /// under-report compute).
+    fn execute_row(
+        &self, name: &str, args: &[&xla::PjRtBuffer],
+    ) -> Result<(Vec<xla::PjRtBuffer>, Instant)> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let mut result = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        self.record(name, |e| e.executions += 1);
+        anyhow::ensure!(!result.is_empty(), "execute returned no replicas");
+        Ok((result.swap_remove(0), t0))
+    }
+
+    /// Hot-path execute: device buffers in, each output either a
+    /// **device buffer** (chained straight into the next call) or a
+    /// **host tensor** (indices listed in `host_idx` — outputs the
+    /// caller consumes on host, e.g. logits).  Host-consumed outputs are
+    /// downloaded exactly once and never re-uploaded.
     ///
-    /// Note: the published `xla` crate (0.1.6 / xla_extension 0.5.1)
-    /// returns multi-output computations as a *single tuple buffer*, so
-    /// state cannot stay device-resident across calls; decomposing the
-    /// tuple literal on host is the fastest path this wrapper exposes.
-    /// `aot.py` mitigates the per-call copy with scan-chunked train
-    /// steps (several optimizer steps per artifact call).
+    /// Two paths, decided per call by inspecting the result row:
+    /// * **direct** — PJRT untupled the outputs into one buffer per
+    ///   manifest output: chained outputs never touch the host; only
+    ///   `host_idx` outputs are downloaded (counted as `bytes_to_host`).
+    /// * **fallback** — the crate fused the outputs into a single tuple
+    ///   buffer (published `xla` 0.1.6 / xla_extension 0.5.1 behaviour):
+    ///   one tuple download, then only the *chained* parts are
+    ///   re-uploaded.  Correct but O(outputs) host traffic; the cost is
+    ///   visible as `chain_bytes` / `host_round_trips` in [`ExecStats`]
+    ///   rather than silently eaten.
+    pub fn run_chained(
+        &self, name: &str, args: &[&xla::PjRtBuffer], host_idx: &[usize],
+    ) -> Result<Vec<ExecOut>> {
+        let spec = self.manifest.get(name)?.clone();
+        let (row, t0) = self.execute_row(name, args)?;
+        let outs = if spec.outputs.len() > 1 && row.len() == spec.outputs.len() {
+            // direct: download only the host-consumed outputs
+            let mut host_bytes = 0u64;
+            let outs = row
+                .into_iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    if host_idx.contains(&i) {
+                        let lit = b.to_literal_sync().context("result download")?;
+                        let t = Tensor::from_literal(&lit)?;
+                        host_bytes += t.size_bytes() as u64;
+                        Ok(ExecOut::Host(t))
+                    } else {
+                        Ok(ExecOut::Buffer(b))
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.record(name, |e| e.bytes_to_host += host_bytes);
+            outs
+        } else {
+            // fallback: one tuple download; re-upload only chained parts
+            let tuple = row[0].to_literal_sync().context("tuple download")?;
+            let parts = tuple.to_tuple().context("tuple decompose")?;
+            let mut chain_bytes = 0u64;
+            let mut host_bytes = 0u64;
+            let outs = parts
+                .iter()
+                .enumerate()
+                .map(|(i, lit)| {
+                    let t = Tensor::from_literal(lit)?;
+                    if host_idx.contains(&i) {
+                        host_bytes += t.size_bytes() as u64;
+                        Ok(ExecOut::Host(t))
+                    } else {
+                        chain_bytes += 2 * t.size_bytes() as u64; // down + up
+                        Ok(ExecOut::Buffer(self.upload_tensor(&t)?))
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.record(name, |e| {
+                e.bytes_to_host += host_bytes;
+                e.chain_bytes += chain_bytes;
+                e.host_round_trips += 1;
+            });
+            outs
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        self.record(name, |e| e.total_secs += dt);
+        Ok(outs)
+    }
+
+    /// [`Self::run_chained`] with every output kept as a device buffer
+    /// (all-chained calls, e.g. the `kv_splice` cache merge).
+    pub fn run_buffers_to_buffers(
+        &self, name: &str, args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.run_chained(name, args, &[])?
+            .into_iter()
+            .map(ExecOut::into_buffer)
+            .collect()
+    }
+
+    /// Execute over device buffers; returns the decomposed output
+    /// **literals** (terminal calls where the results are consumed on
+    /// host anyway — training loops, evaluation, benches).  Downloaded
+    /// bytes are accounted as `bytes_to_host`.
     pub fn run_buffers(
         &self, name: &str, args: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let t0 = Instant::now();
-        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
+        let spec = self.manifest.get(name)?.clone();
+        let (row, t0) = self.execute_row(name, args)?;
+        let parts = if spec.outputs.len() > 1 && row.len() == spec.outputs.len() {
+            row.iter()
+                .map(|b| b.to_literal_sync().context("result download"))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            let tuple = row[0].to_literal_sync().context("tuple download")?;
+            tuple.to_tuple().context("tuple decompose")?
+        };
+        let bytes: u64 = spec.outputs.iter().map(|o| o.size_bytes() as u64).sum();
         let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut st = self.stats.lock().unwrap();
-            let e = st.entry(name.to_string()).or_default();
-            e.executions += 1;
+        self.record(name, |e| {
+            e.bytes_to_host += bytes;
             e.total_secs += dt;
-        }
+        });
         Ok(parts)
     }
 
     /// Convenience execute over host literals: uploads to transient
-    /// device buffers (freed on return) and runs `execute_b`.
+    /// device buffers (freed on return) and runs `execute_b`.  Uploaded
+    /// bytes are accounted as `bytes_to_device`.
     pub fn run_literals(
         &self, name: &str, args: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
         let bufs: Vec<xla::PjRtBuffer> = args
             .iter()
             .map(|l| self.upload(l))
             .collect::<Result<_>>()?;
+        let bytes: u64 = spec.inputs.iter().map(|i| i.size_bytes() as u64).sum();
+        self.record_transfer(name, bytes, 0, t0.elapsed().as_secs_f64());
         let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
         self.run_buffers(name, &refs)
     }
@@ -216,7 +456,64 @@ impl Runtime {
         self.stats.lock().unwrap().clone()
     }
 
+    /// Aggregate host↔device transfer counters over all artifacts.
+    pub fn transfer_totals(&self) -> TransferTotals {
+        sum_transfer_totals(&self.stats.lock().unwrap())
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_with(entries: &[(&str, u64, u64, u64, u64)]) -> HashMap<String, ExecStats> {
+        entries
+            .iter()
+            .map(|&(n, up, down, chain, trips)| {
+                (
+                    n.to_string(),
+                    ExecStats {
+                        bytes_to_device: up,
+                        bytes_to_host: down,
+                        chain_bytes: chain,
+                        host_round_trips: trips,
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn totals_sum_across_artifacts() {
+        let st = stats_with(&[("a", 10, 20, 0, 0), ("b", 1, 2, 30, 3)]);
+        let t = sum_transfer_totals(&st);
+        assert_eq!(t.bytes_to_device, 11);
+        assert_eq!(t.bytes_to_host, 22);
+        assert_eq!(t.chain_bytes, 30);
+        assert_eq!(t.host_round_trips, 3);
+        assert_eq!(t.total_bytes(), 63);
+    }
+
+    #[test]
+    fn totals_delta_is_monotonic_difference() {
+        let before = sum_transfer_totals(&stats_with(&[("a", 10, 5, 2, 1)]));
+        let after = sum_transfer_totals(&stats_with(&[("a", 25, 9, 2, 1), ("b", 5, 0, 0, 0)]));
+        let d = after.since(&before);
+        assert_eq!(d.bytes_to_device, 20);
+        assert_eq!(d.bytes_to_host, 4);
+        assert_eq!(d.chain_bytes, 0);
+        assert_eq!(d.host_round_trips, 0);
+    }
+
+    #[test]
+    fn empty_stats_zero_totals() {
+        let t = sum_transfer_totals(&HashMap::new());
+        assert_eq!(t, TransferTotals::default());
+        assert_eq!(t.total_bytes(), 0);
     }
 }

@@ -23,6 +23,11 @@ impl IoSpec {
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
+
+    /// Host-side size of one instance of this IO (transfer accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
 }
 
 /// One AOT-compiled entry point.

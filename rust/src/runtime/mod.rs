@@ -3,7 +3,14 @@
 //! * [`manifest`] — parse `artifacts/manifest.json` (names, files, specs).
 //! * [`engine`]   — the [`engine::Runtime`]: PJRT CPU client, lazy
 //!   executable cache, typed execute helpers over host tensors and
-//!   device-resident buffers.
+//!   device-resident buffers, and per-artifact host↔device transfer
+//!   accounting ([`engine::ExecStats`] / [`engine::TransferTotals`]).
+//!
+//! The serving hot path uses [`engine::Runtime::run_chained`] so
+//! loop-carried state (KV caches, params) stays device-resident across
+//! calls while host-consumed outputs (logits) are downloaded exactly
+//! once; literal-returning helpers remain for terminal consumers
+//! (training, eval, benches).
 //!
 //! Pattern adapted from `/opt/xla-example/load_hlo`: HLO **text** →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
@@ -12,5 +19,5 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{ExecStats, Runtime};
+pub use engine::{sum_transfer_totals, ExecOut, ExecStats, Runtime, TransferTotals};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};

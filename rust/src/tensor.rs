@@ -94,6 +94,11 @@ impl Tensor {
         self.len() == 0
     }
 
+    /// Payload size in bytes (transfer accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype.size_bytes()
+    }
+
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),

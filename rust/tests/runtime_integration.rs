@@ -129,6 +129,158 @@ fn engine_slot_isolation() {
     assert_eq!(r_solo.tokens, r_busy.tokens, "slot isolation violated");
 }
 
+/// Device-resident KV cache: steady-state decode host traffic must be
+/// O(per-slot vectors), independent of the cache size.  Staged uploads
+/// are exactly the two `(B,)` i32 vectors per step and downloads exactly
+/// the `(B, V)` logits; the cache itself never crosses the boundary
+/// (any fallback tuple round-trip is accounted separately as
+/// `chain_bytes`, asserted zero when the direct buffer path is live).
+#[test]
+fn decode_steady_state_transfers_are_cache_independent() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(rt.clone(), EngineConfig::default()).expect("engine");
+    let b = engine.width();
+    let vocab = rt.spec("serve_decode").unwrap().outputs[0].shape[1];
+    let mut corpus = SyntheticCorpus::new(512, 5);
+    for _ in 0..b {
+        engine
+            .submit(
+                corpus.sample(6),
+                SamplingParams { max_new_tokens: 8, ..Default::default() },
+            )
+            .expect("submit");
+    }
+    // first tick prefills the whole batch; everything after is decode
+    engine.tick().expect("prefill tick");
+    let st0 = rt.stats().get("serve_decode").cloned().unwrap_or_default();
+    let steps0 = engine.metrics.decode_steps;
+    engine.run_to_completion().expect("drain");
+    let st1 = rt.stats().get("serve_decode").cloned().unwrap_or_default();
+    let steps = engine.metrics.decode_steps - steps0;
+    assert!(steps > 0, "burst must decode");
+    let up = st1.bytes_to_device - st0.bytes_to_device;
+    let down = st1.bytes_to_host - st0.bytes_to_host;
+    // uploads: pos + last_token, (B,) i32 each, per step — nothing else
+    assert_eq!(up, steps * 2 * b as u64 * 4, "staged uploads must be the two (B,) vectors");
+    // downloads: (B, V) logits per step — the cache never comes down
+    assert_eq!(down, steps * (b * vocab) as u64 * 4, "downloads must be logits only");
+    let cache = engine.cache_bytes() as u64;
+    assert!(up + down < cache, "per-burst explicit traffic below one cache copy");
+    if st1.host_round_trips == st0.host_round_trips {
+        // direct buffer path: total decode traffic is cache-independent
+        println!("direct device-to-device chaining active (0 fallback round-trips)");
+    } else {
+        println!(
+            "NOTE: xla crate forced {} tuple fallback(s) ({} B) — measured, not hidden",
+            st1.host_round_trips - st0.host_round_trips,
+            st1.chain_bytes - st0.chain_bytes
+        );
+    }
+}
+
+/// Partial prefills must merge KV rows on-device when the manifest has
+/// `kv_splice`, and fall back to the host path (with its full-cache
+/// round-trip showing in the transfer counters) when it doesn't.  Both
+/// paths must produce identical generations.
+#[test]
+fn kv_splice_fallback_matches_device_path() {
+    let Some(rt) = runtime() else { return };
+    let run_burst = |cfg: EngineConfig| -> (Vec<Vec<i32>>, scattermoe::coordinator::EngineMetrics) {
+        let mut engine = Engine::new(rt.clone(), cfg).expect("engine");
+        let mut corpus = SyntheticCorpus::new(512, 21);
+        let n = engine.width() + 3; // forces a partial refill
+        for _ in 0..n {
+            engine
+                .submit(
+                    corpus.sample(6),
+                    SamplingParams { max_new_tokens: 4, ..Default::default() },
+                )
+                .expect("submit");
+        }
+        let mut rs = engine.run_to_completion().expect("serve");
+        rs.sort_by_key(|r| r.id);
+        (rs.into_iter().map(|r| r.tokens).collect(), engine.metrics.clone())
+    };
+
+    let missing = EngineConfig {
+        splice_artifact: "kv_splice_definitely_missing".into(),
+        ..Default::default()
+    };
+    let (toks_host, m_host) = run_burst(missing);
+    assert!(m_host.host_splices >= 1, "fallback path must be exercised");
+    assert_eq!(m_host.device_splices, 0);
+    let st = rt.stats();
+    let fb = st.get("kv_splice_definitely_missing").cloned().unwrap_or_default();
+    assert!(fb.bytes_to_host > 0, "host splice must download the caches");
+    assert!(fb.bytes_to_device > 0, "host splice must re-upload the merge");
+
+    let (toks_dev, m_dev) = run_burst(EngineConfig::default());
+    assert_eq!(toks_host, toks_dev, "splice paths must agree token-for-token");
+    if rt.spec("kv_splice").is_ok() {
+        assert!(m_dev.device_splices >= 1, "manifest has kv_splice; must be used");
+        assert_eq!(m_dev.host_splices, 0);
+    } else {
+        eprintln!("NOTE: artifacts predate kv_splice; device path untested");
+    }
+}
+
+/// Regression (scheduler starvation signal): `Engine::tick` must feed the
+/// batcher's real head-of-line wait to the scheduler — with the old
+/// hardcoded `oldest = 0.0`, a queued request could never trigger the
+/// `max_wait_s` prefill while the active bound held it back.
+#[test]
+fn tick_prefill_fires_on_starving_queue() {
+    let Some(rt) = runtime() else { return };
+    let cfg = EngineConfig {
+        scheduler: scattermoe::coordinator::SchedulerConfig {
+            min_fill: 1,
+            max_wait_s: 1e-6,
+            // active bound can never admit: only starvation can prefill
+            max_active_frac: 0.0,
+        },
+        ..Default::default()
+    };
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    engine
+        .submit(vec![3, 4, 5], SamplingParams { max_new_tokens: 6, ..Default::default() })
+        .expect("submit");
+    engine.tick().expect("first tick");
+    assert_eq!(engine.metrics.prefills, 1);
+    engine
+        .submit(vec![5, 6, 7], SamplingParams { max_new_tokens: 2, ..Default::default() })
+        .expect("submit 2");
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    engine.tick().expect("starving tick");
+    assert_eq!(
+        engine.metrics.prefills, 2,
+        "tick must see the real queue wait and prefill the starving request"
+    );
+    engine.run_to_completion().expect("drain");
+}
+
+/// Per-request sampling params drive decoding end-to-end: temperature
+/// sampling is reproducible per seed, and `temperature == 0` stays the
+/// deterministic greedy path.
+#[test]
+fn sampling_params_reproducible_through_engine() {
+    let Some(rt) = runtime() else { return };
+    let gen = |params: SamplingParams| -> Vec<i32> {
+        let mut engine = Engine::new(rt.clone(), EngineConfig::default()).expect("engine");
+        engine.submit(vec![7, 8, 9, 10], params).expect("submit");
+        engine.run_to_completion().expect("serve").remove(0).tokens
+    };
+    let hot = SamplingParams {
+        max_new_tokens: 6,
+        temperature: 0.8,
+        top_k: Some(8),
+        seed: 42,
+        ..Default::default()
+    };
+    assert_eq!(gen(hot.clone()), gen(hot.clone()), "same seed, same generation");
+    let greedy = SamplingParams { max_new_tokens: 6, ..Default::default() };
+    assert_eq!(gen(greedy.clone()), gen(greedy), "greedy is deterministic");
+}
+
 /// Expert stats integration sanity: padding waste is non-negative and
 /// bounded for any recorded distribution.
 #[test]

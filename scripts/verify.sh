@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (referenced from ROADMAP.md).
+#
+# Runs: cargo build --release && cargo test -q
+# plus  cargo fmt --check and cargo clippy -- -D warnings when those
+# components are installed (offline toolchains may lack them; the
+# build+test pair is the hard tier-1 contract).
+#
+# Artifact-dependent integration tests self-skip when `make artifacts`
+# has not been run, so this gate is meaningful on a bare checkout too.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== lint: cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== lint: rustfmt not installed, skipping =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== lint: cargo clippy -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== lint: clippy not installed, skipping =="
+fi
+
+echo "verify: OK"
