@@ -1,0 +1,25 @@
+# Developer entry points (the repo's docs reference these targets).
+
+ARTIFACTS ?= artifacts
+
+.PHONY: artifacts verify test doc clean
+
+# Lower every Rust-facing entry point to HLO text + manifest.json.
+# Requires the Python toolchain (jax); afterwards the Rust binary is
+# self-contained.  FILTER narrows regeneration: make artifacts FILTER=lm_
+artifacts:
+	cd python && python3 -m compile.aot --out $(abspath $(ARTIFACTS)) $(if $(FILTER),--only $(FILTER),)
+
+# Tier-1 gate: build + tests (+ fmt/clippy/doc when installed).
+verify:
+	scripts/verify.sh
+
+test:
+	cargo test -q
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+clean:
+	cargo clean
+	rm -rf bench_reports

@@ -46,7 +46,9 @@ fn main() -> Result<()> {
 
     let steps = a.get_usize("steps");
     let calls = steps.div_ceil(trainer.chunk_steps());
+    let xfer0 = rt.transfer_totals();
     let log = trainer.run(calls, 2)?;
+    let xfer = rt.transfer_totals().since(&xfer0);
 
     println!("\nloss curve (per chunk mean):");
     let n = log.losses.len();
@@ -74,6 +76,15 @@ fn main() -> Result<()> {
     anyhow::ensure!(
         *log.losses.last().unwrap() < log.losses[0] * 0.7,
         "loss did not decrease enough — training is broken"
+    );
+    println!(
+        "state {:?} ({} per copy)  host<->device over the run: up {}  down {}  chain {} ({} round-trips)",
+        trainer.placement(),
+        scattermoe::metrics::fmt_bytes(trainer.state_bytes() as u64),
+        scattermoe::metrics::fmt_bytes(xfer.bytes_to_device),
+        scattermoe::metrics::fmt_bytes(xfer.bytes_to_host),
+        scattermoe::metrics::fmt_bytes(xfer.chain_bytes),
+        xfer.host_round_trips,
     );
 
     // dump the loss curve for EXPERIMENTS.md

@@ -291,6 +291,13 @@ def lm_artifacts(prefix: str, cfg: tr.ModelConfig, batch: int, seq: int,
                 meta=dict(kind="lm_fwd", figure=figure, impl=impl, **cfg_meta),
             ))
 
+        # Outputs [loss, params.., m.., v..] feed inputs [step, tokens,
+        # params.., m.., v..] on the next call: output j chains to input
+        # chain_map[j]; -1 marks a host-consumed output (the loss).  The
+        # Rust Trainer uses this to keep the optimizer state device-
+        # resident across steps (Runtime::run_chain_step).
+        train_chain_map = [-1] + [2 + i for i in range(3 * len(names))]
+
         if with_train:
             def step_fn(step, tokens, *flat, _icfg=icfg):
                 n = len(names)
@@ -313,7 +320,8 @@ def lm_artifacts(prefix: str, cfg: tr.ModelConfig, batch: int, seq: int,
                 + param_inputs
                 + [("m." + n, shapes[n], F32) for n in names]
                 + [("v." + n, shapes[n], F32) for n in names],
-                meta=dict(kind="lm_train", figure=figure, impl=impl, **cfg_meta),
+                meta=dict(kind="lm_train", figure=figure, impl=impl,
+                          chain_map=train_chain_map, **cfg_meta),
             ))
 
         if with_train and chunk_steps > 1:
@@ -353,7 +361,8 @@ def lm_artifacts(prefix: str, cfg: tr.ModelConfig, batch: int, seq: int,
                 + [("m." + n, shapes[n], F32) for n in names]
                 + [("v." + n, shapes[n], F32) for n in names],
                 meta=dict(kind="lm_train_chunk", figure=figure, impl=impl,
-                          chunk_steps=chunk_steps, **cfg_meta),
+                          chunk_steps=chunk_steps, chain_map=train_chain_map,
+                          **cfg_meta),
             ))
     return out
 
@@ -403,14 +412,17 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
             inputs=[("pos", (SERVE_BATCH,), I32), ("tokens", (SERVE_BATCH,), I32),
                     ("k_cache", cache_shape, F32), ("v_cache", cache_shape, F32)]
             + param_inputs,
-            meta=dict(kind="serve_decode", **meta),
+            # outputs [logits, k_cache, v_cache]: logits → host, caches
+            # chain back into inputs 2/3 of the next decode call
+            meta=dict(kind="serve_decode", chain_map=[-1, 2, 3], **meta),
         ),
         Artifact(
             name="kv_splice", fn=kv_splice_fn,
             inputs=[("k_cache", cache_shape, F32), ("v_cache", cache_shape, F32),
                     ("k_new", cache_shape, F32), ("v_new", cache_shape, F32),
                     ("slot_mask", (SERVE_BATCH,), I32)],
-            meta=dict(kind="kv_splice", **meta),
+            # merged caches chain straight back as the live caches
+            meta=dict(kind="kv_splice", chain_map=[0, 1], **meta),
         ),
     ]
 

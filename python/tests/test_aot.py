@@ -62,6 +62,33 @@ def test_lm_artifact_param_names_sorted():
     assert [i[0] for i in ins[2 + n:2 + 2 * n]] == ["m." + x for x in names]
 
 
+def test_train_chain_map_covers_state():
+    """The chain_map contract the Rust Trainer relies on: one entry per
+    output, -1 for the host-consumed loss, and every state output chained
+    to the matching state input (shapes must agree)."""
+    arts = {a.name: a for a in aot.build_artifacts()}
+    for name in ["lm_bench_train_scatter", "lm_e2e_train_chunk_scatter"]:
+        art = arts[name]
+        cm = art.meta["chain_map"]
+        n = len(art.meta["param_names"])
+        assert cm[0] == -1, "loss is host-consumed"
+        assert cm[1:] == [2 + i for i in range(3 * n)]
+        # every chain target is a state input (past step/tokens), and the
+        # state segment is params ++ m.* ++ v.* in manifest order
+        assert len(art.inputs) == 2 + 3 * n
+        state_names = [i[0] for i in art.inputs[2:]]
+        names = art.meta["param_names"]
+        assert state_names == (
+            names + ["m." + x for x in names] + ["v." + x for x in names]
+        )
+
+
+def test_serve_chain_maps_match_engine_contract():
+    arts = {a.name: a for a in aot.build_artifacts()}
+    assert arts["serve_decode"].meta["chain_map"] == [-1, 2, 3]
+    assert arts["kv_splice"].meta["chain_map"] == [0, 1]
+
+
 def test_kv_splice_merges_only_masked_rows():
     """The on-device partial-prefill merge: masked batch rows adopt the
     new cache, unmasked rows keep the live cache — exactly the host-side

@@ -75,6 +75,9 @@ fn main() -> anyhow::Result<()> {
                 p95: tr,
                 units_per_iter: 0.0,
                 host_bytes_per_iter: 0.0,
+                up_bytes_per_iter: 0.0,
+                down_bytes_per_iter: 0.0,
+                chain_bytes_per_iter: 0.0,
             });
         }
     }

@@ -12,7 +12,8 @@
 use scattermoe::benchkit::{bench, print_table, write_report, BenchOpts};
 use scattermoe::figbench::{open, paper_check};
 use scattermoe::memmodel::{padded_footprint, scatter_footprint, MlpShape};
-use scattermoe::train::Trainer;
+use scattermoe::metrics::{fmt_bytes, fmt_reduction};
+use scattermoe::train::{StatePlacement, Trainer};
 
 fn main() -> anyhow::Result<()> {
     let rt = open()?;
@@ -30,20 +31,39 @@ fn main() -> anyhow::Result<()> {
         spec.meta_usize("seq").unwrap(),
     );
 
+    // each impl trains on the device-resident path (the default), plus
+    // one host-literal run of scatter as the bytes-per-step "before"
+    let series: &[(&str, StatePlacement, &str)] = &[
+        ("scatter", StatePlacement::Device, "scatter train step"),
+        ("padded", StatePlacement::Device, "padded train step"),
+        ("naive", StatePlacement::Device, "naive train step"),
+        ("scatter", StatePlacement::Host, "scatter train step (host state)"),
+    ];
     let mut rows = Vec::new();
-    for impl_ in ["scatter", "padded", "naive"] {
-        let mut trainer = Trainer::new(
+    let mut state_bytes = 0usize;
+    let mut device_path_live = true;
+    for &(impl_, placement, label) in series {
+        let mut trainer = Trainer::new_with_placement(
             rt.clone(),
             "lm_bench_init",
             &format!("lm_bench_train_{impl_}"),
             0,
+            placement,
         )?;
+        if placement == StatePlacement::Device
+            && trainer.placement() != StatePlacement::Device
+        {
+            // pre-chain_map artifact dir: the Trainer fell back to host
+            // literals, so a before/after comparison would be host-vs-host
+            device_path_live = false;
+        }
+        state_bytes = trainer.state_bytes();
         let tokens = trainer.batch_tokens() as f64;
         trainer.step()?; // compile + first step outside timing
         let mut failed = None;
         let xfer0 = rt.transfer_totals();
         let mut iters = 0u64;
-        let mut m = bench(&format!("{impl_} train step"), opts, tokens, || {
+        let mut m = bench(label, opts, tokens, || {
             if failed.is_none() {
                 iters += 1;
                 if let Err(e) = trainer.step() {
@@ -54,12 +74,10 @@ fn main() -> anyhow::Result<()> {
         if let Some(e) = failed {
             return Err(e);
         }
-        // per-step host↔device traffic: the optimizer-state round-trip
-        // the scan-chunked artifacts amortise (see lm_e2e)
+        // per-step host↔device traffic: O(tokens) on the chained path,
+        // O(param count) on the host-literal baseline
         let moved = rt.transfer_totals().since(&xfer0);
-        if iters > 0 {
-            m.host_bytes_per_iter = moved.total_bytes() as f64 / iters as f64;
-        }
+        m.set_transfers(&moved, iters);
         rows.push(m);
     }
     print_table(
@@ -67,6 +85,45 @@ fn main() -> anyhow::Result<()> {
         &rows,
         Some("padded train step"),
     );
+
+    // the paper's copy-elimination claim, applied to the train loop:
+    // steady-state staged bytes must not scale with the parameter count
+    let row = |n: &str| rows.iter().find(|m| m.name == n).unwrap();
+    let chained = row("scatter train step");
+    let literal = row("scatter train step (host state)");
+    println!(
+        "\none (params+m+v) state copy          : {}",
+        fmt_bytes(state_bytes as u64)
+    );
+    if device_path_live {
+        println!(
+            "host->device staged per step         : {}",
+            fmt_reduction(
+                literal.up_bytes_per_iter as u64,
+                chained.up_bytes_per_iter as u64
+            )
+        );
+        println!(
+            "total host<->device per step         : {}",
+            fmt_reduction(
+                literal.host_bytes_per_iter as u64,
+                chained.host_bytes_per_iter as u64
+            )
+        );
+        if chained.chain_bytes_per_iter > 0.0 {
+            println!(
+                "NOTE: fallback tuple round-trips moved {}/step (xla crate fused \
+                 the output tuple — measured, not hidden)",
+                fmt_bytes(chained.chain_bytes_per_iter as u64)
+            );
+        }
+    } else {
+        println!(
+            "NOTE: artifacts predate chain_map — every row above ran with \
+             host-literal state, before/after comparison skipped \
+             (re-run `make artifacts`)"
+        );
+    }
 
     let tp = |n: &str| rows.iter().find(|m| m.name == n).unwrap().throughput();
     let step_ratio = tp("scatter train step") / tp("padded train step");

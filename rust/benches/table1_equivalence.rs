@@ -56,6 +56,9 @@ fn main() -> anyhow::Result<()> {
             p95: err,
             units_per_iter: 0.0,
             host_bytes_per_iter: 0.0,
+            up_bytes_per_iter: 0.0,
+            down_bytes_per_iter: 0.0,
+            chain_bytes_per_iter: 0.0,
         });
     }
     let mut ppl_corpus_a = SyntheticCorpus::new(vocab, 0x99);
@@ -75,6 +78,9 @@ fn main() -> anyhow::Result<()> {
         p95: ppl_err,
         units_per_iter: 0.0,
         host_bytes_per_iter: 0.0,
+        up_bytes_per_iter: 0.0,
+        down_bytes_per_iter: 0.0,
+        chain_bytes_per_iter: 0.0,
     });
 
     println!("\nmax accuracy abs error: {max_err:.5}   ppl abs error: {ppl_err:.5}");

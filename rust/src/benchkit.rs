@@ -12,11 +12,15 @@ use crate::metrics::Histogram;
 /// One measured series (e.g. "scatter fwd @ k=4").
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Series label.
     pub name: String,
+    /// Timed iterations behind the percentiles.
     pub runs: usize,
-    /// seconds per iteration
+    /// 5th-percentile seconds per iteration.
     pub p5: f64,
+    /// Median seconds per iteration.
     pub median: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95: f64,
     /// optional work units per iteration (tokens, requests, …)
     pub units_per_iter: f64,
@@ -24,6 +28,28 @@ pub struct Measurement {
     /// populated by [`crate::figbench::bench_artifact`] from the
     /// runtime's transfer counters
     pub host_bytes_per_iter: f64,
+    /// Host→device bytes staged per iteration (part of the total above).
+    pub up_bytes_per_iter: f64,
+    /// Device→host bytes downloaded per iteration.
+    pub down_bytes_per_iter: f64,
+    /// Fallback tuple round-trip bytes per iteration (0 on the direct
+    /// device-to-device chaining path).
+    pub chain_bytes_per_iter: f64,
+}
+
+impl Measurement {
+    /// Fill the transfer columns from a [`crate::runtime::TransferTotals`]
+    /// delta spread over `iters` iterations (no-op when `iters == 0`).
+    pub fn set_transfers(&mut self, moved: &crate::runtime::TransferTotals, iters: u64) {
+        if iters == 0 {
+            return;
+        }
+        let per = |b: u64| b as f64 / iters as f64;
+        self.host_bytes_per_iter = per(moved.total_bytes());
+        self.up_bytes_per_iter = per(moved.bytes_to_device);
+        self.down_bytes_per_iter = per(moved.bytes_to_host);
+        self.chain_bytes_per_iter = per(moved.chain_bytes);
+    }
 }
 
 impl Measurement {
@@ -36,6 +62,7 @@ impl Measurement {
         }
     }
 
+    /// Serialise for the JSON bench reports.
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
         m.insert("name".into(), Json::Str(self.name.clone()));
@@ -49,6 +76,15 @@ impl Measurement {
             "host_bytes_per_iter".into(),
             Json::from(self.host_bytes_per_iter),
         );
+        m.insert("up_bytes_per_iter".into(), Json::from(self.up_bytes_per_iter));
+        m.insert(
+            "down_bytes_per_iter".into(),
+            Json::from(self.down_bytes_per_iter),
+        );
+        m.insert(
+            "chain_bytes_per_iter".into(),
+            Json::from(self.chain_bytes_per_iter),
+        );
         Json::Obj(m)
     }
 }
@@ -56,7 +92,9 @@ impl Measurement {
 /// Benchmark runner configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchOpts {
+    /// Untimed warmup iterations.
     pub warmup: usize,
+    /// Timed iterations.
     pub runs: usize,
 }
 
@@ -94,6 +132,9 @@ pub fn bench<F: FnMut()>(
         p95,
         units_per_iter,
         host_bytes_per_iter: 0.0,
+        up_bytes_per_iter: 0.0,
+        down_bytes_per_iter: 0.0,
+        chain_bytes_per_iter: 0.0,
     }
 }
 
@@ -104,13 +145,20 @@ pub fn print_table(title: &str, rows: &[Measurement], baseline: Option<&str>) {
     let base_tp = baseline
         .and_then(|b| rows.iter().find(|r| r.name == b))
         .map(|r| r.throughput());
-    // transfer column only when some series actually measured transfers
+    // transfer columns only when some series actually measured transfers
     let with_xfer = rows.iter().any(|r| r.host_bytes_per_iter > 0.0);
     print!(
         "{:<36} {:>10} {:>10} {:>10} {:>14} {:>9}",
         "series", "p5 (ms)", "med (ms)", "p95 (ms)", "units/s", "rel"
     );
-    println!("{}", if with_xfer { format!(" {:>12}", "xfer/iter") } else { String::new() });
+    println!(
+        "{}",
+        if with_xfer {
+            format!(" {:>12} {:>12}", "xfer/iter", "staged/iter")
+        } else {
+            String::new()
+        }
+    );
     for r in rows {
         let rel = match base_tp {
             Some(b) if b > 0.0 => format!("{:.2}x", r.throughput() / b),
@@ -128,7 +176,11 @@ pub fn print_table(title: &str, rows: &[Measurement], baseline: Option<&str>) {
         println!(
             "{}",
             if with_xfer {
-                format!(" {:>12}", crate::metrics::fmt_bytes(r.host_bytes_per_iter as u64))
+                format!(
+                    " {:>12} {:>12}",
+                    crate::metrics::fmt_bytes(r.host_bytes_per_iter as u64),
+                    crate::metrics::fmt_bytes(r.up_bytes_per_iter as u64)
+                )
             } else {
                 String::new()
             }

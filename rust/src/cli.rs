@@ -30,6 +30,7 @@ pub struct Args {
 }
 
 impl Cli {
+    /// New parser for `program`, described by `about` in `--help`.
     pub fn new(program: &str, about: &str) -> Self {
         Cli {
             program: program.into(),
@@ -78,6 +79,7 @@ impl Cli {
         self
     }
 
+    /// Auto-generated `--help` text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
         for (p, _) in &self.positionals {
@@ -161,30 +163,35 @@ impl Cli {
 }
 
 impl Args {
+    /// String value of a registered flag (panics if unregistered).
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("flag --{name} not registered"))
     }
 
+    /// [`Self::get`] parsed as usize.
     pub fn get_usize(&self, name: &str) -> usize {
         self.get(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be an integer"))
     }
 
+    /// [`Self::get`] parsed as u64.
     pub fn get_u64(&self, name: &str) -> u64 {
         self.get(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be an integer"))
     }
 
+    /// [`Self::get`] parsed as f64.
     pub fn get_f64(&self, name: &str) -> f64 {
         self.get(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be a number"))
     }
 
+    /// Value of a registered boolean switch.
     pub fn get_bool(&self, name: &str) -> bool {
         *self
             .bools
@@ -192,6 +199,7 @@ impl Args {
             .unwrap_or_else(|| panic!("switch --{name} not registered"))
     }
 
+    /// Positional arguments in order.
     pub fn positionals(&self) -> &[String] {
         &self.positionals
     }

@@ -11,17 +11,26 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with byte position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input.
     pub pos: usize,
 }
 
@@ -220,6 +229,7 @@ impl<'a> Parser<'a> {
 }
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         let v = p.value()?;
@@ -232,6 +242,7 @@ impl Json {
 
     // ----- typed accessors -----
 
+    /// Object field lookup (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -239,11 +250,13 @@ impl Json {
         }
     }
 
+    /// [`Self::get`] that errors on a missing key.
     pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("missing key '{key}'"))
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -251,6 +264,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -258,14 +272,17 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// Numeric value truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -273,6 +290,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -280,6 +298,7 @@ impl Json {
         }
     }
 
+    /// Array of strings (non-string elements are skipped).
     pub fn str_vec(&self) -> Option<Vec<String>> {
         self.as_arr().map(|a| {
             a.iter()
@@ -288,6 +307,7 @@ impl Json {
         })
     }
 
+    /// Array of usize (non-numeric elements are skipped).
     pub fn usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
@@ -295,6 +315,7 @@ impl Json {
 
     // ----- serialisation -----
 
+    /// Serialise with two-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0);

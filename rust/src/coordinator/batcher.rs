@@ -20,6 +20,7 @@ use crate::rng::Rng;
 /// State of one decode slot.
 #[derive(Clone, Debug, PartialEq)]
 pub enum SlotState {
+    /// Free for refill.
     Empty,
     /// Waiting for the prefill of its sequence.
     Prefilling(RequestId),
@@ -30,8 +31,11 @@ pub enum SlotState {
 /// One decode slot of the static batch.
 #[derive(Clone, Debug)]
 pub struct Slot {
+    /// Occupancy state.
     pub state: SlotState,
+    /// Prompt of the occupying request.
     pub prompt: Vec<i32>,
+    /// Tokens generated so far.
     pub generated: Vec<i32>,
     /// The request's full generation parameters (temperature / top-k /
     /// stop / budget) — consumed per-token by the engine's sampler.
@@ -39,8 +43,11 @@ pub struct Slot {
     /// Private sampling stream seeded from `params.seed`, so a request's
     /// generation never depends on which other slots are in flight.
     pub rng: Rng,
+    /// When the request entered this slot.
     pub started: Option<std::time::Instant>,
+    /// When the request was submitted.
     pub arrived: Option<std::time::Instant>,
+    /// When the first token was sampled (TTFT).
     pub first_token_at: Option<std::time::Instant>,
 }
 
@@ -75,6 +82,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher over `width` slots with a bounded admission queue.
     pub fn new(width: usize, max_queue: usize) -> Self {
         Batcher {
             slots: (0..width).map(|_| Slot::empty()).collect(),
@@ -86,14 +94,17 @@ impl Batcher {
         }
     }
 
+    /// Static batch width.
     pub fn width(&self) -> usize {
         self.slots.len()
     }
 
+    /// All slots in batch order.
     pub fn slots(&self) -> &[Slot] {
         &self.slots
     }
 
+    /// Requests waiting for a slot.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -242,6 +253,7 @@ impl Batcher {
         (self.admitted, self.finished, active, self.queue.len() as u64)
     }
 
+    /// Requests rejected by backpressure.
     pub fn rejected(&self) -> u64 {
         self.rejected
     }

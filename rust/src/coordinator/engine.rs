@@ -39,14 +39,20 @@ use crate::tensor::Tensor;
 /// Engine configuration (shapes come from the artifact manifest).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// Whole-batch prompt pass that also seeds the KV caches.
     pub prefill_artifact: String,
+    /// One-token-per-slot decode step.
     pub decode_artifact: String,
+    /// Parameter initialisation artifact (run once at engine build).
     pub init_artifact: String,
     /// On-device partial-prefill cache merge; host-splice fallback when
     /// the manifest doesn't carry it (older artifact dirs).
     pub splice_artifact: String,
+    /// Admission-queue bound (submissions beyond it are rejected).
     pub max_queue: usize,
+    /// Prefill/decode interleaving policy.
     pub scheduler: SchedulerConfig,
+    /// Parameter-init seed.
     pub seed: u64,
 }
 
@@ -67,19 +73,26 @@ impl Default for EngineConfig {
 /// Serving statistics snapshot.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
+    /// Requests finished.
     pub completed: u64,
+    /// Decode artifact calls.
     pub decode_steps: u64,
+    /// Prefill artifact calls.
     pub prefills: u64,
+    /// Tokens sampled across all requests.
     pub generated_tokens: u64,
     /// Partial-prefill cache merges executed on-device (`kv_splice`).
     pub device_splices: u64,
     /// Partial-prefill cache merges that round-tripped through the host
     /// (artifact missing from the manifest).
     pub host_splices: u64,
+    /// Time-to-first-token distribution (seconds).
     pub ttft: Histogram,
+    /// End-to-end latency distribution (seconds).
     pub latency: Histogram,
 }
 
+/// The serving engine (see the module docs for the tick contract).
 pub struct Engine {
     runtime: std::sync::Arc<Runtime>,
     cfg: EngineConfig,
@@ -103,7 +116,9 @@ pub struct Engine {
     pos: Vec<i32>,
     /// per-slot last emitted token
     last_token: Vec<i32>,
+    /// Serving metrics (counters + latency histograms).
     pub metrics: EngineMetrics,
+    /// Per-expert routing load telemetry.
     pub expert_stats: ExpertStats,
     next_id: u64,
 }
@@ -121,6 +136,35 @@ impl Engine {
         let max_len = cache_shape[2];
         let vocab = decode.outputs[0].shape[1];
         let num_experts = prefill.meta_usize("num_experts").unwrap_or(8);
+
+        // Cross-check the manifest-declared chaining contract against the
+        // consumption order hard-wired into do_decode / splice_cache_rows
+        // (outputs [logits→host, k, v] feeding inputs [pos, tokens,
+        // k_cache=2, v_cache=3]; kv_splice outputs feeding inputs 0/1).
+        // The caches share shape+dtype, so a re-ordered aot.py would
+        // otherwise swap k/v silently; artifact dirs that predate
+        // chain_map declare nothing and keep the legacy assumption.
+        if decode.has_chain_map() {
+            let map = decode.checked_chain_map()?;
+            anyhow::ensure!(
+                map == [None, Some(2), Some(3)],
+                "artifact '{}' chain_map {map:?} does not match the engine's \
+                 decode contract [-1, 2, 3]",
+                cfg.decode_artifact
+            );
+        }
+        if let Ok(spl) = runtime.manifest().get(&cfg.splice_artifact) {
+            if spl.has_chain_map() {
+                let map = spl.checked_chain_map()?;
+                anyhow::ensure!(
+                    map == [Some(0), Some(1)],
+                    "artifact '{}' chain_map {map:?} does not match the \
+                     engine's splice contract [0, 1]",
+                    cfg.splice_artifact
+                );
+            }
+        }
+
         let has_device_splice = runtime.manifest().get(&cfg.splice_artifact).is_ok();
         if !has_device_splice {
             log::warn!(
@@ -171,10 +215,12 @@ impl Engine {
         })
     }
 
+    /// Static decode batch width.
     pub fn width(&self) -> usize {
         self.width
     }
 
+    /// Maximum sequence length the KV caches hold.
     pub fn max_len(&self) -> usize {
         self.max_len
     }
@@ -411,10 +457,12 @@ impl Engine {
         self.runtime.transfer_totals()
     }
 
+    /// Requests waiting for a slot.
     pub fn queue_len(&self) -> usize {
         self.batcher.queue_len()
     }
 
+    /// True when no work remains anywhere.
     pub fn is_idle(&self) -> bool {
         self.batcher.idle()
     }

@@ -15,10 +15,12 @@ pub struct ExpertStats {
 }
 
 impl ExpertStats {
+    /// Zeroed counters for `num_experts` experts.
     pub fn new(num_experts: usize) -> Self {
         ExpertStats { counts: vec![0; num_experts], batches: 0 }
     }
 
+    /// Number of experts tracked.
     pub fn num_experts(&self) -> usize {
         self.counts.len()
     }
@@ -41,10 +43,12 @@ impl ExpertStats {
         self.batches += 1;
     }
 
+    /// Total routed slots recorded.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
 
+    /// Per-expert totals.
     pub fn counts(&self) -> &[u64] {
         &self.counts
     }

@@ -13,6 +13,8 @@
 //!   control with backpressure.
 //! * [`expert_stats`] — per-expert routing load telemetry (the paper's
 //!   imbalance story made observable: padding waste, load CV).
+//! * [`trace`]    — reproducible arrival-process generation (Poisson,
+//!   bursty) for the serving experiments.
 //! * [`engine`]   — ties it together around [`crate::runtime::Runtime`]:
 //!   worker loop, tokenizer-in/tokenizer-out, latency metrics.
 

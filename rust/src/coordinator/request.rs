@@ -4,11 +4,15 @@ use std::time::Instant;
 
 /// Unique request identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct RequestId(pub u64);
+pub struct RequestId(
+    /// Monotonic id assigned at submission.
+    pub u64,
+);
 
 /// Per-request generation parameters.
 #[derive(Clone, Debug)]
 pub struct SamplingParams {
+    /// Generation budget (the request finishes at this many tokens).
     pub max_new_tokens: usize,
     /// 0.0 = greedy; otherwise softmax temperature.
     pub temperature: f32,
@@ -37,13 +41,18 @@ impl Default for SamplingParams {
 /// An inference request (token ids in, token ids out).
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Unique id.
     pub id: RequestId,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation parameters.
     pub params: SamplingParams,
+    /// Submission timestamp (TTFT/latency baseline).
     pub arrived: Instant,
 }
 
 impl Request {
+    /// New request arriving now.
     pub fn new(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
         Request { id: RequestId(id), prompt, params, arrived: Instant::now() }
     }
@@ -63,13 +72,17 @@ pub enum FinishReason {
 /// A finished request.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Id of the originating request.
     pub id: RequestId,
+    /// Generated token ids.
     pub tokens: Vec<i32>,
+    /// Why the sequence stopped.
     pub finish: FinishReason,
     /// time-to-first-token, seconds
     pub ttft: f64,
     /// total latency, seconds
     pub latency: f64,
+    /// Length of the prompt that produced this response.
     pub prompt_len: usize,
 }
 

@@ -31,18 +31,23 @@ impl Default for SchedulerConfig {
 /// What the engine should do this tick.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Action {
+    /// Refill empty slots and run the prefill artifact.
     Prefill,
+    /// Run one decode step for the in-flight batch.
     Decode,
+    /// Nothing to do.
     Idle,
 }
 
 /// Pure decision function over the observable batch state.
 #[derive(Clone, Debug)]
 pub struct Scheduler {
+    /// Tuning knobs.
     pub cfg: SchedulerConfig,
 }
 
 impl Scheduler {
+    /// Scheduler with the given knobs.
     pub fn new(cfg: SchedulerConfig) -> Self {
         Scheduler { cfg }
     }

@@ -12,7 +12,9 @@ use crate::rng::Rng;
 pub struct TraceItem {
     /// arrival time in seconds from trace start
     pub at: f64,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
+    /// Generation budget in tokens.
     pub max_new: usize,
 }
 
@@ -29,12 +31,19 @@ pub enum Arrival {
 /// Trace configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct TraceConfig {
+    /// Number of requests.
     pub n: usize,
+    /// Arrival process.
     pub arrival: Arrival,
+    /// Minimum prompt length.
     pub prompt_min: usize,
+    /// Maximum prompt length (inclusive).
     pub prompt_max: usize,
+    /// Minimum generation budget.
     pub max_new_min: usize,
+    /// Maximum generation budget (inclusive).
     pub max_new_max: usize,
+    /// Trace seed.
     pub seed: u64,
 }
 

@@ -20,15 +20,20 @@ use crate::tokenizer::SyntheticCorpus;
 /// index of the gold candidate.
 #[derive(Clone, Debug)]
 pub struct McItem {
+    /// Shared context tokens.
     pub prefix: Vec<i32>,
+    /// Candidate next tokens.
     pub choices: Vec<i32>,
+    /// Index of the gold candidate in `choices`.
     pub gold: usize,
 }
 
 /// A named synthetic task (mirrors one row of Table 1).
 #[derive(Clone, Debug)]
 pub struct Task {
+    /// Task name (e.g. `winogrande-syn`).
     pub name: String,
+    /// Task items.
     pub items: Vec<McItem>,
 }
 
@@ -97,6 +102,7 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
+    /// Evaluator over one forward artifact with fixed host params.
     pub fn new(
         runtime: std::sync::Arc<Runtime>, artifact: &str,
         params: std::sync::Arc<Vec<xla::Literal>>,

@@ -24,6 +24,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn `threads` workers (panics on 0).
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
         let shared = Arc::new(Shared {
@@ -97,6 +98,7 @@ impl ThreadPool {
         handles.into_iter().map(|h| h.join()).collect()
     }
 
+    /// Number of worker threads.
     pub fn threads(&self) -> usize {
         self.workers.len()
     }
@@ -150,6 +152,7 @@ impl<T> Clone for BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Queue admitting at most `cap` in-flight items.
     pub fn new(cap: usize) -> Self {
         BoundedQueue {
             inner: Arc::new(BqShared {
@@ -205,14 +208,17 @@ impl<T> BoundedQueue<T> {
         out
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.q.lock().unwrap().len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Close the queue: producers fail, consumers drain then get `None`.
     pub fn close(&self) {
         *self.inner.closed.lock().unwrap() = true;
         self.inner.not_empty.notify_all();

@@ -63,9 +63,7 @@ pub fn bench_artifact(
         anyhow::bail!("bench {name}: {e}");
     }
     let moved = rt.transfer_totals().since(&xfer0);
-    if iters > 0 {
-        m.host_bytes_per_iter = moved.total_bytes() as f64 / iters as f64;
-    }
+    m.set_transfers(&moved, iters);
     Ok(m)
 }
 

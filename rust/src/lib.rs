@@ -15,26 +15,40 @@
 //! Python never runs on the request path: the Rust binary is fully
 //! self-contained once `artifacts/` is built.
 //!
-//! ## Device-resident serving state
+//! ## Device-resident loop state (serving *and* training)
 //!
 //! The paper's thesis — SMoE throughput is won by eliminating padding
-//! and copies — is applied to the serving loop itself.  Loop-carried
-//! state (model params, the stacked `(L, B, Tmax, nh, dh)` KV caches)
-//! lives as `xla::PjRtBuffer`s and is chained output→input across ticks
-//! via [`runtime::Runtime::run_chained`]; a decode tick stages only the
-//! `(B,)` position/last-token vectors up and the `(B, V)` logits down
-//! (downloaded once, never re-uploaded).  Partial prefills merge refilled slots' cache
-//! rows on-device through the `kv_splice` artifact (mask-driven row
-//! scatter authored in `python/compile/aot.py`), with a host-splice
-//! fallback when an older artifact dir lacks it.  Every byte that does
-//! cross the host↔device boundary is accounted per-artifact in
-//! [`runtime::ExecStats`] and surfaced by the benches — the
-//! copy-elimination claim is measured, not asserted.
+//! and copies — is applied to both run-time loops.  Loop-carried state
+//! lives as `xla::PjRtBuffer`s chained output→input across calls:
+//!
+//! * **Serving** ([`coordinator`]): model params and the stacked
+//!   `(L, B, Tmax, nh, dh)` KV caches flow through
+//!   [`runtime::Runtime::run_chained`]; a decode tick stages only the
+//!   `(B,)` position/last-token vectors up and the `(B, V)` logits down.
+//!   Partial prefills merge refilled slots' cache rows on-device through
+//!   the `kv_splice` artifact, with a host-splice fallback when an older
+//!   artifact dir lacks it.
+//! * **Training** ([`train`]): the flattened `(params ++ m ++ v)`
+//!   optimizer state — an order of magnitude wider than the KV-cache
+//!   tuple — chains through [`runtime::Runtime::run_chain_step`], driven
+//!   by the `chain_map` contract the train artifacts declare in the
+//!   manifest.  A steady-state step stages only the step counter and
+//!   token batch up and the loss down; parameters leave the device only
+//!   at the checkpoint/eval boundary
+//!   ([`train::Trainer::params_tensors`]).
+//!
+//! Every byte that does cross the host↔device boundary is accounted
+//! per-artifact in [`runtime::ExecStats`] and surfaced by the benches
+//! and CLIs — the copy-elimination claim is measured, not asserted.
+//! See `docs/ARCHITECTURE.md` for the artifact lifecycle and the
+//! chaining/accounting design.
 //!
 //! The offline crate environment ships no tokio / clap / serde /
 //! criterion / rand / proptest, so this crate carries its own substrates:
 //! [`exec`] (thread-pool executor), [`cli`], [`config`] (JSON),
 //! [`rng`], [`metrics`], [`benchkit`] and [`testkit`] (property testing).
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod cli;

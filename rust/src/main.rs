@@ -15,7 +15,7 @@ use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
 use scattermoe::rng::Rng;
 use scattermoe::runtime::Runtime;
 use scattermoe::tokenizer::SyntheticCorpus;
-use scattermoe::train::Trainer;
+use scattermoe::train::{StatePlacement, Trainer};
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -96,15 +96,30 @@ fn train(args: &[String]) -> Result<()> {
         .flag("step", "lm_bench_train_scatter", "train-step artifact")
         .flag("calls", "20", "artifact calls")
         .flag("log-every", "5", "log cadence")
-        .flag("seed", "0", "corpus/init seed");
+        .flag("seed", "0", "corpus/init seed")
+        .flag("state", "device", "optimizer-state placement: device|host");
     let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
     let rt = open_runtime(a.get("artifacts"))?;
-    let mut tr = Trainer::new(rt, a.get("init"), a.get("step"), a.get_u64("seed"))?;
+    let placement = match a.get("state") {
+        "device" => StatePlacement::Device,
+        "host" => StatePlacement::Host,
+        other => anyhow::bail!("--state must be device|host, got '{other}'"),
+    };
+    let mut tr = Trainer::new_with_placement(
+        rt.clone(),
+        a.get("init"),
+        a.get("step"),
+        a.get_u64("seed"),
+        placement,
+    )?;
     println!(
-        "training: {} tokens/call, corpus entropy floor {:.3} nats",
+        "training: {} tokens/call, state {:?} ({} per copy), corpus entropy floor {:.3} nats",
         tr.batch_tokens(),
+        tr.placement(),
+        scattermoe::metrics::fmt_bytes(tr.state_bytes() as u64),
         tr.loss_floor()
     );
+    let xfer0 = rt.transfer_totals();
     let log = tr.run(a.get_usize("calls"), a.get_usize("log-every"))?;
     println!(
         "done: {} calls, loss {:.4} -> {:.4}, {:.1} tokens/s",
@@ -112,6 +127,14 @@ fn train(args: &[String]) -> Result<()> {
         log.losses.first().copied().unwrap_or(f32::NAN),
         log.losses.last().copied().unwrap_or(f32::NAN),
         log.tokens_per_sec()
+    );
+    let x = rt.transfer_totals().since(&xfer0);
+    println!(
+        "host<->device: up {}  down {}  chain {} ({} round-trips)",
+        scattermoe::metrics::fmt_bytes(x.bytes_to_device),
+        scattermoe::metrics::fmt_bytes(x.bytes_to_host),
+        scattermoe::metrics::fmt_bytes(x.chain_bytes),
+        x.host_round_trips,
     );
     Ok(())
 }

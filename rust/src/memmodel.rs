@@ -16,12 +16,19 @@
 /// Layer/workload description.
 #[derive(Clone, Copy, Debug)]
 pub struct MlpShape {
+    /// Tokens per batch (`T`).
     pub tokens: usize,
+    /// Router fan-out (`k`).
     pub k: usize,
+    /// Number of experts (`E`).
     pub num_experts: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Expert hidden width.
     pub d_expert: usize,
+    /// GEMM row-block size (`B`).
     pub block: usize,
+    /// Bytes per element (4 for f32).
     pub dtype_bytes: usize,
 }
 
@@ -39,6 +46,7 @@ impl MlpShape {
         }
     }
 
+    /// Routed slots (`T·k`).
     pub fn slots(&self) -> usize {
         self.tokens * self.k
     }
@@ -67,23 +75,30 @@ impl MlpShape {
 /// One accounted allocation.
 #[derive(Clone, Debug)]
 pub struct Allocation {
+    /// What the buffer holds.
     pub label: &'static str,
+    /// Buffer size.
     pub bytes: usize,
 }
 
 /// Full footprint report for one (strategy, mode).
 #[derive(Clone, Debug)]
 pub struct Footprint {
+    /// Strategy name (scatter / padded / naive / capacity).
     pub strategy: &'static str,
+    /// Training mode (backward workspace counted) vs inference.
     pub training: bool,
+    /// Every accounted buffer.
     pub allocations: Vec<Allocation>,
 }
 
 impl Footprint {
+    /// Total bytes over all allocations.
     pub fn total(&self) -> usize {
         self.allocations.iter().map(|a| a.bytes).sum()
     }
 
+    /// Print the itemised report.
     pub fn print(&self) {
         println!(
             "--- {} ({}) : {:.2} GiB",

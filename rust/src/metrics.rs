@@ -9,12 +9,15 @@ use std::time::Duration;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Increment by one.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
+    /// Increment by `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -27,22 +30,27 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one sample.
     pub fn record(&mut self, v: f64) {
         self.samples.push(v);
     }
 
+    /// Record a duration in seconds.
     pub fn record_duration(&mut self, d: Duration) {
         self.record(d.as_secs_f64());
     }
 
+    /// Number of recorded samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when nothing was recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -64,10 +72,12 @@ impl Histogram {
         }
     }
 
+    /// 50th percentile.
     pub fn median(&self) -> f64 {
         self.percentile(0.5)
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -75,10 +85,12 @@ impl Histogram {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (-inf when empty).
     pub fn max(&self) -> f64 {
         self.samples
             .iter()
@@ -89,6 +101,31 @@ impl Histogram {
     /// The paper's reporting triple: (p5, median, p95).
     pub fn paper_summary(&self) -> (f64, f64, f64) {
         (self.percentile(0.05), self.median(), self.percentile(0.95))
+    }
+}
+
+/// Before-vs-after byte comparison line (e.g. `"96.3 MiB -> 1.3 KiB
+/// (77000x less)"`) — the copy-elimination reporting format shared by
+/// the fig-4a bench and the serve/train CLIs.
+pub fn fmt_reduction(before: u64, after: u64) -> String {
+    if after == 0 {
+        return format!("{} -> 0 B (eliminated)", fmt_bytes(before));
+    }
+    let ratio = before as f64 / after as f64;
+    if ratio >= 1.0 {
+        format!(
+            "{} -> {} ({:.0}x less)",
+            fmt_bytes(before),
+            fmt_bytes(after),
+            ratio
+        )
+    } else {
+        format!(
+            "{} -> {} ({:.2}x MORE)",
+            fmt_bytes(before),
+            fmt_bytes(after),
+            1.0 / ratio
+        )
     }
 }
 
@@ -121,10 +158,12 @@ impl Default for Throughput {
 }
 
 impl Throughput {
+    /// Start a meter (the window opens now).
     pub fn new() -> Self {
         Throughput { start: std::time::Instant::now(), items: Counter::default() }
     }
 
+    /// Record `n` completed items.
     pub fn add(&self, n: u64) {
         self.items.add(n);
     }
@@ -139,6 +178,7 @@ impl Throughput {
         }
     }
 
+    /// Total items recorded.
     pub fn total(&self) -> u64 {
         self.items.get()
     }
@@ -191,6 +231,16 @@ mod tests {
         assert_eq!(fmt_bytes(2048), "2.0 KiB");
         assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MiB");
         assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.0 GiB");
+    }
+
+    #[test]
+    fn fmt_reduction_reports_ratio() {
+        let s = fmt_reduction(100 * 1024 * 1024, 1024);
+        assert!(s.contains("100.0 MiB"), "{s}");
+        assert!(s.contains("1.0 KiB"), "{s}");
+        assert!(s.contains("102400x less"), "{s}");
+        assert!(fmt_reduction(64, 0).contains("eliminated"));
+        assert!(fmt_reduction(10, 40).contains("MORE"));
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded stream (same seed → same sequence).
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
     }

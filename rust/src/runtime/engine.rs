@@ -38,11 +38,13 @@ use crate::tensor::Tensor;
 ///   directions counted).  Zero on the direct device-to-device path.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
+    /// Number of completed executions of this artifact.
     pub executions: u64,
     /// Wall time from dispatch through result materialization (PJRT
     /// executions are async; timing through the download/untuple is the
     /// only point compute is provably complete).
     pub total_secs: f64,
+    /// Wall time spent compiling this artifact (first execution).
     pub compile_secs: f64,
     /// Host→device bytes staged as inputs for this artifact.
     pub bytes_to_device: u64,
@@ -62,11 +64,14 @@ pub struct ExecStats {
 /// a host tensor for outputs the caller consumes on host (downloaded
 /// once, never re-uploaded).
 pub enum ExecOut {
+    /// Device-resident output, chainable into the next call.
     Buffer(xla::PjRtBuffer),
+    /// Host-materialized output (downloaded once).
     Host(Tensor),
 }
 
 impl ExecOut {
+    /// Unwrap the device buffer; errors if the output went to host.
     pub fn into_buffer(self) -> Result<xla::PjRtBuffer> {
         match self {
             ExecOut::Buffer(b) => Ok(b),
@@ -74,6 +79,7 @@ impl ExecOut {
         }
     }
 
+    /// Unwrap the host tensor; errors if the output stayed on device.
     pub fn into_host(self) -> Result<Tensor> {
         match self {
             ExecOut::Buffer(_) => bail!("output is device-resident"),
@@ -82,13 +88,29 @@ impl ExecOut {
     }
 }
 
+/// Result of one [`Runtime::run_chain_step`] call, already split per the
+/// artifact's manifest-declared `chain_map`.
+pub struct ChainStep {
+    /// Host-consumed outputs (`chain_map` entry `-1`), in output order.
+    pub host: Vec<Tensor>,
+    /// Chained outputs as device buffers, ordered by the *input index*
+    /// they feed — i.e. ready to be passed back, in order, after the
+    /// caller's staged (non-chained) inputs.
+    pub state: Vec<xla::PjRtBuffer>,
+}
+
 /// Aggregate transfer counters over all artifacts (see [`ExecStats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TransferTotals {
+    /// Host→device bytes staged as inputs.
     pub bytes_to_device: u64,
+    /// Device→host bytes downloaded as results.
     pub bytes_to_host: u64,
+    /// Bytes round-tripped by the fused-tuple fallback (both directions).
     pub chain_bytes: u64,
+    /// Number of fallback tuple decompositions.
     pub host_round_trips: u64,
+    /// Wall time spent in the explicit transfer helpers.
     pub transfer_secs: f64,
 }
 
@@ -154,10 +176,12 @@ impl Runtime {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Spec lookup shorthand (errors on unknown artifacts).
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest.get(name)
     }
@@ -407,6 +431,46 @@ impl Runtime {
             .collect()
     }
 
+    /// Manifest-driven chained execute: the artifact's declared
+    /// `chain_map` (see [`ArtifactSpec::checked_chain_map`]) decides which
+    /// outputs come down to host and which stay as device buffers for
+    /// the next call.  This is how wide self-chaining state tuples (the
+    /// train artifacts carry `3 × n_params` arrays) stay device-resident
+    /// without the caller hard-coding output indices: the contract lives
+    /// in the manifest, authored next to the jax function in `aot.py`.
+    ///
+    /// The returned [`ChainStep::state`] is ordered by target input
+    /// index, so a caller whose staged inputs precede the chained ones
+    /// (the `aot.py` convention) can rebuild the next call's argument
+    /// row as `staged ++ state`.  The map is validated against the IO
+    /// specs on every call (cheap — spec arithmetic only).
+    pub fn run_chain_step(
+        &self, name: &str, args: &[&xla::PjRtBuffer],
+    ) -> Result<ChainStep> {
+        let spec = self.manifest.get(name)?;
+        let map = spec.checked_chain_map()?;
+        let host_idx: Vec<usize> = map
+            .iter()
+            .enumerate()
+            .filter_map(|(j, dst)| dst.is_none().then_some(j))
+            .collect();
+        let outs = self.run_chained(name, args, &host_idx)?;
+        let mut host = Vec::with_capacity(host_idx.len());
+        let mut chained: Vec<(usize, xla::PjRtBuffer)> =
+            Vec::with_capacity(map.len() - host_idx.len());
+        for (j, out) in outs.into_iter().enumerate() {
+            match map[j] {
+                None => host.push(out.into_host()?),
+                Some(dst) => chained.push((dst, out.into_buffer()?)),
+            }
+        }
+        chained.sort_by_key(|&(dst, _)| dst);
+        Ok(ChainStep {
+            host,
+            state: chained.into_iter().map(|(_, b)| b).collect(),
+        })
+    }
+
     /// Execute over device buffers; returns the decomposed output
     /// **literals** (terminal calls where the results are consumed on
     /// host anyway — training loops, evaluation, benches).  Downloaded
@@ -461,6 +525,7 @@ impl Runtime {
         sum_transfer_totals(&self.stats.lock().unwrap())
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

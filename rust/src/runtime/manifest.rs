@@ -14,12 +14,16 @@ use crate::tensor::DType;
 /// Shape + dtype of one input or output.
 #[derive(Clone, Debug)]
 pub struct IoSpec {
+    /// Parameter name from the lowering (may be empty for outputs).
     pub name: String,
+    /// Dense row-major dimensions.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 impl IoSpec {
+    /// Number of elements (product of dims; 1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -33,18 +37,25 @@ impl IoSpec {
 /// One AOT-compiled entry point.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Manifest key (e.g. `lm_bench_train_scatter`).
     pub name: String,
+    /// Path to the HLO text file.
     pub file: PathBuf,
+    /// Input specs in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output specs in result order.
     pub outputs: Vec<IoSpec>,
+    /// Free-form bench/workload metadata emitted by `aot.py`.
     pub meta: Json,
 }
 
 impl ArtifactSpec {
+    /// String-valued metadata lookup.
     pub fn meta_str(&self, key: &str) -> Option<&str> {
         self.meta.get(key).and_then(|v| v.as_str())
     }
 
+    /// Integer-valued metadata lookup.
     pub fn meta_usize(&self, key: &str) -> Option<usize> {
         self.meta.get(key).and_then(|v| v.as_usize())
     }
@@ -54,17 +65,98 @@ impl ArtifactSpec {
         self.meta.get("param_names").and_then(|v| v.str_vec())
     }
 
+    /// Position of the named input in the call order.
     pub fn input_index(&self, name: &str) -> Result<usize> {
         self.inputs
             .iter()
             .position(|i| i.name == name)
             .with_context(|| format!("artifact {} has no input '{name}'", self.name))
     }
+
+    /// True when the artifact declares an output→input chain contract
+    /// (meta key `chain_map`).  Presence only — use
+    /// [`Self::checked_chain_map`] to parse and validate it.
+    pub fn has_chain_map(&self) -> bool {
+        self.meta.get("chain_map").is_some()
+    }
+
+    /// Parse and validate the output→input chaining contract declared
+    /// by `aot.py` (meta key `chain_map`): entry `j` is the input index
+    /// output `j` feeds on the *next* call of the same artifact, or
+    /// `None` for a host-consumed output (`-1` in the manifest).
+    ///
+    /// Strict: one entry per output, every entry an integral number
+    /// that is `-1` or a valid input index, no two outputs chaining to
+    /// the same input, and each chained output's shape/dtype matching
+    /// the input it feeds.  Errors describe the first violation.
+    pub fn checked_chain_map(&self) -> Result<Vec<Option<usize>>> {
+        let decl = self.meta.get("chain_map").with_context(|| {
+            format!(
+                "artifact '{}' declares no chain_map (artifacts predate \
+                 the chaining contract — re-run `make artifacts`)",
+                self.name
+            )
+        })?;
+        let arr = decl
+            .as_arr()
+            .with_context(|| format!("artifact '{}': chain_map is not an array", self.name))?;
+        if arr.len() != self.outputs.len() {
+            bail!(
+                "artifact '{}': chain_map has {} entries for {} outputs",
+                self.name,
+                arr.len(),
+                self.outputs.len()
+            );
+        }
+        let mut map = Vec::with_capacity(arr.len());
+        let mut taken = vec![false; self.inputs.len()];
+        for (j, entry) in arr.iter().enumerate() {
+            let n = entry.as_f64().with_context(|| {
+                format!("artifact '{}': chain_map[{j}] is not a number", self.name)
+            })?;
+            if n.fract() != 0.0 {
+                bail!("artifact '{}': chain_map[{j}] = {n} is not an integer", self.name);
+            }
+            let i = n as i64;
+            if i == -1 {
+                map.push(None);
+                continue;
+            }
+            if i < 0 || i as usize >= self.inputs.len() {
+                bail!(
+                    "artifact '{}': chain_map[{j}] = {i} is not -1 or a \
+                     valid input index (have {} inputs)",
+                    self.name,
+                    self.inputs.len()
+                );
+            }
+            let dst = i as usize;
+            if taken[dst] {
+                bail!(
+                    "artifact '{}': chain_map targets input {dst} twice",
+                    self.name
+                );
+            }
+            taken[dst] = true;
+            let (inp, out) = (&self.inputs[dst], &self.outputs[j]);
+            if inp.shape != out.shape || inp.dtype != out.dtype {
+                bail!(
+                    "artifact '{}': output {j} ({:?}/{:?}) cannot chain \
+                     into input {dst} '{}' ({:?}/{:?})",
+                    self.name, out.shape, out.dtype, inp.name, inp.shape,
+                    inp.dtype
+                );
+            }
+            map.push(Some(dst));
+        }
+        Ok(map)
+    }
 }
 
 /// The parsed manifest.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and the HLO files) were loaded from.
     pub dir: PathBuf,
     artifacts: BTreeMap<String, ArtifactSpec>,
 }
@@ -122,20 +214,24 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), artifacts })
     }
 
+    /// Look up one artifact by name.
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
             .with_context(|| format!("artifact '{name}' not in manifest"))
     }
 
+    /// All artifact names in sorted order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.artifacts.keys().map(|s| s.as_str())
     }
 
+    /// Number of artifacts.
     pub fn len(&self) -> usize {
         self.artifacts.len()
     }
 
+    /// True when the manifest lists no artifacts.
     pub fn is_empty(&self) -> bool {
         self.artifacts.is_empty()
     }
@@ -178,6 +274,131 @@ mod tests {
         assert_eq!(a.meta_usize("T"), Some(2));
         assert_eq!(m.by_figure("4b").count(), 1);
         assert!(m.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chain_map_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("smoe-man3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.hlo.txt"), "x").unwrap();
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"t","file":"t.hlo.txt",
+              "inputs":[{"name":"step","shape":[],"dtype":"s32"},
+                        {"name":"tok","shape":[2,3],"dtype":"s32"},
+                        {"name":"w","shape":[4],"dtype":"f32"}],
+              "outputs":[{"shape":[],"dtype":"f32"},
+                         {"shape":[4],"dtype":"f32"}],
+              "meta":{"chain_map":[-1,2]}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.get("t").unwrap();
+        assert!(spec.has_chain_map());
+        let checked = spec.checked_chain_map().unwrap();
+        assert_eq!(checked, vec![None, Some(2)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chain_map_absent_is_none_and_checked_errors() {
+        let dir = std::env::temp_dir().join(format!("smoe-man4-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"a","file":"a.hlo.txt",
+              "inputs":[],"outputs":[{"shape":[1],"dtype":"f32"}]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.get("a").unwrap();
+        assert!(!spec.has_chain_map());
+        let err = format!("{:#}", spec.checked_chain_map().unwrap_err());
+        assert!(err.contains("chain_map"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chain_map_rejects_malformed_entries() {
+        // strings, fractional indices, out-of-range negatives, and
+        // duplicate targets must all be hard errors, not coercions
+        let cases: &[(&str, &str)] = &[
+            (r#"["2"]"#, "not a number"),
+            (r#"[2.5]"#, "not an integer"),
+            (r#"[-2]"#, "valid input index"),
+            (r#"[9]"#, "valid input index"),
+        ];
+        for (k, (cm, want)) in cases.iter().enumerate() {
+            let dir = std::env::temp_dir()
+                .join(format!("smoe-man7-{k}-{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("d.hlo.txt"), "x").unwrap();
+            write_manifest(
+                &dir,
+                &format!(
+                    r#"{{"artifacts":[{{"name":"d","file":"d.hlo.txt",
+                      "inputs":[{{"name":"w","shape":[4],"dtype":"f32"}},
+                                {{"name":"u","shape":[4],"dtype":"f32"}},
+                                {{"name":"z","shape":[4],"dtype":"f32"}}],
+                      "outputs":[{{"shape":[4],"dtype":"f32"}}],
+                      "meta":{{"chain_map":{cm}}}}}]}}"#
+                ),
+            );
+            let m = Manifest::load(&dir).unwrap();
+            let err = format!("{:#}", m.get("d").unwrap().checked_chain_map().unwrap_err());
+            assert!(err.contains(want), "chain_map {cm}: {err}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        // duplicate target
+        let dir = std::env::temp_dir().join(format!("smoe-man8-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("e.hlo.txt"), "x").unwrap();
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"e","file":"e.hlo.txt",
+              "inputs":[{"name":"w","shape":[4],"dtype":"f32"}],
+              "outputs":[{"shape":[4],"dtype":"f32"},{"shape":[4],"dtype":"f32"}],
+              "meta":{"chain_map":[0,0]}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let err = format!("{:#}", m.get("e").unwrap().checked_chain_map().unwrap_err());
+        assert!(err.contains("twice"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chain_map_shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("smoe-man5-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "x").unwrap();
+        // output [4] chained into input of shape [5] must be rejected
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"b","file":"b.hlo.txt",
+              "inputs":[{"name":"w","shape":[5],"dtype":"f32"}],
+              "outputs":[{"shape":[4],"dtype":"f32"}],
+              "meta":{"chain_map":[0]}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let err = format!("{:#}", m.get("b").unwrap().checked_chain_map().unwrap_err());
+        assert!(err.contains("cannot chain"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chain_map_arity_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("smoe-man6-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("c.hlo.txt"), "x").unwrap();
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"c","file":"c.hlo.txt",
+              "inputs":[{"name":"w","shape":[4],"dtype":"f32"}],
+              "outputs":[{"shape":[4],"dtype":"f32"}],
+              "meta":{"chain_map":[0,1]}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("c").unwrap().checked_chain_map().is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

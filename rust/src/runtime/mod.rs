@@ -9,8 +9,13 @@
 //! The serving hot path uses [`engine::Runtime::run_chained`] so
 //! loop-carried state (KV caches, params) stays device-resident across
 //! calls while host-consumed outputs (logits) are downloaded exactly
-//! once; literal-returning helpers remain for terminal consumers
-//! (training, eval, benches).
+//! once.  Self-chaining artifacts (the train steps, `serve_decode`,
+//! `kv_splice`) declare which outputs feed which inputs through the
+//! manifest's `chain_map`, and [`engine::Runtime::run_chain_step`]
+//! drives that contract generically — the training loop's
+//! `3 × n_params` state tuple chains the same way the two KV-cache
+//! buffers do.  Literal-returning helpers remain for terminal consumers
+//! (eval, benches, the host-literal compatibility path).
 //!
 //! Pattern adapted from `/opt/xla-example/load_hlo`: HLO **text** →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
@@ -19,5 +24,7 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{sum_transfer_totals, ExecOut, ExecStats, Runtime, TransferTotals};
+pub use engine::{
+    sum_transfer_totals, ChainStep, ExecOut, ExecStats, Runtime, TransferTotals,
+};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};

@@ -9,12 +9,16 @@ use anyhow::{bail, Context, Result};
 /// Element type tag (matches the manifest's `dtype` strings).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float (`f32`).
     F32,
+    /// 32-bit signed integer (`s32`).
     I32,
+    /// 32-bit unsigned integer (`u32`).
     U32,
 }
 
 impl DType {
+    /// Parse a manifest dtype string (`f32` / `s32` / `i32` / `u32`).
     pub fn parse(s: &str) -> Result<DType> {
         Ok(match s {
             "f32" => DType::F32,
@@ -24,6 +28,7 @@ impl DType {
         })
     }
 
+    /// Bytes per element (all supported dtypes are 32-bit).
     pub fn size_bytes(self) -> usize {
         4
     }
@@ -32,7 +37,9 @@ impl DType {
 /// Dense row-major host tensor.
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// Element type.
     pub dtype: DType,
+    /// Row-major dimensions (empty = scalar).
     pub shape: Vec<usize>,
     data: Data,
 }
@@ -45,21 +52,25 @@ enum Data {
 }
 
 impl Tensor {
+    /// Build an f32 tensor (errors on shape/len mismatch).
     pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
         Self::check(shape, data.len())?;
         Ok(Tensor { dtype: DType::F32, shape: shape.to_vec(), data: Data::F32(data) })
     }
 
+    /// Build an i32 tensor (errors on shape/len mismatch).
     pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
         Self::check(shape, data.len())?;
         Ok(Tensor { dtype: DType::I32, shape: shape.to_vec(), data: Data::I32(data) })
     }
 
+    /// Build a u32 tensor (errors on shape/len mismatch).
     pub fn from_u32(shape: &[usize], data: Vec<u32>) -> Result<Tensor> {
         Self::check(shape, data.len())?;
         Ok(Tensor { dtype: DType::U32, shape: shape.to_vec(), data: Data::U32(data) })
     }
 
+    /// All-zeros tensor of the given dtype/shape.
     pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
         let n = shape.iter().product();
         let data = match dtype {
@@ -70,10 +81,12 @@ impl Tensor {
         Tensor { dtype, shape: shape.to_vec(), data }
     }
 
+    /// Rank-0 i32 scalar.
     pub fn scalar_i32(v: i32) -> Tensor {
         Tensor { dtype: DType::I32, shape: vec![], data: Data::I32(vec![v]) }
     }
 
+    /// Rank-0 u32 scalar.
     pub fn scalar_u32(v: u32) -> Tensor {
         Tensor { dtype: DType::U32, shape: vec![], data: Data::U32(vec![v]) }
     }
@@ -86,10 +99,12 @@ impl Tensor {
         Ok(())
     }
 
+    /// Number of elements (1 for scalars).
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// True when any dimension is zero.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -99,6 +114,7 @@ impl Tensor {
         self.len() * self.dtype.size_bytes()
     }
 
+    /// Borrow the payload as f32 (errors on dtype mismatch).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
@@ -106,6 +122,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the payload as i32 (errors on dtype mismatch).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),
@@ -113,6 +130,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the payload as u32 (errors on dtype mismatch).
     pub fn as_u32(&self) -> Result<&[u32]> {
         match &self.data {
             Data::U32(v) => Ok(v),
@@ -120,6 +138,7 @@ impl Tensor {
         }
     }
 
+    /// Mutably borrow the payload as f32 (errors on dtype mismatch).
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),

@@ -12,6 +12,7 @@ use crate::rng::Rng;
 
 /// A seeded generator of `T` values.
 pub trait Gen<T> {
+    /// Draw one value from the generator.
     fn generate(&self, rng: &mut Rng) -> T;
     /// Candidate smaller versions of a failing input (greedy shrinking).
     fn shrink(&self, value: &T) -> Vec<T> {
@@ -23,6 +24,7 @@ pub trait Gen<T> {
 /// Property outcome; use [`prop_assert`] to build.
 pub type PropResult = Result<(), String>;
 
+/// Build a [`PropResult`] from a condition and failure message.
 pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
     if cond {
         Ok(())
@@ -76,7 +78,13 @@ where
 
 // ------------------------- generator combinators ---------------------------
 
-pub struct U64Range(pub u64, pub u64);
+/// Uniform u64 generator over `[lo, hi)` with midpoint/decrement shrinking.
+pub struct U64Range(
+    /// Inclusive lower bound.
+    pub u64,
+    /// Exclusive upper bound.
+    pub u64,
+);
 
 impl Gen<u64> for U64Range {
     fn generate(&self, rng: &mut Rng) -> u64 {
@@ -94,9 +102,13 @@ impl Gen<u64> for U64Range {
     }
 }
 
+/// Vector generator with length bounds and structural shrinking.
 pub struct VecGen<G> {
+    /// Element generator.
     pub item: G,
+    /// Minimum generated length.
     pub min_len: usize,
+    /// Maximum generated length (inclusive).
     pub max_len: usize,
 }
 
@@ -129,7 +141,12 @@ impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
 }
 
 /// Pair generator.
-pub struct PairGen<A, B>(pub A, pub B);
+pub struct PairGen<A, B>(
+    /// First-element generator.
+    pub A,
+    /// Second-element generator.
+    pub B,
+);
 
 impl<T: Clone, U: Clone, A: Gen<T>, B: Gen<U>> Gen<(T, U)> for PairGen<A, B> {
     fn generate(&self, rng: &mut Rng) -> (T, U) {

@@ -10,10 +10,13 @@
 
 use crate::rng::Rng;
 
-/// Reserved token ids.
+/// Padding token id.
 pub const PAD: i32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: i32 = 1;
+/// End-of-sequence token id.
 pub const EOS: i32 = 2;
+/// Number of reserved special tokens (byte values are offset by this).
 pub const SPECIAL_TOKENS: i32 = 3;
 
 /// Byte-level tokenizer: bytes are offset by the special tokens.
@@ -22,21 +25,25 @@ pub struct ByteTokenizer {
 }
 
 impl ByteTokenizer {
+    /// Tokenizer over `vocab_size` ids (must cover all bytes + specials).
     pub fn new(vocab_size: usize) -> Self {
         assert!(vocab_size >= 256 + SPECIAL_TOKENS as usize);
         ByteTokenizer { vocab_size }
     }
 
+    /// Vocabulary size.
     pub fn vocab_size(&self) -> usize {
         self.vocab_size
     }
 
+    /// Text → token ids (BOS-prefixed).
     pub fn encode(&self, text: &str) -> Vec<i32> {
         let mut out = vec![BOS];
         out.extend(text.bytes().map(|b| b as i32 + SPECIAL_TOKENS));
         out
     }
 
+    /// Token ids → text (specials and out-of-range ids dropped).
     pub fn decode(&self, tokens: &[i32]) -> String {
         let bytes: Vec<u8> = tokens
             .iter()
@@ -61,6 +68,7 @@ pub struct SyntheticCorpus {
 }
 
 impl SyntheticCorpus {
+    /// Build the fixed-seed chain over `vocab` tokens.
     pub fn new(vocab: usize, seed: u64) -> Self {
         let branch = 4;
         let mut table_rng = Rng::new(seed);
@@ -87,6 +95,7 @@ impl SyntheticCorpus {
         SyntheticCorpus { vocab, branch, successors, rng: Rng::new(seed ^ 0xDA7A) }
     }
 
+    /// Vocabulary size.
     pub fn vocab_size(&self) -> usize {
         self.vocab
     }

@@ -1,11 +1,26 @@
 //! Training driver: drives the AOT `*_train_*` artifacts from Rust.
 //!
-//! Owns the flattened (params, m, v) optimizer state as XLA literals,
-//! generates token batches from the synthetic corpus, and executes the
-//! compiled train step — Python never runs.  Supports both single-step
-//! artifacts (`lm_*_train_<impl>`) and scan-chunked ones
-//! (`lm_*_train_chunk_<impl>`, several optimizer steps per call, which
-//! amortises the host round-trip the `xla` crate's tuple outputs force).
+//! Owns the flattened `(params, m, v)` optimizer state, generates token
+//! batches from the synthetic corpus, and executes the compiled train
+//! step — Python never runs.  Supports both single-step artifacts
+//! (`lm_*_train_<impl>`) and scan-chunked ones
+//! (`lm_*_train_chunk_<impl>`, several optimizer steps per call).
+//!
+//! ## Device-resident state
+//!
+//! By default ([`StatePlacement::Device`]) the state lives as
+//! `xla::PjRtBuffer`s chained output→input across steps through
+//! [`Runtime::run_chain_step`], driven by the `chain_map` the train
+//! artifacts declare in the manifest.  A steady-state step stages only
+//! the step counter and the token batch up and downloads only the loss
+//! — host traffic is O(batch tokens), independent of the parameter
+//! count.  The pre-chaining behaviour (every step ships the whole
+//! `3 × n_params` state through host literals both ways) is kept as
+//! [`StatePlacement::Host`]: it is the equivalence baseline for tests,
+//! the bytes-per-step "before" measured by the fig-4a bench, and the
+//! automatic fallback when an artifact dir predates the `chain_map`
+//! contract.  Parameters leave the device only on demand
+//! ([`Trainer::params_tensors`] — the checkpoint/eval boundary).
 
 use anyhow::{bail, Context, Result};
 
@@ -13,15 +28,38 @@ use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::tokenizer::SyntheticCorpus;
 
+/// Where the flattened `(params ++ m ++ v)` optimizer state lives
+/// between [`Trainer::step`] calls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatePlacement {
+    /// Device buffers chained output→input (the default): steady-state
+    /// host traffic is the step counter + token batch up, loss down.
+    Device,
+    /// Host literals re-uploaded every call (pre-chaining behaviour):
+    /// kept as the equivalence/bytes-per-step baseline and as the
+    /// fallback for artifact dirs without a `chain_map`.
+    Host,
+}
+
+/// The state tuple in its placement-specific representation.
+enum TrainState {
+    Device(Vec<xla::PjRtBuffer>),
+    Host(Vec<xla::Literal>),
+}
+
 /// One training run's progress record.
 #[derive(Clone, Debug, Default)]
 pub struct TrainLog {
+    /// Mean cross-entropy per artifact call.
     pub losses: Vec<f32>,
+    /// Total tokens consumed.
     pub tokens_seen: u64,
+    /// Wall-clock duration of the run.
     pub wall_secs: f64,
 }
 
 impl TrainLog {
+    /// Training throughput over the whole run.
     pub fn tokens_per_sec(&self) -> f64 {
         if self.wall_secs <= 0.0 {
             0.0
@@ -35,8 +73,8 @@ impl TrainLog {
 pub struct Trainer {
     runtime: std::sync::Arc<Runtime>,
     artifact: String,
-    /// (params ++ m ++ v) as literals, in manifest order
-    state: Vec<xla::Literal>,
+    /// (params ++ m ++ v) in manifest order, placement-dependent
+    state: TrainState,
     n_params: usize,
     batch: usize,
     seq_plus1: usize,
@@ -47,10 +85,29 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Initialise from `<prefix>_init` + the given train artifact.
+    /// Initialise from `<prefix>_init` + the given train artifact with
+    /// the default [`StatePlacement::Device`].
     pub fn new(
         runtime: std::sync::Arc<Runtime>, init_artifact: &str, train_artifact: &str,
         seed: u64,
+    ) -> Result<Trainer> {
+        Self::new_with_placement(
+            runtime,
+            init_artifact,
+            train_artifact,
+            seed,
+            StatePlacement::Device,
+        )
+    }
+
+    /// [`Self::new`] with an explicit state placement.  Requesting
+    /// [`StatePlacement::Device`] against an artifact dir that predates
+    /// the `chain_map` contract falls back to host literals (with a
+    /// warning) rather than failing; an *invalid* declared map is a
+    /// hard error.
+    pub fn new_with_placement(
+        runtime: std::sync::Arc<Runtime>, init_artifact: &str, train_artifact: &str,
+        seed: u64, placement: StatePlacement,
     ) -> Result<Trainer> {
         let spec = runtime.spec(train_artifact)?.clone();
         let names = spec
@@ -82,13 +139,59 @@ impl Trainer {
                 params_t.len()
             );
         }
-        let mut state = runtime.to_literals(&params_t)?;
-        for t in &params_t {
-            state.push(Tensor::zeros(t.dtype, &t.shape).to_literal()?); // m
-        }
-        for t in &params_t {
-            state.push(Tensor::zeros(t.dtype, &t.shape).to_literal()?); // v
-        }
+        let zeros: Vec<Tensor> = params_t
+            .iter()
+            .map(|t| Tensor::zeros(t.dtype, &t.shape))
+            .collect();
+        let mut host = params_t;
+        host.extend(zeros.iter().cloned()); // m
+        host.extend(zeros); // v
+
+        let effective = match placement {
+            StatePlacement::Device if !spec.has_chain_map() => {
+                // stderr, not just log: no logger is installed in the
+                // binaries/benches and a silent fallback would let the
+                // bytes-per-step reports claim a device path that never ran
+                eprintln!(
+                    "WARNING: train artifact '{train_artifact}' declares no \
+                     chain_map — falling back to host-literal state (re-run \
+                     `make artifacts` for device-resident training)"
+                );
+                StatePlacement::Host
+            }
+            StatePlacement::Device => {
+                // the Trainer rebuilds every call as [step, tokens] ++ state,
+                // so the declared contract must be *exactly* loss → host,
+                // output j → input j+1 — a shifted or permuted map over the
+                // same-shaped state tensors would bind buffers to the wrong
+                // inputs with no runtime error otherwise
+                let map = spec.checked_chain_map()?;
+                let want: Vec<Option<usize>> = std::iter::once(None)
+                    .chain((0..3 * n_params).map(|i| Some(2 + i)))
+                    .collect();
+                if map != want {
+                    bail!(
+                        "train artifact '{train_artifact}' chain_map does not \
+                         match the trainer contract (loss -> host, output j -> \
+                         input j+1): got {map:?}"
+                    );
+                }
+                StatePlacement::Device
+            }
+            StatePlacement::Host => StatePlacement::Host,
+        };
+        let state = match effective {
+            StatePlacement::Device => TrainState::Device(
+                // one-time staging, accounted against the init artifact
+                // (mirrors the serving engine's param upload)
+                host.iter()
+                    .map(|t| runtime.upload_tensor_for(init_artifact, t))
+                    .collect::<Result<_>>()?,
+            ),
+            StatePlacement::Host => TrainState::Host(
+                host.iter().map(Tensor::to_literal).collect::<Result<_>>()?,
+            ),
+        };
         Ok(Trainer {
             runtime,
             artifact: train_artifact.to_string(),
@@ -103,16 +206,38 @@ impl Trainer {
         })
     }
 
+    /// Where the optimizer state actually lives (the requested placement
+    /// may have fallen back — see [`Self::new_with_placement`]).
+    pub fn placement(&self) -> StatePlacement {
+        match self.state {
+            TrainState::Device(_) => StatePlacement::Device,
+            TrainState::Host(_) => StatePlacement::Host,
+        }
+    }
+
+    /// Tokens consumed per artifact call.
     pub fn batch_tokens(&self) -> usize {
         self.batch * (self.seq_plus1 - 1) * self.chunk_steps
     }
 
+    /// Optimizer steps per artifact call (1 for single-step artifacts).
     pub fn chunk_steps(&self) -> usize {
         self.chunk_steps
     }
 
+    /// Model vocabulary size.
     pub fn vocab(&self) -> usize {
         self.vocab
+    }
+
+    /// Host-side size of one full `(params ++ m ++ v)` state copy in
+    /// bytes — the per-step traffic the device-resident path avoids.
+    pub fn state_bytes(&self) -> usize {
+        let spec = match self.runtime.spec(&self.artifact) {
+            Ok(s) => s,
+            Err(_) => return 0,
+        };
+        spec.inputs[2..].iter().map(|io| io.size_bytes()).sum()
     }
 
     /// Sample the next token batch from the corpus.
@@ -134,22 +259,58 @@ impl Trainer {
     /// Returns the mean cross-entropy of the call.
     pub fn step(&mut self) -> Result<f32> {
         let tokens = self.next_batch()?;
-        let step_l = Tensor::scalar_i32(self.step).to_literal()?;
-        let tok_l = tokens.to_literal()?;
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + self.state.len());
-        args.push(&step_l);
-        args.push(&tok_l);
-        for s in &self.state {
-            args.push(s);
-        }
-        let mut outs = self.runtime.run_literals(&self.artifact, &args)?;
-        // outs: [loss(es), params.., m.., v..]
         let n_state = 3 * self.n_params;
-        if outs.len() != 1 + n_state {
-            bail!("train artifact returned {} outputs, want {}", outs.len(), 1 + n_state);
-        }
-        let new_state: Vec<xla::Literal> = outs.split_off(1);
-        let loss_t = Tensor::from_literal(&outs[0])?;
+        let (loss_t, new_state) = match &self.state {
+            TrainState::Host(lits) => {
+                let step_l = Tensor::scalar_i32(self.step).to_literal()?;
+                let tok_l = tokens.to_literal()?;
+                let mut args: Vec<&xla::Literal> =
+                    Vec::with_capacity(2 + lits.len());
+                args.push(&step_l);
+                args.push(&tok_l);
+                for s in lits {
+                    args.push(s);
+                }
+                let mut outs = self.runtime.run_literals(&self.artifact, &args)?;
+                // outs: [loss(es), params.., m.., v..]
+                if outs.len() != 1 + n_state {
+                    bail!(
+                        "train artifact returned {} outputs, want {}",
+                        outs.len(),
+                        1 + n_state
+                    );
+                }
+                let new_state: Vec<xla::Literal> = outs.split_off(1);
+                let loss = Tensor::from_literal(&outs[0])?;
+                (loss, TrainState::Host(new_state))
+            }
+            TrainState::Device(bufs) => {
+                // steady-state host traffic: the step scalar + token
+                // batch up, the loss down — the state tuple stays on
+                // device, chained by the artifact's manifest chain_map
+                let step_b = self
+                    .runtime
+                    .upload_tensor_for(&self.artifact, &Tensor::scalar_i32(self.step))?;
+                let tok_b = self.runtime.upload_tensor_for(&self.artifact, &tokens)?;
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(2 + bufs.len());
+                args.push(&step_b);
+                args.push(&tok_b);
+                for b in bufs {
+                    args.push(b);
+                }
+                let mut chain = self.runtime.run_chain_step(&self.artifact, &args)?;
+                if chain.state.len() != n_state || chain.host.len() != 1 {
+                    bail!(
+                        "train artifact chained {} outputs / {} host, want {n_state} / 1",
+                        chain.state.len(),
+                        chain.host.len()
+                    );
+                }
+                let loss = chain.host.pop().unwrap();
+                (loss, TrainState::Device(chain.state))
+            }
+        };
         self.state = new_state;
         self.step += self.chunk_steps as i32;
         loss_t.mean()
@@ -177,12 +338,20 @@ impl Trainer {
         Ok(log)
     }
 
-    /// Current flattened parameters (downloads from literals).
+    /// Current flattened parameters, downloaded on demand (the
+    /// checkpoint/eval boundary — the only point device-resident state
+    /// crosses back to host, accounted against the train artifact).
     pub fn params_tensors(&self) -> Result<Vec<Tensor>> {
-        self.state[..self.n_params]
-            .iter()
-            .map(Tensor::from_literal)
-            .collect()
+        match &self.state {
+            TrainState::Host(lits) => lits[..self.n_params]
+                .iter()
+                .map(Tensor::from_literal)
+                .collect(),
+            TrainState::Device(bufs) => bufs[..self.n_params]
+                .iter()
+                .map(|b| self.runtime.download_for(&self.artifact, b))
+                .collect(),
+        }
     }
 
     /// Corpus conditional entropy (nats) — the loss floor for reporting.

@@ -2,9 +2,10 @@
 # Tier-1 verification gate (referenced from ROADMAP.md).
 #
 # Runs: cargo build --release && cargo test -q
-# plus  cargo fmt --check and cargo clippy -- -D warnings when those
-# components are installed (offline toolchains may lack them; the
-# build+test pair is the hard tier-1 contract).
+# plus  cargo fmt --check, cargo clippy -- -D warnings, and the rustdoc
+# gates (cargo doc -D warnings + cargo test --doc) when those components
+# are installed (offline toolchains may lack them; the build+test pair
+# is the hard tier-1 contract).
 #
 # Artifact-dependent integration tests self-skip when `make artifacts`
 # has not been run, so this gate is meaningful on a bare checkout too.
@@ -30,6 +31,18 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "== lint: clippy not installed, skipping =="
+fi
+
+# rustdoc gates: the crate is documented (#![warn(missing_docs)]) and the
+# docs must not rot — deny rustdoc warnings and run the doctests.
+if rustdoc --version >/dev/null 2>&1; then
+    echo "== docs: cargo doc --no-deps (-D warnings) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+    echo "== docs: cargo test --doc =="
+    cargo test --doc -q
+else
+    echo "== docs: rustdoc not installed, skipping =="
 fi
 
 echo "verify: OK"
