@@ -7,6 +7,7 @@
 //! ```
 
 use anyhow::Result;
+use scattermoe::benchkit::{write_report, Measurement};
 use scattermoe::cli::Cli;
 use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
 use scattermoe::metrics::{fmt_bytes, Histogram};
@@ -24,19 +25,29 @@ fn main() -> Result<()> {
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
     let mut engine = Engine::new(rt.clone(), EngineConfig::default())?;
+    let decode_name = match engine.kv_layout() {
+        scattermoe::coordinator::KvLayout::Paged => "serve_decode_paged",
+        scattermoe::coordinator::KvLayout::Dense => "serve_decode",
+    };
     println!(
-        "engine: {} decode slots, context {} ({} KV cache, {} splice) — warming up compile caches…",
+        "engine: {} decode slots, context {} ({:?} KV layout: {} vs dense {}, \
+         {} splice) — warming up compile caches…",
         engine.width(),
         engine.max_len(),
+        engine.kv_layout(),
         scattermoe::metrics::fmt_bytes(engine.cache_bytes() as u64),
+        scattermoe::metrics::fmt_bytes(engine.dense_cache_bytes() as u64),
         if engine.splices_on_device() { "on-device" } else { "HOST-FALLBACK" },
     );
+    if let Some((free, total)) = engine.page_budget() {
+        println!("paged pool: {free}/{total} pages free");
+    }
     // warmup: compile prefill+decode before timing
-    engine.submit(vec![3, 4, 5], SamplingParams { max_new_tokens: 2, ..Default::default() });
+    engine.submit(vec![3, 4, 5], SamplingParams { max_new_tokens: 2, ..Default::default() })?;
     engine.run_to_completion()?;
     // before-counter: host↔device traffic up to the start of the timed run
     let xfer_before = engine.transfer_totals();
-    let decode_before = rt.stats().get("serve_decode").cloned().unwrap_or_default();
+    let decode_before = rt.stats().get(decode_name).cloned().unwrap_or_default();
     let steps_before = engine.metrics.decode_steps;
 
     let n = a.get_usize("requests");
@@ -62,16 +73,14 @@ fn main() -> Result<()> {
         let now = started.elapsed().as_secs_f64();
         while next < n && t_arrive[next] <= now {
             let prompt = corpus.sample(4 + rng.below(20) as usize);
-            if engine
-                .submit(
-                    prompt,
-                    SamplingParams {
-                        max_new_tokens: a.get_usize("max-new"),
-                        ..Default::default()
-                    },
-                )
-                .is_none()
-            {
+            let queued = engine.submit(
+                prompt,
+                SamplingParams {
+                    max_new_tokens: a.get_usize("max-new"),
+                    ..Default::default()
+                },
+            )?;
+            if queued.is_none() {
                 rejected += 1;
             }
             next += 1;
@@ -153,7 +162,7 @@ fn main() -> Result<()> {
     // can't inflate (or mask) it.
     let xfer_after = engine.transfer_totals();
     let moved = xfer_after.since(&xfer_before);
-    let decode_after = rt.stats().get("serve_decode").cloned().unwrap_or_default();
+    let decode_after = rt.stats().get(decode_name).cloned().unwrap_or_default();
     let decode_moved = (decode_after.bytes_to_device - decode_before.bytes_to_device)
         + (decode_after.bytes_to_host - decode_before.bytes_to_host)
         + (decode_after.chain_bytes - decode_before.chain_bytes);
@@ -189,5 +198,37 @@ fn main() -> Result<()> {
     } else {
         println!("cache stayed device-resident: 0 fallback round-trips");
     }
+    if engine.metrics.page_appends + engine.metrics.page_stalls > 0 {
+        println!(
+            "paged coordinator: {} page appends, {} page-starvation stalls",
+            engine.metrics.page_appends, engine.metrics.page_stalls,
+        );
+    }
+
+    // machine-readable perf trajectory (compared across PRs by CI):
+    // tokens/s, decode bytes/step, and the cache footprint per layout
+    let mut e2e = Measurement::scalar(format!("serve e2e ({:?})", engine.kv_layout()), wall);
+    e2e.units_per_iter = total_tokens as f64;
+    e2e.set_transfers(&moved, 1);
+    let mut step = Measurement::scalar("decode step", wall / steps as f64);
+    step.runs = steps as usize;
+    step.units_per_iter = engine.width() as f64;
+    step.host_bytes_per_iter = per_step as f64;
+    step.up_bytes_per_iter =
+        (decode_after.bytes_to_device - decode_before.bytes_to_device) as f64 / steps as f64;
+    step.down_bytes_per_iter =
+        (decode_after.bytes_to_host - decode_before.bytes_to_host) as f64 / steps as f64;
+    step.chain_bytes_per_iter =
+        (decode_after.chain_bytes - decode_before.chain_bytes) as f64 / steps as f64;
+    let rows = vec![
+        e2e,
+        step,
+        Measurement::scalar("kv cache bytes (live layout)", engine.cache_bytes() as f64),
+        Measurement::scalar(
+            "kv cache bytes (dense worst case)",
+            engine.dense_cache_bytes() as f64,
+        ),
+    ];
+    write_report("bench_reports/BENCH_serve.json", "serve", &rows);
     Ok(())
 }

@@ -127,6 +127,17 @@ LM_SERVE = tr.ModelConfig(
 )
 SERVE_BATCH, SERVE_PROMPT, SERVE_MAXLEN = 8, 32, 160
 
+#: Paged KV cache geometry (serve_decode_paged / page_append).  Page 0 is
+#: reserved as the garbage page (see transformer.py), so the usable pool
+#: is ``SERVE_NUM_PAGES - 1`` pages.  The pool is deliberately provisioned
+#: at HALF the dense worst case (every slot at ``max_len`` would need
+#: ``B * pages_per_slot`` pages): serving memory tracks *actual* context
+#: lengths and the Rust coordinator queues admissions when pages run out.
+SERVE_PAGE = 16
+assert SERVE_MAXLEN % SERVE_PAGE == 0, "pages must tile max_len exactly"
+SERVE_PAGES_PER_SLOT = SERVE_MAXLEN // SERVE_PAGE
+SERVE_NUM_PAGES = 1 + (SERVE_BATCH * SERVE_PAGES_PER_SLOT) // 2
+
 MLP_IMPLS = ["scatter", "padded", "naive"]
 
 
@@ -400,6 +411,22 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
         take = (slot_mask != 0)[None, :, None, None, None]
         return (jnp.where(take, kc_new, kc), jnp.where(take, vc_new, vc))
 
+    # paged layout: shared page pools + per-slot block tables decouple
+    # pool memory from worst-case max_len (see transformer.py docs)
+    pool_shape = (L, SERVE_NUM_PAGES, SERVE_PAGE, nh, dh)
+    table_shape = (SERVE_BATCH, SERVE_PAGES_PER_SLOT)
+    paged_meta = dict(
+        page_size=SERVE_PAGE, num_pages=SERVE_NUM_PAGES,
+        pages_per_slot=SERVE_PAGES_PER_SLOT, page_reserved=1,
+    )
+
+    def decode_paged_fn(pos, tokens, block_table, kp, vp, *flat):
+        params = dict(zip(names, flat))
+        return tr.decode_step_paged(params, kp, vp, block_table, pos, tokens, cfg)
+
+    def page_append_fn(kp, vp, kc_new, vc_new, block_table, slot_mask):
+        return tr.page_append(kp, vp, kc_new, vc_new, block_table, slot_mask)
+
     return [
         Artifact(
             name="serve_prefill", fn=prefill_fn,
@@ -423,6 +450,27 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
                     ("slot_mask", (SERVE_BATCH,), I32)],
             # merged caches chain straight back as the live caches
             meta=dict(kind="kv_splice", chain_map=[0, 1], **meta),
+        ),
+        Artifact(
+            name="serve_decode_paged", fn=decode_paged_fn,
+            inputs=[("pos", (SERVE_BATCH,), I32), ("tokens", (SERVE_BATCH,), I32),
+                    ("block_table", table_shape, I32),
+                    ("k_pool", pool_shape, F32), ("v_pool", pool_shape, F32)]
+            + param_inputs,
+            # outputs [logits, k_pool, v_pool]: logits → host, pools
+            # chain back into inputs 3/4 of the next paged decode call
+            meta=dict(kind="serve_decode_paged", chain_map=[-1, 3, 4],
+                      **paged_meta, **meta),
+        ),
+        Artifact(
+            name="page_append", fn=page_append_fn,
+            inputs=[("k_pool", pool_shape, F32), ("v_pool", pool_shape, F32),
+                    ("k_new", cache_shape, F32), ("v_new", cache_shape, F32),
+                    ("block_table", table_shape, I32),
+                    ("slot_mask", (SERVE_BATCH,), I32)],
+            # appended pools chain straight back as the live pools
+            meta=dict(kind="page_append", chain_map=[0, 1],
+                      **paged_meta, **meta),
         ),
     ]
 

@@ -330,6 +330,108 @@ def decode_step(
     return logits, k_cache, v_cache
 
 
+# ----------------------- Paged KV cache (block tables) ---------------------
+#
+# The dense serving cache pads every slot to the worst-case ``max_len`` —
+# the attention-side analogue of the padded expert batches the paper's
+# kernels eliminate.  The paged layout stores KV rows in fixed-size
+# *pages* shared by all slots: pools of shape ``(L, num_pages, page_size,
+# nh, dh)`` plus a per-slot *block table* ``(B, pages_per_slot)`` of page
+# ids, so pool memory is proportional to the *actual* context lengths.
+#
+# **Page 0 is reserved** as a garbage page: block-table entries of slots
+# that hold no allocation (empty slots, or table positions beyond a
+# slot's allocated length) point at it, so every scatter/gather below is
+# unconditional — inactive slots' decode writes and masked-out prefill
+# rows all land on page 0, whose contents are never exposed (the live
+# mask only admits positions ``<= pos``, and the coordinator allocates
+# every page a live position can map to).  Active slots therefore see
+# bit-identical KV values to the dense layout.
+
+
+def decode_step_paged(
+    params: dict,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    pos: jax.Array,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step over paged KV pools (block-table attention).
+
+    ``k_pool``/``v_pool``: ``(L, num_pages, page_size, nh, dh)``;
+    ``block_table``: ``(B, pages_per_slot)`` int32 page ids (0 = the
+    reserved garbage page); ``pos``/``tokens``: ``(B,)`` as in
+    :func:`decode_step`.  Slot ``b``'s new KV row is scattered into page
+    ``block_table[b, pos[b] // page_size]`` at offset ``pos[b] %
+    page_size``; attention gathers its pages back into a contiguous
+    ``(B, pages_per_slot * page_size, nh, dh)`` view and masks positions
+    ``> pos[b]``.  Returns ``(logits (B, V), k_pool', v_pool')``.
+    """
+    b = tokens.shape[0]
+    nh, dh = cfg.n_heads, cfg.d_head
+    page_size = k_pool.shape[2]
+    pages_per_slot = block_table.shape[1]
+    max_len = pages_per_slot * page_size
+    barange = jnp.arange(b)
+    page_idx = block_table[barange, pos // page_size]  # (B,)
+    page_off = pos % page_size
+    x = params["embed"][tokens][:, None, :]  # (B, 1, d)
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        h = rms_norm(x, params[p + "norm1"], cfg.rms_eps)
+        q = (h[:, 0] @ params[p + "wq"]).reshape(b, nh, dh)
+        kk = (h[:, 0] @ params[p + "wk"]).reshape(b, nh, dh)
+        vv = (h[:, 0] @ params[p + "wv"]).reshape(b, nh, dh)
+        q = _rope_per_slot(q, pos, cfg.rope_theta)
+        kk = _rope_per_slot(kk, pos, cfg.rope_theta)
+        # duplicate targets only ever collide on the garbage page 0
+        k_pool = k_pool.at[layer, page_idx, page_off].set(kk)
+        v_pool = v_pool.at[layer, page_idx, page_off].set(vv)
+        keys = k_pool[layer][block_table].reshape(b, max_len, nh, dh)
+        vals = v_pool[layer][block_table].reshape(b, max_len, nh, dh)
+        scores = jnp.einsum("bhd,bshd->bhs", q, keys) * (dh ** -0.5)
+        live = jnp.arange(max_len)[None, :] <= pos[:, None]  # (B, max_len)
+        scores = jnp.where(live[:, None, :], scores, -jnp.inf)
+        o = jnp.einsum("bhs,bshd->bhd", jax.nn.softmax(scores, -1), vals)
+        x = x + (o.reshape(b, nh * dh) @ params[p + "wo"])[:, None, :]
+        h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
+        mlp_out, _ = _mlp(h, params, p, cfg)
+        x = x + mlp_out
+    x = rms_norm(x, params["norm_f"], cfg.rms_eps)
+    logits = x[:, 0] @ params["embed"].T
+    return logits, k_pool, v_pool
+
+
+def page_append(
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    block_table: jax.Array,
+    slot_mask: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter freshly prefilled dense cache rows into the paged pools.
+
+    ``k_new``/``v_new`` are the prefill artifact's dense caches
+    ``(L, B, max_len, nh, dh)``; slots whose ``slot_mask`` entry is
+    non-zero have their rows written, page-chunk by page-chunk, to the
+    pages named by their ``block_table`` row.  Masked-out slots (and
+    sentinel table entries) are redirected to the reserved page 0, so
+    in-flight slots' pages are never touched — the paged replacement for
+    ``kv_splice``'s mask-driven row select.
+    """
+    l_, b, _, nh, dh = k_new.shape
+    page_size = k_pool.shape[2]
+    pages_per_slot = block_table.shape[1]
+    span = pages_per_slot * page_size
+    dest = jnp.where(slot_mask[:, None] != 0, block_table, 0).reshape(-1)
+    k_src = k_new[:, :, :span].reshape(l_, b * pages_per_slot, page_size, nh, dh)
+    v_src = v_new[:, :, :span].reshape(l_, b * pages_per_slot, page_size, nh, dh)
+    return k_pool.at[:, dest].set(k_src), v_pool.at[:, dest].set(v_src)
+
+
 # --------------------------- Adam (from scratch) ---------------------------
 
 @dataclass(frozen=True)

@@ -167,3 +167,112 @@ def test_loss_fn_is_finite(tiny_params):
     total, ce = tr.loss_fn(tiny_params, toks, TINY)
     assert bool(jnp.isfinite(total)) and bool(jnp.isfinite(ce))
     assert float(total) >= float(ce)  # aux term is non-negative
+
+
+# ----------------------- paged KV cache (block tables) ----------------------
+
+
+def _pack_pool(kc, vc, block_tables, page_size, num_pages):
+    """Build pools + block-table array from dense caches (test helper)."""
+    l_, b, _, nh, dh = kc.shape
+    kp = jnp.zeros((l_, num_pages, page_size, nh, dh), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    for b_i, pages in enumerate(block_tables):
+        for j, pid in enumerate(pages):
+            lo = j * page_size
+            kp = kp.at[:, pid].set(kc[:, b_i, lo:lo + page_size])
+            vp = vp.at[:, pid].set(vc[:, b_i, lo:lo + page_size])
+    pps = max(len(p) for p in block_tables)
+    table = jnp.array(
+        [list(p) + [0] * (pps - len(p)) for p in block_tables], jnp.int32
+    )
+    return kp, vp, table
+
+
+def test_paged_decode_matches_dense_bitwise():
+    """Paged block-table decode is the SAME function as dense decode for
+    active slots: identical logits (bit-for-bit under jit on CPU) and
+    identical stored KV values, for ragged positions and out-of-order,
+    non-contiguous page assignments."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    b, max_len, page = 2, 16, 4
+    t1, t2 = 5, 8
+    width = max(t1, t2)
+    r1 = jax.random.randint(jax.random.PRNGKey(8), (t1,), 1, 64)
+    r2 = jax.random.randint(jax.random.PRNGKey(9), (t2,), 1, 64)
+    padded = jnp.stack([
+        jnp.pad(r1, (0, width - t1)), jnp.pad(r2, (0, width - t2))
+    ]).astype(jnp.int32)
+    lens = jnp.array([t1, t2], jnp.int32)
+    logits, kc, vc = tr.prefill(params, padded, lens, TINY, max_len)
+
+    # page assignments deliberately scrambled; page 0 stays reserved
+    tables = [[3, 7, 1, 5], [8, 2, 6, 4]]
+    kp, vp, table = _pack_pool(kc, vc, tables, page, num_pages=9)
+
+    dense = jax.jit(lambda kc, vc, pos, tok: tr.decode_step(
+        params, kc, vc, pos, tok, TINY))
+    paged = jax.jit(lambda kp, vp, bt, pos, tok: tr.decode_step_paged(
+        params, kp, vp, bt, pos, tok, TINY))
+
+    pos = lens
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(4):
+        ld, kc, vc = dense(kc, vc, pos, tok)
+        lp, kp, vp = paged(kp, vp, table, pos, tok)
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+        # the scattered rows hold the same values the dense cache does
+        for b_i, pages in enumerate(tables):
+            for j, pid in enumerate(pages):
+                lo = j * page
+                np.testing.assert_array_equal(
+                    np.asarray(kc[:, b_i, lo:lo + page]),
+                    np.asarray(kp[:, pid]),
+                )
+        tok = jnp.argmax(ld, -1).astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_paged_decode_inactive_slots_hit_garbage_page():
+    """Slots whose table is all-sentinel write only to page 0: every other
+    page is untouched by their decode traffic."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    page, num_pages, pps = 4, 6, 4
+    kp = jnp.zeros((TINY.n_layers, num_pages, page, TINY.n_heads, TINY.d_head))
+    vp = jnp.zeros_like(kp)
+    marker = kp.at[:, 1:].set(7.5)
+    table = jnp.zeros((2, pps), jnp.int32)  # both slots inactive
+    _, kp2, _ = tr.decode_step_paged(
+        params, marker, vp, table, jnp.zeros((2,), jnp.int32),
+        jnp.ones((2,), jnp.int32), TINY,
+    )
+    np.testing.assert_array_equal(np.asarray(kp2[:, 1:]), np.asarray(marker[:, 1:]))
+
+
+def test_page_append_writes_only_masked_slots():
+    """page_append ≡ kv_splice restricted to allocated pages: masked-in
+    slots' pages adopt the prefilled rows bit-for-bit, other pages are
+    untouched, and masked-out slots' traffic lands on page 0."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    b, max_len, page, pps = 2, 16, 4, 4
+    num_pages = 9
+    toks = jax.random.randint(jax.random.PRNGKey(6), (b, 7), 1, 64)
+    lens = jnp.full((b,), 7, jnp.int32)
+    _, kc, vc = tr.prefill(params, toks, lens, TINY, max_len)
+
+    tables = [[3, 7, 1, 5], [8, 2, 6, 4]]
+    table = jnp.array(tables, jnp.int32)
+    kp = jnp.full((TINY.n_layers, num_pages, page, TINY.n_heads, TINY.d_head), -2.0)
+    vp = jnp.full_like(kp, -3.0)
+    mask = jnp.array([1, 0], jnp.int32)  # refill slot 0 only
+    kp2, vp2 = tr.page_append(kp, vp, kc, vc, table, mask)
+
+    for j, pid in enumerate(tables[0]):  # masked-in slot: rows adopted
+        lo = j * page
+        np.testing.assert_array_equal(
+            np.asarray(kp2[:, pid]), np.asarray(kc[:, 0, lo:lo + page]))
+        np.testing.assert_array_equal(
+            np.asarray(vp2[:, pid]), np.asarray(vc[:, 0, lo:lo + page]))
+    for pid in tables[1]:  # masked-out slot: pages keep their old bytes
+        np.testing.assert_array_equal(np.asarray(kp2[:, pid]), np.asarray(kp[:, pid]))
+        np.testing.assert_array_equal(np.asarray(vp2[:, pid]), np.asarray(vp[:, pid]))

@@ -12,8 +12,12 @@ use scattermoe::benchkit::Measurement;
 use scattermoe::figbench::paper_check;
 use scattermoe::memmodel::{
     capacity_footprint, naive_footprint, padded_footprint, scatter_footprint,
-    scatter_vs_padded_ratio, MlpShape,
+    scatter_vs_padded_ratio, KvCacheShape, MlpShape,
 };
+
+fn mem_row(name: String, bytes: usize) -> Measurement {
+    Measurement::scalar(name, bytes as f64)
+}
 
 fn main() -> anyhow::Result<()> {
     let shape = MlpShape::paper_unit();
@@ -38,22 +42,14 @@ fn main() -> anyhow::Result<()> {
         );
         for fp in &fps {
             fp.print();
-            rows.push(Measurement {
-                name: format!(
+            rows.push(mem_row(
+                format!(
                     "{} {}",
                     fp.strategy,
                     if training { "train" } else { "infer" }
                 ),
-                runs: 1,
-                p5: fp.total() as f64,
-                median: fp.total() as f64,
-                p95: fp.total() as f64,
-                units_per_iter: 0.0,
-                host_bytes_per_iter: 0.0,
-                up_bytes_per_iter: 0.0,
-                down_bytes_per_iter: 0.0,
-                chain_bytes_per_iter: 0.0,
-            });
+                fp.total(),
+            ));
         }
     }
 
@@ -77,6 +73,47 @@ fn main() -> anyhow::Result<()> {
         "under 50% hot-expert skew the ratio improves to {:.1}% (padding grows)",
         tr_skew * 100.0
     );
+    // ---- serving KV cache: dense worst-case vs paged pools ----
+    // the same padding-elimination story on the attention side: the
+    // dense cache pads every slot to max_len, the paged pool holds only
+    // the pages actual contexts touch (+1 reserved garbage page)
+    let kv = KvCacheShape::serve_default();
+    println!(
+        "\n================ SERVING KV CACHE ================\n\
+         geometry: L={} B={} Tmax={} nh={} dh={} page={}",
+        kv.layers, kv.slots, kv.max_len, kv.n_heads, kv.d_head, kv.page_size
+    );
+    let dense = kv.dense_bytes();
+    let mut kv_rows = vec![mem_row("kv dense (worst case)".into(), dense)];
+    println!("  dense worst case: {:>10} bytes", dense);
+    for frac in [8, 4, 2, 1] {
+        let ctx = kv.max_len / frac;
+        let paged = kv.paged_bytes(&vec![ctx; kv.slots]);
+        println!(
+            "  paged @ mean ctx {:>4} ({:>4}% of Tmax): {:>10} bytes  ({:>5.1}% of dense)",
+            ctx,
+            100 / frac,
+            paged,
+            100.0 * paged as f64 / dense as f64
+        );
+        kv_rows.push(mem_row(format!("kv paged ctx={ctx}"), paged));
+    }
+    let crossover = kv.crossover_context();
+    println!(
+        "  paged is strictly smaller up to mean context {} / {} \
+         (crossover at {:.0}% of Tmax)",
+        crossover,
+        kv.max_len,
+        100.0 * crossover as f64 / kv.max_len as f64
+    );
+    paper_check(
+        "paged/dense cache ratio at Tmax/2 < 1",
+        0.5,
+        kv.paged_vs_dense_ratio(kv.max_len / 2),
+    );
+    rows.extend_from_slice(&kv_rows);
     write_report("bench_reports/fig4c.json", "4c", &rows);
+    // machine-readable trajectory: cache bytes per layout across PRs
+    write_report("bench_reports/BENCH_memory.json", "4c-kv", &kv_rows);
     Ok(())
 }

@@ -53,6 +53,25 @@ impl Measurement {
 }
 
 impl Measurement {
+    /// A single-value series (analytic byte counts, footprints): the
+    /// percentiles collapse onto `value` and every rate/transfer column
+    /// is zero.  Used by the memory/serving reports for rows that are
+    /// computed, not timed.
+    pub fn scalar(name: impl Into<String>, value: f64) -> Measurement {
+        Measurement {
+            name: name.into(),
+            runs: 1,
+            p5: value,
+            median: value,
+            p95: value,
+            units_per_iter: 0.0,
+            host_bytes_per_iter: 0.0,
+            up_bytes_per_iter: 0.0,
+            down_bytes_per_iter: 0.0,
+            chain_bytes_per_iter: 0.0,
+        }
+    }
+
     /// Work units per second at the median.
     pub fn throughput(&self) -> f64 {
         if self.median <= 0.0 {

@@ -109,6 +109,13 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// FIFO view of the admission queue (head first): the paged engine's
+    /// admission simulation reads prompt lengths and budgets without
+    /// popping anything.
+    pub fn queued_requests(&self) -> impl Iterator<Item = &Request> {
+        self.queue.iter()
+    }
+
     /// Waiting time (seconds) of the head-of-line request, 0 when the
     /// queue is empty.  FIFO admission means the front entry is the
     /// oldest — this is the scheduler's starvation signal.
@@ -138,10 +145,23 @@ impl Batcher {
     /// Fill empty slots from the queue (FIFO).  Returns the slot indices
     /// that now need a prefill.
     pub fn refill(&mut self) -> Vec<usize> {
+        self.refill_with(|_| true)
+    }
+
+    /// [`Self::refill`] gated by an admission predicate — the paged
+    /// engine's page-availability check.  `admit` sees each candidate
+    /// request *before* it is popped; the first rejection stops the
+    /// refill entirely (the head-of-line request keeps its place, so
+    /// FIFO admission order is preserved under page starvation —
+    /// later, smaller requests must not overtake it).
+    pub fn refill_with<F: FnMut(&Request) -> bool>(&mut self, mut admit: F) -> Vec<usize> {
         let mut filled = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if slot.state != SlotState::Empty {
                 continue;
+            }
+            if !self.queue.front().map(&mut admit).unwrap_or(false) {
+                break;
             }
             let Some(req) = self.queue.pop_front() else { break };
             // xor with a salt so seed 0 doesn't collapse onto Rng(0)
@@ -293,6 +313,46 @@ mod tests {
             }
             s => panic!("{s:?}"),
         }
+        assert_eq!(b.queue_len(), 2);
+    }
+
+    #[test]
+    fn gated_refill_preserves_fifo_under_starvation() {
+        // Page starvation: the head-of-line request is too big to admit.
+        // Later, smaller requests must NOT overtake it — the refill stops
+        // at the first rejection and everything stays queued in order.
+        let mut b = Batcher::new(4, 16);
+        b.submit(req(0, 30, 4)); // "big" — admission will reject it
+        b.submit(req(1, 2, 4));
+        b.submit(req(2, 2, 4));
+        let filled = b.refill_with(|r| r.prompt.len() <= 8);
+        assert!(filled.is_empty(), "nothing admitted past a blocked head");
+        assert_eq!(b.queue_len(), 3);
+        // once the gate opens (pages freed), admission resumes in order
+        let filled = b.refill_with(|_| true);
+        assert_eq!(filled, vec![0, 1, 2]);
+        match &b.slots()[0].state {
+            SlotState::Prefilling(id) => assert_eq!(id.0, 0, "head admitted first"),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn gated_refill_admits_prefix_until_budget_runs_out() {
+        // the admission closure models a shrinking page budget
+        let mut b = Batcher::new(4, 16);
+        for i in 0..4 {
+            b.submit(req(i, 4, 4));
+        }
+        let mut budget = 2;
+        let filled = b.refill_with(|_| {
+            if budget == 0 {
+                return false;
+            }
+            budget -= 1;
+            true
+        });
+        assert_eq!(filled, vec![0, 1], "exactly the affordable prefix");
         assert_eq!(b.queue_len(), 2);
     }
 

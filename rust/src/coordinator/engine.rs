@@ -21,6 +21,28 @@
 //! is absent from the manifest the engine falls back to a host-side
 //! splice, and the fallback's full-cache round-trip shows up in the
 //! runtime's transfer counters instead of being silently eaten.
+//!
+//! **KV layout.** Two on-device layouts carry the cache state
+//! ([`KvLayout`]):
+//!
+//! * [`KvLayout::Dense`] — per-slot caches `(L, B, Tmax, nh, dh)`,
+//!   every slot padded to the worst-case `max_len`.  The compatibility
+//!   baseline: artifact dirs that predate the paged lowering run here,
+//!   and the paged path is asserted bit-for-bit against it.
+//! * [`KvLayout::Paged`] — shared page pools
+//!   `(L, num_pages, page_size, nh, dh)` plus a per-slot block table,
+//!   driven by the `serve_decode_paged` / `page_append` artifacts.
+//!   Pool memory tracks *actual* context lengths instead of the worst
+//!   case; a [`crate::coordinator::pagetable::PageAllocator`] hands a
+//!   slot its full worst-case page need at admission and reclaims it at
+//!   retirement, and admission is gated on free *pages* (a page-starved
+//!   queue keeps decoding — FIFO order is preserved, nothing overtakes
+//!   the blocked head-of-line request).  Page 0 of the pool is a
+//!   reserved garbage page: sentinel block-table entries and inactive
+//!   slots' scatter traffic land there, never on live data.  Steady-
+//!   state decode stages the two `(B,)` vectors plus the
+//!   `(B, pages_per_slot)` block table up and the logits down — still
+//!   O(B), independent of both context length and pool size.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -29,6 +51,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::expert_stats::ExpertStats;
+use crate::coordinator::pagetable::{PageAllocator, RESERVED_PAGE};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
 use crate::metrics::Histogram;
@@ -48,6 +71,14 @@ pub struct EngineConfig {
     /// On-device partial-prefill cache merge; host-splice fallback when
     /// the manifest doesn't carry it (older artifact dirs).
     pub splice_artifact: String,
+    /// Block-table decode step over the paged KV pools.
+    pub paged_decode_artifact: String,
+    /// Prefill-rows → pool-pages scatter (the paged `kv_splice`).
+    pub page_append_artifact: String,
+    /// Run the paged layout when the manifest carries both paged
+    /// artifacts (`false` forces [`KvLayout::Dense`] — the equivalence
+    /// baseline the integration tests compare against).
+    pub prefer_paged: bool,
     /// Admission-queue bound (submissions beyond it are rejected).
     pub max_queue: usize,
     /// Prefill/decode interleaving policy.
@@ -63,6 +94,9 @@ impl Default for EngineConfig {
             decode_artifact: "serve_decode".into(),
             init_artifact: "lm_serve_init".into(),
             splice_artifact: "kv_splice".into(),
+            paged_decode_artifact: "serve_decode_paged".into(),
+            page_append_artifact: "page_append".into(),
+            prefer_paged: true,
             max_queue: 256,
             scheduler: SchedulerConfig::default(),
             seed: 0,
@@ -86,10 +120,50 @@ pub struct EngineMetrics {
     /// Partial-prefill cache merges that round-tripped through the host
     /// (artifact missing from the manifest).
     pub host_splices: u64,
+    /// Prefill-rows → pool-pages scatters executed on-device
+    /// (`page_append`, paged layout only).
+    pub page_appends: u64,
+    /// Prefill attempts deferred because the head-of-line request could
+    /// not get pages (the page-starvation wait state: the tick decoded
+    /// instead so retiring sequences free pages).
+    pub page_stalls: u64,
     /// Time-to-first-token distribution (seconds).
     pub ttft: Histogram,
     /// End-to-end latency distribution (seconds).
     pub latency: Histogram,
+}
+
+/// Which on-device layout carries the live KV state (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Dense per-slot caches `(L, B, Tmax, nh, dh)`, padded to the
+    /// worst-case `max_len` — the compatibility/equivalence baseline.
+    Dense,
+    /// Shared page pools `(L, num_pages, page_size, nh, dh)` addressed
+    /// through per-slot block tables; memory tracks actual contexts.
+    Paged,
+}
+
+/// Paged-layout coordinator state (block tables + page ownership).
+struct PagedState {
+    /// Free-list over the pool's page ids (page 0 reserved).
+    allocator: PageAllocator,
+    /// Block-table width (pages addressable per slot).
+    pages_per_slot: usize,
+    /// Per-slot allocated page ids, in position order; empty for free
+    /// slots.  Uploaded as the `(B, pages_per_slot)` block table with
+    /// [`RESERVED_PAGE`] filling the unallocated tail.
+    tables: Vec<Vec<u32>>,
+}
+
+impl PagedState {
+    /// Worst-case pages a request needs over its whole lifetime
+    /// (prompt + generation budget, clamped to the context span) —
+    /// allocated at admission so decode can never starve mid-flight.
+    fn pages_needed(&self, prompt_len: usize, max_new: usize, max_len: usize) -> usize {
+        let rows = (prompt_len.max(1) + max_new).min(max_len);
+        self.allocator.pages_for(rows)
+    }
 }
 
 /// The serving engine (see the module docs for the tick contract).
@@ -105,11 +179,19 @@ pub struct Engine {
     vocab: usize,
     /// model params as device-resident buffers (uploaded once)
     params: Vec<xla::PjRtBuffer>,
-    /// live KV caches — **device-resident**, chained output→input across
-    /// ticks; shape (L, B, Tmax, nh, dh) each
+    /// live KV state — **device-resident**, chained output→input across
+    /// ticks; dense caches (L, B, Tmax, nh, dh) or paged pools
+    /// (L, num_pages, page_size, nh, dh) depending on `layout`
     k_cache: xla::PjRtBuffer,
     v_cache: xla::PjRtBuffer,
     cache_shape: Vec<usize>,
+    /// bytes per cache element, read from the decode artifact's cache
+    /// input spec (bf16/f16 artifacts must not be accounted as f32)
+    cache_elem_bytes: usize,
+    /// which layout the buffers above hold
+    layout: KvLayout,
+    /// block tables + page allocator (paged layout only)
+    paged: Option<PagedState>,
     /// whether the manifest carries the on-device splice artifact
     has_device_splice: bool,
     /// per-slot next position (= current sequence length)
@@ -131,11 +213,92 @@ impl Engine {
         let width = prefill.inputs[0].shape[0];
         let prompt_width = prefill.inputs[0].shape[1];
         let decode = runtime.spec(&cfg.decode_artifact)?.clone();
-        let cache_spec = &decode.inputs[2];
-        let cache_shape = cache_spec.shape.clone();
-        let max_len = cache_shape[2];
+        let dense_cache_spec = &decode.inputs[2];
+        let dense_cache_shape = dense_cache_spec.shape.clone();
+        let max_len = dense_cache_shape[2];
         let vocab = decode.outputs[0].shape[1];
         let num_experts = prefill.meta_usize("num_experts").unwrap_or(8);
+
+        // Paged layout when the manifest carries both paged artifacts
+        // (dense stays the fallback for pre-paged artifact dirs and the
+        // equivalence baseline under `prefer_paged: false`).
+        let paged_specs = match (
+            runtime.manifest().get(&cfg.paged_decode_artifact),
+            runtime.manifest().get(&cfg.page_append_artifact),
+        ) {
+            (Ok(d), Ok(a)) if cfg.prefer_paged => Some((d.clone(), a.clone())),
+            _ => None,
+        };
+        let (layout, paged, cache_shape, cache_spec) = match &paged_specs {
+            None => {
+                if cfg.prefer_paged {
+                    log::info!(
+                        "engine: no '{}' / '{}' in manifest — dense KV layout",
+                        cfg.paged_decode_artifact,
+                        cfg.page_append_artifact
+                    );
+                }
+                (KvLayout::Dense, None, dense_cache_shape.clone(), dense_cache_spec)
+            }
+            Some((pd, pa)) => {
+                // validate the full paged contract before trusting it:
+                // meta geometry vs IO specs, both artifacts agreeing,
+                // span == max_len, batch width, dense-cache feed shape,
+                // and the declared output→input chains
+                let meta = pd.checked_paged_meta(3, 2)?;
+                let append_meta = pa.checked_paged_meta(0, 4)?;
+                anyhow::ensure!(
+                    meta == append_meta,
+                    "paged geometry disagrees: '{}' {meta:?} vs '{}' {append_meta:?}",
+                    cfg.paged_decode_artifact,
+                    cfg.page_append_artifact
+                );
+                anyhow::ensure!(
+                    meta.slot_span() == max_len,
+                    "paged slot span {} (pages_per_slot × page_size) must equal \
+                     the dense max_len {max_len}",
+                    meta.slot_span()
+                );
+                anyhow::ensure!(
+                    pd.inputs[2].shape[0] == width,
+                    "paged block table is {}-wide but the batch has {width} slots",
+                    pd.inputs[2].shape[0]
+                );
+                anyhow::ensure!(
+                    pa.inputs[2].shape == dense_cache_shape,
+                    "'{}' k_new input {:?} must take the dense prefill cache {:?}",
+                    cfg.page_append_artifact,
+                    pa.inputs[2].shape,
+                    dense_cache_shape
+                );
+                let map = pd.checked_chain_map()?;
+                anyhow::ensure!(
+                    map == [None, Some(3), Some(4)],
+                    "artifact '{}' chain_map {map:?} does not match the \
+                     engine's paged decode contract [-1, 3, 4]",
+                    cfg.paged_decode_artifact
+                );
+                let map = pa.checked_chain_map()?;
+                anyhow::ensure!(
+                    map == [Some(0), Some(1)],
+                    "artifact '{}' chain_map {map:?} does not match the \
+                     engine's page-append contract [0, 1]",
+                    cfg.page_append_artifact
+                );
+                let state = PagedState {
+                    allocator: PageAllocator::new(meta.num_pages, meta.page_size),
+                    pages_per_slot: meta.pages_per_slot,
+                    tables: vec![Vec::new(); width],
+                };
+                (
+                    KvLayout::Paged,
+                    Some(state),
+                    pd.inputs[3].shape.clone(),
+                    &pd.inputs[3],
+                )
+            }
+        };
+        let cache_elem_bytes = cache_spec.dtype.size_bytes();
 
         // Cross-check the manifest-declared chaining contract against the
         // consumption order hard-wired into do_decode / splice_cache_rows
@@ -188,11 +351,21 @@ impl Engine {
             t0.elapsed().as_secs_f64()
         );
 
-        // the caches are uploaded exactly once (zeros); afterwards they
-        // only ever move device→device through decode/prefill/splice
-        let zeros = Tensor::zeros(crate::tensor::DType::F32, &cache_shape);
+        // the caches/pools are uploaded exactly once (zeros); afterwards
+        // they only ever move device→device through decode/prefill/merge
+        let zeros = Tensor::zeros(cache_spec.dtype, &cache_shape);
         let k_cache = runtime.upload_tensor_for("kv_cache_init", &zeros)?;
         let v_cache = runtime.upload_tensor_for("kv_cache_init", &zeros)?;
+        if let Some(ps) = &paged {
+            log::info!(
+                "engine: paged KV layout — {} pages × {} rows ({} usable) \
+                 vs dense worst case {} rows",
+                ps.allocator.num_pages(),
+                ps.allocator.page_size(),
+                ps.allocator.usable_pages(),
+                width * max_len,
+            );
+        }
         Ok(Engine {
             batcher: Batcher::new(width, cfg.max_queue),
             scheduler: Scheduler::new(cfg.scheduler),
@@ -204,6 +377,9 @@ impl Engine {
             k_cache,
             v_cache,
             cache_shape,
+            cache_elem_bytes,
+            layout,
+            paged,
             has_device_splice,
             pos: vec![0; width],
             last_token: vec![0; width],
@@ -225,11 +401,32 @@ impl Engine {
         self.max_len
     }
 
-    /// Total bytes of the two live KV caches (the traffic a host
-    /// round-trip per tick would cost — the quantity this engine avoids).
+    /// Total bytes of the two live KV buffers — dense caches or paged
+    /// pools, whichever this engine runs (the traffic a host round-trip
+    /// per tick would cost — the quantity this engine avoids).  Element
+    /// size comes from the decode artifact's cache input spec, so bf16/
+    /// f16 artifacts report correct bytes.
     pub fn cache_bytes(&self) -> usize {
-        2 * self.cache_shape.iter().product::<usize>()
-            * crate::tensor::DType::F32.size_bytes()
+        2 * self.cache_shape.iter().product::<usize>() * self.cache_elem_bytes
+    }
+
+    /// Total bytes two *dense* worst-case caches would occupy — the
+    /// baseline the paged pool is compared against in reports.
+    pub fn dense_cache_bytes(&self) -> usize {
+        let row: usize = self.cache_shape[3..].iter().product();
+        2 * self.cache_shape[0] * self.width * self.max_len * row * self.cache_elem_bytes
+    }
+
+    /// Which on-device layout carries the KV state.
+    pub fn kv_layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    /// Free / total usable pool pages (`None` on the dense layout).
+    pub fn page_budget(&self) -> Option<(usize, usize)> {
+        self.paged
+            .as_ref()
+            .map(|p| (p.allocator.free_pages(), p.allocator.usable_pages()))
     }
 
     /// True when partial prefills merge cache rows on-device.
@@ -237,30 +434,87 @@ impl Engine {
         self.has_device_splice
     }
 
-    /// Submit a request; returns its id, or None under backpressure.
-    pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Option<RequestId> {
+    /// Submit a request: `Ok(Some(id))` when queued, `Ok(None)` under
+    /// queue backpressure (retry later), `Err` when the request can
+    /// *never* be served — a prompt longer than the artifact's prompt
+    /// width (silent truncation would corrupt the generation), or a
+    /// worst-case page need exceeding the whole pool.
+    pub fn submit(
+        &mut self, prompt: Vec<i32>, params: SamplingParams,
+    ) -> Result<Option<RequestId>> {
+        anyhow::ensure!(
+            prompt.len() <= self.prompt_width,
+            "prompt of {} tokens exceeds the compiled prompt width {} — \
+             rejected instead of silently truncating",
+            prompt.len(),
+            self.prompt_width
+        );
+        if let Some(ps) = &self.paged {
+            let need = ps.pages_needed(prompt.len(), params.max_new_tokens, self.max_len);
+            anyhow::ensure!(
+                need <= ps.allocator.usable_pages(),
+                "request needs {need} KV pages worst-case but the pool \
+                 only holds {} — it could never be admitted",
+                ps.allocator.usable_pages()
+            );
+        }
         let id = self.next_id;
         self.next_id += 1;
         let req = Request::new(id, prompt, params);
         let rid = req.id;
         if self.batcher.submit(req) {
-            Some(rid)
+            Ok(Some(rid))
         } else {
-            None
+            Ok(None)
         }
+    }
+
+    /// Requests the scheduler may admit *this* tick: the whole queue on
+    /// the dense layout, or the FIFO prefix whose worst-case page needs
+    /// fit the free pool on the paged one (nothing overtakes a blocked
+    /// head-of-line request — the allocator is only simulated here; real
+    /// allocation happens in the refill admission gate).
+    fn admissible_now(&self, queued: usize, empty: usize) -> usize {
+        let Some(ps) = &self.paged else { return queued };
+        let mut free = ps.allocator.free_pages();
+        let mut admissible = 0usize;
+        for req in self.batcher.queued_requests().take(queued.min(empty)) {
+            let need =
+                ps.pages_needed(req.prompt.len(), req.params.max_new_tokens, self.max_len);
+            if need > free {
+                break;
+            }
+            free -= need;
+            admissible += 1;
+        }
+        admissible
     }
 
     /// Drive one tick; returns any responses completed during it.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.width - active as usize;
+        let admissible = self.admissible_now(queued as usize, empty);
+        if admissible == 0 && queued > 0 && empty > 0 {
+            // page starvation: the queue must wait for retirements
+            self.metrics.page_stalls += 1;
+        }
         // real head-of-line wait so the starvation bound can fire
         let oldest = self.batcher.oldest_wait();
-        let action = self.scheduler.decide(queued as usize, empty, active as usize, oldest);
+        let action = self.scheduler.decide(admissible, empty, active as usize, oldest);
         match action {
             Action::Prefill => self.do_prefill(),
             Action::Decode => self.do_decode(),
-            Action::Idle => Ok(Vec::new()),
+            Action::Idle => {
+                // liveness guard: Idle with work anywhere means the page
+                // accounting broke — error loudly instead of letting
+                // run_to_completion spin forever
+                anyhow::ensure!(
+                    self.batcher.idle(),
+                    "scheduler idled with work queued or in flight"
+                );
+                Ok(Vec::new())
+            }
         }
     }
 
@@ -274,9 +528,39 @@ impl Engine {
     }
 
     fn do_prefill(&mut self) -> Result<Vec<Response>> {
-        let filled = self.batcher.refill();
+        // paged admission gate: a request enters a slot only if its
+        // worst-case page need can be allocated RIGHT NOW (freed again
+        // at retirement); the first refusal stops the refill so FIFO
+        // order survives page starvation
+        let filled = match &mut self.paged {
+            None => self.batcher.refill(),
+            Some(ps) => {
+                let max_len = self.max_len;
+                let mut granted: Vec<Vec<u32>> = Vec::new();
+                let allocator = &mut ps.allocator;
+                let filled = self.batcher.refill_with(|req| {
+                    let rows =
+                        (req.prompt.len().max(1) + req.params.max_new_tokens).min(max_len);
+                    match allocator.alloc(allocator.pages_for(rows)) {
+                        Some(pages) => {
+                            granted.push(pages);
+                            true
+                        }
+                        None => false,
+                    }
+                });
+                debug_assert_eq!(filled.len(), granted.len());
+                for (&slot, pages) in filled.iter().zip(granted) {
+                    ps.tables[slot] = pages;
+                }
+                filled
+            }
+        };
         if filled.is_empty() {
-            return Ok(Vec::new());
+            // page-starved (or raced-empty) prefill: fall through to a
+            // decode step so in-flight sequences retire and free pages —
+            // returning without progress would let run_to_completion spin
+            return self.do_decode();
         }
         self.metrics.prefills += 1;
         // build padded prompt matrix for the WHOLE batch (static shape);
@@ -315,8 +599,12 @@ impl Engine {
         let kc_new = outs.pop().unwrap().into_buffer()?;
         let logits = outs.pop().unwrap().into_host()?;
 
-        // splice ONLY the refilled slots' cache rows into the live cache
-        self.splice_cache_rows(kc_new, vc_new, &filled)?;
+        // merge ONLY the refilled slots' rows into the live KV state —
+        // dense row splice, or page-table scatter on the paged layout
+        match self.layout {
+            KvLayout::Dense => self.splice_cache_rows(kc_new, vc_new, &filled)?,
+            KvLayout::Paged => self.append_pages(kc_new, vc_new, &filled)?,
+        }
 
         let mut responses = Vec::new();
         for &i in &filled {
@@ -339,19 +627,33 @@ impl Engine {
             return Ok(Vec::new());
         }
         self.metrics.decode_steps += 1;
-        // steady-state host traffic: two (B,) i32 vectors up, one (B, V)
+        // steady-state host traffic: two (B,) i32 vectors (plus the
+        // (B, pages_per_slot) block table when paged) up, one (B, V)
         // logits matrix down — independent of the KV-cache size
-        let pos_b = self.runtime.upload_tensor_for(
-            &self.cfg.decode_artifact,
-            &Tensor::from_i32(&[self.width], self.pos.clone())?,
-        )?;
+        let artifact = match self.layout {
+            KvLayout::Dense => self.cfg.decode_artifact.clone(),
+            KvLayout::Paged => self.cfg.paged_decode_artifact.clone(),
+        };
+        let pos_b = self
+            .runtime
+            .upload_tensor_for(&artifact, &Tensor::from_i32(&[self.width], self.pos.clone())?)?;
         let tok_b = self.runtime.upload_tensor_for(
-            &self.cfg.decode_artifact,
+            &artifact,
             &Tensor::from_i32(&[self.width], self.last_token.clone())?,
         )?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + self.params.len());
+        let table_b = match self.layout {
+            KvLayout::Dense => None,
+            KvLayout::Paged => Some(
+                self.runtime
+                    .upload_tensor_for(&artifact, &self.block_table_tensor()?)?,
+            ),
+        };
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(5 + self.params.len());
         args.push(&pos_b);
         args.push(&tok_b);
+        if let Some(t) = &table_b {
+            args.push(t);
+        }
         args.push(&self.k_cache);
         args.push(&self.v_cache);
         for p in &self.params {
@@ -361,8 +663,8 @@ impl Engine {
         // the next tick without ever being materialized on host
         let mut outs = self
             .runtime
-            .run_chained(&self.cfg.decode_artifact, &args, &[0])
-            .context("serve_decode")?;
+            .run_chained(&artifact, &args, &[0])
+            .context("serve decode step")?;
         self.v_cache = outs.pop().unwrap().into_buffer()?;
         self.k_cache = outs.pop().unwrap().into_buffer()?;
         let logits = outs.pop().unwrap().into_host()?;
@@ -382,10 +684,34 @@ impl Engine {
 
     fn maybe_finish(&mut self, slot: usize, tok: i32) -> Option<Response> {
         let resp = self.batcher.push_token(slot, tok)?;
+        // retirement frees the slot's pages for the next admission
+        // (copy-free reuse: stale page contents are masked exactly like
+        // the dense layout's stale rows)
+        if let Some(ps) = &mut self.paged {
+            let pages = std::mem::take(&mut ps.tables[slot]);
+            if !pages.is_empty() {
+                ps.allocator.free(pages);
+            }
+        }
         self.metrics.completed += 1;
         self.metrics.ttft.record(resp.ttft);
         self.metrics.latency.record(resp.latency);
         Some(resp)
+    }
+
+    /// The `(B, pages_per_slot)` i32 block table for the current slot
+    /// assignments; unallocated tail entries point at the reserved
+    /// garbage page.
+    fn block_table_tensor(&self) -> Result<Tensor> {
+        let ps = self.paged.as_ref().expect("paged layout");
+        let pps = ps.pages_per_slot;
+        let mut bt = vec![RESERVED_PAGE as i32; self.width * pps];
+        for (slot, pages) in ps.tables.iter().enumerate() {
+            for (j, &p) in pages.iter().enumerate() {
+                bt[slot * pps + j] = p as i32;
+            }
+        }
+        Tensor::from_i32(&[self.width, pps], bt)
     }
 
     /// Sample one batch row with the slot's own [`SamplingParams`] and
@@ -444,6 +770,40 @@ impl Engine {
         self.k_cache = self.runtime.upload_tensor_for(&name, &kc)?;
         self.v_cache = self.runtime.upload_tensor_for(&name, &vc)?;
         self.metrics.host_splices += 1;
+        Ok(())
+    }
+
+    /// Scatter the refilled `slots`' freshly prefilled cache rows into
+    /// the live page pools through the `page_append` artifact: the
+    /// `(B,)` slot mask selects which batch rows to take and the block
+    /// table names their destination pages (masked-out slots' traffic is
+    /// routed to the reserved garbage page inside the artifact, so
+    /// in-flight slots' pages are never touched).  All buffers stay on
+    /// device; only the mask and table are staged.
+    fn append_pages(
+        &mut self, kc_new: xla::PjRtBuffer, vc_new: xla::PjRtBuffer, slots: &[usize],
+    ) -> Result<()> {
+        let name = self.cfg.page_append_artifact.clone();
+        let mut mask = vec![0i32; self.width];
+        for &s in slots {
+            anyhow::ensure!(s < self.width, "slot out of range");
+            mask[s] = 1;
+        }
+        let mask_b = self
+            .runtime
+            .upload_tensor_for(&name, &Tensor::from_i32(&[self.width], mask)?)?;
+        let table_b = self
+            .runtime
+            .upload_tensor_for(&name, &self.block_table_tensor()?)?;
+        let args: Vec<&xla::PjRtBuffer> =
+            vec![&self.k_cache, &self.v_cache, &kc_new, &vc_new, &table_b, &mask_b];
+        let mut outs = self
+            .runtime
+            .run_buffers_to_buffers(&name, &args)
+            .context("page_append")?;
+        self.v_cache = outs.pop().unwrap();
+        self.k_cache = outs.pop().unwrap();
+        self.metrics.page_appends += 1;
         Ok(())
     }
 
@@ -570,6 +930,19 @@ mod tests {
             assert!(copied < n, "k={k} must not copy the whole cache");
             assert_eq!(copied * 8, n * k, "copied fraction = k/B");
         }
+    }
+
+    #[test]
+    fn pages_needed_covers_lifetime_and_clamps() {
+        let ps = PagedState {
+            allocator: PageAllocator::new(41, 16),
+            pages_per_slot: 10,
+            tables: Vec::new(),
+        };
+        assert_eq!(ps.pages_needed(6, 8, 160), 1, "14 rows fit one page");
+        assert_eq!(ps.pages_needed(30, 40, 160), 5, "70 rows need 5 pages");
+        assert_eq!(ps.pages_needed(100, 500, 160), 10, "clamped to max_len");
+        assert_eq!(ps.pages_needed(0, 4, 160), 1, "empty prompt still holds a row");
     }
 
     #[test]

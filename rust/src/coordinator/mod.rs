@@ -11,6 +11,8 @@
 //!   decode step).
 //! * [`scheduler`] — prefill/decode interleaving policy and admission
 //!   control with backpressure.
+//! * [`pagetable`] — free-list page allocator for the paged KV cache
+//!   (block-table serving layout; admission gated on free pages).
 //! * [`expert_stats`] — per-expert routing load telemetry (the paper's
 //!   imbalance story made observable: padding waste, load CV).
 //! * [`trace`]    — reproducible arrival-process generation (Poisson,
@@ -21,12 +23,14 @@
 pub mod batcher;
 pub mod engine;
 pub mod expert_stats;
+pub mod pagetable;
 pub mod request;
 pub mod scheduler;
 pub mod trace;
 
 pub use batcher::{Batcher, Slot, SlotState};
-pub use engine::{sample_logits, Engine, EngineConfig, EngineMetrics};
+pub use engine::{sample_logits, Engine, EngineConfig, EngineMetrics, KvLayout};
 pub use expert_stats::ExpertStats;
+pub use pagetable::{PageAllocator, RESERVED_PAGE};
 pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};
 pub use scheduler::{Scheduler, SchedulerConfig};

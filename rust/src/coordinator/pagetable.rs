@@ -1,0 +1,187 @@
+//! Free-list page allocator for the paged KV cache.
+//!
+//! The paged serving layout stores KV rows in fixed-size pages shared by
+//! every decode slot (pools of shape `(L, num_pages, page_size, nh, dh)`
+//! on device); this allocator owns the *page ids*.  The engine allocates
+//! a slot's full worst-case need (`ceil((prompt + max_new) / page_size)`
+//! pages) at admission and frees it when the sequence retires, so a
+//! decode step can never run out of pages mid-flight and page reuse is
+//! copy-free — a freed page is handed to the next admission as-is, its
+//! stale contents masked by the attention live-mask exactly like the
+//! dense layout's stale rows.
+//!
+//! **Page 0 is reserved** as the garbage page: the lowered artifacts
+//! route every inactive slot's scatter traffic and every sentinel
+//! block-table entry there, so it must never be handed out.
+//!
+//! Invariants (unit-tested below, exercised end-to-end by the
+//! integration tests):
+//! * conservation: `free_pages() + outstanding() == usable_pages()`;
+//! * no double-allocation: a page id is owned by at most one slot;
+//! * exhaustion is a clean `None` (the caller queues the admission),
+//!   never a partial allocation.
+
+/// The reserved garbage page id (see module docs).
+pub const RESERVED_PAGE: u32 = 0;
+
+/// Free-list allocator over the pool's page ids.
+#[derive(Clone, Debug)]
+pub struct PageAllocator {
+    /// Pages available for allocation (stack: last freed, first reused).
+    free: Vec<u32>,
+    /// Ownership bitmap over all page ids (guards double alloc/free).
+    allocated: Vec<bool>,
+    /// Total pages in the pool, including the reserved page.
+    num_pages: usize,
+    /// Rows per page.
+    page_size: usize,
+}
+
+impl PageAllocator {
+    /// Allocator over `num_pages` pool pages of `page_size` rows each;
+    /// page [`RESERVED_PAGE`] is held back as the garbage page.
+    pub fn new(num_pages: usize, page_size: usize) -> Self {
+        assert!(num_pages > 1, "pool must hold the reserved page plus data");
+        assert!(page_size > 0, "pages must hold at least one row");
+        // ascending ids pop from the high end; deterministic either way
+        let free: Vec<u32> = (1..num_pages as u32).collect();
+        let mut allocated = vec![false; num_pages];
+        allocated[RESERVED_PAGE as usize] = true; // never handed out
+        PageAllocator { free, allocated, num_pages, page_size }
+    }
+
+    /// Rows per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Total pages in the pool (including the reserved page).
+    pub fn num_pages(&self) -> usize {
+        self.num_pages
+    }
+
+    /// Pages that can ever be allocated (`num_pages - 1`).
+    pub fn usable_pages(&self) -> usize {
+        self.num_pages - 1
+    }
+
+    /// Pages currently available.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently held by slots.
+    pub fn outstanding(&self) -> usize {
+        self.usable_pages() - self.free.len()
+    }
+
+    /// Pages needed to hold `rows` KV rows (`ceil(rows / page_size)`).
+    pub fn pages_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_size)
+    }
+
+    /// Allocate `n` pages, or `None` (state untouched) if fewer than `n`
+    /// are free — exhaustion is the caller's queue-or-reject signal.
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
+        if n > self.free.len() {
+            return None;
+        }
+        let pages = self.free.split_off(self.free.len() - n);
+        for &p in &pages {
+            debug_assert!(!self.allocated[p as usize], "double allocation");
+            self.allocated[p as usize] = true;
+        }
+        Some(pages)
+    }
+
+    /// Return pages to the free list (slot retirement).
+    ///
+    /// Panics on double-free or on freeing the reserved page — both are
+    /// coordinator bugs that would silently corrupt another slot's KV
+    /// state if let through.
+    pub fn free(&mut self, pages: Vec<u32>) {
+        for p in pages {
+            assert_ne!(p, RESERVED_PAGE, "freed the reserved garbage page");
+            assert!(
+                (p as usize) < self.num_pages && self.allocated[p as usize],
+                "double free of page {p}"
+            );
+            self.allocated[p as usize] = false;
+            self.free.push(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_over_alloc_free_round_trips() {
+        let mut a = PageAllocator::new(17, 16);
+        assert_eq!(a.usable_pages(), 16);
+        assert_eq!(a.free_pages(), 16);
+        let p1 = a.alloc(5).unwrap();
+        let p2 = a.alloc(7).unwrap();
+        assert_eq!(a.free_pages() + a.outstanding(), a.usable_pages());
+        assert_eq!(a.outstanding(), 12);
+        a.free(p1);
+        assert_eq!(a.free_pages(), 9);
+        a.free(p2);
+        assert_eq!(a.free_pages(), 16);
+        assert_eq!(a.outstanding(), 0);
+    }
+
+    #[test]
+    fn never_hands_out_the_reserved_page_or_duplicates() {
+        let mut a = PageAllocator::new(9, 4);
+        let mut seen = std::collections::HashSet::new();
+        let pages = a.alloc(8).unwrap();
+        for p in pages {
+            assert_ne!(p, RESERVED_PAGE, "reserved page allocated");
+            assert!(seen.insert(p), "page {p} allocated twice");
+        }
+        assert_eq!(seen.len(), 8);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_and_preserves_state() {
+        let mut a = PageAllocator::new(5, 4);
+        let held = a.alloc(3).unwrap();
+        assert!(a.alloc(2).is_none(), "only 1 page left");
+        assert_eq!(a.free_pages(), 1, "failed alloc must not consume pages");
+        assert!(a.alloc(1).is_some());
+        a.free(held);
+        assert_eq!(a.free_pages(), 3);
+    }
+
+    #[test]
+    fn freed_pages_are_reused_without_growth() {
+        let mut a = PageAllocator::new(4, 8);
+        for _ in 0..100 {
+            let p = a.alloc(3).unwrap();
+            a.free(p);
+        }
+        assert_eq!(a.free_pages(), 3);
+        assert_eq!(a.outstanding(), 0);
+    }
+
+    #[test]
+    fn pages_for_rounds_up() {
+        let a = PageAllocator::new(8, 16);
+        assert_eq!(a.pages_for(1), 1);
+        assert_eq!(a.pages_for(16), 1);
+        assert_eq!(a.pages_for(17), 2);
+        assert_eq!(a.pages_for(160), 10);
+        assert_eq!(a.pages_for(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = PageAllocator::new(4, 4);
+        let p = a.alloc(1).unwrap();
+        a.free(p.clone());
+        a.free(p);
+    }
+}

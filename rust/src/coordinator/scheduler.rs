@@ -54,10 +54,20 @@ impl Scheduler {
 
     /// Decide the next action.
     ///
-    /// * `queued` — requests waiting for a slot,
+    /// * `queued` — requests that could be admitted *right now* (the
+    ///   paged engine passes the FIFO prefix whose pages fit in the free
+    ///   pool, not the raw queue length — a page-starved queue must read
+    ///   as "nothing to prefill" so the batch keeps decoding and frees
+    ///   pages),
     /// * `empty_slots` — free decode slots,
     /// * `active` — slots currently decoding,
     /// * `oldest_wait_s` — waiting time of the head-of-line request.
+    ///
+    /// Liveness: the decision is `Idle` only when `queued == 0 &&
+    /// active == 0` — whenever admissible or in-flight work exists, the
+    /// engine is told to make progress (property-tested below; the
+    /// page-starvation case relies on it to drain the batch rather than
+    /// spin).
     pub fn decide(
         &self, queued: usize, empty_slots: usize, active: usize,
         oldest_wait_s: f64,
@@ -125,5 +135,40 @@ mod tests {
     #[test]
     fn drains_in_flight_work() {
         assert_eq!(sched().decide(0, 6, 2, 0.0), Action::Decode);
+    }
+
+    #[test]
+    fn never_idle_while_work_exists() {
+        // Liveness sweep: any state with admissible or in-flight work
+        // must yield progress (guards the page-starvation wait states —
+        // run_to_completion spins forever on a wrong Idle).
+        let s = sched();
+        for width in 1..=4usize {
+            for active in 0..=width {
+                let empty = width - active;
+                for queued in 0..4usize {
+                    for wait in [0.0, 10.0] {
+                        let a = s.decide(queued, empty, active, wait);
+                        if queued > 0 || active > 0 {
+                            assert_ne!(
+                                a,
+                                Action::Idle,
+                                "idle at queued={queued} empty={empty} active={active}"
+                            );
+                        } else {
+                            assert_eq!(a, Action::Idle);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn page_starved_queue_decodes_instead_of_prefilling() {
+        // the engine reports admissible=0 when the head-of-line request
+        // cannot get pages; the batch must keep decoding (which retires
+        // slots and frees pages) rather than attempt an empty prefill
+        assert_eq!(sched().decide(0, 2, 6, 99.0), Action::Decode);
     }
 }

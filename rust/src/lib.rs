@@ -21,13 +21,19 @@
 //! and copies — is applied to both run-time loops.  Loop-carried state
 //! lives as `xla::PjRtBuffer`s chained output→input across calls:
 //!
-//! * **Serving** ([`coordinator`]): model params and the stacked
-//!   `(L, B, Tmax, nh, dh)` KV caches flow through
-//!   [`runtime::Runtime::run_chained`]; a decode tick stages only the
-//!   `(B,)` position/last-token vectors up and the `(B, V)` logits down.
-//!   Partial prefills merge refilled slots' cache rows on-device through
-//!   the `kv_splice` artifact, with a host-splice fallback when an older
-//!   artifact dir lacks it.
+//! * **Serving** ([`coordinator`]): model params and the KV state flow
+//!   through [`runtime::Runtime::run_chained`]; a decode tick stages
+//!   only the `(B,)` position/last-token vectors (plus the `(B,
+//!   pages_per_slot)` block table on the paged layout) up and the
+//!   `(B, V)` logits down.  The KV state is **block-table paged** by
+//!   default ([`coordinator::KvLayout::Paged`]): shared page pools
+//!   `(L, num_pages, page_size, nh, dh)` sized to *actual* context
+//!   lengths instead of the dense worst-case `(L, B, Tmax, nh, dh)`
+//!   block, with admission gated on free pages
+//!   ([`coordinator::pagetable`]).  Partial prefills merge refilled
+//!   slots' rows on-device through `page_append` (paged) or `kv_splice`
+//!   (dense), with a host-splice fallback when an older artifact dir
+//!   lacks both.
 //! * **Training** ([`train`]): the flattened `(params ++ m ++ v)`
 //!   optimizer state — an order of magnitude wider than the KV-cache
 //!   tuple — chains through [`runtime::Runtime::run_chain_step`], driven

@@ -147,11 +147,18 @@ fn serve(args: &[String]) -> Result<()> {
     let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
     let rt = open_runtime(a.get("artifacts"))?;
     let mut engine = Engine::new(rt, EngineConfig::default())?;
-    println!("engine up: {} slots, max_len {}", engine.width(), engine.max_len());
+    println!(
+        "engine up: {} slots, max_len {}, {:?} KV layout ({})",
+        engine.width(),
+        engine.max_len(),
+        engine.kv_layout(),
+        scattermoe::metrics::fmt_bytes(engine.cache_bytes() as u64),
+    );
 
     let mut corpus = SyntheticCorpus::new(512, a.get_u64("seed"));
     let mut rng = Rng::new(a.get_u64("seed") ^ 0xF00D);
     let n = a.get_usize("requests");
+    let mut rejected = 0usize;
     for _ in 0..n {
         let prompt_len = 4 + rng.below(24) as usize;
         let prompt = corpus.sample(prompt_len);
@@ -159,7 +166,12 @@ fn serve(args: &[String]) -> Result<()> {
             max_new_tokens: a.get_usize("max-new"),
             ..Default::default()
         };
-        engine.submit(prompt, params);
+        if engine.submit(prompt, params)?.is_none() {
+            rejected += 1; // queue backpressure — reported, not silent
+        }
+    }
+    if rejected > 0 {
+        println!("admission rejected {rejected}/{n} requests (queue full)");
     }
     let t0 = std::time::Instant::now();
     let responses = engine.run_to_completion()?;
@@ -190,5 +202,11 @@ fn serve(args: &[String]) -> Result<()> {
         m.device_splices,
         m.host_splices,
     );
+    if m.page_appends + m.page_stalls > 0 {
+        println!(
+            "paged: {} page appends, {} page-starvation stalls",
+            m.page_appends, m.page_stalls
+        );
+    }
     Ok(())
 }

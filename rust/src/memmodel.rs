@@ -211,6 +211,86 @@ pub fn scatter_vs_padded_ratio(s: &MlpShape, counts: &[usize], training: bool) -
         / padded_footprint(s, counts, training).total() as f64
 }
 
+// ---------------------------------------------------------------------------
+// Serving KV cache: dense worst-case layout vs paged pools
+// ---------------------------------------------------------------------------
+
+/// Serving KV-cache geometry, shared by the dense layout
+/// `(L, B, Tmax, nh, dh)` and the paged pools
+/// `(L, num_pages, page_size, nh, dh)` — the attention-side counterpart
+/// of the MLP padding story above: dense pads every slot to the
+/// worst-case `max_len`, paged stores only the pages actual contexts
+/// touch (plus one reserved garbage page).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheShape {
+    /// Transformer layers (`L`).
+    pub layers: usize,
+    /// Decode slots (`B`).
+    pub slots: usize,
+    /// Worst-case context length (`Tmax`).
+    pub max_len: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Head width.
+    pub d_head: usize,
+    /// KV rows per pool page.
+    pub page_size: usize,
+    /// Bytes per element (4 for f32).
+    pub dtype_bytes: usize,
+}
+
+impl KvCacheShape {
+    /// The serving artifacts' geometry (`LM_SERVE` in `aot.py`).
+    pub fn serve_default() -> Self {
+        KvCacheShape {
+            layers: 2,
+            slots: 8,
+            max_len: 160,
+            n_heads: 4,
+            d_head: 32,
+            page_size: 16,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Bytes of one KV row (`nh * dh` elements, K and V counted apart).
+    pub fn row_bytes(&self) -> usize {
+        self.n_heads * self.d_head * self.dtype_bytes
+    }
+
+    /// Dense layout footprint: both caches padded to the worst case.
+    pub fn dense_bytes(&self) -> usize {
+        2 * self.layers * self.slots * self.max_len * self.row_bytes()
+    }
+
+    /// Paged pool footprint for the given per-slot context lengths:
+    /// `ceil(ctx / page_size)` pages per slot plus the reserved garbage
+    /// page, both K and V pools counted.
+    pub fn paged_bytes(&self, contexts: &[usize]) -> usize {
+        let pages: usize = contexts
+            .iter()
+            .map(|&c| c.min(self.max_len).div_ceil(self.page_size))
+            .sum();
+        2 * self.layers * (pages + 1) * self.page_size * self.row_bytes()
+    }
+
+    /// Paged / dense footprint ratio with every slot at `mean_context`.
+    pub fn paged_vs_dense_ratio(&self, mean_context: usize) -> f64 {
+        let ctx = vec![mean_context; self.slots];
+        self.paged_bytes(&ctx) as f64 / self.dense_bytes() as f64
+    }
+
+    /// Largest uniform context at which the paged pool is still strictly
+    /// smaller than the dense cache (the fig-4c serving crossover; page
+    /// rounding and the reserved page push it slightly below `max_len`).
+    pub fn crossover_context(&self) -> usize {
+        (1..=self.max_len)
+            .rev()
+            .find(|&c| self.paged_vs_dense_ratio(c) < 1.0)
+            .unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,5 +374,52 @@ mod tests {
     fn balanced_counts_sum_to_slots() {
         let s = MlpShape::paper_unit();
         assert_eq!(s.balanced_counts().iter().sum::<usize>(), s.slots());
+    }
+
+    #[test]
+    fn paged_kv_strictly_smaller_below_half_max_len() {
+        // the acceptance bound: at mean context < max_len/2 the paged
+        // pool must be strictly smaller than the dense worst case, for
+        // EVERY such context (page rounding included)
+        let kv = KvCacheShape::serve_default();
+        for ctx in 1..kv.max_len / 2 {
+            let r = kv.paged_vs_dense_ratio(ctx);
+            assert!(r < 1.0, "ctx={ctx} ratio={r}");
+        }
+        // and it keeps shrinking as contexts shorten
+        assert!(kv.paged_vs_dense_ratio(16) < kv.paged_vs_dense_ratio(80));
+    }
+
+    #[test]
+    fn paged_kv_crossover_is_near_but_below_max_len() {
+        let kv = KvCacheShape::serve_default();
+        let x = kv.crossover_context();
+        assert!(x >= kv.max_len / 2, "crossover {x} unexpectedly low");
+        assert!(x < kv.max_len, "reserved page + rounding must cost something");
+        // the crossover is exact: one longer context flips the ratio
+        assert!(kv.paged_vs_dense_ratio(x) < 1.0);
+        assert!(kv.paged_vs_dense_ratio(kv.max_len) > 1.0);
+    }
+
+    #[test]
+    fn paged_kv_tracks_actual_ragged_contexts() {
+        let kv = KvCacheShape::serve_default();
+        let short = [10, 20, 30, 16, 8, 4, 60, 12];
+        let long = [160usize; 8];
+        assert!(kv.paged_bytes(&short) < kv.dense_bytes() / 2);
+        assert!(kv.paged_bytes(&long) > kv.dense_bytes(), "worst case pays the reserved page");
+        // contexts beyond max_len are clamped, not extrapolated
+        assert_eq!(kv.paged_bytes(&[1000; 8]), kv.paged_bytes(&long));
+    }
+
+    #[test]
+    fn paged_kv_monotone_in_context() {
+        let kv = KvCacheShape::serve_default();
+        let mut last = 0;
+        for ctx in (16..=160).step_by(16) {
+            let b = kv.paged_bytes(&[ctx; 8]);
+            assert!(b > last, "ctx={ctx}");
+            last = b;
+        }
     }
 }

@@ -34,6 +34,29 @@ impl IoSpec {
     }
 }
 
+/// Geometry of a paged-KV artifact, parsed from the manifest meta keys
+/// `page_size` / `num_pages` / `pages_per_slot` and validated against
+/// the artifact's own IO specs (see
+/// [`ArtifactSpec::checked_paged_meta`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PagedMeta {
+    /// KV rows per pool page.
+    pub page_size: usize,
+    /// Pool pages, including the reserved garbage page 0.
+    pub num_pages: usize,
+    /// Block-table width: pages addressable per decode slot.
+    pub pages_per_slot: usize,
+}
+
+impl PagedMeta {
+    /// Logical per-slot context span (`pages_per_slot * page_size`) —
+    /// must equal the dense layout's `max_len` for the gathered
+    /// attention view to line up.
+    pub fn slot_span(&self) -> usize {
+        self.pages_per_slot * self.page_size
+    }
+}
+
 /// One AOT-compiled entry point.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
@@ -150,6 +173,72 @@ impl ArtifactSpec {
             map.push(Some(dst));
         }
         Ok(map)
+    }
+
+    /// Parse and validate the paged-KV geometry this artifact declares
+    /// (meta keys `page_size` / `num_pages` / `pages_per_slot`),
+    /// cross-checked against its own IO specs: the pool input at index
+    /// `pool_input` must be a 5-d `(L, num_pages, page_size, nh, dh)`
+    /// array and the block-table input at `table_input` a 2-d
+    /// `(B, pages_per_slot)` i32 matrix.  `num_pages` must leave room
+    /// for the reserved garbage page 0 on top of at least one data
+    /// page.  Errors name the first violation — a manifest whose meta
+    /// and shapes disagree would otherwise scatter KV rows to the
+    /// wrong pages silently.
+    pub fn checked_paged_meta(&self, pool_input: usize, table_input: usize) -> Result<PagedMeta> {
+        let meta_field = |key: &str| -> Result<usize> {
+            self.meta_usize(key).with_context(|| {
+                format!(
+                    "artifact '{}': meta key '{key}' missing or not a \
+                     positive integer (not a paged-KV artifact?)",
+                    self.name
+                )
+            })
+        };
+        let m = PagedMeta {
+            page_size: meta_field("page_size")?,
+            num_pages: meta_field("num_pages")?,
+            pages_per_slot: meta_field("pages_per_slot")?,
+        };
+        if m.page_size == 0 || m.pages_per_slot == 0 {
+            bail!("artifact '{}': zero-sized page geometry {m:?}", self.name);
+        }
+        if m.num_pages < 2 {
+            bail!(
+                "artifact '{}': num_pages = {} cannot hold the reserved \
+                 garbage page plus data",
+                self.name,
+                m.num_pages
+            );
+        }
+        let input = |idx: usize| -> Result<&IoSpec> {
+            self.inputs.get(idx).with_context(|| {
+                format!("artifact '{}' has no input {idx}", self.name)
+            })
+        };
+        let pool = input(pool_input)?;
+        if pool.shape.len() != 5 || pool.shape[1] != m.num_pages || pool.shape[2] != m.page_size {
+            bail!(
+                "artifact '{}': pool input '{}' shape {:?} does not match \
+                 the declared page geometry (num_pages={}, page_size={})",
+                self.name, pool.name, pool.shape, m.num_pages, m.page_size
+            );
+        }
+        let table = input(table_input)?;
+        if table.shape.len() != 2 || table.shape[1] != m.pages_per_slot {
+            bail!(
+                "artifact '{}': block-table input '{}' shape {:?} does not \
+                 match pages_per_slot={}",
+                self.name, table.name, table.shape, m.pages_per_slot
+            );
+        }
+        if table.dtype != DType::I32 {
+            bail!(
+                "artifact '{}': block-table input '{}' must be i32, got {:?}",
+                self.name, table.name, table.dtype
+            );
+        }
+        Ok(m)
     }
 }
 
@@ -400,6 +489,88 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert!(m.get("c").unwrap().checked_chain_map().is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn paged_manifest(dir: &Path, meta: &str, table_dtype: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("p.hlo.txt"), "x").unwrap();
+        write_manifest(
+            dir,
+            &format!(
+                r#"{{"artifacts":[{{"name":"p","file":"p.hlo.txt",
+                  "inputs":[{{"name":"pos","shape":[4],"dtype":"s32"}},
+                            {{"name":"tok","shape":[4],"dtype":"s32"}},
+                            {{"name":"bt","shape":[4,5],"dtype":"{table_dtype}"}},
+                            {{"name":"k_pool","shape":[2,11,8,2,4],"dtype":"f32"}},
+                            {{"name":"v_pool","shape":[2,11,8,2,4],"dtype":"f32"}}],
+                  "outputs":[{{"shape":[4,16],"dtype":"f32"}}],
+                  "meta":{meta}}}]}}"#
+            ),
+        );
+    }
+
+    #[test]
+    fn paged_meta_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("smoe-man9-{}", std::process::id()));
+        paged_manifest(
+            &dir,
+            r#"{"page_size":8,"num_pages":11,"pages_per_slot":5}"#,
+            "s32",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let got = m.get("p").unwrap().checked_paged_meta(3, 2).unwrap();
+        assert_eq!(
+            got,
+            PagedMeta { page_size: 8, num_pages: 11, pages_per_slot: 5 }
+        );
+        assert_eq!(got.slot_span(), 40);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn paged_meta_rejects_geometry_shape_mismatches() {
+        // meta disagreeing with the pool/table IO specs must be a hard
+        // error — a silent mismatch would scatter KV rows to wrong pages
+        let cases: &[(&str, &str, &str)] = &[
+            // missing key
+            (r#"{"page_size":8,"num_pages":11}"#, "s32", "pages_per_slot"),
+            // pool shape says 8 rows/page, meta says 4
+            (
+                r#"{"page_size":4,"num_pages":11,"pages_per_slot":5}"#,
+                "s32",
+                "page geometry",
+            ),
+            // pool shape says 11 pages, meta says 12
+            (
+                r#"{"page_size":8,"num_pages":12,"pages_per_slot":5}"#,
+                "s32",
+                "page geometry",
+            ),
+            // table width disagrees with pages_per_slot
+            (
+                r#"{"page_size":8,"num_pages":11,"pages_per_slot":6}"#,
+                "s32",
+                "pages_per_slot",
+            ),
+            // table must be i32
+            (
+                r#"{"page_size":8,"num_pages":11,"pages_per_slot":5}"#,
+                "f32",
+                "i32",
+            ),
+        ];
+        for (k, (meta, table_dtype, want)) in cases.iter().enumerate() {
+            let dir = std::env::temp_dir()
+                .join(format!("smoe-man10-{k}-{}", std::process::id()));
+            paged_manifest(&dir, meta, table_dtype);
+            let m = Manifest::load(&dir).unwrap();
+            let err = format!(
+                "{:#}",
+                m.get("p").unwrap().checked_paged_meta(3, 2).unwrap_err()
+            );
+            assert!(err.contains(want), "case {k}: {err}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 
     #[test]

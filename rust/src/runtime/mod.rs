@@ -7,10 +7,11 @@
 //!   accounting ([`engine::ExecStats`] / [`engine::TransferTotals`]).
 //!
 //! The serving hot path uses [`engine::Runtime::run_chained`] so
-//! loop-carried state (KV caches, params) stays device-resident across
-//! calls while host-consumed outputs (logits) are downloaded exactly
-//! once.  Self-chaining artifacts (the train steps, `serve_decode`,
-//! `kv_splice`) declare which outputs feed which inputs through the
+//! loop-carried state (KV caches/pools, params) stays device-resident
+//! across calls while host-consumed outputs (logits) are downloaded
+//! exactly once.  Self-chaining artifacts (the train steps,
+//! `serve_decode`, `serve_decode_paged`, `kv_splice`, `page_append`)
+//! declare which outputs feed which inputs through the
 //! manifest's `chain_map`, and [`engine::Runtime::run_chain_step`]
 //! drives that contract generically — the training loop's
 //! `3 × n_params` state tuple chains the same way the two KV-cache
@@ -27,4 +28,4 @@ pub mod manifest;
 pub use engine::{
     sum_transfer_totals, ChainStep, ExecOut, ExecStats, Runtime, TransferTotals,
 };
-pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, PagedMeta};

@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
+use scattermoe::coordinator::{Engine, EngineConfig, KvLayout, SamplingParams};
 use scattermoe::rng::Rng;
 use scattermoe::runtime::Runtime;
 use scattermoe::tensor::Tensor;
@@ -170,7 +170,9 @@ fn train_steady_state_transfers_are_param_independent() {
 }
 
 /// Serving engine end-to-end on a small request burst: everything
-/// finishes, responses have sane shapes and metrics.
+/// finishes, responses have sane shapes and metrics.  Runs on whichever
+/// KV layout the artifacts support (paged when `serve_decode_paged` is
+/// present, dense otherwise).
 #[test]
 fn engine_serves_burst() {
     let Some(rt) = runtime() else { return };
@@ -179,10 +181,12 @@ fn engine_serves_burst() {
     let n = engine.width() + 3; // forces at least one slot refill
     for _ in 0..n {
         let prompt = corpus.sample(6);
-        let id = engine.submit(
-            prompt,
-            SamplingParams { max_new_tokens: 4, ..Default::default() },
-        );
+        let id = engine
+            .submit(
+                prompt,
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .expect("valid request");
         assert!(id.is_some());
     }
     let responses = engine.run_to_completion().expect("serve");
@@ -193,6 +197,10 @@ fn engine_serves_burst() {
     }
     assert!(engine.metrics.prefills >= 2, "refill implies a second prefill");
     assert_eq!(engine.metrics.completed as usize, n);
+    if engine.kv_layout() == KvLayout::Paged {
+        let (free, total) = engine.page_budget().unwrap();
+        assert_eq!(free, total, "all pages reclaimed after the burst");
+    }
 }
 
 /// Decode result must not depend on batch composition: a request decoded
@@ -206,15 +214,15 @@ fn engine_slot_isolation() {
 
     // run alone
     let mut solo = Engine::new(rt.clone(), EngineConfig::default()).unwrap();
-    solo.submit(prompt.clone(), params.clone());
+    solo.submit(prompt.clone(), params.clone()).unwrap();
     let r_solo = solo.run_to_completion().unwrap().remove(0);
 
     // run alongside a full batch of other prompts
     let mut busy = Engine::new(rt, EngineConfig::default()).unwrap();
     let mut corpus = SyntheticCorpus::new(512, 99);
-    let main_id = busy.submit(prompt, params.clone()).unwrap();
+    let main_id = busy.submit(prompt, params.clone()).unwrap().unwrap();
     for _ in 0..busy.width() - 1 {
-        busy.submit(corpus.sample(10), params.clone());
+        busy.submit(corpus.sample(10), params.clone()).unwrap();
     }
     let rs = busy.run_to_completion().unwrap();
     let r_busy = rs.into_iter().find(|r| r.id == main_id).unwrap();
@@ -222,58 +230,80 @@ fn engine_slot_isolation() {
 }
 
 /// Device-resident KV cache: steady-state decode host traffic must be
-/// O(per-slot vectors), independent of the cache size.  Staged uploads
-/// are exactly the two `(B,)` i32 vectors per step and downloads exactly
-/// the `(B, V)` logits; the cache itself never crosses the boundary
-/// (any fallback tuple round-trip is accounted separately as
-/// `chain_bytes`, asserted zero when the direct buffer path is live).
+/// O(per-slot vectors), independent of the cache size, on BOTH layouts.
+/// Staged uploads are exactly the two `(B,)` i32 vectors (plus the
+/// `(B, pages_per_slot)` block table when paged) per step and downloads
+/// exactly the `(B, V)` logits; the cache/pool itself never crosses the
+/// boundary (any fallback tuple round-trip is accounted separately as
+/// `chain_bytes`).
 #[test]
 fn decode_steady_state_transfers_are_cache_independent() {
     let Some(rt) = runtime() else { return };
-    let mut engine = Engine::new(rt.clone(), EngineConfig::default()).expect("engine");
-    let b = engine.width();
-    let vocab = rt.spec("serve_decode").unwrap().outputs[0].shape[1];
-    let mut corpus = SyntheticCorpus::new(512, 5);
-    for _ in 0..b {
-        engine
-            .submit(
-                corpus.sample(6),
-                SamplingParams { max_new_tokens: 8, ..Default::default() },
-            )
-            .expect("submit");
-    }
-    // first tick prefills the whole batch; everything after is decode
-    engine.tick().expect("prefill tick");
-    let st0 = rt.stats().get("serve_decode").cloned().unwrap_or_default();
-    let steps0 = engine.metrics.decode_steps;
-    engine.run_to_completion().expect("drain");
-    let st1 = rt.stats().get("serve_decode").cloned().unwrap_or_default();
-    let steps = engine.metrics.decode_steps - steps0;
-    assert!(steps > 0, "burst must decode");
-    let up = st1.bytes_to_device - st0.bytes_to_device;
-    let down = st1.bytes_to_host - st0.bytes_to_host;
-    // uploads: pos + last_token, (B,) i32 each, per step — nothing else
-    assert_eq!(up, steps * 2 * b as u64 * 4, "staged uploads must be the two (B,) vectors");
-    // downloads: (B, V) logits per step — the cache never comes down
-    assert_eq!(down, steps * (b * vocab) as u64 * 4, "downloads must be logits only");
-    let cache = engine.cache_bytes() as u64;
-    assert!(up + down < cache, "per-burst explicit traffic below one cache copy");
-    if st1.host_round_trips == st0.host_round_trips {
-        // direct buffer path: total decode traffic is cache-independent
-        println!("direct device-to-device chaining active (0 fallback round-trips)");
-    } else {
-        println!(
-            "NOTE: xla crate forced {} tuple fallback(s) ({} B) — measured, not hidden",
-            st1.host_round_trips - st0.host_round_trips,
-            st1.chain_bytes - st0.chain_bytes
+    for prefer_paged in [false, true] {
+        let cfg = EngineConfig { prefer_paged, ..Default::default() };
+        let mut engine = Engine::new(rt.clone(), cfg).expect("engine");
+        let paged = engine.kv_layout() == KvLayout::Paged;
+        let artifact = if paged { "serve_decode_paged" } else { "serve_decode" };
+        let b = engine.width();
+        let spec = rt.spec(artifact).unwrap().clone();
+        let vocab = spec.outputs[0].shape[1];
+        // per-step staged row: pos + last_token (+ block table when paged)
+        let staged: u64 = if paged {
+            (spec.inputs[0].size_bytes()
+                + spec.inputs[1].size_bytes()
+                + spec.inputs[2].size_bytes()) as u64
+        } else {
+            (spec.inputs[0].size_bytes() + spec.inputs[1].size_bytes()) as u64
+        };
+        let mut corpus = SyntheticCorpus::new(512, 5);
+        for _ in 0..b {
+            engine
+                .submit(
+                    corpus.sample(6),
+                    SamplingParams { max_new_tokens: 8, ..Default::default() },
+                )
+                .unwrap();
+        }
+        // first tick prefills the whole batch; everything after is decode
+        engine.tick().expect("prefill tick");
+        let st0 = rt.stats().get(artifact).cloned().unwrap_or_default();
+        let steps0 = engine.metrics.decode_steps;
+        engine.run_to_completion().expect("drain");
+        let st1 = rt.stats().get(artifact).cloned().unwrap_or_default();
+        let steps = engine.metrics.decode_steps - steps0;
+        assert!(steps > 0, "burst must decode ({artifact})");
+        let up = st1.bytes_to_device - st0.bytes_to_device;
+        let down = st1.bytes_to_host - st0.bytes_to_host;
+        // uploads: the staged vectors per step — O(B), nothing else
+        assert_eq!(up, steps * staged, "{artifact}: staged uploads must be the per-slot vectors");
+        // downloads: (B, V) logits per step — the cache never comes down
+        assert_eq!(
+            down,
+            steps * (b * vocab) as u64 * 4,
+            "{artifact}: downloads must be logits only"
         );
+        let cache = engine.cache_bytes() as u64;
+        assert!(up + down < cache, "{artifact}: per-burst traffic below one cache copy");
+        if st1.host_round_trips == st0.host_round_trips {
+            // direct buffer path: total decode traffic is cache-independent
+            println!("{artifact}: direct device-to-device chaining (0 fallback round-trips)");
+        } else {
+            println!(
+                "NOTE: {artifact}: xla crate forced {} tuple fallback(s) \
+                 ({} B) — measured, not hidden",
+                st1.host_round_trips - st0.host_round_trips,
+                st1.chain_bytes - st0.chain_bytes
+            );
+        }
     }
 }
 
 /// Partial prefills must merge KV rows on-device when the manifest has
 /// `kv_splice`, and fall back to the host path (with its full-cache
 /// round-trip showing in the transfer counters) when it doesn't.  Both
-/// paths must produce identical generations.
+/// paths must produce identical generations.  (Dense-layout test: the
+/// paged layout replaces the splice with `page_append`, covered by
+/// `paged_and_dense_decode_bit_identical`.)
 #[test]
 fn kv_splice_fallback_matches_device_path() {
     let Some(rt) = runtime() else { return };
@@ -287,7 +317,7 @@ fn kv_splice_fallback_matches_device_path() {
                     corpus.sample(6),
                     SamplingParams { max_new_tokens: 4, ..Default::default() },
                 )
-                .expect("submit");
+                .unwrap();
         }
         let mut rs = engine.run_to_completion().expect("serve");
         rs.sort_by_key(|r| r.id);
@@ -296,6 +326,7 @@ fn kv_splice_fallback_matches_device_path() {
 
     let missing = EngineConfig {
         splice_artifact: "kv_splice_definitely_missing".into(),
+        prefer_paged: false,
         ..Default::default()
     };
     let (toks_host, m_host) = run_burst(missing);
@@ -306,7 +337,8 @@ fn kv_splice_fallback_matches_device_path() {
     assert!(fb.bytes_to_host > 0, "host splice must download the caches");
     assert!(fb.bytes_to_device > 0, "host splice must re-upload the merge");
 
-    let (toks_dev, m_dev) = run_burst(EngineConfig::default());
+    let dense = EngineConfig { prefer_paged: false, ..Default::default() };
+    let (toks_dev, m_dev) = run_burst(dense);
     assert_eq!(toks_host, toks_dev, "splice paths must agree token-for-token");
     if rt.spec("kv_splice").is_ok() {
         assert!(m_dev.device_splices >= 1, "manifest has kv_splice; must be used");
@@ -371,6 +403,126 @@ fn sampling_params_reproducible_through_engine() {
     assert_eq!(gen(hot.clone()), gen(hot.clone()), "same seed, same generation");
     let greedy = SamplingParams { max_new_tokens: 6, ..Default::default() };
     assert_eq!(gen(greedy.clone()), gen(greedy), "greedy is deterministic");
+}
+
+/// THE paged-cache acceptance property: the paged and dense layouts are
+/// the same serving function.  An identical request trace (ragged
+/// prompts, partial refills, per-request budgets) must produce
+/// bit-for-bit identical tokens through `serve_decode_paged`/
+/// `page_append` and through `serve_decode`/`kv_splice` — the paged
+/// gather/scatter stores the exact same values the dense layout holds,
+/// and page 0 garbage never leaks into a live attention window.
+#[test]
+fn paged_and_dense_decode_bit_identical() {
+    let Some(rt) = runtime() else { return };
+    if rt.spec("serve_decode_paged").is_err() {
+        eprintln!("SKIP: artifacts predate serve_decode_paged");
+        return;
+    }
+    let run_trace = |prefer_paged: bool| -> (KvLayout, Vec<(u64, Vec<i32>)>) {
+        let cfg = EngineConfig { prefer_paged, ..Default::default() };
+        let mut engine = Engine::new(rt.clone(), cfg).expect("engine");
+        let mut corpus = SyntheticCorpus::new(512, 33);
+        // ragged prompts + varied budgets, > width so refills interleave
+        let n = engine.width() + 5;
+        for i in 0..n {
+            let prompt = corpus.sample(3 + (i * 5) % 14);
+            engine
+                .submit(
+                    prompt,
+                    SamplingParams {
+                        max_new_tokens: 3 + i % 6,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+        }
+        let mut rs = engine.run_to_completion().expect("serve");
+        rs.sort_by_key(|r| r.id);
+        (
+            engine.kv_layout(),
+            rs.into_iter().map(|r| (r.id.0, r.tokens)).collect(),
+        )
+    };
+    let (l_dense, toks_dense) = run_trace(false);
+    let (l_paged, toks_paged) = run_trace(true);
+    assert_eq!(l_dense, KvLayout::Dense);
+    assert_eq!(l_paged, KvLayout::Paged);
+    assert_eq!(
+        toks_dense, toks_paged,
+        "paged and dense layouts must generate identical tokens"
+    );
+}
+
+/// Page-starvation liveness: with demand far above the pool, admission
+/// waits (FIFO) while the batch keeps decoding, pages recycle through
+/// retirements, and every request still completes — `run_to_completion`
+/// must never spin on Idle with work queued.
+#[test]
+fn paged_pool_starvation_drains_fifo() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(rt.clone(), EngineConfig::default()).expect("engine");
+    if engine.kv_layout() != KvLayout::Paged {
+        eprintln!("SKIP: artifacts predate the paged layout");
+        return;
+    }
+    let (_, total) = engine.page_budget().unwrap();
+    // each request's worst case spans several pages; 3 batches' worth of
+    // demand guarantees waves of admission through page recycling
+    let max_new = 40;
+    let n = 3 * engine.width();
+    let mut corpus = SyntheticCorpus::new(512, 11);
+    let mut ids = Vec::new();
+    for _ in 0..n {
+        let id = engine
+            .submit(
+                corpus.sample(8),
+                SamplingParams { max_new_tokens: max_new, ..Default::default() },
+            )
+            .expect("pool-capacity-valid request")
+            .expect("queue has room");
+        ids.push(id);
+    }
+    let mut responses = engine.run_to_completion().expect("starved pool must still drain");
+    assert_eq!(responses.len(), n, "every request completes");
+    responses.sort_by_key(|r| r.id);
+    for (r, id) in responses.iter().zip(ids) {
+        assert_eq!(r.id, id);
+        assert_eq!(r.tokens.len(), max_new);
+    }
+    assert!(
+        engine.metrics.prefills >= 2,
+        "admission must have happened in waves, got {} prefills",
+        engine.metrics.prefills
+    );
+    let (free, total_after) = engine.page_budget().unwrap();
+    assert_eq!(total_after, total);
+    assert_eq!(free, total, "page conservation after drain");
+}
+
+/// Over-long prompts are rejected at submit with a visible error — the
+/// old behaviour silently truncated them at `prompt_width` and generated
+/// from a corrupted prefix.
+#[test]
+fn submit_rejects_overlong_prompt() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(rt, EngineConfig::default()).expect("engine");
+    let width = engine.width();
+    let long = vec![7i32; 1000];
+    let err = engine
+        .submit(long, SamplingParams::default())
+        .expect_err("1000-token prompt must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("prompt"), "{msg}");
+    assert!(msg.contains("1000"), "{msg}");
+    // the engine stays fully usable afterwards
+    engine
+        .submit(vec![1, 2, 3], SamplingParams { max_new_tokens: 2, ..Default::default() })
+        .expect("short prompt fine")
+        .expect("queued");
+    let rs = engine.run_to_completion().expect("serve");
+    assert_eq!(rs.len(), 1);
+    assert_eq!(engine.width(), width);
 }
 
 /// Expert stats integration sanity: padding waste is non-negative and

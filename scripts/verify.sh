@@ -33,6 +33,23 @@ else
     echo "== lint: clippy not installed, skipping =="
 fi
 
+# Perf-trajectory smoke (artifact-gated): one tiny serving run and the
+# analytic memory figure, emitting the machine-readable BENCH_serve.json
+# / BENCH_memory.json reports that CI compares across PRs.  Skipped on a
+# bare checkout (no `make artifacts`) — the tier-1 contract stays
+# build+test.
+if [ -f artifacts/manifest.json ]; then
+    echo "== bench smoke: serve example (BENCH_serve.json) =="
+    cargo run --release --example serve -- --requests 6 --rate 1000 --max-new 4
+    echo "== bench smoke: fig4c memory (BENCH_memory.json) =="
+    cargo bench --bench fig4c_memory
+    for f in bench_reports/BENCH_serve.json bench_reports/BENCH_memory.json; do
+        [ -f "$f" ] || { echo "missing bench report $f"; exit 1; }
+    done
+else
+    echo "== bench smoke: no artifacts/manifest.json, skipping =="
+fi
+
 # rustdoc gates: the crate is documented (#![warn(missing_docs)]) and the
 # docs must not rot — deny rustdoc warnings and run the doctests.
 if rustdoc --version >/dev/null 2>&1; then
