@@ -200,8 +200,13 @@ fn main() -> Result<()> {
     }
     if engine.metrics.page_appends + engine.metrics.page_stalls > 0 {
         println!(
-            "paged coordinator: {} page appends, {} page-starvation stalls",
-            engine.metrics.page_appends, engine.metrics.page_stalls,
+            "paged coordinator: {} page appends, {} page-starvation stalls, \
+             {} lazy grows, {} shared prefix pages, {} CoW copies",
+            engine.metrics.page_appends,
+            engine.metrics.page_stalls,
+            engine.metrics.page_grows,
+            engine.metrics.shared_pages,
+            engine.metrics.cow_copies,
         );
     }
 

@@ -133,6 +133,15 @@ SERVE_BATCH, SERVE_PROMPT, SERVE_MAXLEN = 8, 32, 160
 #: at HALF the dense worst case (every slot at ``max_len`` would need
 #: ``B * pages_per_slot`` pages): serving memory tracks *actual* context
 #: lengths and the Rust coordinator queues admissions when pages run out.
+#:
+#: The allocation POLICY lives entirely in the Rust coordinator — the
+#: same two artifacts serve eager worst-case admission (PR 3), lazy page
+#: growth (pages materialise as ``pos`` crosses page boundaries, backed
+#: by a reservation ledger), and copy-on-write prompt-prefix sharing
+#: (block tables referencing refcounted common pages).  Gathers and
+#: scatters just follow the uploaded block table, so no re-lowering is
+#: needed: artifact dirs produced before lazy/CoW landed run the new
+#: coordinator unchanged, and vice versa.
 SERVE_PAGE = 16
 assert SERVE_MAXLEN % SERVE_PAGE == 0, "pages must tile max_len exactly"
 SERVE_PAGES_PER_SLOT = SERVE_MAXLEN // SERVE_PAGE

@@ -421,6 +421,19 @@ def page_append(
     sentinel table entries) are redirected to the reserved page 0, so
     in-flight slots' pages are never touched — the paged replacement for
     ``kv_splice``'s mask-driven row select.
+
+    Write discipline (the coordinator's side of the contract): duplicate
+    destination pages across batch rows scatter in unspecified order, so
+    the coordinator must ensure colliding writes carry identical values.
+    Page 0 satisfies this trivially (garbage in, never gathered).  Under
+    copy-on-write prefix sharing the coordinator goes further: a sharer's
+    block-table row is passed here with its *shared* prefix entries
+    redirected to page 0, so a donor's live pages are written by the
+    donor alone — the sharer's rows for those positions are bit-identical
+    anyway (per-slot prefill KV is a pure function of the prompt), and
+    skipping the write is what makes sharing copy-free.  Only table
+    entries past the shared prefix (private pages, including the CoW'd
+    boundary page) receive this slot's rows.
     """
     l_, b, _, nh, dh = k_new.shape
     page_size = k_pool.shape[2]

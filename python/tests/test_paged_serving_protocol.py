@@ -1,14 +1,29 @@
 """Protocol-level simulation of the Rust coordinator's paged serving loop.
 
 Mirrors `rust/src/coordinator/engine.rs` step for step — continuous
-batching with partial refills, worst-case page allocation at admission,
-FIFO admission gated on free pages, page recycling after retirement, and
-sentinel (page 0) routing for empty slots — driving the same jax
-functions the artifacts lower (`prefill` / `decode_step[_paged]` /
-`page_append` / the `kv_splice` select).  The paged run must emit
-bit-for-bit the tokens the dense run emits, across admission waves that
-force page reuse.  This is the Python twin of the Rust integration test
-`paged_and_dense_decode_bit_identical`, runnable without artifacts.
+batching with partial refills, FIFO admission gated on *unreserved*
+pages, page recycling after retirement, and sentinel (page 0) routing
+for empty slots — driving the same jax functions the artifacts lower
+(`prefill` / `decode_step[_paged]` / `page_append` / the `kv_splice`
+select).  Three admission policies are simulated:
+
+* ``dense``  — the dense worst-case cache (the equivalence oracle);
+* ``eager``  — PR 3's paged layout: the whole worst-case page need is
+  allocated at admission;
+* ``lazy``   — PR 4: admission grants only the prompt's pages plus one
+  decode page and *reserves* the rest in the allocator ledger, growing
+  one page per boundary crossing; common prompt prefixes are shared
+  copy-on-write (full prefix pages refcounted across block tables; the
+  boundary page the appended decode row could write is made private and
+  copied by the slot's own `page_append` write).
+
+All three runs must emit bit-for-bit identical tokens, across admission
+waves that force page reuse, growth, and cross-wave prefix sharing.
+This is the Python twin of the Rust integration tests
+`paged_and_dense_decode_bit_identical` /
+`lazy_cow_paged_matches_dense_and_eager_bit_identical`, runnable
+without artifacts.  Failure-path reclamation (mid-flight cancellation)
+and the never-admissible submit reject are simulated too.
 """
 
 from __future__ import annotations
@@ -29,38 +44,137 @@ NUM_PAGES = 1 + (WIDTH * PAGES_PER_SLOT) // 2  # half the worst case + sentinel
 
 
 def _requests():
+    """Ragged prompts + budgets; indices 0/2/5 share a 5-token prefix
+    (page 0 fully covered -> shareable; the partial page 1 is the CoW
+    boundary)."""
     key = jax.random.PRNGKey(5)
+    key, k = jax.random.split(key)
+    base = list(np.asarray(jax.random.randint(k, (5,), 1, 64), np.int32))
     reqs = []
-    for i in range(7):
+    for i in range(8):
         key, k = jax.random.split(key)
-        plen = 2 + i % 5
-        prompt = jax.random.randint(k, (plen,), 1, 64).astype(jnp.int32)
-        reqs.append((list(np.asarray(prompt)), 2 + (i * 3) % 4))
+        if i in (0, 2, 5):
+            prompt = list(base) + ([int(np.asarray(
+                jax.random.randint(k, (1,), 1, 64))[0])] if i == 5 else [])
+            # i == 5 outlives its initial grant -> lazy growth on a sharer
+            budget = 8 if i == 5 else 3 + i % 3
+        else:
+            plen = 2 + i % 5
+            prompt = list(np.asarray(
+                jax.random.randint(k, (plen,), 1, 64), np.int32))
+            # i == 4 decodes to the span's end -> several lazy grows
+            budget = 10 if i == 4 else 2 + (i * 3) % 4
+        reqs.append(([int(t) for t in prompt], budget))
     return reqs
 
 
+def _pages_for(rows):
+    return -(-rows // PAGE)
+
+
+def _commitment(prompt_len, max_new):
+    return _pages_for(min(max(prompt_len, 1) + max_new, MAX_LEN))
+
+
 class _Alloc:
-    """Free-list twin of coordinator/pagetable.rs (page 0 reserved)."""
+    """Refcount + reservation-ledger twin of coordinator/pagetable.rs
+    (page 0 reserved as the garbage page)."""
 
-    def __init__(self):
-        self.free = list(range(1, NUM_PAGES))
+    def __init__(self, num_pages=NUM_PAGES):
+        self.num_pages = num_pages
+        self.free = list(range(1, num_pages))
+        self.refs = [0] * num_pages
+        self.refs[0] = 1  # pinned garbage page
+        self.reserved = 0
 
-    def alloc(self, n):
-        if n > len(self.free):
+    def usable(self):
+        return self.num_pages - 1
+
+    def unreserved(self):
+        return len(self.free) - self.reserved
+
+    def admit(self, fresh, reserve):
+        if fresh + reserve > self.unreserved():
             return None
-        pages, self.free = self.free[-n:], self.free[:-n]
+        pages = [self.free.pop() for _ in range(fresh)]
+        for p in pages:
+            assert self.refs[p] == 0, "double allocation"
+            self.refs[p] = 1
+        self.reserved += reserve
         return pages
 
+    def grow(self):
+        assert self.reserved > 0, "grow without a reservation"
+        assert self.free, "ledger corrupt: reserved page missing"
+        self.reserved -= 1
+        p = self.free.pop()
+        assert self.refs[p] == 0
+        self.refs[p] = 1
+        return p
 
-def _serve(params, paged: bool):
+    def retain(self, p):
+        assert p != 0 and self.refs[p] > 0, "retain of free/garbage page"
+        self.refs[p] += 1
+
+    def release(self, pages):
+        for p in pages:
+            assert p != 0 and self.refs[p] > 0, "double free"
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                self.free.append(p)
+
+    def unreserve(self, n):
+        assert n <= self.reserved
+        self.reserved -= n
+
+    def check_conservation(self):
+        outstanding = sum(1 for p in range(1, self.num_pages) if self.refs[p])
+        assert len(self.free) + outstanding == self.usable(), "page leak"
+        assert len(self.free) >= self.reserved, "ledger overcommitted"
+
+
+def _plan(prompt, max_new, lazy, donors):
+    """Twin of engine.rs plan_paged_admission: (shared, fresh, reserve,
+    cow_copy)."""
+    plen = max(len(prompt), 1)
+    worst = _commitment(plen, max_new)
+    prompt_pages = _pages_for(plen)
+    shared, best_common = [], 0
+    for donor_prompt, donor_table in donors:
+        common = 0
+        for a, b in zip(prompt, donor_prompt):
+            if a != b:
+                break
+            common += 1
+        n = min(common // PAGE, len(donor_table))
+        if n > len(shared) or (n == len(shared) and common > best_common):
+            shared, best_common = list(donor_table[:n]), common
+    table_len = min(prompt_pages + 1, worst) if lazy else worst
+    fresh = table_len - len(shared)
+    cow = bool(shared) and best_common > len(shared) * PAGE
+    return shared, fresh, worst - table_len, cow
+
+
+def _serve(params, mode, cancel=None):
+    """Drive the serving loop under one policy; returns (tokens, alloc,
+    stats).  ``cancel=(rid, after_emissions)`` aborts a request once it
+    has emitted that many tokens (the mid-flight failure path)."""
+    assert mode in ("dense", "eager", "lazy")
+    paged, lazy = mode != "dense", mode == "lazy"
+    share = lazy  # CoW sharing rides on the lazy block-table machinery
     reqs = _requests()
     queue = list(range(len(reqs)))
     toks_out = {i: [] for i in range(len(reqs))}
     budget = {i: reqs[i][1] for i in range(len(reqs))}
+    cancelled = set()
     slots = [None] * WIDTH  # request id or None
     pos = [0] * WIDTH
     last = [0] * WIDTH
-    alloc, tables = _Alloc(), [[] for _ in range(WIDTH)]
+    alloc = _Alloc()
+    tables = [[] for _ in range(WIDTH)]
+    shared_ct = [0] * WIDTH  # leading shared entries per slot
+    reserved_ct = [0] * WIDTH  # per-slot growth budget
+    stats = {"grows": 0, "shared": 0, "cow": 0}
     if paged:
         kc = jnp.zeros((TINY.n_layers, NUM_PAGES, PAGE, TINY.n_heads, TINY.d_head))
         vc = jnp.zeros_like(kc)
@@ -68,24 +182,47 @@ def _serve(params, paged: bool):
         kc = jnp.zeros((TINY.n_layers, WIDTH, MAX_LEN, TINY.n_heads, TINY.d_head))
         vc = jnp.zeros_like(kc)
 
-    def block_table():
+    def block_table(for_append=False):
         bt = np.zeros((WIDTH, PAGES_PER_SLOT), np.int32)
         for s, pages in enumerate(tables):
-            bt[s, :len(pages)] = pages
+            skip = shared_ct[s] if for_append else 0
+            bt[s, skip:len(pages)] = pages[skip:]
         return jnp.asarray(bt)
 
+    def reclaim(s):
+        """Every slot exit path (retire, cancel) runs through here."""
+        if paged:
+            alloc.release(tables[s])
+            alloc.unreserve(reserved_ct[s])
+        tables[s], shared_ct[s], reserved_ct[s] = [], 0, 0
+        slots[s] = None
+
     def refill():
+        donors = (
+            [(reqs[slots[s]][0], tables[s]) for s in range(WIDTH)
+             if slots[s] is not None and tables[s]]
+            if share else []
+        )
         filled = []
         for s in range(WIDTH):
             if slots[s] is not None or not queue:
                 continue
             rid = queue[0]
             if paged:
-                rows = min(len(reqs[rid][0]) + budget[rid], MAX_LEN)
-                pages = alloc.alloc(-(-rows // PAGE))
-                if pages is None:
+                shared, fresh, reserve, cow = _plan(
+                    reqs[rid][0], budget[rid], lazy, donors
+                )
+                got = alloc.admit(fresh, reserve)
+                if got is None:
                     break  # FIFO: nothing overtakes the starved head
-                tables[s] = pages
+                for p in shared:
+                    alloc.retain(p)
+                tables[s] = shared + got
+                shared_ct[s], reserved_ct[s] = len(shared), reserve
+                stats["shared"] += len(shared)
+                stats["cow"] += int(cow)
+                if share:
+                    donors.append((reqs[rid][0], tables[s]))
             queue.pop(0)
             slots[s] = rid
             filled.append(s)
@@ -105,7 +242,14 @@ def _serve(params, paged: bool):
         mask = np.zeros((WIDTH,), np.int32)
         mask[filled] = 1
         if paged:
-            kc, vc = tr.page_append(kc, vc, kn, vn, block_table(), jnp.asarray(mask))
+            # append-side table: shared prefix chunks -> garbage page, so
+            # a sharer never rewrites its donor's live pages (its own
+            # rows there are bit-identical anyway — that skipped write
+            # IS the copy-on-write copy, performed for the private
+            # boundary page by this very call)
+            kc, vc = tr.page_append(
+                kc, vc, kn, vn, block_table(for_append=True), jnp.asarray(mask)
+            )
         else:
             take = (jnp.asarray(mask) != 0)[None, :, None, None, None]
             kc, vc = jnp.where(take, kn, kc), jnp.where(take, vn, vc)
@@ -118,20 +262,36 @@ def _serve(params, paged: bool):
         rid = slots[s]
         toks_out[rid].append(tok)
         if len(toks_out[rid]) >= budget[rid]:
-            slots[s] = None  # retire; pages recycle
-            if paged:
-                alloc.free.extend(tables[s])
-                tables[s] = []
+            reclaim(s)  # retire; pages + reservations recycle
+        elif cancel is not None and cancel == (rid, len(toks_out[rid])):
+            cancelled.add(rid)
+            reclaim(s)  # mid-flight abort: same reclamation path
 
     def do_decode():
         nonlocal kc, vc
         active = [s for s in range(WIDTH) if slots[s] is not None]
-        p, t = jnp.asarray(np.array(pos, np.int32)), jnp.asarray(np.array(last, np.int32))
         if paged:
-            logits, kc, vc = tr.decode_step_paged(params, kc, vc, block_table(), p, t, TINY)
+            for s in active:
+                needed = pos[s] // PAGE + 1
+                while len(tables[s]) < needed:
+                    assert reserved_ct[s] > 0, "growth past the reservation"
+                    tables[s].append(alloc.grow())
+                    reserved_ct[s] -= 1
+                    stats["grows"] += 1
+                # CoW invariant: the write-target page is private
+                assert needed - 1 >= shared_ct[s]
+                assert alloc.refs[tables[s][needed - 1]] == 1
+        p = jnp.asarray(np.array(pos, np.int32))
+        t = jnp.asarray(np.array(last, np.int32))
+        if paged:
+            logits, kc, vc = tr.decode_step_paged(
+                params, kc, vc, block_table(), p, t, TINY
+            )
         else:
             logits, kc, vc = tr.decode_step(params, kc, vc, p, t, TINY)
         for s in active:
+            if slots[s] is None:
+                continue  # emptied earlier this tick
             tok = int(jnp.argmax(logits[s]))
             pos[s] = min(pos[s] + 1, MAX_LEN - 1)
             last[s] = tok
@@ -147,17 +307,67 @@ def _serve(params, paged: bool):
             do_decode()
         else:
             raise AssertionError("stuck: queue non-empty but nothing admitted/active")
+        if paged:
+            alloc.check_conservation()
     assert not queue and all(s is None for s in slots), "trace did not drain"
-    return toks_out, alloc
+    for rid in cancelled:
+        del toks_out[rid]
+    return toks_out, alloc, stats
 
 
-def test_paged_protocol_matches_dense_bitwise_with_page_recycling():
+def test_lazy_cow_and_eager_match_dense_bitwise_with_page_recycling():
     params = tr.init_params(TINY, jax.random.PRNGKey(0))
-    dense, _ = _serve(params, paged=False)
-    paged, alloc = _serve(params, paged=True)
-    assert paged == dense, f"paged {paged} != dense {dense}"
-    # conservation: every page returned after the drain
-    assert sorted(alloc.free) == list(range(1, NUM_PAGES))
+    dense, _, _ = _serve(params, "dense")
+    eager, alloc_e, stats_e = _serve(params, "eager")
+    lazy, alloc_l, stats_l = _serve(params, "lazy")
+    assert eager == dense, f"eager {eager} != dense {dense}"
+    assert lazy == dense, f"lazy+CoW {lazy} != dense {dense}"
+    # conservation: every page returned, every reservation released
+    for alloc in (alloc_e, alloc_l):
+        assert sorted(alloc.free) == list(range(1, NUM_PAGES))
+        assert alloc.reserved == 0
+    # the policies actually diverged mechanically
+    assert stats_e == {"grows": 0, "shared": 0, "cow": 0}
+    assert stats_l["grows"] > 0, "lazy must grow across page boundaries"
+    assert stats_l["shared"] > 0, "repeated prompts must share prefix pages"
+    assert stats_l["cow"] > 0, "the boundary page must be copied on write"
     # the pool was genuinely undersized: the trace needed admission waves
-    worst = sum(-(-min(len(p) + b, MAX_LEN) // PAGE) for p, b in _requests())
+    worst = sum(_commitment(len(p), b) for p, b in _requests())
     assert worst > NUM_PAGES - 1, "trace must overcommit the pool"
+
+
+def test_pages_reclaimed_on_midflight_cancellation():
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    dense, _, _ = _serve(params, "dense")
+    # cancel request 0 (a prefix-sharing donor!) after its first token:
+    # its refcounted pages must survive for the sharers, then conserve
+    lazy, alloc, _ = _serve(params, "lazy", cancel=(0, 1))
+    assert 0 not in lazy
+    for rid, toks in lazy.items():
+        assert toks == dense[rid], f"request {rid} corrupted by the cancellation"
+    assert sorted(alloc.free) == list(range(1, NUM_PAGES)), "cancel leaked pages"
+    assert alloc.reserved == 0, "cancel leaked reservations"
+
+
+def test_never_admissible_request_rejected_at_submit_queue_drains():
+    # a pool smaller than one request's worst-case span: the oversized
+    # request must be rejected AT SUBMIT (queued, it would head-block
+    # the FIFO forever and starve everything behind it)
+    tiny = _Alloc(num_pages=3)  # 2 usable pages
+    oversized = _commitment(6, 10)  # needs 4 > 2
+    assert oversized > tiny.usable()
+    # the submit-time guard (engine.rs Engine::submit): reject, don't queue
+    accepted = [r for r in [(6, 10), (2, 3), (3, 2)]
+                if _commitment(*r) <= tiny.usable()]
+    assert len(accepted) == 2, "only the servable requests enter the queue"
+    # and the accepted queue drains through the tiny pool
+    for plen, max_new in accepted:
+        worst = _commitment(plen, max_new)
+        grant = min(_pages_for(plen) + 1, worst)
+        table = tiny.admit(grant, worst - grant)
+        assert table is not None, "servable request admitted"
+        while len(table) < worst:
+            table.append(tiny.grow())
+        tiny.release(table)
+    tiny.check_conservation()
+    assert sorted(tiny.free) == [1, 2]

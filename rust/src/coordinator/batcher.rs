@@ -232,6 +232,44 @@ impl Batcher {
         Some(resp)
     }
 
+    /// Abort one request wherever it lives — still queued, or occupying
+    /// a slot mid-flight.  Returns the aborted [`Response`] (with any
+    /// tokens generated so far) plus the slot index it vacated, so the
+    /// engine can reclaim the slot's KV pages; `None` for unknown /
+    /// already-finished ids.
+    pub fn abort(&mut self, id: RequestId) -> Option<(Response, Option<usize>)> {
+        if let Some(qi) = self.queue.iter().position(|r| r.id == id) {
+            let req = self.queue.remove(qi).expect("position just found");
+            self.finished += 1;
+            return Some((
+                Response {
+                    id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::Aborted,
+                    ttft: 0.0,
+                    latency: 0.0,
+                    prompt_len: req.prompt.len(),
+                },
+                None,
+            ));
+        }
+        let slot_idx = self.slots.iter().position(|s| {
+            matches!(s.state, SlotState::Decoding(i) | SlotState::Prefilling(i) if i == id)
+        })?;
+        let slot = &mut self.slots[slot_idx];
+        let resp = Response {
+            id,
+            tokens: std::mem::take(&mut slot.generated),
+            finish: FinishReason::Aborted,
+            ttft: 0.0,
+            latency: 0.0,
+            prompt_len: slot.prompt.len(),
+        };
+        *slot = Slot::empty();
+        self.finished += 1;
+        Some((resp, Some(slot_idx)))
+    }
+
     /// Abort everything in a slot and the queue (drain/shutdown).
     pub fn abort_all(&mut self) -> Vec<Response> {
         let mut out = Vec::new();
@@ -442,6 +480,32 @@ mod tests {
         let (adm, fin, act, q) = b.accounting();
         assert_eq!(adm, 5);
         assert_eq!(fin + act + q, 5);
+    }
+
+    #[test]
+    fn abort_single_request_in_queue_or_slot() {
+        let mut b = Batcher::new(1, 8);
+        b.submit(req(0, 2, 4));
+        b.submit(req(1, 3, 4));
+        b.refill();
+        b.complete_prefill(0, 9);
+        // id 1 is still queued: abort returns no slot to reclaim
+        let (resp, slot) = b.abort(RequestId(1)).expect("queued abort");
+        assert_eq!(resp.finish, FinishReason::Aborted);
+        assert_eq!(resp.prompt_len, 3);
+        assert_eq!(slot, None);
+        assert_eq!(b.queue_len(), 0);
+        // id 0 is mid-decode: abort vacates its slot, keeps partial tokens
+        b.push_token(0, 11);
+        let (resp, slot) = b.abort(RequestId(0)).expect("in-flight abort");
+        assert_eq!(resp.tokens, vec![9, 11]);
+        assert_eq!(slot, Some(0));
+        assert!(b.idle());
+        let (adm, fin, act, q) = b.accounting();
+        assert_eq!((adm, fin, act, q), (2, 2, 0, 0), "conservation after aborts");
+        // unknown / already-finished ids are a clean None
+        assert!(b.abort(RequestId(0)).is_none());
+        assert!(b.abort(RequestId(77)).is_none());
     }
 
     #[test]

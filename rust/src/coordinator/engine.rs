@@ -33,16 +33,43 @@
 //!   `(L, num_pages, page_size, nh, dh)` plus a per-slot block table,
 //!   driven by the `serve_decode_paged` / `page_append` artifacts.
 //!   Pool memory tracks *actual* context lengths instead of the worst
-//!   case; a [`crate::coordinator::pagetable::PageAllocator`] hands a
-//!   slot its full worst-case page need at admission and reclaims it at
-//!   retirement, and admission is gated on free *pages* (a page-starved
-//!   queue keeps decoding — FIFO order is preserved, nothing overtakes
-//!   the blocked head-of-line request).  Page 0 of the pool is a
-//!   reserved garbage page: sentinel block-table entries and inactive
-//!   slots' scatter traffic land there, never on live data.  Steady-
-//!   state decode stages the two `(B,)` vectors plus the
-//!   `(B, pages_per_slot)` block table up and the logits down — still
-//!   O(B), independent of both context length and pool size.
+//!   case.  Page 0 of the pool is a reserved garbage page: sentinel
+//!   block-table entries and inactive slots' scatter traffic land
+//!   there, never on live data.  Steady-state decode stages the two
+//!   `(B,)` vectors plus the `(B, pages_per_slot)` block table up and
+//!   the logits down — still O(B), independent of both context length
+//!   and pool size.
+//!
+//! **Paged admission: lazy growth + the reservation ledger.**  With
+//! [`EngineConfig::lazy_growth`] (the default), a slot is admitted with
+//! only the pages its prompt needs plus one decode page; the rest of
+//! its worst-case need is *reserved* in the
+//! [`crate::coordinator::pagetable::PageAllocator`] ledger and
+//! converted into real pages one at a time as the slot's `pos` crosses
+//! page boundaries during decode.  Admission gates on *unreserved*
+//! pages, so a grow request is always satisfiable from reserved
+//! headroom — growth can never deadlock, and a page-starved queue keeps
+//! decoding with FIFO order preserved (nothing overtakes the blocked
+//! head-of-line request).  `lazy_growth: false` restores the eager
+//! worst-case-at-admission policy of PR 3 (the equivalence baseline for
+//! the lazy path).
+//!
+//! **Copy-on-write prompt-prefix sharing.**  With
+//! [`EngineConfig::share_prefixes`] (the default), an admission whose
+//! prompt shares a token prefix with an in-flight slot's prompt does
+//! not re-store that prefix: the pages *fully covered* by the common
+//! prefix are refcounted in the allocator and referenced by both block
+//! tables (per-slot prefill KV is a pure function of the prompt, so the
+//! donor's rows are bit-identical to what the new slot's own prefill
+//! would write — asserted by `paged_and_dense_decode_bit_identical`
+//! and the Python protocol twin).  A shared page is never written: any
+//! page the appended decode row could land in (the boundary page of the
+//! prompt, and everything after) is made private at admission, and the
+//! slot's own `page_append` write performs the copy — that is the CoW
+//! event, counted in [`EngineMetrics::cow_copies`], costing zero extra
+//! transfers and no kernel change.  The sharer's `page_append` call
+//! routes its shared-prefix chunks to the garbage page so a donor's
+//! live pages are never rewritten mid-flight.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -79,6 +106,15 @@ pub struct EngineConfig {
     /// artifacts (`false` forces [`KvLayout::Dense`] — the equivalence
     /// baseline the integration tests compare against).
     pub prefer_paged: bool,
+    /// Lazy page growth (paged layout): admit with prompt pages + one
+    /// decode page and grow from the reservation ledger as `pos`
+    /// advances.  `false` restores PR 3's eager worst-case-at-admission
+    /// allocation (the lazy path's equivalence baseline).
+    pub lazy_growth: bool,
+    /// Copy-on-write prompt-prefix sharing (paged layout): admissions
+    /// reference in-flight slots' pages for fully-covered common prompt
+    /// prefixes instead of re-storing them.
+    pub share_prefixes: bool,
     /// Admission-queue bound (submissions beyond it are rejected).
     pub max_queue: usize,
     /// Prefill/decode interleaving policy.
@@ -97,6 +133,8 @@ impl Default for EngineConfig {
             paged_decode_artifact: "serve_decode_paged".into(),
             page_append_artifact: "page_append".into(),
             prefer_paged: true,
+            lazy_growth: true,
+            share_prefixes: true,
             max_queue: 256,
             scheduler: SchedulerConfig::default(),
             seed: 0,
@@ -127,6 +165,18 @@ pub struct EngineMetrics {
     /// not get pages (the page-starvation wait state: the tick decoded
     /// instead so retiring sequences free pages).
     pub page_stalls: u64,
+    /// Pages allocated lazily mid-flight, one per page-boundary
+    /// crossing, out of the slot's admission-time reservation.
+    pub page_grows: u64,
+    /// Block-table entries admitted as references to an in-flight
+    /// donor's prompt-prefix pages instead of fresh allocations.
+    pub shared_pages: u64,
+    /// Copy-on-write events: admissions whose common prefix ran into a
+    /// page the appended decode row could write, so that page was made
+    /// private and the slot's own `page_append` performed the copy.
+    pub cow_copies: u64,
+    /// Requests aborted (cancelled or drained) instead of finishing.
+    pub aborted: u64,
     /// Time-to-first-token distribution (seconds).
     pub ttft: Histogram,
     /// End-to-end latency distribution (seconds).
@@ -150,19 +200,130 @@ struct PagedState {
     allocator: PageAllocator,
     /// Block-table width (pages addressable per slot).
     pages_per_slot: usize,
-    /// Per-slot allocated page ids, in position order; empty for free
-    /// slots.  Uploaded as the `(B, pages_per_slot)` block table with
-    /// [`RESERVED_PAGE`] filling the unallocated tail.
+    /// Per-slot page ids, in position order; empty for free slots.
+    /// Uploaded as the `(B, pages_per_slot)` block table with
+    /// [`RESERVED_PAGE`] filling the unallocated tail.  The leading
+    /// `shared[slot]` entries are references to a donor's prefix pages
+    /// (refcounted, never written by this slot).
     tables: Vec<Vec<u32>>,
+    /// Per-slot remaining growth budget, mirrored in the allocator's
+    /// reservation ledger (`sum(reserved) == allocator.reserved_pages()`).
+    reserved: Vec<usize>,
+    /// Per-slot count of leading block-table entries shared from a
+    /// donor (`page_append` routes these chunks to the garbage page).
+    shared: Vec<usize>,
 }
 
 impl PagedState {
+    fn new(allocator: PageAllocator, pages_per_slot: usize, width: usize) -> Self {
+        PagedState {
+            allocator,
+            pages_per_slot,
+            tables: vec![Vec::new(); width],
+            reserved: vec![0; width],
+            shared: vec![0; width],
+        }
+    }
+
     /// Worst-case pages a request needs over its whole lifetime
-    /// (prompt + generation budget, clamped to the context span) —
-    /// allocated at admission so decode can never starve mid-flight.
+    /// (prompt + generation budget, clamped to the context span) — the
+    /// amount eager admission allocates and lazy admission commits
+    /// (allocated + reserved), so decode can never starve mid-flight.
     fn pages_needed(&self, prompt_len: usize, max_new: usize, max_len: usize) -> usize {
         let rows = (prompt_len.max(1) + max_new).min(max_len);
         self.allocator.pages_for(rows)
+    }
+
+    /// Whether a request of this shape could EVER be admitted: its
+    /// worst-case commitment must fit the whole usable pool (prefix
+    /// sharing is not assumed — donors are transient).  `false` means
+    /// reject at submit, or the request would head-block the FIFO queue
+    /// forever.
+    fn ever_admissible(&self, prompt_len: usize, max_new: usize, max_len: usize) -> bool {
+        self.pages_needed(prompt_len, max_new, max_len) <= self.allocator.usable_pages()
+    }
+
+    /// Reclaim one slot's pages and growth reservations (retirement,
+    /// cancellation, or drain — every exit path runs through here so
+    /// allocator conservation survives failures too).
+    fn reclaim_slot(&mut self, slot: usize) {
+        let pages = std::mem::take(&mut self.tables[slot]);
+        self.allocator.free(pages);
+        let r = std::mem::take(&mut self.reserved[slot]);
+        if r > 0 {
+            self.allocator.unreserve(r);
+        }
+        self.shared[slot] = 0;
+    }
+}
+
+/// One paged admission decision (pure planning — the caller's
+/// [`PageAllocator::admit`] call is the gate that commits it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct AdmitPlan {
+    /// Donor prefix pages the new block table will reference
+    /// (refcounted; always fully covered by the common token prefix of
+    /// both prompts, so neither side ever writes them).
+    shared: Vec<u32>,
+    /// Pages to allocate fresh at admission.
+    fresh: usize,
+    /// Worst-case growth budget to reserve (0 under eager admission).
+    reserve: usize,
+    /// The common prefix extended into a page the appended decode row
+    /// could write: that page was made private instead of shared, and
+    /// the slot's own `page_append` write performs the copy (the
+    /// copy-on-write event).
+    cow_copy: bool,
+}
+
+/// Plan one paged admission: how much of the worst-case page need
+/// (`ceil(min(prompt + max_new, max_len) / page_size)`) is shared from
+/// a donor, allocated now, or reserved for lazy growth.
+///
+/// Sharing is restricted to pages *fully covered* by the common token
+/// prefix: any page a decode row could land in (positions `>= prompt
+/// len` for either side) must be private, because pool pages are only
+/// ever written through a slot's own block-table entry.  The boundary
+/// page that the common prefix runs into is therefore copied — by the
+/// admission's own `page_append` write, not a device copy — exactly
+/// when it would otherwise be written (`cow_copy`).
+fn plan_paged_admission(
+    prompt: &[i32], max_new: usize, max_len: usize, page_size: usize, lazy: bool,
+    donors: &[(Vec<i32>, Vec<u32>)],
+) -> AdmitPlan {
+    let plen = prompt.len().max(1);
+    let worst = (plen + max_new).min(max_len).div_ceil(page_size);
+    let prompt_pages = plen.div_ceil(page_size);
+    let mut shared: Vec<u32> = Vec::new();
+    let mut best_common = 0usize;
+    for (donor_prompt, donor_table) in donors {
+        let common = prompt
+            .iter()
+            .zip(donor_prompt.iter())
+            .take_while(|(a, b)| a == b)
+            .count();
+        // full pages inside BOTH prompts (common <= both lengths); the
+        // donor's table always covers its own prompt pages
+        let n = (common / page_size).min(donor_table.len());
+        if n > shared.len() || (n == shared.len() && common > best_common) {
+            shared = donor_table[..n].to_vec();
+            best_common = common;
+        }
+    }
+    let n_share = shared.len();
+    debug_assert!(n_share <= prompt_pages);
+    // lazy: prompt pages + one decode page (capped at the worst case);
+    // eager: the full worst case, nothing reserved
+    let table_len = if lazy { (prompt_pages + 1).min(worst) } else { worst };
+    AdmitPlan {
+        fresh: table_len - n_share,
+        reserve: worst - table_len,
+        // only a real sharing admission can copy-on-write: the boundary
+        // page is "copied" when the common prefix extends past the last
+        // fully-shared page (sub-page overlaps with no shared pages are
+        // ordinary private admissions, not CoW events)
+        cow_copy: n_share > 0 && best_common > n_share * page_size,
+        shared,
     }
 }
 
@@ -285,11 +446,11 @@ impl Engine {
                      engine's page-append contract [0, 1]",
                     cfg.page_append_artifact
                 );
-                let state = PagedState {
-                    allocator: PageAllocator::new(meta.num_pages, meta.page_size),
-                    pages_per_slot: meta.pages_per_slot,
-                    tables: vec![Vec::new(); width],
-                };
+                let state = PagedState::new(
+                    PageAllocator::new(meta.num_pages, meta.page_size),
+                    meta.pages_per_slot,
+                    width,
+                );
                 (
                     KvLayout::Paged,
                     Some(state),
@@ -299,6 +460,33 @@ impl Engine {
             }
         };
         let cache_elem_bytes = cache_spec.dtype.size_bytes();
+
+        // Output-arity hardening: the hot paths pop a fixed number of
+        // outputs per artifact; a malformed artifact dir with the wrong
+        // result arity must fail at load with the artifact's name, not
+        // panic the engine mid-batch (the pop sites themselves degrade
+        // to typed errors through `pop_out` as a second line of
+        // defence, since the runtime only reports what actually came
+        // back from execution).
+        let expect_outputs = |spec: &crate::runtime::ArtifactSpec, n: usize| -> Result<()> {
+            anyhow::ensure!(
+                spec.outputs.len() == n,
+                "artifact '{}' declares {} outputs but the engine's \
+                 protocol needs exactly {n}",
+                spec.name,
+                spec.outputs.len()
+            );
+            Ok(())
+        };
+        expect_outputs(&prefill, 3)?; // logits, k_cache, v_cache
+        expect_outputs(&decode, 3)?; // logits, k_cache, v_cache
+        if let Some((pd, pa)) = &paged_specs {
+            expect_outputs(pd, 3)?; // logits, k_pool, v_pool
+            expect_outputs(pa, 2)?; // k_pool, v_pool
+        }
+        if let Ok(spl) = runtime.manifest().get(&cfg.splice_artifact) {
+            expect_outputs(spl, 2)?; // k_cache, v_cache
+        }
 
         // Cross-check the manifest-declared chaining contract against the
         // consumption order hard-wired into do_decode / splice_cache_rows
@@ -423,10 +611,19 @@ impl Engine {
     }
 
     /// Free / total usable pool pages (`None` on the dense layout).
+    /// Free pages include the growth headroom reserved by in-flight
+    /// slots — see [`Engine::page_reservations`].
     pub fn page_budget(&self) -> Option<(usize, usize)> {
         self.paged
             .as_ref()
             .map(|p| (p.allocator.free_pages(), p.allocator.usable_pages()))
+    }
+
+    /// Free pages promised to in-flight slots for lazy growth (`None`
+    /// on the dense layout; 0 after a full drain — the conservation
+    /// check the reclamation tests pin).
+    pub fn page_reservations(&self) -> Option<usize> {
+        self.paged.as_ref().map(|p| p.allocator.reserved_pages())
     }
 
     /// True when partial prefills merge cache rows on-device.
@@ -449,14 +646,18 @@ impl Engine {
             prompt.len(),
             self.prompt_width
         );
+        // a worst-case page need beyond the whole pool could never be
+        // admitted: without this reject it would sit at the head of the
+        // FIFO queue forever and starve every request behind it
         if let Some(ps) = &self.paged {
-            let need = ps.pages_needed(prompt.len(), params.max_new_tokens, self.max_len);
-            anyhow::ensure!(
-                need <= ps.allocator.usable_pages(),
-                "request needs {need} KV pages worst-case but the pool \
-                 only holds {} — it could never be admitted",
-                ps.allocator.usable_pages()
-            );
+            if !ps.ever_admissible(prompt.len(), params.max_new_tokens, self.max_len) {
+                anyhow::bail!(
+                    "request needs {} KV pages worst-case but the pool \
+                     only holds {} — it could never be admitted",
+                    ps.pages_needed(prompt.len(), params.max_new_tokens, self.max_len),
+                    ps.allocator.usable_pages()
+                );
+            }
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -469,23 +670,58 @@ impl Engine {
         }
     }
 
+    /// In-flight slots usable as prefix-sharing donors: their prompt and
+    /// current block table (the table always covers the prompt's pages).
+    fn sharing_donors(&self, ps: &PagedState) -> Vec<(Vec<i32>, Vec<u32>)> {
+        if !self.cfg.share_prefixes {
+            return Vec::new();
+        }
+        self.batcher
+            .slots()
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| s.state != SlotState::Empty && !ps.tables[*i].is_empty())
+            .map(|(i, s)| (s.prompt.clone(), ps.tables[i].clone()))
+            .collect()
+    }
+
     /// Requests the scheduler may admit *this* tick: the whole queue on
-    /// the dense layout, or the FIFO prefix whose worst-case page needs
-    /// fit the free pool on the paged one (nothing overtakes a blocked
-    /// head-of-line request — the allocator is only simulated here; real
-    /// allocation happens in the refill admission gate).
+    /// the dense layout, or the FIFO prefix whose page commitments
+    /// (fresh + reserved, net of shareable prefix pages) fit the
+    /// *unreserved* pool on the paged one (nothing overtakes a blocked
+    /// head-of-line request — the allocator is only simulated here; the
+    /// same plan is committed for real in the refill admission gate).
     fn admissible_now(&self, queued: usize, empty: usize) -> usize {
         let Some(ps) = &self.paged else { return queued };
-        let mut free = ps.allocator.free_pages();
+        let limit = queued.min(empty);
+        if limit == 0 {
+            return 0; // steady-state decode tick: skip the donor snapshot
+        }
+        let page_size = ps.allocator.page_size();
+        let mut budget = ps.allocator.unreserved_pages();
+        let mut donors = self.sharing_donors(ps);
         let mut admissible = 0usize;
-        for req in self.batcher.queued_requests().take(queued.min(empty)) {
-            let need =
-                ps.pages_needed(req.prompt.len(), req.params.max_new_tokens, self.max_len);
-            if need > free {
+        for req in self.batcher.queued_requests().take(limit) {
+            let plan = plan_paged_admission(
+                &req.prompt,
+                req.params.max_new_tokens,
+                self.max_len,
+                page_size,
+                self.cfg.lazy_growth,
+                &donors,
+            );
+            let need = plan.fresh + plan.reserve;
+            if need > budget {
                 break;
             }
-            free -= need;
+            budget -= need;
             admissible += 1;
+            if self.cfg.share_prefixes {
+                // page ids are placeholders — only the table LENGTH
+                // matters for later candidates' share planning
+                let len = plan.shared.len() + plan.fresh;
+                donors.push((req.prompt.clone(), vec![RESERVED_PAGE; len]));
+            }
         }
         admissible
     }
@@ -529,29 +765,58 @@ impl Engine {
 
     fn do_prefill(&mut self) -> Result<Vec<Response>> {
         // paged admission gate: a request enters a slot only if its
-        // worst-case page need can be allocated RIGHT NOW (freed again
-        // at retirement); the first refusal stops the refill so FIFO
-        // order survives page starvation
+        // whole page commitment — fresh pages now plus the reserved
+        // growth budget, net of shareable prefix pages — fits the
+        // unreserved pool RIGHT NOW (reclaimed at retirement); the
+        // first refusal stops the refill so FIFO order survives page
+        // starvation
+        let donors = match &self.paged {
+            Some(ps) => self.sharing_donors(ps),
+            None => Vec::new(),
+        };
         let filled = match &mut self.paged {
             None => self.batcher.refill(),
             Some(ps) => {
                 let max_len = self.max_len;
-                let mut granted: Vec<Vec<u32>> = Vec::new();
+                let page_size = ps.allocator.page_size();
+                let lazy = self.cfg.lazy_growth;
+                let share = self.cfg.share_prefixes;
+                let mut donors = donors;
                 let allocator = &mut ps.allocator;
+                // (table, shared count, growth reservation, cow event)
+                let mut granted: Vec<(Vec<u32>, usize, usize, bool)> = Vec::new();
                 let filled = self.batcher.refill_with(|req| {
-                    let rows =
-                        (req.prompt.len().max(1) + req.params.max_new_tokens).min(max_len);
-                    match allocator.alloc(allocator.pages_for(rows)) {
-                        Some(pages) => {
-                            granted.push(pages);
-                            true
-                        }
-                        None => false,
+                    let plan = plan_paged_admission(
+                        &req.prompt,
+                        req.params.max_new_tokens,
+                        max_len,
+                        page_size,
+                        lazy,
+                        &donors,
+                    );
+                    let Some(fresh) = allocator.admit(plan.fresh, plan.reserve) else {
+                        return false;
+                    };
+                    let n_share = plan.shared.len();
+                    for &p in &plan.shared {
+                        allocator.retain(p);
                     }
+                    let mut table = plan.shared;
+                    table.extend(fresh);
+                    if share {
+                        // slots admitted this wave donate to later ones
+                        donors.push((req.prompt.clone(), table.clone()));
+                    }
+                    granted.push((table, n_share, plan.reserve, plan.cow_copy));
+                    true
                 });
                 debug_assert_eq!(filled.len(), granted.len());
-                for (&slot, pages) in filled.iter().zip(granted) {
-                    ps.tables[slot] = pages;
+                for (&slot, (table, n_share, reserve, cow)) in filled.iter().zip(granted) {
+                    ps.tables[slot] = table;
+                    ps.reserved[slot] = reserve;
+                    ps.shared[slot] = n_share;
+                    self.metrics.shared_pages += n_share as u64;
+                    self.metrics.cow_copies += cow as u64;
                 }
                 filled
             }
@@ -595,9 +860,9 @@ impl Engine {
             .runtime
             .run_chained(&self.cfg.prefill_artifact, &args, &[0])
             .context("serve_prefill")?;
-        let vc_new = outs.pop().unwrap().into_buffer()?;
-        let kc_new = outs.pop().unwrap().into_buffer()?;
-        let logits = outs.pop().unwrap().into_host()?;
+        let vc_new = pop_out(&mut outs, &self.cfg.prefill_artifact)?.into_buffer()?;
+        let kc_new = pop_out(&mut outs, &self.cfg.prefill_artifact)?.into_buffer()?;
+        let logits = pop_out(&mut outs, &self.cfg.prefill_artifact)?.into_host()?;
 
         // merge ONLY the refilled slots' rows into the live KV state —
         // dense row splice, or page-table scatter on the paged layout
@@ -625,6 +890,38 @@ impl Engine {
         let decoding = self.batcher.decoding_slots();
         if decoding.is_empty() {
             return Ok(Vec::new());
+        }
+        // lazy page growth: this tick appends each active slot's KV row
+        // at `pos`; any slot whose `pos` crossed into an unallocated
+        // page converts one admission-time reservation into a real page
+        // first.  The ledger guarantees the conversion succeeds — a
+        // failure here is a page-accounting bug, not backpressure.
+        if let Some(ps) = &mut self.paged {
+            let page_size = ps.allocator.page_size();
+            for &i in &decoding {
+                let needed = self.pos[i] as usize / page_size + 1;
+                while ps.tables[i].len() < needed {
+                    anyhow::ensure!(
+                        ps.reserved[i] > 0,
+                        "slot {i} needs page {} of {} with no reservation left \
+                         (pos {}) — lazy-growth accounting bug",
+                        ps.tables[i].len(),
+                        needed,
+                        self.pos[i]
+                    );
+                    let page = ps.allocator.grow_reserved();
+                    ps.reserved[i] -= 1;
+                    ps.tables[i].push(page);
+                    self.metrics.page_grows += 1;
+                }
+                // CoW invariant: the page receiving this tick's appended
+                // row is past the shared prefix and private to this slot
+                debug_assert!(
+                    needed - 1 >= ps.shared[i],
+                    "decode write would land in a shared prefix page"
+                );
+                debug_assert_eq!(ps.allocator.refcount(ps.tables[i][needed - 1]), 1);
+            }
         }
         self.metrics.decode_steps += 1;
         // steady-state host traffic: two (B,) i32 vectors (plus the
@@ -665,9 +962,9 @@ impl Engine {
             .runtime
             .run_chained(&artifact, &args, &[0])
             .context("serve decode step")?;
-        self.v_cache = outs.pop().unwrap().into_buffer()?;
-        self.k_cache = outs.pop().unwrap().into_buffer()?;
-        let logits = outs.pop().unwrap().into_host()?;
+        self.v_cache = pop_out(&mut outs, &artifact)?.into_buffer()?;
+        self.k_cache = pop_out(&mut outs, &artifact)?.into_buffer()?;
+        let logits = pop_out(&mut outs, &artifact)?.into_host()?;
 
         let mut responses = Vec::new();
         for i in decoding {
@@ -684,14 +981,13 @@ impl Engine {
 
     fn maybe_finish(&mut self, slot: usize, tok: i32) -> Option<Response> {
         let resp = self.batcher.push_token(slot, tok)?;
-        // retirement frees the slot's pages for the next admission
-        // (copy-free reuse: stale page contents are masked exactly like
-        // the dense layout's stale rows)
+        // retirement releases the slot's pages (shared prefix pages only
+        // actually free with their last reference) and returns its
+        // unused growth budget to the unreserved pool (copy-free reuse:
+        // stale page contents are masked exactly like the dense
+        // layout's stale rows)
         if let Some(ps) = &mut self.paged {
-            let pages = std::mem::take(&mut ps.tables[slot]);
-            if !pages.is_empty() {
-                ps.allocator.free(pages);
-            }
+            ps.reclaim_slot(slot);
         }
         self.metrics.completed += 1;
         self.metrics.ttft.record(resp.ttft);
@@ -701,17 +997,28 @@ impl Engine {
 
     /// The `(B, pages_per_slot)` i32 block table for the current slot
     /// assignments; unallocated tail entries point at the reserved
-    /// garbage page.
-    fn block_table_tensor(&self) -> Result<Tensor> {
+    /// garbage page.  With `for_append`, each slot's leading shared
+    /// prefix entries are ALSO routed to the garbage page: `page_append`
+    /// must never rewrite a donor's live pages (the sharer's prefill
+    /// rows for those positions are bit-identical anyway — skipping the
+    /// write is what makes prefix sharing copy-free), while the decode
+    /// table keeps the real ids so gathers see the shared prefix.
+    fn block_table(&self, for_append: bool) -> Result<Tensor> {
         let ps = self.paged.as_ref().expect("paged layout");
         let pps = ps.pages_per_slot;
         let mut bt = vec![RESERVED_PAGE as i32; self.width * pps];
         for (slot, pages) in ps.tables.iter().enumerate() {
-            for (j, &p) in pages.iter().enumerate() {
+            let skip = if for_append { ps.shared[slot] } else { 0 };
+            for (j, &p) in pages.iter().enumerate().skip(skip) {
                 bt[slot * pps + j] = p as i32;
             }
         }
         Tensor::from_i32(&[self.width, pps], bt)
+    }
+
+    /// Decode-side block table (real page ids, sentinel tail).
+    fn block_table_tensor(&self) -> Result<Tensor> {
+        self.block_table(false)
     }
 
     /// Sample one batch row with the slot's own [`SamplingParams`] and
@@ -753,8 +1060,8 @@ impl Engine {
                 .runtime
                 .run_buffers_to_buffers(&self.cfg.splice_artifact, &args)
                 .context("kv_splice")?;
-            self.v_cache = outs.pop().unwrap();
-            self.k_cache = outs.pop().unwrap();
+            self.v_cache = pop_out(&mut outs, &self.cfg.splice_artifact)?;
+            self.k_cache = pop_out(&mut outs, &self.cfg.splice_artifact)?;
             self.metrics.device_splices += 1;
             return Ok(());
         }
@@ -792,17 +1099,19 @@ impl Engine {
         let mask_b = self
             .runtime
             .upload_tensor_for(&name, &Tensor::from_i32(&[self.width], mask)?)?;
+        // append-side table: shared prefix entries → garbage page, so a
+        // sharer never rewrites its donor's live pages
         let table_b = self
             .runtime
-            .upload_tensor_for(&name, &self.block_table_tensor()?)?;
+            .upload_tensor_for(&name, &self.block_table(true)?)?;
         let args: Vec<&xla::PjRtBuffer> =
             vec![&self.k_cache, &self.v_cache, &kc_new, &vc_new, &table_b, &mask_b];
         let mut outs = self
             .runtime
             .run_buffers_to_buffers(&name, &args)
             .context("page_append")?;
-        self.v_cache = outs.pop().unwrap();
-        self.k_cache = outs.pop().unwrap();
+        self.v_cache = pop_out(&mut outs, &name)?;
+        self.k_cache = pop_out(&mut outs, &name)?;
         self.metrics.page_appends += 1;
         Ok(())
     }
@@ -826,6 +1135,46 @@ impl Engine {
     pub fn is_idle(&self) -> bool {
         self.batcher.idle()
     }
+
+    /// Cancel one request mid-flight (queued or decoding): its slot's
+    /// pages and growth reservations are reclaimed exactly as on normal
+    /// retirement, so allocator conservation survives cancellations.
+    /// Returns the aborted [`Response`] (partial tokens included), or
+    /// `None` if the id is unknown or already finished.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Response> {
+        let (resp, slot) = self.batcher.abort(id)?;
+        if let (Some(ps), Some(slot)) = (&mut self.paged, slot) {
+            ps.reclaim_slot(slot);
+        }
+        self.metrics.aborted += 1;
+        Some(resp)
+    }
+
+    /// Abort every queued and in-flight request (drain/shutdown, or the
+    /// caller's recovery path after a failed [`Engine::tick`]): all
+    /// pages and growth reservations return to the pool, refcounted
+    /// prefix pages included.
+    pub fn abort_all(&mut self) -> Vec<Response> {
+        let out = self.batcher.abort_all();
+        if let Some(ps) = &mut self.paged {
+            for slot in 0..ps.tables.len() {
+                ps.reclaim_slot(slot);
+            }
+        }
+        self.metrics.aborted += out.len() as u64;
+        out
+    }
+}
+
+/// Pop the next output of `artifact`'s result row, turning a short row
+/// into a typed error instead of a panic — a malformed artifact must
+/// surface as `Err` with the artifact's name, never bring down the
+/// engine mid-batch (arity is also validated against the manifest at
+/// engine build; this guards what execution actually returned).
+fn pop_out<T>(outs: &mut Vec<T>, artifact: &str) -> Result<T> {
+    outs.pop().with_context(|| {
+        format!("artifact '{artifact}' returned fewer outputs than its manifest declares")
+    })
 }
 
 /// Sample a token id from one logits row per `params`:
@@ -934,15 +1283,122 @@ mod tests {
 
     #[test]
     fn pages_needed_covers_lifetime_and_clamps() {
-        let ps = PagedState {
-            allocator: PageAllocator::new(41, 16),
-            pages_per_slot: 10,
-            tables: Vec::new(),
-        };
+        let ps = PagedState::new(PageAllocator::new(41, 16), 10, 0);
         assert_eq!(ps.pages_needed(6, 8, 160), 1, "14 rows fit one page");
         assert_eq!(ps.pages_needed(30, 40, 160), 5, "70 rows need 5 pages");
         assert_eq!(ps.pages_needed(100, 500, 160), 10, "clamped to max_len");
         assert_eq!(ps.pages_needed(0, 4, 160), 1, "empty prompt still holds a row");
+    }
+
+    #[test]
+    fn oversized_requests_are_never_admissible() {
+        // regression (satellite): a pool smaller than one slot's span
+        // must reject requests whose worst case exceeds it at submit —
+        // queued, they would head-block the FIFO forever
+        let ps = PagedState::new(PageAllocator::new(3, 16), 10, 0); // 2 usable
+        assert!(ps.ever_admissible(6, 8, 160), "1-page request fits");
+        assert!(ps.ever_admissible(16, 16, 160), "2-page request fits exactly");
+        assert!(!ps.ever_admissible(30, 40, 160), "5-page worst case never fits");
+        // the shipped geometry (40 usable, 10-page span) can admit any
+        // single request — the guard exists for smaller provisioning
+        let shipped = PagedState::new(PageAllocator::new(41, 16), 10, 0);
+        assert!(shipped.ever_admissible(100, 10_000, 160), "clamped to the span");
+    }
+
+    // ---- admission planner: lazy growth + copy-on-write sharing ----
+
+    const PAGE: usize = 16;
+    const MAX: usize = 160;
+
+    fn plan(
+        prompt: &[i32], max_new: usize, lazy: bool, donors: &[(Vec<i32>, Vec<u32>)],
+    ) -> AdmitPlan {
+        plan_paged_admission(prompt, max_new, MAX, PAGE, lazy, donors)
+    }
+
+    #[test]
+    fn eager_plan_is_full_worst_case_up_front() {
+        let p = plan(&[1; 20], 40, false, &[]);
+        assert_eq!(p.fresh, 4, "ceil(60/16) pages allocated at admission");
+        assert_eq!(p.reserve, 0, "eager reserves nothing");
+        assert!(p.shared.is_empty());
+        assert!(!p.cow_copy);
+    }
+
+    #[test]
+    fn lazy_plan_grants_prompt_pages_plus_one_and_reserves_the_rest() {
+        // prompt 20 → 2 pages; +1 decode page; worst case ceil(60/16)=4
+        let p = plan(&[1; 20], 40, true, &[]);
+        assert_eq!(p.fresh, 3);
+        assert_eq!(p.reserve, 1);
+        // total commitment always equals the worst case
+        assert_eq!(p.fresh + p.reserve, plan(&[1; 20], 40, false, &[]).fresh);
+    }
+
+    #[test]
+    fn lazy_plan_caps_the_decode_page_at_the_worst_case() {
+        // prompt 10, budget 3: 13 rows fit the single prompt page — no
+        // extra decode page, nothing to reserve
+        let p = plan(&[1; 10], 3, true, &[]);
+        assert_eq!((p.fresh, p.reserve), (1, 0));
+        // empty prompt still occupies one row
+        let p = plan(&[], 4, true, &[]);
+        assert_eq!((p.fresh, p.reserve), (1, 0));
+    }
+
+    #[test]
+    fn sharing_takes_only_full_common_prefix_pages() {
+        let donor_prompt: Vec<i32> = (0..30).collect();
+        let donor_table: Vec<u32> = vec![7, 8, 9]; // 2 prompt pages + decode page
+        let donors = vec![(donor_prompt.clone(), donor_table)];
+        // identical 30-token prompt: common=30 → 1 full page shared (the
+        // page holding rows 16..29 is the boundary page — it will take
+        // this slot's first decode writes, so it is copied, not shared
+        let p = plan(&donor_prompt, 40, true, &donors);
+        assert_eq!(p.shared, vec![7], "one full prefix page shared");
+        assert!(p.cow_copy, "boundary page with matching rows was privatized");
+        // commitment shrinks by exactly the shared pages
+        let solo = plan(&donor_prompt, 40, true, &[]);
+        assert_eq!(p.fresh + p.reserve + 1, solo.fresh + solo.reserve);
+        // a 32-token twin shares both full pages and cow-copies nothing
+        let two_pages: Vec<i32> = (0..32).collect();
+        let donors = vec![(two_pages.clone(), vec![4, 5, 6])];
+        let p = plan(&two_pages, 8, true, &donors);
+        assert_eq!(p.shared, vec![4, 5]);
+        assert!(!p.cow_copy, "prefix ends exactly on a page boundary");
+    }
+
+    #[test]
+    fn sharing_never_reaches_a_page_either_side_could_write() {
+        // donor prompt 20 (partial page 1), candidate identical: only
+        // page 0 is fully inside both prompts
+        let donor: Vec<i32> = (100..120).collect();
+        let donors = vec![(donor.clone(), vec![3, 4, 5])];
+        let p = plan(&donor, 16, true, &donors);
+        assert_eq!(p.shared, vec![3], "partial pages are never shared");
+        // unrelated prompt shares nothing
+        let q = plan(&[9; 20], 16, true, &donors);
+        assert!(q.shared.is_empty());
+        assert!(!q.cow_copy);
+        // sub-page common prefix: nothing shareable, and with zero
+        // shared pages there is nothing to copy either — an ordinary
+        // private admission, not a CoW event (metric stays meaningful)
+        let mut near = donor.clone();
+        near[10] = -1;
+        let r = plan(&near, 16, true, &donors);
+        assert!(r.shared.is_empty());
+        assert!(!r.cow_copy);
+    }
+
+    #[test]
+    fn best_donor_wins_and_same_wave_donors_are_usable() {
+        let long: Vec<i32> = (0..32).collect();
+        let donors = vec![
+            (long[..16].to_vec(), vec![2, 3]), // 1 shareable page
+            (long.clone(), vec![4, 5, 6]),     // 2 shareable pages
+        ];
+        let p = plan(&long, 8, true, &donors);
+        assert_eq!(p.shared, vec![4, 5], "longest common prefix wins");
     }
 
     #[test]

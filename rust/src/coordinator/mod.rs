@@ -11,8 +11,10 @@
 //!   decode step).
 //! * [`scheduler`] — prefill/decode interleaving policy and admission
 //!   control with backpressure.
-//! * [`pagetable`] — free-list page allocator for the paged KV cache
-//!   (block-table serving layout; admission gated on free pages).
+//! * [`pagetable`] — refcounted free-list page allocator + reservation
+//!   ledger for the paged KV cache (block-table serving layout; lazy
+//!   page growth, copy-on-write prefix sharing, admission gated on
+//!   unreserved pages).
 //! * [`expert_stats`] — per-expert routing load telemetry (the paper's
 //!   imbalance story made observable: padding waste, load CV).
 //! * [`trace`]    — reproducible arrival-process generation (Poisson,

@@ -1,36 +1,65 @@
-//! Free-list page allocator for the paged KV cache.
+//! Refcounted free-list page allocator + reservation ledger for the
+//! paged KV cache.
 //!
 //! The paged serving layout stores KV rows in fixed-size pages shared by
 //! every decode slot (pools of shape `(L, num_pages, page_size, nh, dh)`
-//! on device); this allocator owns the *page ids*.  The engine allocates
-//! a slot's full worst-case need (`ceil((prompt + max_new) / page_size)`
-//! pages) at admission and frees it when the sequence retires, so a
-//! decode step can never run out of pages mid-flight and page reuse is
-//! copy-free — a freed page is handed to the next admission as-is, its
-//! stale contents masked by the attention live-mask exactly like the
-//! dense layout's stale rows.
+//! on device); this allocator owns the *page ids*.  Two admission
+//! policies sit on top of it (selected by the engine):
+//!
+//! * **Eager** (PR 3): a slot's full worst-case need
+//!   (`ceil((prompt + max_new) / page_size)` pages) is allocated at
+//!   admission via [`PageAllocator::admit`]`(need, 0)` and released at
+//!   retirement — simple, but memory savings stop at the
+//!   typical-vs-worst-case context ratio.
+//! * **Lazy growth**: admission allocates only the pages the prompt
+//!   needs plus one decode page, and *reserves* the rest of the
+//!   worst-case need in the ledger ([`PageAllocator::admit`]`(fresh,
+//!   reserve)`).  As the slot's `pos` crosses page boundaries the engine
+//!   converts one reservation into one real page with
+//!   [`PageAllocator::grow_reserved`].  Admission gates on *unreserved*
+//!   pages, so a grow request is always satisfiable from reserved
+//!   headroom — lazy growth can never deadlock (`free >= reserved` is a
+//!   structural invariant, asserted on every mutation).
+//!
+//! Pages are **refcounted** so prompt-prefix pages can be shared
+//! copy-on-write across block tables: an admission that shares a
+//! donor's prefix pages [`PageAllocator::retain`]s them instead of
+//! allocating fresh ones; [`PageAllocator::release`] returns a page to
+//! the free list only when its last reference drops.  Shared pages are
+//! never written (the engine gives every slot a private page for any
+//! position it will decode into — see `coordinator/engine.rs`), so
+//! sharing needs no device-side copy.
 //!
 //! **Page 0 is reserved** as the garbage page: the lowered artifacts
 //! route every inactive slot's scatter traffic and every sentinel
 //! block-table entry there, so it must never be handed out.
 //!
 //! Invariants (unit-tested below, exercised end-to-end by the
-//! integration tests):
-//! * conservation: `free_pages() + outstanding() == usable_pages()`;
-//! * no double-allocation: a page id is owned by at most one slot;
+//! integration tests and the Python protocol twin):
+//! * conservation: `free_pages() + outstanding() == usable_pages()`,
+//!   where a page is outstanding iff its refcount is ≥ 1 (shared pages
+//!   count once, however many tables reference them);
+//! * deadlock freedom: `free_pages() >= reserved_pages()` always, so a
+//!   slot holding reservations can always grow;
+//! * no double-allocation: a free page has refcount 0, an allocated
+//!   page's id appears in no free list;
 //! * exhaustion is a clean `None` (the caller queues the admission),
 //!   never a partial allocation.
 
 /// The reserved garbage page id (see module docs).
 pub const RESERVED_PAGE: u32 = 0;
 
-/// Free-list allocator over the pool's page ids.
+/// Refcounted free-list allocator over the pool's page ids, with a
+/// reservation ledger for deadlock-free lazy growth.
 #[derive(Clone, Debug)]
 pub struct PageAllocator {
     /// Pages available for allocation (stack: last freed, first reused).
     free: Vec<u32>,
-    /// Ownership bitmap over all page ids (guards double alloc/free).
-    allocated: Vec<bool>,
+    /// Per-page reference count (0 = free; the reserved page is pinned).
+    refs: Vec<u32>,
+    /// Pages promised to in-flight slots for future growth; kept on the
+    /// free list but excluded from admission ([`Self::unreserved_pages`]).
+    reserved: usize,
     /// Total pages in the pool, including the reserved page.
     num_pages: usize,
     /// Rows per page.
@@ -45,9 +74,9 @@ impl PageAllocator {
         assert!(page_size > 0, "pages must hold at least one row");
         // ascending ids pop from the high end; deterministic either way
         let free: Vec<u32> = (1..num_pages as u32).collect();
-        let mut allocated = vec![false; num_pages];
-        allocated[RESERVED_PAGE as usize] = true; // never handed out
-        PageAllocator { free, allocated, num_pages, page_size }
+        let mut refs = vec![0u32; num_pages];
+        refs[RESERVED_PAGE as usize] = 1; // never handed out
+        PageAllocator { free, refs, reserved: 0, num_pages, page_size }
     }
 
     /// Rows per page.
@@ -65,14 +94,33 @@ impl PageAllocator {
         self.num_pages - 1
     }
 
-    /// Pages currently available.
+    /// Pages currently on the free list (including reserved headroom).
     pub fn free_pages(&self) -> usize {
         self.free.len()
     }
 
-    /// Pages currently held by slots.
+    /// Free pages promised to in-flight slots for lazy growth.
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved
+    }
+
+    /// Free pages available to *new* admissions: the free list minus the
+    /// growth headroom reserved by in-flight slots.  This is the
+    /// admission gate — gating on it is what makes growth deadlock-free.
+    pub fn unreserved_pages(&self) -> usize {
+        debug_assert!(self.free.len() >= self.reserved, "reservation ledger corrupt");
+        self.free.len() - self.reserved
+    }
+
+    /// Pages currently held by at least one slot (refcount ≥ 1; a page
+    /// shared by several block tables counts once).
     pub fn outstanding(&self) -> usize {
         self.usable_pages() - self.free.len()
+    }
+
+    /// Reference count of one page (0 = free).
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refs[page as usize]
     }
 
     /// Pages needed to hold `rows` KV rows (`ceil(rows / page_size)`).
@@ -80,34 +128,91 @@ impl PageAllocator {
         rows.div_ceil(self.page_size)
     }
 
-    /// Allocate `n` pages, or `None` (state untouched) if fewer than `n`
-    /// are free — exhaustion is the caller's queue-or-reject signal.
-    pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
-        if n > self.free.len() {
+    /// Admit one slot: allocate `fresh` pages now and reserve `reserve`
+    /// more for its future growth, or `None` (state untouched) if the
+    /// *unreserved* pool cannot cover `fresh + reserve` — exhaustion is
+    /// the caller's queue-or-reject signal.  Eager admission is
+    /// `admit(worst_case, 0)`; lazy admission is `admit(initial,
+    /// worst_case - initial - shared)`.
+    pub fn admit(&mut self, fresh: usize, reserve: usize) -> Option<Vec<u32>> {
+        if fresh + reserve > self.unreserved_pages() {
             return None;
         }
-        let pages = self.free.split_off(self.free.len() - n);
+        let pages = self.free.split_off(self.free.len() - fresh);
         for &p in &pages {
-            debug_assert!(!self.allocated[p as usize], "double allocation");
-            self.allocated[p as usize] = true;
+            debug_assert_eq!(self.refs[p as usize], 0, "double allocation");
+            self.refs[p as usize] = 1;
         }
+        self.reserved += reserve;
         Some(pages)
     }
 
-    /// Return pages to the free list (slot retirement).
+    /// Allocate `n` pages with no reservation (eager policy shorthand).
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
+        self.admit(n, 0)
+    }
+
+    /// Convert one of the caller's reservations into a real page (lazy
+    /// growth when a slot's `pos` crosses a page boundary).  Always
+    /// succeeds when the caller holds a reservation — `free >= reserved
+    /// >= 1` is the ledger invariant.
     ///
-    /// Panics on double-free or on freeing the reserved page — both are
-    /// coordinator bugs that would silently corrupt another slot's KV
-    /// state if let through.
+    /// Panics if no reservations exist at all: growing without a
+    /// reservation is a coordinator bug that could deadlock admission.
+    pub fn grow_reserved(&mut self) -> u32 {
+        assert!(self.reserved > 0, "grow without a reservation");
+        assert!(!self.free.is_empty(), "reservation ledger corrupt: no free page");
+        self.reserved -= 1;
+        let p = self.free.pop().expect("checked non-empty");
+        debug_assert_eq!(self.refs[p as usize], 0, "double allocation");
+        self.refs[p as usize] = 1;
+        p
+    }
+
+    /// Return `n` reservations to the unreserved pool (slot retired or
+    /// aborted before exhausting its growth budget).
+    pub fn unreserve(&mut self, n: usize) {
+        assert!(n <= self.reserved, "unreserve of {n} exceeds ledger {}", self.reserved);
+        self.reserved -= n;
+    }
+
+    /// Add one reference to an allocated page (prompt-prefix sharing:
+    /// the new slot's block table points at the donor's page).
+    ///
+    /// Panics on the reserved page or a free page — sharing garbage or
+    /// an unowned page would corrupt another slot's KV state.
+    pub fn retain(&mut self, page: u32) {
+        assert_ne!(page, RESERVED_PAGE, "retained the reserved garbage page");
+        assert!(
+            (page as usize) < self.num_pages && self.refs[page as usize] > 0,
+            "retain of free page {page}"
+        );
+        self.refs[page as usize] += 1;
+    }
+
+    /// Drop one reference to a page; it returns to the free list when
+    /// the last reference goes (slot retirement / abort).
+    ///
+    /// Panics on over-release or on releasing the reserved page — both
+    /// are coordinator bugs that would silently corrupt another slot's
+    /// KV state if let through.
+    pub fn release(&mut self, page: u32) {
+        assert_ne!(page, RESERVED_PAGE, "freed the reserved garbage page");
+        assert!(
+            (page as usize) < self.num_pages && self.refs[page as usize] > 0,
+            "double free of page {page}"
+        );
+        self.refs[page as usize] -= 1;
+        if self.refs[page as usize] == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Release a whole block table (slot retirement).  Shared pages only
+    /// actually free once their last referencing table is released.
     pub fn free(&mut self, pages: Vec<u32>) {
         for p in pages {
-            assert_ne!(p, RESERVED_PAGE, "freed the reserved garbage page");
-            assert!(
-                (p as usize) < self.num_pages && self.allocated[p as usize],
-                "double free of page {p}"
-            );
-            self.allocated[p as usize] = false;
-            self.free.push(p);
+            self.release(p);
         }
     }
 }
@@ -183,5 +288,137 @@ mod tests {
         let p = a.alloc(1).unwrap();
         a.free(p.clone());
         a.free(p);
+    }
+
+    // ---- reservation ledger (lazy growth) ----
+
+    #[test]
+    fn reservations_gate_admission_but_not_the_free_list() {
+        let mut a = PageAllocator::new(11, 4); // 10 usable
+        let t = a.admit(2, 5).unwrap(); // lazy slot: 2 now, 5 promised
+        assert_eq!(t.len(), 2);
+        assert_eq!(a.free_pages(), 8, "reserved pages stay on the free list");
+        assert_eq!(a.reserved_pages(), 5);
+        assert_eq!(a.unreserved_pages(), 3);
+        // a worst-case-4 admission no longer fits, even though 8 are free
+        assert!(a.admit(4, 0).is_none(), "admission must gate on unreserved");
+        assert!(a.admit(2, 1).is_some(), "but the unreserved prefix fits");
+        a.free(t);
+        a.unreserve(5);
+        assert_eq!(a.unreserved_pages(), a.free_pages());
+    }
+
+    #[test]
+    fn growth_is_always_satisfiable_from_reservations() {
+        // the deadlock-freedom invariant: free >= reserved, so every
+        // reservation can be converted even under total admission
+        // starvation
+        let mut a = PageAllocator::new(9, 4); // 8 usable
+        let s1 = a.admit(1, 3).unwrap();
+        let s2 = a.admit(1, 3).unwrap();
+        assert_eq!(a.unreserved_pages(), 0, "pool fully committed");
+        assert!(a.admit(1, 0).is_none(), "no admission under full commitment");
+        let mut t1 = s1;
+        let mut t2 = s2;
+        for _ in 0..3 {
+            t1.push(a.grow_reserved());
+            t2.push(a.grow_reserved());
+        }
+        assert_eq!(a.free_pages(), 0);
+        assert_eq!(a.reserved_pages(), 0);
+        assert_eq!(a.outstanding(), 8);
+        a.free(t1);
+        a.free(t2);
+        assert_eq!(a.free_pages(), 8);
+    }
+
+    #[test]
+    fn conservation_holds_with_reservations_and_early_retirement() {
+        let mut a = PageAllocator::new(11, 4);
+        let t = a.admit(2, 6).unwrap();
+        let mut t = t;
+        t.push(a.grow_reserved()); // grew once, then hit a stop token
+        a.unreserve(5); // the 5 unused reservations come back
+        a.free(t);
+        assert_eq!(a.free_pages(), 10);
+        assert_eq!(a.reserved_pages(), 0);
+        assert_eq!(a.outstanding(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "grow without a reservation")]
+    fn growth_without_reservation_panics() {
+        let mut a = PageAllocator::new(4, 4);
+        a.grow_reserved();
+    }
+
+    // ---- refcounts (copy-on-write prefix sharing) ----
+
+    #[test]
+    fn shared_pages_free_only_on_last_release() {
+        let mut a = PageAllocator::new(6, 4);
+        let donor = a.alloc(2).unwrap();
+        a.retain(donor[0]); // a second block table now references it
+        assert_eq!(a.refcount(donor[0]), 2);
+        assert_eq!(a.outstanding(), 2, "shared pages count once");
+        a.free(donor.clone()); // donor retires first
+        assert_eq!(a.free_pages() + a.outstanding(), a.usable_pages());
+        assert_eq!(a.outstanding(), 1, "shared page survives the donor");
+        a.release(donor[0]); // sharer retires
+        assert_eq!(a.outstanding(), 0);
+        assert_eq!(a.free_pages(), 5);
+    }
+
+    #[test]
+    fn shared_page_is_not_reallocated_while_referenced() {
+        let mut a = PageAllocator::new(4, 4);
+        let t = a.alloc(3).unwrap();
+        a.retain(t[1]);
+        a.free(t.clone());
+        // pages t[0], t[2] are free again; t[1] still referenced
+        let again = a.alloc(2).unwrap();
+        assert!(!again.contains(&t[1]), "referenced page must not be re-handed out");
+        assert!(a.alloc(1).is_none());
+        a.release(t[1]);
+        assert!(a.alloc(1).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free page")]
+    fn retain_of_free_page_panics() {
+        let mut a = PageAllocator::new(4, 4);
+        a.retain(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "reserved garbage page")]
+    fn retain_of_reserved_page_panics() {
+        let mut a = PageAllocator::new(4, 4);
+        a.retain(RESERVED_PAGE);
+    }
+
+    /// The satellite reclamation property at the allocator level: an
+    /// induced mid-flight failure (abort) that releases tables and
+    /// reservations restores full conservation, refcounted pages
+    /// included.
+    #[test]
+    fn conservation_after_induced_abort_with_sharing_and_reservations() {
+        let mut a = PageAllocator::new(21, 4); // 20 usable
+        // slot A: eager-ish, 4 pages
+        let ta = a.alloc(4).unwrap();
+        // slot B: lazy, shares A's first 2 pages, 1 fresh + 3 reserved
+        let mut tb = vec![ta[0], ta[1]];
+        a.retain(ta[0]);
+        a.retain(ta[1]);
+        tb.extend(a.admit(1, 3).unwrap());
+        tb.push(a.grow_reserved()); // B grew once before the failure
+        assert_eq!(a.free_pages() + a.outstanding(), a.usable_pages());
+        // induced failure: abort both mid-flight, in either order
+        a.free(tb);
+        a.unreserve(2); // B's remaining growth budget
+        a.free(ta);
+        assert_eq!(a.free_pages(), 20);
+        assert_eq!(a.reserved_pages(), 0);
+        assert_eq!(a.outstanding(), 0);
     }
 }

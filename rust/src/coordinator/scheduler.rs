@@ -55,10 +55,12 @@ impl Scheduler {
     /// Decide the next action.
     ///
     /// * `queued` — requests that could be admitted *right now* (the
-    ///   paged engine passes the FIFO prefix whose pages fit in the free
-    ///   pool, not the raw queue length — a page-starved queue must read
-    ///   as "nothing to prefill" so the batch keeps decoding and frees
-    ///   pages),
+    ///   paged engine passes the FIFO prefix whose page commitments —
+    ///   fresh pages plus lazy-growth reservations, net of shareable
+    ///   prefix pages — fit in the *unreserved* pool, not the raw queue
+    ///   length: a page-starved queue must read as "nothing to prefill"
+    ///   so the batch keeps decoding, and retirements return both pages
+    ///   and reservations),
     /// * `empty_slots` — free decode slots,
     /// * `active` — slots currently decoding,
     /// * `oldest_wait_s` — waiting time of the head-of-line request.

@@ -96,13 +96,15 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceItem> {
 }
 
 /// Offered load in tokens/s over the trace span (sizing aid).
+///
+/// An empty trace is a zero summary, not a panic — callers summarise
+/// whatever slice of a trace they were handed, including none of it.
 pub fn offered_load(trace: &[TraceItem]) -> f64 {
-    if trace.is_empty() {
+    let Some(last) = trace.last() else {
         return 0.0;
-    }
+    };
     let tokens: usize = trace.iter().map(|r| r.prompt_len + r.max_new).sum();
-    let span = trace.last().unwrap().at.max(1e-9);
-    tokens as f64 / span
+    tokens as f64 / last.at.max(1e-9)
 }
 
 #[cfg(test)]
@@ -170,5 +172,15 @@ mod tests {
     fn offered_load_positive() {
         let tr = generate(&TraceConfig::default());
         assert!(offered_load(&tr) > 0.0);
+    }
+
+    #[test]
+    fn offered_load_empty_trace_is_zero_not_panic() {
+        // regression: the span summary used to `.last().unwrap()` its
+        // way into a panic on an empty trace
+        assert_eq!(offered_load(&[]), 0.0);
+        // a single instantaneous arrival is finite too (span clamp)
+        let one = [TraceItem { at: 0.0, prompt_len: 4, max_new: 4 }];
+        assert!(offered_load(&one).is_finite());
     }
 }

@@ -289,6 +289,81 @@ impl KvCacheShape {
             .find(|&c| self.paged_vs_dense_ratio(c) < 1.0)
             .unwrap_or(0)
     }
+
+    // ---- admission policies: eager vs lazy growth vs prefix sharing ----
+
+    /// Block-table width (`ceil(max_len / page_size)`).
+    pub fn pages_per_slot(&self) -> usize {
+        self.max_len.div_ceil(self.page_size)
+    }
+
+    /// Usable pool pages under the shipped provisioning (half the dense
+    /// worst case — `SERVE_NUM_PAGES - 1` in `aot.py`).
+    pub fn pool_usable_pages(&self) -> usize {
+        self.slots * self.pages_per_slot() / 2
+    }
+
+    /// Whole-lifetime page commitment of one request
+    /// (`ceil(min(prompt + max_new, max_len) / page_size)`): what eager
+    /// admission allocates up front and what lazy admission commits as
+    /// allocated-plus-reserved — the admission gate is the same, the
+    /// *resident* footprint is not.
+    pub fn request_commitment(&self, prompt_len: usize, max_new: usize) -> usize {
+        (prompt_len.max(1) + max_new)
+            .min(self.max_len)
+            .div_ceil(self.page_size)
+    }
+
+    /// Resident pool bytes under eager (PR 3) admission: every in-flight
+    /// request holds its whole commitment from admission to retirement
+    /// (+ the reserved garbage page).
+    pub fn eager_resident_bytes(&self, reqs: &[(usize, usize)]) -> usize {
+        let pages: usize = reqs
+            .iter()
+            .map(|&(p, b)| self.request_commitment(p, b))
+            .sum();
+        2 * self.layers * (pages + 1) * self.page_size * self.row_bytes()
+    }
+
+    /// Resident pool bytes under lazy growth for requests that have
+    /// decoded `decoded[i]` tokens so far: each slot holds its prompt
+    /// pages plus one decode page at admission and grows one page per
+    /// boundary crossing, never past its commitment.  The un-grown tail
+    /// is *reserved* (gates admission) but occupies no pages.
+    pub fn lazy_resident_bytes(&self, reqs: &[(usize, usize)], decoded: &[usize]) -> usize {
+        let pages: usize = reqs
+            .iter()
+            .zip(decoded)
+            .map(|(&(p, b), &d)| {
+                let prompt_pages = p.max(1).div_ceil(self.page_size);
+                let ctx = (p.max(1) + d).min(self.max_len);
+                (prompt_pages + 1)
+                    .max(ctx.div_ceil(self.page_size))
+                    .min(self.request_commitment(p, b))
+            })
+            .sum();
+        2 * self.layers * (pages + 1) * self.page_size * self.row_bytes()
+    }
+
+    /// How many identical requests the pool admits at once
+    /// (pool-limited, uncapped by the artifact's slot count): the first
+    /// admission pays the full commitment; with copy-on-write prefix
+    /// sharing every later one re-uses the `floor(shared_prefix /
+    /// page_size)` pages fully covered by the common prefix and commits
+    /// only the remainder.  `shared_prefix = 0` is the no-sharing
+    /// baseline (eager and lazy admit identically — lazy's win is
+    /// resident bytes, sharing's win is this width).
+    pub fn admitted_width(
+        &self, prompt_len: usize, max_new: usize, shared_prefix: usize,
+    ) -> usize {
+        let need = self.request_commitment(prompt_len, max_new);
+        let usable = self.pool_usable_pages();
+        if need > usable {
+            return 0;
+        }
+        let shared = (shared_prefix.min(prompt_len) / self.page_size).min(need - 1);
+        1 + (usable - need) / (need - shared)
+    }
 }
 
 #[cfg(test)]
@@ -421,5 +496,51 @@ mod tests {
             assert!(b > last, "ctx={ctx}");
             last = b;
         }
+    }
+
+    #[test]
+    fn lazy_resident_never_exceeds_eager_and_converges_to_it() {
+        let kv = KvCacheShape::serve_default();
+        let reqs: Vec<(usize, usize)> = vec![(24, 40), (8, 120), (30, 16), (16, 64)];
+        // early in flight, lazy holds far fewer pages than eager
+        let fresh = vec![0usize; reqs.len()];
+        assert!(kv.lazy_resident_bytes(&reqs, &fresh) < kv.eager_resident_bytes(&reqs));
+        // at every decode depth lazy <= eager, monotonically growing
+        let mut last = 0;
+        for d in 0..=120 {
+            let decoded = vec![d; reqs.len()];
+            let lazy = kv.lazy_resident_bytes(&reqs, &decoded);
+            assert!(lazy <= kv.eager_resident_bytes(&reqs), "d={d}");
+            assert!(lazy >= last, "resident bytes must not shrink mid-flight");
+            last = lazy;
+        }
+        // once every budget is spent the two policies hold the same pages
+        let done: Vec<usize> = reqs.iter().map(|&(_, b)| b).collect();
+        assert_eq!(kv.lazy_resident_bytes(&reqs, &done), kv.eager_resident_bytes(&reqs));
+    }
+
+    #[test]
+    fn admitted_width_grows_with_shared_prefix() {
+        let kv = KvCacheShape::serve_default();
+        // long-prompt workload: commitment 10 pages each, pool 40 usable
+        let base = kv.admitted_width(120, 40, 0);
+        assert_eq!(base, 4, "40 usable / 10-page commitment");
+        // sharing 112 prefix tokens (7 full pages) shrinks every later
+        // admission to 3 private pages
+        let shared = kv.admitted_width(120, 40, 112);
+        assert_eq!(shared, 11, "1 full + (40-10)/3 sharers");
+        assert!(shared > base);
+        // monotone in the prefix, and never divides by zero at full overlap
+        let mut last = 0;
+        for prefix in (0..=120).step_by(16) {
+            let w = kv.admitted_width(120, 40, prefix);
+            assert!(w >= last, "prefix={prefix}");
+            last = w;
+        }
+        // an impossible request admits zero
+        assert_eq!(
+            KvCacheShape { max_len: 16, page_size: 16, slots: 1, ..kv }.admitted_width(16, 16, 0),
+            0
+        );
     }
 }

@@ -1,6 +1,7 @@
 //! Property-based tests (testkit) for the coordinator invariants.
 
 use scattermoe::coordinator::batcher::{Batcher, SlotState};
+use scattermoe::coordinator::pagetable::PageAllocator;
 use scattermoe::coordinator::request::{Request, SamplingParams};
 use scattermoe::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
 use scattermoe::memmodel::MlpShape;
@@ -126,6 +127,120 @@ fn prop_scheduler_work_conserving() {
         } else {
             Ok(())
         }
+    });
+}
+
+/// Scheduler liveness under page starvation with LAZY growth: a model of
+/// the engine's paged admission loop — reservation-ledger allocator,
+/// FIFO admission gated on unreserved pages (prompt pages + one decode
+/// page granted, the rest reserved), per-tick growth at page-boundary
+/// crossings, scheduler-driven prefill/decode interleaving — must drain
+/// every random request mix within a bounded number of ticks, and end
+/// with full page/reservation conservation.  This is the deadlock-
+/// freedom obligation the lazy design carries: a grow request must
+/// always be satisfiable from reserved headroom, so the batch can
+/// always make progress and retirements eventually open the gate.
+#[test]
+fn prop_lazy_paged_admission_never_deadlocks() {
+    const PAGE: usize = 4;
+    const MAX: usize = 16; // slot span: 4 pages
+    const WIDTH: usize = 3;
+    // pool far below worst-case demand (usable 8 vs up to 12 committed)
+    const NUM_PAGES: usize = 9;
+
+    // script: pairs of (prompt_len 1..=MAX, max_new 1..=24) per request
+    let gen = VecGen { item: PairGen(U64Range(1, MAX as u64), U64Range(1, 24)), min_len: 1, max_len: 20 };
+    check(80, gen, |reqs: &Vec<(u64, u64)>| {
+        let sched = Scheduler::new(SchedulerConfig::default());
+        let mut alloc = PageAllocator::new(NUM_PAGES, PAGE);
+        let commitment =
+            |p: usize, b: usize| (p + b).min(MAX).div_ceil(PAGE);
+        let mut queue: Vec<(usize, usize)> = reqs
+            .iter()
+            .map(|&(p, b)| (p as usize, b as usize))
+            .collect();
+        // an in-flight slot: (pos, decoded, budget, table, reserved)
+        let mut slots: Vec<Option<(usize, usize, usize, Vec<u32>, usize)>> =
+            vec![None; WIDTH];
+        let mut finished = 0usize;
+        for _tick in 0..10_000 {
+            let active = slots.iter().filter(|s| s.is_some()).count();
+            let empty = WIDTH - active;
+            // FIFO prefix whose commitments fit the unreserved pool
+            let mut budget = alloc.unreserved_pages();
+            let admissible = queue
+                .iter()
+                .take(empty)
+                .take_while(|&&(p, b)| {
+                    let need = commitment(p, b);
+                    let fits = need <= budget;
+                    if fits {
+                        budget -= need;
+                    }
+                    fits
+                })
+                .count();
+            match sched.decide(admissible, empty, active, 0.0) {
+                Action::Idle => break,
+                Action::Prefill => {
+                    let mut admitted = 0;
+                    for slot in slots.iter_mut().filter(|s| s.is_none()) {
+                        let Some(&(p, b)) = queue.first() else { break };
+                        let worst = commitment(p, b);
+                        let grant = (p.div_ceil(PAGE) + 1).min(worst);
+                        let Some(table) = alloc.admit(grant, worst - grant) else {
+                            break; // FIFO: nothing overtakes the starved head
+                        };
+                        queue.remove(0);
+                        admitted += 1;
+                        if b == 1 {
+                            // 1-token requests finish right at prefill
+                            alloc.free(table);
+                            alloc.unreserve(worst - grant);
+                            finished += 1;
+                        } else {
+                            // prefill emitted the first token; the next
+                            // decode writes its KV row at pos = p
+                            *slot = Some((p, 1, b, table, worst - grant));
+                        }
+                    }
+                    prop_assert(admitted > 0, "admissible > 0 must admit")?;
+                }
+                Action::Decode => {
+                    for slot in &mut slots {
+                        let Some((pos, done, budget, table, reserved)) = slot.as_mut()
+                        else {
+                            continue;
+                        };
+                        // grow to cover the write at `pos`
+                        let needed = *pos / PAGE + 1;
+                        while table.len() < needed {
+                            prop_assert(*reserved > 0, "growth within reservation")?;
+                            table.push(alloc.grow_reserved());
+                            *reserved -= 1;
+                        }
+                        *pos = (*pos + 1).min(MAX - 1);
+                        *done += 1;
+                        if *done >= *budget {
+                            let (_, _, _, table, reserved) =
+                                slot.take().expect("just matched");
+                            alloc.free(table);
+                            alloc.unreserve(reserved);
+                            finished += 1;
+                        }
+                    }
+                }
+            }
+        }
+        prop_assert(
+            queue.is_empty() && slots.iter().all(|s| s.is_none()),
+            "drained within the tick bound (no deadlock)",
+        )?;
+        prop_assert(finished == reqs.len(), "every request finished")?;
+        prop_assert(
+            alloc.free_pages() == alloc.usable_pages() && alloc.reserved_pages() == 0,
+            "page + reservation conservation after drain",
+        )
     });
 }
 

@@ -454,6 +454,137 @@ fn paged_and_dense_decode_bit_identical() {
     );
 }
 
+/// THE lazy + CoW acceptance property: lazy page growth with
+/// copy-on-write prefix sharing is the same serving function as both
+/// the dense layout and PR 3's eager-paged layout.  The trace repeats a
+/// long prompt across admission waves (so prefix pages are shared
+/// within a prefill batch AND with in-flight donors admitted earlier)
+/// and mixes in ragged strangers; all three configurations must emit
+/// bit-for-bit identical tokens, and the lazy run must actually have
+/// exercised sharing and growth.
+#[test]
+fn lazy_cow_paged_matches_dense_and_eager_bit_identical() {
+    let Some(rt) = runtime() else { return };
+    if rt.spec("serve_decode_paged").is_err() {
+        eprintln!("SKIP: artifacts predate serve_decode_paged");
+        return;
+    }
+    let trace: Vec<(Vec<i32>, usize)> = {
+        let mut corpus = SyntheticCorpus::new(512, 41);
+        let shared_prompt = corpus.sample(24); // spans one full 16-row page
+        let mut t = Vec::new();
+        for i in 0..13 {
+            if i % 3 != 2 {
+                // same prompt: full-page prefix shared, boundary page CoW'd
+                t.push((shared_prompt.clone(), 24 + (i % 4) * 8));
+            } else {
+                t.push((corpus.sample(3 + (i * 5) % 14), 3 + i % 6));
+            }
+        }
+        t
+    };
+    let run = |prefer_paged: bool, lazy: bool, share: bool| {
+        let cfg = EngineConfig {
+            prefer_paged,
+            lazy_growth: lazy,
+            share_prefixes: share,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(rt.clone(), cfg).expect("engine");
+        for (prompt, max_new) in &trace {
+            engine
+                .submit(
+                    prompt.clone(),
+                    SamplingParams { max_new_tokens: *max_new, ..Default::default() },
+                )
+                .expect("valid")
+                .expect("queued");
+        }
+        let mut rs = engine.run_to_completion().expect("serve");
+        rs.sort_by_key(|r| r.id);
+        let toks: Vec<Vec<i32>> = rs.into_iter().map(|r| r.tokens).collect();
+        (engine.kv_layout(), engine.metrics.clone(), toks)
+    };
+    let (l_dense, _, toks_dense) = run(false, true, true);
+    let (l_eager, m_eager, toks_eager) = run(true, false, false);
+    let (l_lazy, m_lazy, toks_lazy) = run(true, true, true);
+    assert_eq!(l_dense, KvLayout::Dense);
+    assert_eq!(l_eager, KvLayout::Paged);
+    assert_eq!(l_lazy, KvLayout::Paged);
+    assert_eq!(toks_eager, toks_dense, "eager-paged must match dense");
+    assert_eq!(toks_lazy, toks_dense, "lazy+CoW must match dense");
+    assert_eq!(m_eager.page_grows, 0, "eager never grows");
+    assert_eq!(m_eager.shared_pages, 0, "eager shares nothing");
+    assert!(m_lazy.page_grows > 0, "24-prompt/24+-budget slots must grow");
+    assert!(m_lazy.shared_pages > 0, "repeated prompts must share prefix pages");
+    assert!(m_lazy.cow_copies > 0, "the boundary page must be copied-on-write");
+}
+
+/// Reclamation on the failure paths (satellite): pages AND growth
+/// reservations return to the pool when requests are cancelled
+/// mid-flight or the engine is drained, refcounted shared pages
+/// included — conservation is `free + outstanding == usable` with
+/// `reserved == 0`, the exact invariant normal retirement maintains.
+#[test]
+fn pages_reclaimed_on_cancel_and_abort() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = Engine::new(rt.clone(), EngineConfig::default()).expect("engine");
+    if engine.kv_layout() != KvLayout::Paged {
+        eprintln!("SKIP: artifacts predate the paged layout");
+        return;
+    }
+    let (_, total) = engine.page_budget().unwrap();
+    let mut corpus = SyntheticCorpus::new(512, 17);
+    let shared = corpus.sample(20); // forces refcounted prefix pages
+    let mut ids = Vec::new();
+    for i in 0..engine.width() + 2 {
+        let prompt = if i % 2 == 0 { shared.clone() } else { corpus.sample(6) };
+        ids.push(
+            engine
+                .submit(prompt, SamplingParams { max_new_tokens: 40, ..Default::default() })
+                .expect("valid")
+                .expect("queued"),
+        );
+    }
+    // run a few ticks so slots are mid-flight with live reservations
+    for _ in 0..4 {
+        engine.tick().expect("tick");
+    }
+    assert!(engine.page_budget().unwrap().0 < total, "pages are in use");
+    // cancel one in-flight request: its pages/reservations come back,
+    // everything else keeps decoding
+    let cancelled = engine.cancel(ids[0]).expect("known in-flight id");
+    assert_eq!(cancelled.id, ids[0]);
+    assert!(engine.cancel(ids[0]).is_none(), "second cancel is a no-op");
+    let drained = engine.run_to_completion().expect("drain");
+    assert_eq!(drained.len() + 1, ids.len(), "cancelled request emits no response here");
+    let (free, t2) = engine.page_budget().unwrap();
+    assert_eq!((free, t2), (total, total), "conservation after cancel + drain");
+    assert_eq!(engine.page_reservations(), Some(0));
+
+    // now induce a mid-flight hard stop: abort_all while decoding
+    for _ in 0..engine.width() {
+        engine
+            .submit(corpus.sample(8), SamplingParams { max_new_tokens: 30, ..Default::default() })
+            .expect("valid");
+    }
+    for _ in 0..3 {
+        engine.tick().expect("tick");
+    }
+    let aborted = engine.abort_all();
+    assert!(!aborted.is_empty());
+    assert!(engine.is_idle());
+    let (free, t3) = engine.page_budget().unwrap();
+    assert_eq!((free, t3), (total, total), "conservation after abort_all");
+    assert_eq!(engine.page_reservations(), Some(0));
+    // the engine stays fully serviceable after both failure paths
+    engine
+        .submit(vec![1, 2, 3], SamplingParams { max_new_tokens: 2, ..Default::default() })
+        .expect("valid")
+        .expect("queued");
+    assert_eq!(engine.run_to_completion().expect("serve").len(), 1);
+}
+
 /// Page-starvation liveness: with demand far above the pool, admission
 /// waits (FIFO) while the batch keeps decoding, pages recycle through
 /// retirements, and every request still completes — `run_to_completion`

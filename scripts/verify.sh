@@ -26,12 +26,10 @@ else
     echo "== lint: rustfmt not installed, skipping =="
 fi
 
-if cargo clippy --version >/dev/null 2>&1; then
-    echo "== lint: cargo clippy -- -D warnings =="
-    cargo clippy --all-targets -- -D warnings
-else
-    echo "== lint: clippy not installed, skipping =="
-fi
+# clippy is part of the gate, not a local nicety: a toolchain without it
+# fails verification instead of silently skipping the lint tier.
+echo "== lint: cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
 
 # Perf-trajectory smoke (artifact-gated): one tiny serving run and the
 # analytic memory figure, emitting the machine-readable BENCH_serve.json
@@ -43,9 +41,35 @@ if [ -f artifacts/manifest.json ]; then
     cargo run --release --example serve -- --requests 6 --rate 1000 --max-new 4
     echo "== bench smoke: fig4c memory (BENCH_memory.json) =="
     cargo bench --bench fig4c_memory
-    for f in bench_reports/BENCH_serve.json bench_reports/BENCH_memory.json; do
-        [ -f "$f" ] || { echo "missing bench report $f"; exit 1; }
-    done
+    # the reports must exist, parse as JSON, and carry the keys the
+    # cross-PR trajectory comparison reads — a bench that emits garbage
+    # must fail here, not at comparison time
+    echo "== bench smoke: report sanity (parse + expected keys) =="
+    python3 - <<'PYEOF'
+import json, sys
+expected = {
+    "bench_reports/BENCH_serve.json":
+        ["serve e2e", "decode step", "kv cache bytes"],
+    "bench_reports/BENCH_memory.json":
+        ["kv dense (worst case)", "kv paged ctx=", "kv admitted width"],
+}
+ok = True
+for path, needles in expected.items():
+    try:
+        with open(path) as f:
+            rep = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"BAD bench report {path}: {e}")
+        ok = False
+        continue
+    names = [m.get("name", "") for m in rep.get("measurements", [])]
+    for needle in needles:
+        if not any(needle in n for n in names):
+            print(f"BAD bench report {path}: no measurement matching {needle!r}"
+                  f" (have {names})")
+            ok = False
+sys.exit(0 if ok else 1)
+PYEOF
 else
     echo "== bench smoke: no artifacts/manifest.json, skipping =="
 fi
