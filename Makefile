@@ -2,7 +2,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts verify test doc clean
+.PHONY: artifacts verify test twin doc clean
 
 # Lower every Rust-facing entry point to HLO text + manifest.json.
 # Requires the Python toolchain (jax); afterwards the Rust binary is
@@ -16,6 +16,17 @@ verify:
 
 test:
 	cargo test -q
+
+# Python protocol twin of the paged serving coordinator (dense / eager /
+# lazy+CoW / retained-prefix policies, bit-for-bit).  Runs when jax is
+# importable; skips cleanly on toolchains without it (the Rust tier-1
+# gate does not depend on this).
+twin:
+	@if python3 -c "import jax" 2>/dev/null; then \
+		cd python && python3 -m pytest tests/test_paged_serving_protocol.py -q --import-mode=importlib; \
+	else \
+		echo "twin: jax not importable, skipping"; \
+	fi
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -24,7 +24,10 @@ fn main() -> Result<()> {
     let a = cli.parse();
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
-    let mut engine = Engine::new(rt.clone(), EngineConfig::default())?;
+    // expert_telemetry: record the decode artifact's per-expert routing
+    // counts (costs one (E,) download per tick — fine for a demo run)
+    let cfg = EngineConfig { expert_telemetry: true, ..Default::default() };
+    let mut engine = Engine::new(rt.clone(), cfg)?;
     let decode_name = match engine.kv_layout() {
         scattermoe::coordinator::KvLayout::Paged => "serve_decode_paged",
         scattermoe::coordinator::KvLayout::Dense => "serve_decode",
@@ -198,15 +201,42 @@ fn main() -> Result<()> {
     } else {
         println!("cache stayed device-resident: 0 fallback round-trips");
     }
-    if engine.metrics.page_appends + engine.metrics.page_stalls > 0 {
+    // the paging/retention behaviour, observable from the example: every
+    // EngineMetrics counter the paged coordinator maintains
+    let m = &engine.metrics;
+    if m.page_appends + m.page_stalls > 0 {
         println!(
             "paged coordinator: {} page appends, {} page-starvation stalls, \
-             {} lazy grows, {} shared prefix pages, {} CoW copies",
-            engine.metrics.page_appends,
-            engine.metrics.page_stalls,
-            engine.metrics.page_grows,
-            engine.metrics.shared_pages,
-            engine.metrics.cow_copies,
+             {} lazy grows, {} shared prefix pages, {} CoW copies, {} aborted",
+            m.page_appends, m.page_stalls, m.page_grows, m.shared_pages,
+            m.cow_copies, m.aborted,
+        );
+        println!(
+            "prefix cache: {} hits, {} tokens served from retained pages, \
+             {} evictions, {} pages parked at exit",
+            m.prefix_hits,
+            m.prefix_hit_tokens,
+            m.evictions,
+            engine.retained_pages().unwrap_or(0),
+        );
+    }
+    // per-expert routing skew (decode artifact's expert_counts output)
+    let es = &engine.expert_stats;
+    if es.total() > 0 {
+        let frac = es.load_fractions();
+        let hottest: Vec<String> = es
+            .hottest()
+            .into_iter()
+            .take(3)
+            .map(|e| format!("e{e}:{:.0}%", 100.0 * frac[e]))
+            .collect();
+        println!(
+            "expert load ({} routed slots): CV {:.3}  hottest {}  \
+             padded-impl waste @B=128: {:.1}%",
+            es.total(),
+            es.load_cv(),
+            hottest.join(" "),
+            100.0 * es.padding_waste(128),
         );
     }
 

@@ -409,7 +409,11 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
 
     def decode_fn(pos, tokens, kc, vc, *flat):
         params = dict(zip(names, flat))
-        return tr.decode_step(params, kc, vc, pos, tokens, cfg)
+        # 4th output: (E,) per-expert routed-slot counts — serving-side
+        # load telemetry, downloaded next to the logits each tick
+        return tr.decode_step(
+            params, kc, vc, pos, tokens, cfg, return_expert_counts=True
+        )
 
     def kv_splice_fn(kc, vc, kc_new, vc_new, slot_mask):
         # On-device row scatter for partial prefills: batch rows whose
@@ -431,7 +435,10 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
 
     def decode_paged_fn(pos, tokens, block_table, kp, vp, *flat):
         params = dict(zip(names, flat))
-        return tr.decode_step_paged(params, kp, vp, block_table, pos, tokens, cfg)
+        return tr.decode_step_paged(
+            params, kp, vp, block_table, pos, tokens, cfg,
+            return_expert_counts=True,
+        )
 
     def page_append_fn(kp, vp, kc_new, vc_new, block_table, slot_mask):
         return tr.page_append(kp, vp, kc_new, vc_new, block_table, slot_mask)
@@ -448,9 +455,11 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
             inputs=[("pos", (SERVE_BATCH,), I32), ("tokens", (SERVE_BATCH,), I32),
                     ("k_cache", cache_shape, F32), ("v_cache", cache_shape, F32)]
             + param_inputs,
-            # outputs [logits, k_cache, v_cache]: logits → host, caches
-            # chain back into inputs 2/3 of the next decode call
-            meta=dict(kind="serve_decode", chain_map=[-1, 2, 3], **meta),
+            # outputs [logits, k_cache, v_cache, expert_counts]: logits
+            # and the (E,) routing counts → host, caches chain back into
+            # inputs 2/3 of the next decode call
+            meta=dict(kind="serve_decode", chain_map=[-1, 2, 3, -1],
+                      expert_counts_output=3, **meta),
         ),
         Artifact(
             name="kv_splice", fn=kv_splice_fn,
@@ -466,10 +475,11 @@ def serve_artifacts(cfg: tr.ModelConfig) -> list[Artifact]:
                     ("block_table", table_shape, I32),
                     ("k_pool", pool_shape, F32), ("v_pool", pool_shape, F32)]
             + param_inputs,
-            # outputs [logits, k_pool, v_pool]: logits → host, pools
-            # chain back into inputs 3/4 of the next paged decode call
-            meta=dict(kind="serve_decode_paged", chain_map=[-1, 3, 4],
-                      **paged_meta, **meta),
+            # outputs [logits, k_pool, v_pool, expert_counts]: logits
+            # and the (E,) routing counts → host, pools chain back into
+            # inputs 3/4 of the next paged decode call
+            meta=dict(kind="serve_decode_paged", chain_map=[-1, 3, 4, -1],
+                      expert_counts_output=3, **paged_meta, **meta),
         ),
         Artifact(
             name="page_append", fn=page_append_fn,

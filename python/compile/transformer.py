@@ -147,7 +147,14 @@ def _dense_attention(
 
 def _mlp(
     x: jax.Array, params: dict, prefix: str, cfg: ModelConfig
-) -> tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One SMoE MLP layer: ``(y, aux_loss, expert_counts)``.
+
+    ``expert_counts`` is the router's per-expert routed-slot histogram
+    ``(E,) int32`` for this layer's tokens (all zeros on the dense
+    baseline) — free telemetry, the routing step already computes it;
+    XLA dead-code-eliminates it wherever the caller drops it.
+    """
     b, t, d = x.shape
     xf = x.reshape(b * t, d)
     if cfg.mlp_impl == "dense":
@@ -155,7 +162,8 @@ def _mlp(
             xf, params[prefix + "w1"], params[prefix + "w2"],
             block_m=cfg.block_m,
         )
-        return y.reshape(b, t, d), jnp.zeros((), jnp.float32)
+        zeros = jnp.zeros((cfg.num_experts,), jnp.int32)
+        return y.reshape(b, t, d), jnp.zeros((), jnp.float32), zeros
     logits = xf @ params[prefix + "router"]
     route = indexing.route(logits, cfg.top_k, cfg.num_experts)
     y = moe_mlp(
@@ -164,7 +172,7 @@ def _mlp(
         capacity_factor=cfg.capacity_factor,
     )
     aux = indexing.load_balance_loss(logits, route.expert_idx, cfg.num_experts)
-    return y.reshape(b, t, d), aux
+    return y.reshape(b, t, d), aux, route.expert_counts.astype(jnp.int32)
 
 
 def forward(
@@ -192,7 +200,7 @@ def forward(
             aux_total = aux_total + attn_aux
         x = x + attn_out
         h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
-        mlp_out, aux = _mlp(h, params, p, cfg)
+        mlp_out, aux, _ = _mlp(h, params, p, cfg)
         aux_total = aux_total + aux
         x = x + mlp_out
     x = rms_norm(x, params["norm_f"], cfg.rms_eps)
@@ -275,7 +283,7 @@ def prefill(
         o = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(scores, -1), vv)
         x = x + o.reshape(b, t, nh * dh) @ params[p + "wo"]
         h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
-        mlp_out, _ = _mlp(h, params, p, cfg)
+        mlp_out, _, _ = _mlp(h, params, p, cfg)
         x = x + mlp_out
     x = rms_norm(x, params["norm_f"], cfg.rms_eps)
     logits = x @ params["embed"].T  # (B, P, V)
@@ -293,19 +301,25 @@ def decode_step(
     pos: jax.Array,
     tokens: jax.Array,
     cfg: ModelConfig,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return_expert_counts: bool = False,
+):
     """One decode step with **per-slot** positions (continuous batching).
 
     ``tokens``: ``(B,)`` the last token of each slot; ``pos``: ``(B,)``
     int32 — slot ``b``'s new KV entries are written at ``pos[b]`` and its
     attention sees cache positions ``<= pos[b]``.
-    Returns ``(logits (B, V), k_cache', v_cache')``.
+    Returns ``(logits (B, V), k_cache', v_cache')``; with
+    ``return_expert_counts`` a fourth ``(E,) int32`` output — per-expert
+    routed-slot counts summed over layers for this tick's whole static
+    batch (inactive lanes route too; that padding is exactly what the
+    serving-side load telemetry exists to expose).
     """
     b = tokens.shape[0]
     nh, dh = cfg.n_heads, cfg.d_head
     max_len = k_cache.shape[2]
     barange = jnp.arange(b)
     x = params["embed"][tokens][:, None, :]  # (B, 1, d)
+    expert_counts = jnp.zeros((cfg.num_experts,), jnp.int32)
     for layer in range(cfg.n_layers):
         p = f"l{layer}."
         h = rms_norm(x, params[p + "norm1"], cfg.rms_eps)
@@ -323,10 +337,13 @@ def decode_step(
         o = jnp.einsum("bhs,bshd->bhd", jax.nn.softmax(scores, -1), vals)
         x = x + (o.reshape(b, nh * dh) @ params[p + "wo"])[:, None, :]
         h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
-        mlp_out, _ = _mlp(h, params, p, cfg)
+        mlp_out, _, counts = _mlp(h, params, p, cfg)
+        expert_counts = expert_counts + counts
         x = x + mlp_out
     x = rms_norm(x, params["norm_f"], cfg.rms_eps)
     logits = x[:, 0] @ params["embed"].T
+    if return_expert_counts:
+        return logits, k_cache, v_cache, expert_counts
     return logits, k_cache, v_cache
 
 
@@ -357,7 +374,8 @@ def decode_step_paged(
     pos: jax.Array,
     tokens: jax.Array,
     cfg: ModelConfig,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return_expert_counts: bool = False,
+):
     """One decode step over paged KV pools (block-table attention).
 
     ``k_pool``/``v_pool``: ``(L, num_pages, page_size, nh, dh)``;
@@ -367,7 +385,9 @@ def decode_step_paged(
     ``block_table[b, pos[b] // page_size]`` at offset ``pos[b] %
     page_size``; attention gathers its pages back into a contiguous
     ``(B, pages_per_slot * page_size, nh, dh)`` view and masks positions
-    ``> pos[b]``.  Returns ``(logits (B, V), k_pool', v_pool')``.
+    ``> pos[b]``.  Returns ``(logits (B, V), k_pool', v_pool')``, plus
+    the ``(E,) int32`` per-expert routed-slot counts when
+    ``return_expert_counts`` (see :func:`decode_step`).
     """
     b = tokens.shape[0]
     nh, dh = cfg.n_heads, cfg.d_head
@@ -378,6 +398,7 @@ def decode_step_paged(
     page_idx = block_table[barange, pos // page_size]  # (B,)
     page_off = pos % page_size
     x = params["embed"][tokens][:, None, :]  # (B, 1, d)
+    expert_counts = jnp.zeros((cfg.num_experts,), jnp.int32)
     for layer in range(cfg.n_layers):
         p = f"l{layer}."
         h = rms_norm(x, params[p + "norm1"], cfg.rms_eps)
@@ -397,10 +418,13 @@ def decode_step_paged(
         o = jnp.einsum("bhs,bshd->bhd", jax.nn.softmax(scores, -1), vals)
         x = x + (o.reshape(b, nh * dh) @ params[p + "wo"])[:, None, :]
         h = rms_norm(x, params[p + "norm2"], cfg.rms_eps)
-        mlp_out, _ = _mlp(h, params, p, cfg)
+        mlp_out, _, counts = _mlp(h, params, p, cfg)
+        expert_counts = expert_counts + counts
         x = x + mlp_out
     x = rms_norm(x, params["norm_f"], cfg.rms_eps)
     logits = x[:, 0] @ params["embed"].T
+    if return_expert_counts:
+        return logits, k_pool, v_pool, expert_counts
     return logits, k_pool, v_pool
 
 

@@ -85,8 +85,39 @@ def test_train_chain_map_covers_state():
 
 def test_serve_chain_maps_match_engine_contract():
     arts = {a.name: a for a in aot.build_artifacts()}
-    assert arts["serve_decode"].meta["chain_map"] == [-1, 2, 3]
+    # trailing -1: the (E,) expert-counts output goes to host, chains
+    # nowhere (meta `expert_counts_output` names it for the engine)
+    assert arts["serve_decode"].meta["chain_map"] == [-1, 2, 3, -1]
+    assert arts["serve_decode"].meta["expert_counts_output"] == 3
+    assert arts["serve_decode_paged"].meta["chain_map"] == [-1, 3, 4, -1]
+    assert arts["serve_decode_paged"].meta["expert_counts_output"] == 3
     assert arts["kv_splice"].meta["chain_map"] == [0, 1]
+    assert arts["page_append"].meta["chain_map"] == [0, 1]
+
+
+def test_decode_expert_counts_output_counts_routed_slots():
+    """The telemetry output is the router's per-expert histogram: for a
+    B-slot batch with top-k routing over L layers it must sum to
+    B * k * L, and agree between the dense and paged decode paths."""
+    arts = {a.name: a for a in aot.build_artifacts()}
+    dense = arts["serve_decode"]
+    cfg_e = dense.meta["num_experts"]
+    args = [spec_zeros(i) for i in dense.inputs]
+    outs = jax.jit(dense.fn)(*args)
+    assert len(outs) == 4, "logits, k, v, expert_counts"
+    counts = np.asarray(outs[3])
+    assert counts.shape == (cfg_e,) and counts.dtype == np.int32
+    expect = aot.SERVE_BATCH * dense.meta["top_k"] * dense.meta["n_layers"]
+    assert counts.sum() == expect, (counts, expect)
+    paged = arts["serve_decode_paged"]
+    pouts = jax.jit(paged.fn)(*[spec_zeros(i) for i in paged.inputs])
+    assert len(pouts) == 4
+    assert np.asarray(pouts[3]).sum() == expect
+
+
+def spec_zeros(inp):
+    name, shape, dtype = inp
+    return jnp.zeros(shape, dtype)
 
 
 def test_kv_splice_merges_only_masked_rows():

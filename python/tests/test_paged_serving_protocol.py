@@ -1,29 +1,37 @@
 """Protocol-level simulation of the Rust coordinator's paged serving loop.
 
-Mirrors `rust/src/coordinator/engine.rs` step for step — continuous
-batching with partial refills, FIFO admission gated on *unreserved*
-pages, page recycling after retirement, and sentinel (page 0) routing
-for empty slots — driving the same jax functions the artifacts lower
-(`prefill` / `decode_step[_paged]` / `page_append` / the `kv_splice`
-select).  Three admission policies are simulated:
+Mirrors `rust/src/coordinator/engine.rs` + `rust/src/coordinator/kvcache/`
+step for step — continuous batching with partial refills, FIFO admission
+gated on *unreserved* pages, page recycling after retirement, and
+sentinel (page 0) routing for empty slots — driving the same jax
+functions the artifacts lower (`prefill` / `decode_step[_paged]` /
+`page_append` / the `kv_splice` select).  Four admission policies are
+simulated:
 
-* ``dense``  — the dense worst-case cache (the equivalence oracle);
-* ``eager``  — PR 3's paged layout: the whole worst-case page need is
+* ``dense``    — the dense worst-case cache (the equivalence oracle);
+* ``eager``    — PR 3's paged layout: the whole worst-case page need is
   allocated at admission;
-* ``lazy``   — PR 4: admission grants only the prompt's pages plus one
+* ``lazy``     — PR 4: admission grants only the prompt's pages plus one
   decode page and *reserves* the rest in the allocator ledger, growing
   one page per boundary crossing; common prompt prefixes are shared
   copy-on-write (full prefix pages refcounted across block tables; the
   boundary page the appended decode row could write is made private and
-  copied by the slot's own `page_append` write).
+  copied by the slot's own `page_append` write);
+* ``retained`` — PR 5: lazy+CoW plus the retained prefix pool — a
+  retiring slot *parks* the pages fully covered by its prompt in a
+  token-indexed LRU index instead of freeing them, admission probes the
+  index exactly like it probes in-flight donors, and parked pages are
+  evicted (LRU, tail-first, never past a live reference) only when an
+  admission would otherwise starve.
 
-All three runs must emit bit-for-bit identical tokens, across admission
-waves that force page reuse, growth, and cross-wave prefix sharing.
-This is the Python twin of the Rust integration tests
-`paged_and_dense_decode_bit_identical` /
-`lazy_cow_paged_matches_dense_and_eager_bit_identical`, runnable
-without artifacts.  Failure-path reclamation (mid-flight cancellation)
-and the never-admissible submit reject are simulated too.
+All runs must emit bit-for-bit identical tokens, across admission waves
+that force page reuse, growth, cross-wave prefix sharing, idle-gap
+retention hits, and eviction.  This is the Python twin of the Rust
+integration tests `paged_and_dense_decode_bit_identical` /
+`lazy_cow_paged_matches_dense_and_eager_bit_identical` /
+`retained_prefix_pool_serves_repeated_system_prompt`, runnable without
+artifacts.  Failure-path reclamation (mid-flight cancellation, which
+never parks) and the never-admissible submit reject are simulated too.
 """
 
 from __future__ import annotations
@@ -41,6 +49,11 @@ TINY = tr.ModelConfig(
 WIDTH, PROMPT_W, MAX_LEN, PAGE = 3, 6, 16, 4
 PAGES_PER_SLOT = MAX_LEN // PAGE
 NUM_PAGES = 1 + (WIDTH * PAGES_PER_SLOT) // 2  # half the worst case + sentinel
+
+#: A page-aligned "system prompt" (exactly one full page): the retained
+#: pool serves ALL of its pages on a repeat, so its re-admission
+#: allocates zero fresh prompt pages.
+ALIGNED_PROMPT = [7, 11, 13, 17]
 
 
 def _requests():
@@ -77,14 +90,16 @@ def _commitment(prompt_len, max_new):
 
 
 class _Alloc:
-    """Refcount + reservation-ledger twin of coordinator/pagetable.rs
-    (page 0 reserved as the garbage page)."""
+    """Refcount + reservation-ledger + parked-page twin of
+    coordinator/kvcache/pagetable.rs (page 0 reserved as garbage)."""
 
     def __init__(self, num_pages=NUM_PAGES):
         self.num_pages = num_pages
         self.free = list(range(1, num_pages))
         self.refs = [0] * num_pages
         self.refs[0] = 1  # pinned garbage page
+        self.parked = [False] * num_pages
+        self.retained = 0
         self.reserved = 0
 
     def usable(self):
@@ -114,28 +129,167 @@ class _Alloc:
 
     def retain(self, p):
         assert p != 0 and self.refs[p] > 0, "retain of free/garbage page"
+        if self.parked[p] and self.refs[p] == 1:
+            self.retained -= 1  # retained -> outstanding
         self.refs[p] += 1
 
     def release(self, pages):
         for p in pages:
             assert p != 0 and self.refs[p] > 0, "double free"
+            if self.parked[p]:
+                assert self.refs[p] > 1, "released the pool's own reference"
+                self.refs[p] -= 1
+                if self.refs[p] == 1:
+                    self.retained += 1  # outstanding -> retained
+                continue
             self.refs[p] -= 1
             if self.refs[p] == 0:
                 self.free.append(p)
+
+    def park(self, p):
+        """The prefix pool adopts the caller's reference (no refcount
+        change; the page can no longer free through release)."""
+        assert p != 0 and self.refs[p] > 0 and not self.parked[p]
+        self.parked[p] = True
+        if self.refs[p] == 1:
+            self.retained += 1
+
+    def evict(self, p):
+        """LRU reclamation — never a page with live references."""
+        assert self.parked[p], "evict of unparked page"
+        assert self.refs[p] == 1, "evicted a page with live references"
+        self.parked[p] = False
+        self.refs[p] = 0
+        self.retained -= 1
+        self.free.append(p)
 
     def unreserve(self, n):
         assert n <= self.reserved
         self.reserved -= n
 
     def check_conservation(self):
-        outstanding = sum(1 for p in range(1, self.num_pages) if self.refs[p])
-        assert len(self.free) + outstanding == self.usable(), "page leak"
+        retained = sum(
+            1 for p in range(1, self.num_pages)
+            if self.parked[p] and self.refs[p] == 1
+        )
+        assert retained == self.retained, "retained counter drifted"
+        outstanding = sum(
+            1 for p in range(1, self.num_pages)
+            if self.refs[p] >= 1 and not (self.parked[p] and self.refs[p] == 1)
+        )
+        assert len(self.free) + outstanding + retained == self.usable(), "page leak"
         assert len(self.free) >= self.reserved, "ledger overcommitted"
+        for p in self.free:
+            assert self.refs[p] == 0 and not self.parked[p]
 
 
-def _plan(prompt, max_new, lazy, donors):
-    """Twin of engine.rs plan_paged_admission: (shared, fresh, reserve,
-    cow_copy)."""
+class _Pool:
+    """Token-indexed LRU retained-prefix index: twin of
+    coordinator/kvcache/prefix_pool.rs (entries own disjoint pages,
+    eviction truncates LRU tails, parking dedups/extends)."""
+
+    def __init__(self):
+        self.entries = []  # dicts: tokens, pages, stamp
+        self.clock = 0
+
+    def lookup(self, prompt):
+        """(entry, full-pages-common, common-tokens) or None."""
+        best = None
+        for e in self.entries:
+            common = 0
+            for a, b in zip(prompt, e["tokens"]):
+                if a != b:
+                    break
+                common += 1
+            pages = min(common // PAGE, len(e["pages"]))
+            if pages == 0:
+                continue
+            if best is None or pages > best[1] or (
+                pages == best[1] and common > best[2]
+            ):
+                best = (e, pages, common)
+        return best
+
+    def touch(self, e):
+        self.clock += 1
+        e["stamp"] = self.clock
+
+    def park(self, prompt, pages, alloc):
+        n_park = min(len(prompt) // PAGE, len(pages))
+        if n_park == 0:
+            alloc.release(pages)
+            return
+        best = self.lookup(prompt)
+        if best is not None and best[1] >= n_park:
+            self.touch(best[0])          # covered: duplicates release
+            alloc.release(pages)
+        elif best is not None and len(best[0]["pages"]) == best[1]:
+            e, n, _ = best               # clean extension in place
+            for p in pages[n:n_park]:
+                alloc.park(p)
+            e["pages"] = e["pages"] + pages[n:n_park]
+            e["tokens"] = list(prompt[:n_park * PAGE])
+            self.touch(e)
+            alloc.release(pages[:n] + pages[n_park:])
+        elif best is not None:
+            alloc.release(pages)         # divergent overlap: no park
+        else:
+            for p in pages[:n_park]:
+                alloc.park(p)
+            self.clock += 1
+            self.entries.append({
+                "tokens": list(prompt[:n_park * PAGE]),
+                "pages": list(pages[:n_park]),
+                "stamp": self.clock,
+            })
+            alloc.release(pages[n_park:])
+
+    def evictable(self, alloc):
+        """Pages evict() could reclaim right now: per entry, the
+        trailing run whose only reference is the pool's (refcounts are
+        non-increasing along an entry, so refcount-1 pages are a
+        suffix)."""
+        total = 0
+        for e in self.entries:
+            for p in reversed(e["pages"]):
+                if alloc.refs[p] != 1:
+                    break
+                total += 1
+        return total
+
+    def evict(self, want, alloc):
+        evicted = 0
+        while evicted < want:
+            victims = [
+                e for e in self.entries
+                if e["pages"] and alloc.refs[e["pages"][-1]] == 1
+            ]
+            if not victims:
+                break
+            e = min(victims, key=lambda e: e["stamp"])
+            while evicted < want and e["pages"] and alloc.refs[e["pages"][-1]] == 1:
+                alloc.evict(e["pages"].pop())
+                evicted += 1
+            e["tokens"] = e["tokens"][:len(e["pages"]) * PAGE]
+            if not e["pages"]:
+                self.entries.remove(e)
+        return evicted
+
+    def audit(self, alloc):
+        seen = set()
+        for e in self.entries:
+            assert e["pages"], "empty entry left in the index"
+            assert len(e["tokens"]) == len(e["pages"]) * PAGE
+            for p in e["pages"]:
+                assert p not in seen, "page owned by two entries"
+                seen.add(p)
+                assert alloc.refs[p] >= 1 and alloc.parked[p]
+
+
+def _plan(prompt, max_new, lazy, donors, pool=None):
+    """Twin of KvCacheManager::plan: (shared, fresh, reserve, cow_copy,
+    pool_hit_pages) — the pool is probed strictly last, so live donors
+    win ties (pool_hit_pages > 0 only when retention itself served)."""
     plen = max(len(prompt), 1)
     worst = _commitment(plen, max_new)
     prompt_pages = _pages_for(plen)
@@ -149,21 +303,35 @@ def _plan(prompt, max_new, lazy, donors):
         n = min(common // PAGE, len(donor_table))
         if n > len(shared) or (n == len(shared) and common > best_common):
             shared, best_common = list(donor_table[:n]), common
+    pool_pages = 0
+    if pool is not None:
+        best = pool.lookup(prompt)
+        if best is not None and (
+            best[1] > len(shared)
+            or (best[1] == len(shared) and best[2] > best_common)
+        ):
+            shared, best_common = list(best[0]["pages"][:best[1]]), best[2]
+            pool_pages = best[1]
     table_len = min(prompt_pages + 1, worst) if lazy else worst
     fresh = table_len - len(shared)
     cow = bool(shared) and best_common > len(shared) * PAGE
-    return shared, fresh, worst - table_len, cow
+    return shared, fresh, worst - table_len, cow, pool_pages
 
 
-def _serve(params, mode, cancel=None):
+def _serve(params, mode, cancel=None, phases=None):
     """Drive the serving loop under one policy; returns (tokens, alloc,
-    stats).  ``cancel=(rid, after_emissions)`` aborts a request once it
-    has emitted that many tokens (the mid-flight failure path)."""
-    assert mode in ("dense", "eager", "lazy")
-    paged, lazy = mode != "dense", mode == "lazy"
+    stats).  ``phases`` is a list of request lists: each phase drains
+    fully before the next is enqueued — the idle gap only the retained
+    prefix pool survives.  ``cancel=(rid, after_emissions)`` aborts a
+    request once it has emitted that many tokens (the mid-flight
+    failure path, which reclaims but never parks)."""
+    assert mode in ("dense", "eager", "lazy", "retained")
+    paged = mode != "dense"
+    lazy = mode in ("lazy", "retained")
     share = lazy  # CoW sharing rides on the lazy block-table machinery
-    reqs = _requests()
-    queue = list(range(len(reqs)))
+    retain = mode == "retained"
+    phases = [list(p) for p in (phases or [_requests()])]
+    reqs = [r for phase in phases for r in phase]
     toks_out = {i: [] for i in range(len(reqs))}
     budget = {i: reqs[i][1] for i in range(len(reqs))}
     cancelled = set()
@@ -171,10 +339,12 @@ def _serve(params, mode, cancel=None):
     pos = [0] * WIDTH
     last = [0] * WIDTH
     alloc = _Alloc()
+    pool = _Pool()
     tables = [[] for _ in range(WIDTH)]
     shared_ct = [0] * WIDTH  # leading shared entries per slot
     reserved_ct = [0] * WIDTH  # per-slot growth budget
-    stats = {"grows": 0, "shared": 0, "cow": 0}
+    stats = {"grows": 0, "shared": 0, "cow": 0, "hits": 0, "hit_tokens": 0,
+             "evictions": 0, "admissions": {}}
     if paged:
         kc = jnp.zeros((TINY.n_layers, NUM_PAGES, PAGE, TINY.n_heads, TINY.d_head))
         vc = jnp.zeros_like(kc)
@@ -189,15 +359,21 @@ def _serve(params, mode, cancel=None):
             bt[s, skip:len(pages)] = pages[skip:]
         return jnp.asarray(bt)
 
-    def reclaim(s):
-        """Every slot exit path (retire, cancel) runs through here."""
+    def reclaim(s, park):
+        """Every slot exit path runs through here; clean retirement
+        parks the prompt-prefix pages (retained mode), aborts never do
+        (their pages may hold no valid writes)."""
+        rid = slots[s]
         if paged:
-            alloc.release(tables[s])
+            if retain and park:
+                pool.park(reqs[rid][0], tables[s], alloc)
+            else:
+                alloc.release(tables[s])
             alloc.unreserve(reserved_ct[s])
         tables[s], shared_ct[s], reserved_ct[s] = [], 0, 0
         slots[s] = None
 
-    def refill():
+    def refill(queue):
         donors = (
             [(reqs[slots[s]][0], tables[s]) for s in range(WIDTH)
              if slots[s] is not None and tables[s]]
@@ -209,9 +385,22 @@ def _serve(params, mode, cancel=None):
                 continue
             rid = queue[0]
             if paged:
-                shared, fresh, reserve, cow = _plan(
-                    reqs[rid][0], budget[rid], lazy, donors
+                shared, fresh, reserve, cow, pool_pages = _plan(
+                    reqs[rid][0], budget[rid], lazy,
+                    donors, pool if retain else None,
                 )
+                need = fresh + reserve
+                if retain and need > alloc.unreserved():
+                    # pin the planned shares, then LRU-evict the deficit
+                    # — exactly KvCacheManager::admit's starved path,
+                    # and only when eviction actually covers it (a
+                    # hopeless admission must not trash the pool)
+                    for p in shared:
+                        alloc.retain(p)
+                    deficit = need - alloc.unreserved()
+                    if deficit <= pool.evictable(alloc):
+                        stats["evictions"] += pool.evict(deficit, alloc)
+                    alloc.release(shared)
                 got = alloc.admit(fresh, reserve)
                 if got is None:
                     break  # FIFO: nothing overtakes the starved head
@@ -221,6 +410,16 @@ def _serve(params, mode, cancel=None):
                 shared_ct[s], reserved_ct[s] = len(shared), reserve
                 stats["shared"] += len(shared)
                 stats["cow"] += int(cow)
+                if pool_pages:
+                    stats["hits"] += 1
+                    stats["hit_tokens"] += pool_pages * PAGE
+                    best = pool.lookup(reqs[rid][0])
+                    if best is not None:
+                        pool.touch(best[0])
+                stats["admissions"][rid] = {
+                    "shared": len(shared), "fresh": fresh,
+                    "pool_pages": pool_pages,
+                }
                 if share:
                     donors.append((reqs[rid][0], tables[s]))
             queue.pop(0)
@@ -243,10 +442,10 @@ def _serve(params, mode, cancel=None):
         mask[filled] = 1
         if paged:
             # append-side table: shared prefix chunks -> garbage page, so
-            # a sharer never rewrites its donor's live pages (its own
-            # rows there are bit-identical anyway — that skipped write
-            # IS the copy-on-write copy, performed for the private
-            # boundary page by this very call)
+            # a sharer never rewrites its donor's (or the retained
+            # pool's) live pages — its own rows there are bit-identical
+            # anyway; that skipped write IS the copy-on-write copy,
+            # performed for the private boundary page by this very call
             kc, vc = tr.page_append(
                 kc, vc, kn, vn, block_table(for_append=True), jnp.asarray(mask)
             )
@@ -262,10 +461,10 @@ def _serve(params, mode, cancel=None):
         rid = slots[s]
         toks_out[rid].append(tok)
         if len(toks_out[rid]) >= budget[rid]:
-            reclaim(s)  # retire; pages + reservations recycle
+            reclaim(s, park=True)  # retire; prefix pages may park
         elif cancel is not None and cancel == (rid, len(toks_out[rid])):
             cancelled.add(rid)
-            reclaim(s)  # mid-flight abort: same reclamation path
+            reclaim(s, park=False)  # mid-flight abort: no parking
 
     def do_decode():
         nonlocal kc, vc
@@ -297,19 +496,26 @@ def _serve(params, mode, cancel=None):
             last[s] = tok
             emit(s, tok)
 
-    for _ in range(300):
-        if not queue and all(s is None for s in slots):
-            break
-        filled = refill() if queue else []
-        if filled:
-            do_prefill(filled)
-        elif any(s is not None for s in slots):
-            do_decode()
-        else:
-            raise AssertionError("stuck: queue non-empty but nothing admitted/active")
-        if paged:
-            alloc.check_conservation()
-    assert not queue and all(s is None for s in slots), "trace did not drain"
+    next_rid = 0
+    for phase in phases:
+        queue = list(range(next_rid, next_rid + len(phase)))
+        next_rid += len(phase)
+        for _ in range(300):
+            if not queue and all(s is None for s in slots):
+                break  # phase drained: the idle gap before the next one
+            filled = refill(queue) if queue else []
+            if filled:
+                do_prefill(filled)
+            elif any(s is not None for s in slots):
+                do_decode()
+            else:
+                raise AssertionError(
+                    "stuck: queue non-empty but nothing admitted/active"
+                )
+            if paged:
+                alloc.check_conservation()
+                pool.audit(alloc)
+        assert not queue and all(s is None for s in slots), "phase did not drain"
     for rid in cancelled:
         del toks_out[rid]
     return toks_out, alloc, stats
@@ -327,13 +533,46 @@ def test_lazy_cow_and_eager_match_dense_bitwise_with_page_recycling():
         assert sorted(alloc.free) == list(range(1, NUM_PAGES))
         assert alloc.reserved == 0
     # the policies actually diverged mechanically
-    assert stats_e == {"grows": 0, "shared": 0, "cow": 0}
+    assert stats_e["grows"] == stats_e["shared"] == stats_e["cow"] == 0
     assert stats_l["grows"] > 0, "lazy must grow across page boundaries"
     assert stats_l["shared"] > 0, "repeated prompts must share prefix pages"
     assert stats_l["cow"] > 0, "the boundary page must be copied on write"
+    assert stats_l["hits"] == stats_l["evictions"] == 0, "no pool in lazy mode"
     # the pool was genuinely undersized: the trace needed admission waves
     worst = sum(_commitment(len(p), b) for p, b in _requests())
     assert worst > NUM_PAGES - 1, "trace must overcommit the pool"
+
+
+def test_retained_prefix_pool_matches_dense_across_idle_gap():
+    """THE retention acceptance twin: phase 1 serves the base trace plus
+    a page-aligned system prompt; after the pool drains (idle gap),
+    phase 2 repeats that prompt — it must be admitted from the retained
+    pool with zero fresh prompt pages, evictions must have fired under
+    phase-1 pressure, and every token must equal the dense oracle's."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    base = _requests()
+    aligned_rid = len(base)  # last of phase 1
+    phases = [base + [(list(ALIGNED_PROMPT), 3)],
+              [(list(ALIGNED_PROMPT), 3), (base[0][0], 3)]]
+    dense, _, _ = _serve(params, "dense", phases=phases)
+    retained, alloc, stats = _serve(params, "retained", phases=phases)
+    assert retained == dense, f"retained {retained} != dense {dense}"
+    # the repeat after the idle gap was served from the retained pool:
+    # its one prompt page came from the index, so the admission's only
+    # fresh page is the decode page — zero fresh PROMPT pages
+    repeat = stats["admissions"][aligned_rid + 1]
+    assert repeat["pool_pages"] == 1, f"pool miss on the repeat: {repeat}"
+    assert repeat["shared"] == 1 and repeat["fresh"] == 1, repeat
+    assert stats["hits"] >= 1
+    assert stats["hit_tokens"] >= len(ALIGNED_PROMPT)
+    # phase-1 admission pressure must have exercised LRU eviction
+    assert stats["evictions"] > 0, "an overcommitted pool must evict"
+    # conservation with retention: parked pages are neither free nor
+    # leaked — free + retained covers the whole usable pool at idle
+    alloc.check_conservation()
+    assert alloc.reserved == 0
+    assert len(alloc.free) + alloc.retained == alloc.usable()
+    assert alloc.retained > 0, "the last retirements stay parked"
 
 
 def test_pages_reclaimed_on_midflight_cancellation():
@@ -347,6 +586,21 @@ def test_pages_reclaimed_on_midflight_cancellation():
         assert toks == dense[rid], f"request {rid} corrupted by the cancellation"
     assert sorted(alloc.free) == list(range(1, NUM_PAGES)), "cancel leaked pages"
     assert alloc.reserved == 0, "cancel leaked reservations"
+
+
+def test_cancelled_donor_never_parks_but_pool_conserves():
+    # the same mid-flight cancellation under the retained policy: the
+    # aborted slot's pages must NOT enter the prefix index (they may
+    # hold no valid writes), yet retirement parking around it conserves
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    dense, _, _ = _serve(params, "dense")
+    retained, alloc, _ = _serve(params, "retained", cancel=(0, 1))
+    assert 0 not in retained
+    for rid, toks in retained.items():
+        assert toks == dense[rid], f"request {rid} corrupted by the cancellation"
+    alloc.check_conservation()
+    assert alloc.reserved == 0
+    assert len(alloc.free) + alloc.retained == alloc.usable()
 
 
 def test_never_admissible_request_rejected_at_submit_queue_drains():

@@ -33,43 +33,29 @@
 //!   `(L, num_pages, page_size, nh, dh)` plus a per-slot block table,
 //!   driven by the `serve_decode_paged` / `page_append` artifacts.
 //!   Pool memory tracks *actual* context lengths instead of the worst
-//!   case.  Page 0 of the pool is a reserved garbage page: sentinel
-//!   block-table entries and inactive slots' scatter traffic land
-//!   there, never on live data.  Steady-state decode stages the two
-//!   `(B,)` vectors plus the `(B, pages_per_slot)` block table up and
-//!   the logits down — still O(B), independent of both context length
-//!   and pool size.
+//!   case; page 0 of the pool is a reserved garbage page so every
+//!   scatter/gather is unconditional.  Steady-state decode stages the
+//!   two `(B,)` vectors plus the `(B, pages_per_slot)` block table up
+//!   and the logits down — still O(B), independent of both context
+//!   length and pool size.
 //!
-//! **Paged admission: lazy growth + the reservation ledger.**  With
-//! [`EngineConfig::lazy_growth`] (the default), a slot is admitted with
-//! only the pages its prompt needs plus one decode page; the rest of
-//! its worst-case need is *reserved* in the
-//! [`crate::coordinator::pagetable::PageAllocator`] ledger and
-//! converted into real pages one at a time as the slot's `pos` crosses
-//! page boundaries during decode.  Admission gates on *unreserved*
-//! pages, so a grow request is always satisfiable from reserved
-//! headroom — growth can never deadlock, and a page-starved queue keeps
-//! decoding with FIFO order preserved (nothing overtakes the blocked
-//! head-of-line request).  `lazy_growth: false` restores the eager
-//! worst-case-at-admission policy of PR 3 (the equivalence baseline for
-//! the lazy path).
+//! **Cache policy lives in [`crate::coordinator::kvcache`].**  The
+//! engine holds the device buffers and drives the artifacts; every
+//! page-level decision — lazy growth out of the reservation ledger,
+//! copy-on-write prompt-prefix sharing, and the LRU-evicted **retained
+//! prefix pool** that lets a hot system prompt's KV survive idle gaps
+//! between requests — is booked by the [`KvCacheManager`] behind its
+//! admit/install/grow/release API.  [`EngineConfig::lazy_growth`],
+//! [`EngineConfig::share_prefixes`] and [`EngineConfig::prefix_cache`]
+//! select the policy (all default on; switching them off walks back to
+//! the PR-4 / PR-3 equivalence baselines).
 //!
-//! **Copy-on-write prompt-prefix sharing.**  With
-//! [`EngineConfig::share_prefixes`] (the default), an admission whose
-//! prompt shares a token prefix with an in-flight slot's prompt does
-//! not re-store that prefix: the pages *fully covered* by the common
-//! prefix are refcounted in the allocator and referenced by both block
-//! tables (per-slot prefill KV is a pure function of the prompt, so the
-//! donor's rows are bit-identical to what the new slot's own prefill
-//! would write — asserted by `paged_and_dense_decode_bit_identical`
-//! and the Python protocol twin).  A shared page is never written: any
-//! page the appended decode row could land in (the boundary page of the
-//! prompt, and everything after) is made private at admission, and the
-//! slot's own `page_append` write performs the copy — that is the CoW
-//! event, counted in [`EngineMetrics::cow_copies`], costing zero extra
-//! transfers and no kernel change.  The sharer's `page_append` call
-//! routes its shared-prefix chunks to the garbage page so a donor's
-//! live pages are never rewritten mid-flight.
+//! **Expert routing telemetry.**  When a decode artifact declares an
+//! `expert_counts_output` (an extra `(E,)` output of per-expert routed
+//! token counts), the engine downloads it alongside the logits each
+//! tick and feeds [`Engine::expert_stats`] — the paper's load-imbalance
+//! story observable live in `scattermoe serve` and the serve example.
+//! Artifact dirs without the output run exactly as before.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -78,11 +64,11 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::expert_stats::ExpertStats;
-use crate::coordinator::pagetable::{PageAllocator, RESERVED_PAGE};
+use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager, KvLayout};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
+use crate::coordinator::sampling::sample_logits;
 use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
 use crate::metrics::Histogram;
-use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -115,6 +101,19 @@ pub struct EngineConfig {
     /// reference in-flight slots' pages for fully-covered common prompt
     /// prefixes instead of re-storing them.
     pub share_prefixes: bool,
+    /// Retained prefix caching (paged layout): retiring slots park
+    /// their prompt-prefix pages in an LRU pool instead of freeing
+    /// them, so a repeated system prompt is admitted with zero prompt-
+    /// page writes even after an idle gap.  `false` restores the PR-4
+    /// baseline (prefix pages die with their last block-table
+    /// reference).
+    pub prefix_cache: bool,
+    /// Download the decode artifact's per-expert routing counts each
+    /// tick (when the lowering exposes them) and feed
+    /// [`Engine::expert_stats`].  Off by default: the telemetry costs
+    /// an extra `(E,)` host download per tick, and the steady-state
+    /// transfer assertions pin the logits-only baseline.
+    pub expert_telemetry: bool,
     /// Admission-queue bound (submissions beyond it are rejected).
     pub max_queue: usize,
     /// Prefill/decode interleaving policy.
@@ -135,6 +134,8 @@ impl Default for EngineConfig {
             prefer_paged: true,
             lazy_growth: true,
             share_prefixes: true,
+            prefix_cache: true,
+            expert_telemetry: false,
             max_queue: 256,
             scheduler: SchedulerConfig::default(),
             seed: 0,
@@ -168,163 +169,29 @@ pub struct EngineMetrics {
     /// Pages allocated lazily mid-flight, one per page-boundary
     /// crossing, out of the slot's admission-time reservation.
     pub page_grows: u64,
-    /// Block-table entries admitted as references to an in-flight
-    /// donor's prompt-prefix pages instead of fresh allocations.
+    /// Block-table entries admitted as references to a donor's (or the
+    /// retained pool's) prompt-prefix pages instead of fresh
+    /// allocations.
     pub shared_pages: u64,
     /// Copy-on-write events: admissions whose common prefix ran into a
     /// page the appended decode row could write, so that page was made
     /// private and the slot's own `page_append` performed the copy.
     pub cow_copies: u64,
+    /// Admissions that re-shared at least one page from the retained
+    /// prefix pool (a hot prompt served across an idle gap).
+    pub prefix_hits: u64,
+    /// Prompt tokens whose KV came from the retained pool instead of
+    /// being re-stored (full pages only).
+    pub prefix_hit_tokens: u64,
+    /// Retained pages reclaimed by the LRU evictor because an admission
+    /// would otherwise have starved.
+    pub evictions: u64,
     /// Requests aborted (cancelled or drained) instead of finishing.
     pub aborted: u64,
     /// Time-to-first-token distribution (seconds).
     pub ttft: Histogram,
     /// End-to-end latency distribution (seconds).
     pub latency: Histogram,
-}
-
-/// Which on-device layout carries the live KV state (see module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum KvLayout {
-    /// Dense per-slot caches `(L, B, Tmax, nh, dh)`, padded to the
-    /// worst-case `max_len` — the compatibility/equivalence baseline.
-    Dense,
-    /// Shared page pools `(L, num_pages, page_size, nh, dh)` addressed
-    /// through per-slot block tables; memory tracks actual contexts.
-    Paged,
-}
-
-/// Paged-layout coordinator state (block tables + page ownership).
-struct PagedState {
-    /// Free-list over the pool's page ids (page 0 reserved).
-    allocator: PageAllocator,
-    /// Block-table width (pages addressable per slot).
-    pages_per_slot: usize,
-    /// Per-slot page ids, in position order; empty for free slots.
-    /// Uploaded as the `(B, pages_per_slot)` block table with
-    /// [`RESERVED_PAGE`] filling the unallocated tail.  The leading
-    /// `shared[slot]` entries are references to a donor's prefix pages
-    /// (refcounted, never written by this slot).
-    tables: Vec<Vec<u32>>,
-    /// Per-slot remaining growth budget, mirrored in the allocator's
-    /// reservation ledger (`sum(reserved) == allocator.reserved_pages()`).
-    reserved: Vec<usize>,
-    /// Per-slot count of leading block-table entries shared from a
-    /// donor (`page_append` routes these chunks to the garbage page).
-    shared: Vec<usize>,
-}
-
-impl PagedState {
-    fn new(allocator: PageAllocator, pages_per_slot: usize, width: usize) -> Self {
-        PagedState {
-            allocator,
-            pages_per_slot,
-            tables: vec![Vec::new(); width],
-            reserved: vec![0; width],
-            shared: vec![0; width],
-        }
-    }
-
-    /// Worst-case pages a request needs over its whole lifetime
-    /// (prompt + generation budget, clamped to the context span) — the
-    /// amount eager admission allocates and lazy admission commits
-    /// (allocated + reserved), so decode can never starve mid-flight.
-    fn pages_needed(&self, prompt_len: usize, max_new: usize, max_len: usize) -> usize {
-        let rows = (prompt_len.max(1) + max_new).min(max_len);
-        self.allocator.pages_for(rows)
-    }
-
-    /// Whether a request of this shape could EVER be admitted: its
-    /// worst-case commitment must fit the whole usable pool (prefix
-    /// sharing is not assumed — donors are transient).  `false` means
-    /// reject at submit, or the request would head-block the FIFO queue
-    /// forever.
-    fn ever_admissible(&self, prompt_len: usize, max_new: usize, max_len: usize) -> bool {
-        self.pages_needed(prompt_len, max_new, max_len) <= self.allocator.usable_pages()
-    }
-
-    /// Reclaim one slot's pages and growth reservations (retirement,
-    /// cancellation, or drain — every exit path runs through here so
-    /// allocator conservation survives failures too).
-    fn reclaim_slot(&mut self, slot: usize) {
-        let pages = std::mem::take(&mut self.tables[slot]);
-        self.allocator.free(pages);
-        let r = std::mem::take(&mut self.reserved[slot]);
-        if r > 0 {
-            self.allocator.unreserve(r);
-        }
-        self.shared[slot] = 0;
-    }
-}
-
-/// One paged admission decision (pure planning — the caller's
-/// [`PageAllocator::admit`] call is the gate that commits it).
-#[derive(Clone, Debug, PartialEq, Eq)]
-struct AdmitPlan {
-    /// Donor prefix pages the new block table will reference
-    /// (refcounted; always fully covered by the common token prefix of
-    /// both prompts, so neither side ever writes them).
-    shared: Vec<u32>,
-    /// Pages to allocate fresh at admission.
-    fresh: usize,
-    /// Worst-case growth budget to reserve (0 under eager admission).
-    reserve: usize,
-    /// The common prefix extended into a page the appended decode row
-    /// could write: that page was made private instead of shared, and
-    /// the slot's own `page_append` write performs the copy (the
-    /// copy-on-write event).
-    cow_copy: bool,
-}
-
-/// Plan one paged admission: how much of the worst-case page need
-/// (`ceil(min(prompt + max_new, max_len) / page_size)`) is shared from
-/// a donor, allocated now, or reserved for lazy growth.
-///
-/// Sharing is restricted to pages *fully covered* by the common token
-/// prefix: any page a decode row could land in (positions `>= prompt
-/// len` for either side) must be private, because pool pages are only
-/// ever written through a slot's own block-table entry.  The boundary
-/// page that the common prefix runs into is therefore copied — by the
-/// admission's own `page_append` write, not a device copy — exactly
-/// when it would otherwise be written (`cow_copy`).
-fn plan_paged_admission(
-    prompt: &[i32], max_new: usize, max_len: usize, page_size: usize, lazy: bool,
-    donors: &[(Vec<i32>, Vec<u32>)],
-) -> AdmitPlan {
-    let plen = prompt.len().max(1);
-    let worst = (plen + max_new).min(max_len).div_ceil(page_size);
-    let prompt_pages = plen.div_ceil(page_size);
-    let mut shared: Vec<u32> = Vec::new();
-    let mut best_common = 0usize;
-    for (donor_prompt, donor_table) in donors {
-        let common = prompt
-            .iter()
-            .zip(donor_prompt.iter())
-            .take_while(|(a, b)| a == b)
-            .count();
-        // full pages inside BOTH prompts (common <= both lengths); the
-        // donor's table always covers its own prompt pages
-        let n = (common / page_size).min(donor_table.len());
-        if n > shared.len() || (n == shared.len() && common > best_common) {
-            shared = donor_table[..n].to_vec();
-            best_common = common;
-        }
-    }
-    let n_share = shared.len();
-    debug_assert!(n_share <= prompt_pages);
-    // lazy: prompt pages + one decode page (capped at the worst case);
-    // eager: the full worst case, nothing reserved
-    let table_len = if lazy { (prompt_pages + 1).min(worst) } else { worst };
-    AdmitPlan {
-        fresh: table_len - n_share,
-        reserve: worst - table_len,
-        // only a real sharing admission can copy-on-write: the boundary
-        // page is "copied" when the common prefix extends past the last
-        // fully-shared page (sub-page overlaps with no shared pages are
-        // ordinary private admissions, not CoW events)
-        cow_copy: n_share > 0 && best_common > n_share * page_size,
-        shared,
-    }
 }
 
 /// The serving engine (see the module docs for the tick contract).
@@ -342,26 +209,29 @@ pub struct Engine {
     params: Vec<xla::PjRtBuffer>,
     /// live KV state — **device-resident**, chained output→input across
     /// ticks; dense caches (L, B, Tmax, nh, dh) or paged pools
-    /// (L, num_pages, page_size, nh, dh) depending on `layout`
+    /// (L, num_pages, page_size, nh, dh) depending on the layout
     k_cache: xla::PjRtBuffer,
     v_cache: xla::PjRtBuffer,
     cache_shape: Vec<usize>,
     /// bytes per cache element, read from the decode artifact's cache
     /// input spec (bf16/f16 artifacts must not be accounted as f32)
     cache_elem_bytes: usize,
-    /// which layout the buffers above hold
-    layout: KvLayout,
-    /// block tables + page allocator (paged layout only)
-    paged: Option<PagedState>,
+    /// every page-level policy decision (layout, block tables, lazy
+    /// growth, CoW sharing, retained prefix pool) — see module docs
+    kv: KvCacheManager,
     /// whether the manifest carries the on-device splice artifact
     has_device_splice: bool,
+    /// index of the active decode artifact's optional per-expert
+    /// routing-counts output (downloaded + recorded when declared)
+    expert_counts_output: Option<usize>,
     /// per-slot next position (= current sequence length)
     pos: Vec<i32>,
     /// per-slot last emitted token
     last_token: Vec<i32>,
     /// Serving metrics (counters + latency histograms).
     pub metrics: EngineMetrics,
-    /// Per-expert routing load telemetry.
+    /// Per-expert routing load telemetry (fed by the decode artifact's
+    /// `expert_counts_output` when the lowering exposes it).
     pub expert_stats: ExpertStats,
     next_id: u64,
 }
@@ -379,6 +249,40 @@ impl Engine {
         let max_len = dense_cache_shape[2];
         let vocab = decode.outputs[0].shape[1];
         let num_experts = prefill.meta_usize("num_experts").unwrap_or(8);
+        let kv_cfg = KvCacheConfig {
+            lazy_growth: cfg.lazy_growth,
+            share_prefixes: cfg.share_prefixes,
+            prefix_cache: cfg.prefix_cache,
+        };
+
+        // Optional per-tick expert routing telemetry: a decode artifact
+        // may declare one extra `(E,)` output of per-expert routed
+        // token counts (meta `expert_counts_output`, always the last
+        // output, chained nowhere).  Validated per artifact; recorded
+        // from whichever decode layout the engine actually runs.
+        let counts_out = |spec: &crate::runtime::ArtifactSpec| -> Result<Option<usize>> {
+            let Some(idx) = spec.meta_usize("expert_counts_output") else {
+                return Ok(None);
+            };
+            anyhow::ensure!(
+                idx + 1 == spec.outputs.len(),
+                "artifact '{}': expert_counts_output = {idx} must name the \
+                 last of {} outputs",
+                spec.name,
+                spec.outputs.len()
+            );
+            anyhow::ensure!(
+                spec.outputs[idx].shape == [num_experts]
+                    && spec.outputs[idx].dtype == crate::tensor::DType::I32,
+                "artifact '{}': expert-counts output {:?}/{:?} does not \
+                 match the (num_experts = {num_experts},) i32 contract",
+                spec.name,
+                spec.outputs[idx].shape,
+                spec.outputs[idx].dtype
+            );
+            Ok(Some(idx))
+        };
+        let dense_counts = counts_out(&decode)?;
 
         // Paged layout when the manifest carries both paged artifacts
         // (dense stays the fallback for pre-paged artifact dirs and the
@@ -390,7 +294,11 @@ impl Engine {
             (Ok(d), Ok(a)) if cfg.prefer_paged => Some((d.clone(), a.clone())),
             _ => None,
         };
-        let (layout, paged, cache_shape, cache_spec) = match &paged_specs {
+        let paged_counts = match &paged_specs {
+            Some((pd, _)) => counts_out(pd)?,
+            None => None,
+        };
+        let (kv, cache_shape, cache_spec) = match &paged_specs {
             None => {
                 if cfg.prefer_paged {
                     log::info!(
@@ -399,7 +307,11 @@ impl Engine {
                         cfg.page_append_artifact
                     );
                 }
-                (KvLayout::Dense, None, dense_cache_shape.clone(), dense_cache_spec)
+                (
+                    KvCacheManager::dense(width, max_len, kv_cfg),
+                    dense_cache_shape.clone(),
+                    dense_cache_spec,
+                )
             }
             Some((pd, pa)) => {
                 // validate the full paged contract before trusting it:
@@ -433,10 +345,14 @@ impl Engine {
                     dense_cache_shape
                 );
                 let map = pd.checked_chain_map()?;
+                let mut want = vec![None, Some(3), Some(4)];
+                if paged_counts.is_some() {
+                    want.push(None); // counts go to host, chain nowhere
+                }
                 anyhow::ensure!(
-                    map == [None, Some(3), Some(4)],
+                    map == want,
                     "artifact '{}' chain_map {map:?} does not match the \
-                     engine's paged decode contract [-1, 3, 4]",
+                     engine's paged decode contract {want:?}",
                     cfg.paged_decode_artifact
                 );
                 let map = pa.checked_chain_map()?;
@@ -446,20 +362,30 @@ impl Engine {
                      engine's page-append contract [0, 1]",
                     cfg.page_append_artifact
                 );
-                let state = PagedState::new(
-                    PageAllocator::new(meta.num_pages, meta.page_size),
-                    meta.pages_per_slot,
-                    width,
-                );
                 (
-                    KvLayout::Paged,
-                    Some(state),
+                    KvCacheManager::paged(
+                        width,
+                        max_len,
+                        meta.num_pages,
+                        meta.page_size,
+                        meta.pages_per_slot,
+                        kv_cfg,
+                    ),
                     pd.inputs[3].shape.clone(),
                     &pd.inputs[3],
                 )
             }
         };
         let cache_elem_bytes = cache_spec.dtype.size_bytes();
+        // the index of the ACTIVE decode artifact's counts output; the
+        // output always exists in the result row when declared (so the
+        // pops stay aligned), but its host download + recording is
+        // opt-in via `expert_telemetry` (an extra (E,) transfer the
+        // steady-state byte assertions exclude)
+        let expert_counts_output = match kv.layout() {
+            KvLayout::Paged => paged_counts,
+            KvLayout::Dense => dense_counts,
+        };
 
         // Output-arity hardening: the hot paths pop a fixed number of
         // outputs per artifact; a malformed artifact dir with the wrong
@@ -479,9 +405,9 @@ impl Engine {
             Ok(())
         };
         expect_outputs(&prefill, 3)?; // logits, k_cache, v_cache
-        expect_outputs(&decode, 3)?; // logits, k_cache, v_cache
+        expect_outputs(&decode, 3 + usize::from(dense_counts.is_some()))?;
         if let Some((pd, pa)) = &paged_specs {
-            expect_outputs(pd, 3)?; // logits, k_pool, v_pool
+            expect_outputs(pd, 3 + usize::from(paged_counts.is_some()))?;
             expect_outputs(pa, 2)?; // k_pool, v_pool
         }
         if let Ok(spl) = runtime.manifest().get(&cfg.splice_artifact) {
@@ -490,17 +416,22 @@ impl Engine {
 
         // Cross-check the manifest-declared chaining contract against the
         // consumption order hard-wired into do_decode / splice_cache_rows
-        // (outputs [logits→host, k, v] feeding inputs [pos, tokens,
-        // k_cache=2, v_cache=3]; kv_splice outputs feeding inputs 0/1).
-        // The caches share shape+dtype, so a re-ordered aot.py would
-        // otherwise swap k/v silently; artifact dirs that predate
-        // chain_map declare nothing and keep the legacy assumption.
+        // (outputs [logits→host, k, v(, counts→host)] feeding inputs
+        // [pos, tokens, k_cache=2, v_cache=3]; kv_splice outputs feeding
+        // inputs 0/1).  The caches share shape+dtype, so a re-ordered
+        // aot.py would otherwise swap k/v silently; artifact dirs that
+        // predate chain_map declare nothing and keep the legacy
+        // assumption.
         if decode.has_chain_map() {
             let map = decode.checked_chain_map()?;
+            let mut want = vec![None, Some(2), Some(3)];
+            if dense_counts.is_some() {
+                want.push(None);
+            }
             anyhow::ensure!(
-                map == [None, Some(2), Some(3)],
+                map == want,
                 "artifact '{}' chain_map {map:?} does not match the engine's \
-                 decode contract [-1, 2, 3]",
+                 decode contract {want:?}",
                 cfg.decode_artifact
             );
         }
@@ -544,13 +475,10 @@ impl Engine {
         let zeros = Tensor::zeros(cache_spec.dtype, &cache_shape);
         let k_cache = runtime.upload_tensor_for("kv_cache_init", &zeros)?;
         let v_cache = runtime.upload_tensor_for("kv_cache_init", &zeros)?;
-        if let Some(ps) = &paged {
+        if let Some((_, usable)) = kv.page_budget() {
             log::info!(
-                "engine: paged KV layout — {} pages × {} rows ({} usable) \
+                "engine: paged KV layout — {usable} usable pool pages \
                  vs dense worst case {} rows",
-                ps.allocator.num_pages(),
-                ps.allocator.page_size(),
-                ps.allocator.usable_pages(),
                 width * max_len,
             );
         }
@@ -566,9 +494,9 @@ impl Engine {
             v_cache,
             cache_shape,
             cache_elem_bytes,
-            layout,
-            paged,
+            kv,
             has_device_splice,
+            expert_counts_output,
             pos: vec![0; width],
             last_token: vec![0; width],
             metrics: EngineMetrics::default(),
@@ -607,23 +535,30 @@ impl Engine {
 
     /// Which on-device layout carries the KV state.
     pub fn kv_layout(&self) -> KvLayout {
-        self.layout
+        self.kv.layout()
     }
 
-    /// Free / total usable pool pages (`None` on the dense layout).
-    /// Free pages include the growth headroom reserved by in-flight
-    /// slots — see [`Engine::page_reservations`].
+    /// Reclaimable / total usable pool pages (`None` on the dense
+    /// layout).  Reclaimable pages include both the growth headroom
+    /// reserved by in-flight slots and the retained prefix pool (the
+    /// LRU evictor returns parked pages on demand), so a fully drained
+    /// engine reports the whole usable pool — the conservation check
+    /// the reclamation tests pin.
     pub fn page_budget(&self) -> Option<(usize, usize)> {
-        self.paged
-            .as_ref()
-            .map(|p| (p.allocator.free_pages(), p.allocator.usable_pages()))
+        self.kv.page_budget()
     }
 
     /// Free pages promised to in-flight slots for lazy growth (`None`
-    /// on the dense layout; 0 after a full drain — the conservation
-    /// check the reclamation tests pin).
+    /// on the dense layout; 0 after a full drain).
     pub fn page_reservations(&self) -> Option<usize> {
-        self.paged.as_ref().map(|p| p.allocator.reserved_pages())
+        self.kv.reservations()
+    }
+
+    /// Pages currently parked in the retained prefix pool (`None` on
+    /// the dense layout; they re-share on a prompt hit and evict LRU
+    /// under admission pressure).
+    pub fn retained_pages(&self) -> Option<usize> {
+        self.kv.retained_pages()
     }
 
     /// True when partial prefills merge cache rows on-device.
@@ -649,15 +584,13 @@ impl Engine {
         // a worst-case page need beyond the whole pool could never be
         // admitted: without this reject it would sit at the head of the
         // FIFO queue forever and starve every request behind it
-        if let Some(ps) = &self.paged {
-            if !ps.ever_admissible(prompt.len(), params.max_new_tokens, self.max_len) {
-                anyhow::bail!(
-                    "request needs {} KV pages worst-case but the pool \
-                     only holds {} — it could never be admitted",
-                    ps.pages_needed(prompt.len(), params.max_new_tokens, self.max_len),
-                    ps.allocator.usable_pages()
-                );
-            }
+        if !self.kv.ever_admissible(prompt.len(), params.max_new_tokens) {
+            anyhow::bail!(
+                "request needs {} KV pages worst-case but the pool \
+                 only holds {} — it could never be admitted",
+                self.kv.pages_needed(prompt.len(), params.max_new_tokens),
+                self.kv.page_budget().map_or(0, |(_, usable)| usable)
+            );
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -670,67 +603,20 @@ impl Engine {
         }
     }
 
-    /// In-flight slots usable as prefix-sharing donors: their prompt and
-    /// current block table (the table always covers the prompt's pages).
-    fn sharing_donors(&self, ps: &PagedState) -> Vec<(Vec<i32>, Vec<u32>)> {
-        if !self.cfg.share_prefixes {
-            return Vec::new();
-        }
-        self.batcher
-            .slots()
-            .iter()
-            .enumerate()
-            .filter(|(i, s)| s.state != SlotState::Empty && !ps.tables[*i].is_empty())
-            .map(|(i, s)| (s.prompt.clone(), ps.tables[i].clone()))
-            .collect()
-    }
-
-    /// Requests the scheduler may admit *this* tick: the whole queue on
-    /// the dense layout, or the FIFO prefix whose page commitments
-    /// (fresh + reserved, net of shareable prefix pages) fit the
-    /// *unreserved* pool on the paged one (nothing overtakes a blocked
-    /// head-of-line request — the allocator is only simulated here; the
-    /// same plan is committed for real in the refill admission gate).
-    fn admissible_now(&self, queued: usize, empty: usize) -> usize {
-        let Some(ps) = &self.paged else { return queued };
-        let limit = queued.min(empty);
-        if limit == 0 {
-            return 0; // steady-state decode tick: skip the donor snapshot
-        }
-        let page_size = ps.allocator.page_size();
-        let mut budget = ps.allocator.unreserved_pages();
-        let mut donors = self.sharing_donors(ps);
-        let mut admissible = 0usize;
-        for req in self.batcher.queued_requests().take(limit) {
-            let plan = plan_paged_admission(
-                &req.prompt,
-                req.params.max_new_tokens,
-                self.max_len,
-                page_size,
-                self.cfg.lazy_growth,
-                &donors,
-            );
-            let need = plan.fresh + plan.reserve;
-            if need > budget {
-                break;
-            }
-            budget -= need;
-            admissible += 1;
-            if self.cfg.share_prefixes {
-                // page ids are placeholders — only the table LENGTH
-                // matters for later candidates' share planning
-                let len = plan.shared.len() + plan.fresh;
-                donors.push((req.prompt.clone(), vec![RESERVED_PAGE; len]));
-            }
-        }
-        admissible
-    }
-
     /// Drive one tick; returns any responses completed during it.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.width - active as usize;
-        let admissible = self.admissible_now(queued as usize, empty);
+        // requests the scheduler may admit THIS tick: the FIFO prefix
+        // whose page commitments fit (the manager simulates the same
+        // plan the refill gate commits, eviction-aware for the head)
+        let admissible = self.kv.admissible_now(
+            self.batcher
+                .queued_requests()
+                .map(|r| (r.prompt.as_slice(), r.params.max_new_tokens)),
+            queued as usize,
+            empty,
+        );
         if admissible == 0 && queued > 0 && empty > 0 {
             // page starvation: the queue must wait for retirements
             self.metrics.page_stalls += 1;
@@ -738,7 +624,7 @@ impl Engine {
         // real head-of-line wait so the starvation bound can fire
         let oldest = self.batcher.oldest_wait();
         let action = self.scheduler.decide(admissible, empty, active as usize, oldest);
-        match action {
+        let out = match action {
             Action::Prefill => self.do_prefill(),
             Action::Decode => self.do_decode(),
             Action::Idle => {
@@ -751,7 +637,9 @@ impl Engine {
                 );
                 Ok(Vec::new())
             }
-        }
+        };
+        self.sync_kv_metrics();
+        out
     }
 
     /// Run ticks until every submitted request finished.
@@ -763,64 +651,36 @@ impl Engine {
         Ok(out)
     }
 
+    /// Mirror the cache manager's monotonic policy counters into the
+    /// public [`EngineMetrics`] snapshot.  Deliberately flat-field
+    /// (rather than embedding [`crate::coordinator::KvMetrics`]): the
+    /// `metrics.page_grows`-style accessors are load-bearing public API
+    /// pinned by the equivalence tests and the serve reports.
+    fn sync_kv_metrics(&mut self) {
+        let m = self.kv.metrics().clone();
+        self.metrics.page_grows = m.page_grows;
+        self.metrics.shared_pages = m.shared_pages;
+        self.metrics.cow_copies = m.cow_copies;
+        self.metrics.prefix_hits = m.prefix_hits;
+        self.metrics.prefix_hit_tokens = m.prefix_hit_tokens;
+        self.metrics.evictions = m.evictions;
+    }
+
     fn do_prefill(&mut self) -> Result<Vec<Response>> {
-        // paged admission gate: a request enters a slot only if its
-        // whole page commitment — fresh pages now plus the reserved
-        // growth budget, net of shareable prefix pages — fits the
-        // unreserved pool RIGHT NOW (reclaimed at retirement); the
-        // first refusal stops the refill so FIFO order survives page
-        // starvation
-        let donors = match &self.paged {
-            Some(ps) => self.sharing_donors(ps),
-            None => Vec::new(),
-        };
-        let filled = match &mut self.paged {
-            None => self.batcher.refill(),
-            Some(ps) => {
-                let max_len = self.max_len;
-                let page_size = ps.allocator.page_size();
-                let lazy = self.cfg.lazy_growth;
-                let share = self.cfg.share_prefixes;
-                let mut donors = donors;
-                let allocator = &mut ps.allocator;
-                // (table, shared count, growth reservation, cow event)
-                let mut granted: Vec<(Vec<u32>, usize, usize, bool)> = Vec::new();
-                let filled = self.batcher.refill_with(|req| {
-                    let plan = plan_paged_admission(
-                        &req.prompt,
-                        req.params.max_new_tokens,
-                        max_len,
-                        page_size,
-                        lazy,
-                        &donors,
-                    );
-                    let Some(fresh) = allocator.admit(plan.fresh, plan.reserve) else {
-                        return false;
-                    };
-                    let n_share = plan.shared.len();
-                    for &p in &plan.shared {
-                        allocator.retain(p);
-                    }
-                    let mut table = plan.shared;
-                    table.extend(fresh);
-                    if share {
-                        // slots admitted this wave donate to later ones
-                        donors.push((req.prompt.clone(), table.clone()));
-                    }
-                    granted.push((table, n_share, plan.reserve, plan.cow_copy));
-                    true
-                });
-                debug_assert_eq!(filled.len(), granted.len());
-                for (&slot, (table, n_share, reserve, cow)) in filled.iter().zip(granted) {
-                    ps.tables[slot] = table;
-                    ps.reserved[slot] = reserve;
-                    ps.shared[slot] = n_share;
-                    self.metrics.shared_pages += n_share as u64;
-                    self.metrics.cow_copies += cow as u64;
-                }
-                filled
-            }
-        };
+        // admission gate: a request enters a slot only if the manager
+        // commits its whole page plan — fresh pages plus the reserved
+        // growth budget, net of prefix pages shared from donors or the
+        // retained pool (LRU-evicting parked pages when that is the
+        // only way to fit).  The first refusal stops the refill so FIFO
+        // order survives page starvation.
+        let kv = &mut self.kv;
+        let filled = self
+            .batcher
+            .refill_with(|req| kv.admit(&req.prompt, req.params.max_new_tokens));
+        for &slot in &filled {
+            self.kv.install(slot);
+        }
+        debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
         if filled.is_empty() {
             // page-starved (or raced-empty) prefill: fall through to a
             // decode step so in-flight sequences retire and free pages —
@@ -866,7 +726,7 @@ impl Engine {
 
         // merge ONLY the refilled slots' rows into the live KV state —
         // dense row splice, or page-table scatter on the paged layout
-        match self.layout {
+        match self.kv.layout() {
             KvLayout::Dense => self.splice_cache_rows(kc_new, vc_new, &filled)?,
             KvLayout::Paged => self.append_pages(kc_new, vc_new, &filled)?,
         }
@@ -894,40 +754,17 @@ impl Engine {
         // lazy page growth: this tick appends each active slot's KV row
         // at `pos`; any slot whose `pos` crossed into an unallocated
         // page converts one admission-time reservation into a real page
-        // first.  The ledger guarantees the conversion succeeds — a
-        // failure here is a page-accounting bug, not backpressure.
-        if let Some(ps) = &mut self.paged {
-            let page_size = ps.allocator.page_size();
-            for &i in &decoding {
-                let needed = self.pos[i] as usize / page_size + 1;
-                while ps.tables[i].len() < needed {
-                    anyhow::ensure!(
-                        ps.reserved[i] > 0,
-                        "slot {i} needs page {} of {} with no reservation left \
-                         (pos {}) — lazy-growth accounting bug",
-                        ps.tables[i].len(),
-                        needed,
-                        self.pos[i]
-                    );
-                    let page = ps.allocator.grow_reserved();
-                    ps.reserved[i] -= 1;
-                    ps.tables[i].push(page);
-                    self.metrics.page_grows += 1;
-                }
-                // CoW invariant: the page receiving this tick's appended
-                // row is past the shared prefix and private to this slot
-                debug_assert!(
-                    needed - 1 >= ps.shared[i],
-                    "decode write would land in a shared prefix page"
-                );
-                debug_assert_eq!(ps.allocator.refcount(ps.tables[i][needed - 1]), 1);
-            }
+        // first (the ledger guarantees success — a failure here is a
+        // page-accounting bug, not backpressure)
+        for &i in &decoding {
+            self.kv.grow_to(i, self.pos[i] as usize)?;
         }
         self.metrics.decode_steps += 1;
         // steady-state host traffic: two (B,) i32 vectors (plus the
         // (B, pages_per_slot) block table when paged) up, one (B, V)
-        // logits matrix down — independent of the KV-cache size
-        let artifact = match self.layout {
+        // logits matrix (plus the (E,) expert counts when exposed)
+        // down — independent of the KV-cache size
+        let artifact = match self.kv.layout() {
             KvLayout::Dense => self.cfg.decode_artifact.clone(),
             KvLayout::Paged => self.cfg.paged_decode_artifact.clone(),
         };
@@ -938,11 +775,11 @@ impl Engine {
             &artifact,
             &Tensor::from_i32(&[self.width], self.last_token.clone())?,
         )?;
-        let table_b = match self.layout {
+        let table_b = match self.kv.layout() {
             KvLayout::Dense => None,
             KvLayout::Paged => Some(
                 self.runtime
-                    .upload_tensor_for(&artifact, &self.block_table_tensor()?)?,
+                    .upload_tensor_for(&artifact, &self.kv.block_table(false)?)?,
             ),
         };
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(5 + self.params.len());
@@ -956,15 +793,40 @@ impl Engine {
         for p in &self.params {
             args.push(p);
         }
-        // logits come down once; the cache buffers chain straight into
-        // the next tick without ever being materialized on host
+        // logits (and expert counts, under telemetry) come down once;
+        // the cache buffers chain straight into the next tick without
+        // ever being materialized on host
+        let telemetry = self.cfg.expert_telemetry;
+        let host_idx: Vec<usize> = match self.expert_counts_output {
+            Some(i) if telemetry => vec![0, i],
+            _ => vec![0],
+        };
         let mut outs = self
             .runtime
-            .run_chained(&artifact, &args, &[0])
+            .run_chained(&artifact, &args, &host_idx)
             .context("serve decode step")?;
+        // the counts output is popped whenever the artifact DECLARES it
+        // (run_chained returns one entry per output, downloaded or
+        // not); without telemetry it is an undownloaded device buffer,
+        // dropped here so the cache pops below stay aligned
+        let counts = match self.expert_counts_output {
+            Some(_) => Some(pop_out(&mut outs, &artifact)?),
+            None => None,
+        };
         self.v_cache = pop_out(&mut outs, &artifact)?.into_buffer()?;
         self.k_cache = pop_out(&mut outs, &artifact)?.into_buffer()?;
         let logits = pop_out(&mut outs, &artifact)?.into_host()?;
+        if telemetry {
+            if let Some(counts) = counts {
+                // per-expert routed-token counts for the WHOLE static
+                // batch this tick (inactive lanes route too — that
+                // padding is exactly the waste the telemetry exposes)
+                let t = counts.into_host()?;
+                let c: Vec<u64> =
+                    t.as_i32()?.iter().map(|&x| x.max(0) as u64).collect();
+                self.expert_stats.record_counts(&c);
+            }
+        }
 
         let mut responses = Vec::new();
         for i in decoding {
@@ -981,44 +843,15 @@ impl Engine {
 
     fn maybe_finish(&mut self, slot: usize, tok: i32) -> Option<Response> {
         let resp = self.batcher.push_token(slot, tok)?;
-        // retirement releases the slot's pages (shared prefix pages only
-        // actually free with their last reference) and returns its
-        // unused growth budget to the unreserved pool (copy-free reuse:
-        // stale page contents are masked exactly like the dense
-        // layout's stale rows)
-        if let Some(ps) = &mut self.paged {
-            ps.reclaim_slot(slot);
-        }
+        // retirement releases the slot's pages — prompt-prefix pages
+        // park in the retained pool (shared pages only actually free
+        // with their last reference) — and returns its unused growth
+        // budget to the unreserved pool
+        self.kv.release(slot, true);
         self.metrics.completed += 1;
         self.metrics.ttft.record(resp.ttft);
         self.metrics.latency.record(resp.latency);
         Some(resp)
-    }
-
-    /// The `(B, pages_per_slot)` i32 block table for the current slot
-    /// assignments; unallocated tail entries point at the reserved
-    /// garbage page.  With `for_append`, each slot's leading shared
-    /// prefix entries are ALSO routed to the garbage page: `page_append`
-    /// must never rewrite a donor's live pages (the sharer's prefill
-    /// rows for those positions are bit-identical anyway — skipping the
-    /// write is what makes prefix sharing copy-free), while the decode
-    /// table keeps the real ids so gathers see the shared prefix.
-    fn block_table(&self, for_append: bool) -> Result<Tensor> {
-        let ps = self.paged.as_ref().expect("paged layout");
-        let pps = ps.pages_per_slot;
-        let mut bt = vec![RESERVED_PAGE as i32; self.width * pps];
-        for (slot, pages) in ps.tables.iter().enumerate() {
-            let skip = if for_append { ps.shared[slot] } else { 0 };
-            for (j, &p) in pages.iter().enumerate().skip(skip) {
-                bt[slot * pps + j] = p as i32;
-            }
-        }
-        Tensor::from_i32(&[self.width, pps], bt)
-    }
-
-    /// Decode-side block table (real page ids, sentinel tail).
-    fn block_table_tensor(&self) -> Result<Tensor> {
-        self.block_table(false)
     }
 
     /// Sample one batch row with the slot's own [`SamplingParams`] and
@@ -1100,10 +933,11 @@ impl Engine {
             .runtime
             .upload_tensor_for(&name, &Tensor::from_i32(&[self.width], mask)?)?;
         // append-side table: shared prefix entries → garbage page, so a
-        // sharer never rewrites its donor's live pages
+        // sharer never rewrites its donor's (or the retained pool's)
+        // live pages
         let table_b = self
             .runtime
-            .upload_tensor_for(&name, &self.block_table(true)?)?;
+            .upload_tensor_for(&name, &self.kv.block_table(true)?)?;
         let args: Vec<&xla::PjRtBuffer> =
             vec![&self.k_cache, &self.v_cache, &kc_new, &vc_new, &table_b, &mask_b];
         let mut outs = self
@@ -1138,30 +972,31 @@ impl Engine {
 
     /// Cancel one request mid-flight (queued or decoding): its slot's
     /// pages and growth reservations are reclaimed exactly as on normal
-    /// retirement, so allocator conservation survives cancellations.
-    /// Returns the aborted [`Response`] (partial tokens included), or
-    /// `None` if the id is unknown or already finished.
+    /// retirement — except nothing parks in the retained pool, since an
+    /// aborted prefill may never have written its pages.  Returns the
+    /// aborted [`Response`] (partial tokens included), or `None` if the
+    /// id is unknown or already finished.
     pub fn cancel(&mut self, id: RequestId) -> Option<Response> {
         let (resp, slot) = self.batcher.abort(id)?;
-        if let (Some(ps), Some(slot)) = (&mut self.paged, slot) {
-            ps.reclaim_slot(slot);
+        if let Some(slot) = slot {
+            self.kv.release(slot, false);
         }
         self.metrics.aborted += 1;
+        self.sync_kv_metrics();
         Some(resp)
     }
 
     /// Abort every queued and in-flight request (drain/shutdown, or the
     /// caller's recovery path after a failed [`Engine::tick`]): all
     /// pages and growth reservations return to the pool, refcounted
-    /// prefix pages included.
+    /// prefix pages included (nothing parks — see [`Engine::cancel`]).
     pub fn abort_all(&mut self) -> Vec<Response> {
         let out = self.batcher.abort_all();
-        if let Some(ps) = &mut self.paged {
-            for slot in 0..ps.tables.len() {
-                ps.reclaim_slot(slot);
-            }
+        for slot in 0..self.width {
+            self.kv.release(slot, false);
         }
         self.metrics.aborted += out.len() as u64;
+        self.sync_kv_metrics();
         out
     }
 }
@@ -1175,43 +1010,6 @@ fn pop_out<T>(outs: &mut Vec<T>, artifact: &str) -> Result<T> {
     outs.pop().with_context(|| {
         format!("artifact '{artifact}' returned fewer outputs than its manifest declares")
     })
-}
-
-/// Sample a token id from one logits row per `params`:
-/// * `temperature == 0` — greedy argmax (the serving default), fully
-///   deterministic and rng-free;
-/// * otherwise — softmax at `temperature` over the `top_k` highest
-///   logits (ties broken toward the lower index), drawn from `rng`.
-pub fn sample_logits(row: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
-    debug_assert!(!row.is_empty());
-    if params.temperature <= 0.0 {
-        let mut best = 0usize;
-        let mut bestv = f32::NEG_INFINITY;
-        for (i, &x) in row.iter().enumerate() {
-            if x > bestv {
-                bestv = x;
-                best = i;
-            }
-        }
-        return best as i32;
-    }
-    // candidate set: indices sorted by logit desc (stable on ties);
-    // O(V log V) selection is fine at serving vocab sizes
-    let mut idx: Vec<usize> = (0..row.len()).collect();
-    idx.sort_by(|&a, &b| {
-        row[b]
-            .partial_cmp(&row[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    let k = params.top_k.unwrap_or(row.len()).clamp(1, row.len());
-    idx.truncate(k);
-    let max = row[idx[0]];
-    let weights: Vec<f32> = idx
-        .iter()
-        .map(|&i| ((row[i] - max) / params.temperature).exp())
-        .collect();
-    idx[rng.categorical(&weights)] as i32
 }
 
 /// Copy batch-rows `slots` from `src` into `dst`; both (L, B, T, nh, dh).
@@ -1281,187 +1079,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn pages_needed_covers_lifetime_and_clamps() {
-        let ps = PagedState::new(PageAllocator::new(41, 16), 10, 0);
-        assert_eq!(ps.pages_needed(6, 8, 160), 1, "14 rows fit one page");
-        assert_eq!(ps.pages_needed(30, 40, 160), 5, "70 rows need 5 pages");
-        assert_eq!(ps.pages_needed(100, 500, 160), 10, "clamped to max_len");
-        assert_eq!(ps.pages_needed(0, 4, 160), 1, "empty prompt still holds a row");
-    }
-
-    #[test]
-    fn oversized_requests_are_never_admissible() {
-        // regression (satellite): a pool smaller than one slot's span
-        // must reject requests whose worst case exceeds it at submit —
-        // queued, they would head-block the FIFO forever
-        let ps = PagedState::new(PageAllocator::new(3, 16), 10, 0); // 2 usable
-        assert!(ps.ever_admissible(6, 8, 160), "1-page request fits");
-        assert!(ps.ever_admissible(16, 16, 160), "2-page request fits exactly");
-        assert!(!ps.ever_admissible(30, 40, 160), "5-page worst case never fits");
-        // the shipped geometry (40 usable, 10-page span) can admit any
-        // single request — the guard exists for smaller provisioning
-        let shipped = PagedState::new(PageAllocator::new(41, 16), 10, 0);
-        assert!(shipped.ever_admissible(100, 10_000, 160), "clamped to the span");
-    }
-
-    // ---- admission planner: lazy growth + copy-on-write sharing ----
-
-    const PAGE: usize = 16;
-    const MAX: usize = 160;
-
-    fn plan(
-        prompt: &[i32], max_new: usize, lazy: bool, donors: &[(Vec<i32>, Vec<u32>)],
-    ) -> AdmitPlan {
-        plan_paged_admission(prompt, max_new, MAX, PAGE, lazy, donors)
-    }
-
-    #[test]
-    fn eager_plan_is_full_worst_case_up_front() {
-        let p = plan(&[1; 20], 40, false, &[]);
-        assert_eq!(p.fresh, 4, "ceil(60/16) pages allocated at admission");
-        assert_eq!(p.reserve, 0, "eager reserves nothing");
-        assert!(p.shared.is_empty());
-        assert!(!p.cow_copy);
-    }
-
-    #[test]
-    fn lazy_plan_grants_prompt_pages_plus_one_and_reserves_the_rest() {
-        // prompt 20 → 2 pages; +1 decode page; worst case ceil(60/16)=4
-        let p = plan(&[1; 20], 40, true, &[]);
-        assert_eq!(p.fresh, 3);
-        assert_eq!(p.reserve, 1);
-        // total commitment always equals the worst case
-        assert_eq!(p.fresh + p.reserve, plan(&[1; 20], 40, false, &[]).fresh);
-    }
-
-    #[test]
-    fn lazy_plan_caps_the_decode_page_at_the_worst_case() {
-        // prompt 10, budget 3: 13 rows fit the single prompt page — no
-        // extra decode page, nothing to reserve
-        let p = plan(&[1; 10], 3, true, &[]);
-        assert_eq!((p.fresh, p.reserve), (1, 0));
-        // empty prompt still occupies one row
-        let p = plan(&[], 4, true, &[]);
-        assert_eq!((p.fresh, p.reserve), (1, 0));
-    }
-
-    #[test]
-    fn sharing_takes_only_full_common_prefix_pages() {
-        let donor_prompt: Vec<i32> = (0..30).collect();
-        let donor_table: Vec<u32> = vec![7, 8, 9]; // 2 prompt pages + decode page
-        let donors = vec![(donor_prompt.clone(), donor_table)];
-        // identical 30-token prompt: common=30 → 1 full page shared (the
-        // page holding rows 16..29 is the boundary page — it will take
-        // this slot's first decode writes, so it is copied, not shared
-        let p = plan(&donor_prompt, 40, true, &donors);
-        assert_eq!(p.shared, vec![7], "one full prefix page shared");
-        assert!(p.cow_copy, "boundary page with matching rows was privatized");
-        // commitment shrinks by exactly the shared pages
-        let solo = plan(&donor_prompt, 40, true, &[]);
-        assert_eq!(p.fresh + p.reserve + 1, solo.fresh + solo.reserve);
-        // a 32-token twin shares both full pages and cow-copies nothing
-        let two_pages: Vec<i32> = (0..32).collect();
-        let donors = vec![(two_pages.clone(), vec![4, 5, 6])];
-        let p = plan(&two_pages, 8, true, &donors);
-        assert_eq!(p.shared, vec![4, 5]);
-        assert!(!p.cow_copy, "prefix ends exactly on a page boundary");
-    }
-
-    #[test]
-    fn sharing_never_reaches_a_page_either_side_could_write() {
-        // donor prompt 20 (partial page 1), candidate identical: only
-        // page 0 is fully inside both prompts
-        let donor: Vec<i32> = (100..120).collect();
-        let donors = vec![(donor.clone(), vec![3, 4, 5])];
-        let p = plan(&donor, 16, true, &donors);
-        assert_eq!(p.shared, vec![3], "partial pages are never shared");
-        // unrelated prompt shares nothing
-        let q = plan(&[9; 20], 16, true, &donors);
-        assert!(q.shared.is_empty());
-        assert!(!q.cow_copy);
-        // sub-page common prefix: nothing shareable, and with zero
-        // shared pages there is nothing to copy either — an ordinary
-        // private admission, not a CoW event (metric stays meaningful)
-        let mut near = donor.clone();
-        near[10] = -1;
-        let r = plan(&near, 16, true, &donors);
-        assert!(r.shared.is_empty());
-        assert!(!r.cow_copy);
-    }
-
-    #[test]
-    fn best_donor_wins_and_same_wave_donors_are_usable() {
-        let long: Vec<i32> = (0..32).collect();
-        let donors = vec![
-            (long[..16].to_vec(), vec![2, 3]), // 1 shareable page
-            (long.clone(), vec![4, 5, 6]),     // 2 shareable pages
-        ];
-        let p = plan(&long, 8, true, &donors);
-        assert_eq!(p.shared, vec![4, 5], "longest common prefix wins");
-    }
-
-    #[test]
-    fn greedy_sampling_is_argmax_and_deterministic() {
-        let row = [0.1f32, 2.5, -1.0, 2.4];
-        let params = SamplingParams::default(); // temperature 0
-        let mut rng = Rng::new(1);
-        for _ in 0..10 {
-            assert_eq!(sample_logits(&row, &params, &mut rng), 1);
-        }
-    }
-
-    #[test]
-    fn temperature_with_top_k_1_is_argmax() {
-        let row = [0.3f32, -0.2, 4.0, 1.0];
-        let params = SamplingParams {
-            temperature: 1.3,
-            top_k: Some(1),
-            ..Default::default()
-        };
-        let mut rng = Rng::new(7);
-        for _ in 0..10 {
-            assert_eq!(sample_logits(&row, &params, &mut rng), 2);
-        }
-    }
-
-    #[test]
-    fn top_k_restricts_support() {
-        // flat logits: top_k=2 keeps the two lowest indices (stable ties)
-        let row = [1.0f32; 6];
-        let params = SamplingParams {
-            temperature: 1.0,
-            top_k: Some(2),
-            ..Default::default()
-        };
-        let mut rng = Rng::new(11);
-        let mut seen = [0usize; 6];
-        for _ in 0..300 {
-            seen[sample_logits(&row, &params, &mut rng) as usize] += 1;
-        }
-        assert!(seen[0] > 0 && seen[1] > 0, "{seen:?}");
-        assert!(seen[2..].iter().all(|&c| c == 0), "{seen:?}");
-    }
-
-    #[test]
-    fn sampling_is_reproducible_per_seed() {
-        let row: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
-        let params = SamplingParams { temperature: 0.8, ..Default::default() };
-        let draw = |seed: u64| -> Vec<i32> {
-            let mut rng = Rng::new(seed);
-            (0..20).map(|_| sample_logits(&row, &params, &mut rng)).collect()
-        };
-        assert_eq!(draw(3), draw(3));
-        assert_ne!(draw(3), draw(4), "different streams should diverge");
-    }
-
-    #[test]
-    fn nonzero_temperature_covers_more_than_argmax() {
-        let row = [1.0f32, 1.1, 0.9, 1.05];
-        let params = SamplingParams { temperature: 2.0, ..Default::default() };
-        let mut rng = Rng::new(5);
-        let distinct: std::collections::HashSet<i32> =
-            (0..200).map(|_| sample_logits(&row, &params, &mut rng)).collect();
-        assert!(distinct.len() > 1, "hot temperature must actually sample");
-    }
 }

@@ -1,0 +1,912 @@
+//! The KV-cache manager: every paged-cache *policy* decision behind one
+//! narrow API, so the engine stays pure batch orchestration.
+//!
+//! PRs 3–4 grew the paged KV cache (block tables, lazy growth,
+//! copy-on-write prefix sharing) inside `coordinator/engine.rs`, tangled
+//! with artifact scheduling.  This module is that policy carved out:
+//!
+//! * [`pagetable`] — the refcounted free-list [`PageAllocator`] with the
+//!   reservation ledger (lazy growth) and the parked-page state
+//!   (retained prefixes);
+//! * [`prefix_pool`](self) *(private)* — the token-indexed LRU pool of
+//!   retained prompt prefixes;
+//! * [`KvCacheManager`] — the façade the engine drives:
+//!   - [`admit`](KvCacheManager::admit) / [`install`](KvCacheManager::install)
+//!     — plan and commit one admission (fresh pages + growth
+//!     reservation, net of prefix pages shared from in-flight donors
+//!     *or* the retained pool), then bind it to a batch slot;
+//!   - [`grow_to`](KvCacheManager::grow_to) — convert reservations into
+//!     real pages as a slot's position crosses page boundaries;
+//!   - [`release`](KvCacheManager::release) — retire or abort a slot:
+//!     reservations return to the pool, and on clean retirement the
+//!     pages fully covered by the prompt are **parked** in the retained
+//!     prefix pool instead of freed.
+//!
+//! **Retention lifecycle.**  A hot system prompt's KV pages survive idle
+//! gaps: retirement parks them (pool adopts the slot's reference),
+//! admission probes the pool exactly like it probes in-flight donors
+//! and re-shares hits copy-on-write through the PR-4 refcount
+//! machinery, and a lazy LRU evictor reclaims parked pages only when an
+//! admission would otherwise starve.  The allocator-level partition
+//! `free + outstanding + retained == usable` and the no-deadlock
+//! guarantee `free >= reserved` hold at every step
+//! (`prop_prefix_pool_conservation`), and a page with a live
+//! block-table reference is never evicted.
+//!
+//! The manager is pure bookkeeping — no device buffers, no runtime
+//! calls — so the whole policy is unit- and property-testable without
+//! artifacts, and the Python protocol twin
+//! (`python/tests/test_paged_serving_protocol.py`) mirrors it
+//! operation for operation.
+
+pub mod pagetable;
+mod prefix_pool;
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+use pagetable::{PageAllocator, RESERVED_PAGE};
+use prefix_pool::PrefixPool;
+
+/// Which on-device layout carries the live KV state (see the engine's
+/// module docs for the buffer shapes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Dense per-slot caches `(L, B, Tmax, nh, dh)`, padded to the
+    /// worst-case `max_len` — the compatibility/equivalence baseline.
+    Dense,
+    /// Shared page pools `(L, num_pages, page_size, nh, dh)` addressed
+    /// through per-slot block tables; memory tracks actual contexts.
+    Paged,
+}
+
+/// Cache-policy knobs (the engine copies these out of `EngineConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Lazy page growth: admit with prompt pages + one decode page and
+    /// grow from the reservation ledger as `pos` advances.  `false`
+    /// restores eager worst-case-at-admission allocation (PR 3).
+    pub lazy_growth: bool,
+    /// Copy-on-write prompt-prefix sharing across in-flight block
+    /// tables (PR 4).
+    pub share_prefixes: bool,
+    /// Retained prefix pool: park prompt-prefix pages at retirement and
+    /// serve later admissions from them (LRU-evicted under pressure).
+    /// Requires `share_prefixes`; `false` restores the PR-4 baseline
+    /// where prefix pages die with their last block-table reference.
+    pub prefix_cache: bool,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig { lazy_growth: true, share_prefixes: true, prefix_cache: true }
+    }
+}
+
+/// Monotonic counters of the manager's policy machinery (mirrored into
+/// `EngineMetrics` by the engine after every tick).
+#[derive(Clone, Debug, Default)]
+pub struct KvMetrics {
+    /// Pages allocated lazily mid-flight, one per page-boundary
+    /// crossing, out of the slot's admission-time reservation.
+    pub page_grows: u64,
+    /// Block-table entries admitted as references to a donor's (or the
+    /// retained pool's) prompt-prefix pages instead of fresh
+    /// allocations.
+    pub shared_pages: u64,
+    /// Copy-on-write events: admissions whose common prefix ran into a
+    /// page the appended decode row could write, so that page was made
+    /// private and the slot's own `page_append` performed the copy.
+    pub cow_copies: u64,
+    /// Admissions that re-shared at least one page from the retained
+    /// prefix pool.
+    pub prefix_hits: u64,
+    /// Prompt tokens whose KV was served from the retained pool instead
+    /// of being recomputed and re-stored (full pages only).
+    pub prefix_hit_tokens: u64,
+    /// Retained pages reclaimed by the LRU evictor because an admission
+    /// would otherwise have starved.
+    pub evictions: u64,
+}
+
+/// One planned admission: how much of the worst-case page need
+/// (`ceil(min(prompt + max_new, max_len) / page_size)`) is shared from
+/// a donor or the retained pool, allocated now, or reserved for lazy
+/// growth.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct AdmitPlan {
+    /// Donor prefix pages the new block table will reference
+    /// (refcounted; always fully covered by the common token prefix of
+    /// both prompts, so neither side ever writes them).
+    shared: Vec<u32>,
+    /// Pages to allocate fresh at admission.
+    fresh: usize,
+    /// Worst-case growth budget to reserve (0 under eager admission).
+    reserve: usize,
+    /// The common prefix extended into a page the appended decode row
+    /// could write: that page was made private instead of shared, and
+    /// the slot's own `page_append` write performs the copy (the
+    /// copy-on-write event).
+    cow_copy: bool,
+    /// `Some((entry, pages))` when the winning donor was a retained
+    /// prefix-pool entry rather than an in-flight slot.
+    pool_hit: Option<(usize, usize)>,
+}
+
+/// An admission committed in the allocator but not yet bound to a batch
+/// slot (the refill loop learns slot indices only after its gate ran).
+#[derive(Clone, Debug)]
+struct Admission {
+    table: Vec<u32>,
+    shared: usize,
+    reserve: usize,
+    prompt: Vec<i32>,
+}
+
+/// Paged-layout policy state (block tables + page ownership + the
+/// retained prefix pool).
+#[derive(Debug)]
+struct PagedBook {
+    /// Free-list over the pool's page ids (page 0 reserved).
+    allocator: PageAllocator,
+    /// Retained prefix index (LRU-evicted parked pages).
+    pool: PrefixPool,
+    /// Block-table width (pages addressable per slot).
+    pages_per_slot: usize,
+    /// Per-slot page ids, in position order; empty for free slots.  The
+    /// leading `shared[slot]` entries are references to a donor's or
+    /// the pool's prefix pages (refcounted, never written by this
+    /// slot).
+    tables: Vec<Vec<u32>>,
+    /// Per-slot admitted prompt (sharing-donor lookup + parking key).
+    prompts: Vec<Vec<i32>>,
+    /// Per-slot remaining growth budget, mirrored in the allocator's
+    /// reservation ledger.
+    reserved: Vec<usize>,
+    /// Per-slot count of leading block-table entries shared from a
+    /// donor (`page_append` routes these chunks to the garbage page).
+    shared: Vec<usize>,
+    /// Admissions committed by [`KvCacheManager::admit`] awaiting their
+    /// [`KvCacheManager::install`] slot binding, in FIFO order.
+    pending: VecDeque<Admission>,
+}
+
+/// The KV-cache policy façade (see the module docs).
+#[derive(Debug)]
+pub struct KvCacheManager {
+    /// `None` on the dense layout — every method degrades to a no-op /
+    /// always-admit there, so the engine drives one code path.
+    book: Option<PagedBook>,
+    cfg: KvCacheConfig,
+    width: usize,
+    max_len: usize,
+    metrics: KvMetrics,
+}
+
+impl KvCacheManager {
+    /// Manager for the dense layout: no page accounting, every request
+    /// admissible, every policy call a no-op.
+    pub fn dense(width: usize, max_len: usize, cfg: KvCacheConfig) -> Self {
+        KvCacheManager { book: None, cfg, width, max_len, metrics: KvMetrics::default() }
+    }
+
+    /// Manager for the paged layout with the given pool geometry
+    /// (validated upstream against the artifact manifest).
+    pub fn paged(
+        width: usize, max_len: usize, num_pages: usize, page_size: usize,
+        pages_per_slot: usize, mut cfg: KvCacheConfig,
+    ) -> Self {
+        if cfg.prefix_cache && !cfg.share_prefixes {
+            // retention rides on the CoW sharing machinery: with
+            // sharing off there is no path that could re-share a
+            // parked page, so normalize instead of silently no-opping
+            log::info!(
+                "kvcache: prefix_cache requires share_prefixes — \
+                 retention disabled (PR-4 baseline semantics)"
+            );
+            cfg.prefix_cache = false;
+        }
+        KvCacheManager {
+            book: Some(PagedBook {
+                allocator: PageAllocator::new(num_pages, page_size),
+                pool: PrefixPool::default(),
+                pages_per_slot,
+                tables: vec![Vec::new(); width],
+                prompts: vec![Vec::new(); width],
+                reserved: vec![0; width],
+                shared: vec![0; width],
+                pending: VecDeque::new(),
+            }),
+            cfg,
+            width,
+            max_len,
+            metrics: KvMetrics::default(),
+        }
+    }
+
+    /// Which layout this manager books for.
+    pub fn layout(&self) -> KvLayout {
+        if self.book.is_some() { KvLayout::Paged } else { KvLayout::Dense }
+    }
+
+    /// Policy counters (monotonic; the engine mirrors them into
+    /// `EngineMetrics`).
+    pub fn metrics(&self) -> &KvMetrics {
+        &self.metrics
+    }
+
+    /// Reclaimable / total usable pool pages (`None` on the dense
+    /// layout).  "Reclaimable" counts the free list — growth headroom
+    /// reserved by in-flight slots included — plus the retained prefix
+    /// pool, which the LRU evictor returns on demand; after a full
+    /// drain it equals the usable pool (the conservation check the
+    /// reclamation tests pin).
+    pub fn page_budget(&self) -> Option<(usize, usize)> {
+        self.book.as_ref().map(|b| {
+            (
+                b.allocator.free_pages() + b.allocator.retained_pages(),
+                b.allocator.usable_pages(),
+            )
+        })
+    }
+
+    /// Free pages promised to in-flight slots for lazy growth (`None`
+    /// on the dense layout; 0 after a full drain).
+    pub fn reservations(&self) -> Option<usize> {
+        self.book.as_ref().map(|b| b.allocator.reserved_pages())
+    }
+
+    /// Pages currently parked in the retained prefix pool (`None` on
+    /// the dense layout).
+    pub fn retained_pages(&self) -> Option<usize> {
+        self.book.as_ref().map(|b| b.allocator.retained_pages())
+    }
+
+    /// Rows per pool page (`None` on the dense layout).
+    pub fn page_size(&self) -> Option<usize> {
+        self.book.as_ref().map(|b| b.allocator.page_size())
+    }
+
+    /// Worst-case pages a request needs over its whole lifetime
+    /// (prompt + generation budget, clamped to the context span) — what
+    /// eager admission allocates and lazy admission commits (allocated
+    /// + reserved).  0 on the dense layout.
+    pub fn pages_needed(&self, prompt_len: usize, max_new: usize) -> usize {
+        match &self.book {
+            None => 0,
+            Some(b) => {
+                let rows = (prompt_len.max(1) + max_new).min(self.max_len);
+                b.allocator.pages_for(rows)
+            }
+        }
+    }
+
+    /// Whether a request of this shape could EVER be admitted: its
+    /// worst-case commitment must fit the whole usable pool (neither
+    /// prefix sharing nor retention is assumed — donors are transient
+    /// and retained pages evict).  `false` means reject at submit, or
+    /// the request would head-block the FIFO queue forever.
+    pub fn ever_admissible(&self, prompt_len: usize, max_new: usize) -> bool {
+        match &self.book {
+            None => true,
+            Some(b) => {
+                self.pages_needed(prompt_len, max_new) <= b.allocator.usable_pages()
+            }
+        }
+    }
+
+    /// Plan one admission against the current donors: in-flight slots,
+    /// admissions pending installation, the caller's extra simulated
+    /// donors, and — strictly last, so live donors win ties — the
+    /// retained prefix pool.  Sharing is restricted to pages *fully
+    /// covered* by the common token prefix: any page a decode row could
+    /// land in (positions `>= prompt_len` for either side) must be
+    /// private, because pool pages are only ever written through a
+    /// slot's own block-table entry.  The boundary page the common
+    /// prefix runs into is therefore copied — by the admission's own
+    /// `page_append` write, not a device copy — exactly when it would
+    /// otherwise be written (`cow_copy`).
+    fn plan(
+        &self, prompt: &[i32], max_new: usize, extra: &[(Vec<i32>, Vec<u32>)],
+    ) -> AdmitPlan {
+        let book = self.book.as_ref().expect("plan on the dense layout");
+        let page_size = book.allocator.page_size();
+        let plen = prompt.len().max(1);
+        let worst = (plen + max_new).min(self.max_len).div_ceil(page_size);
+        let prompt_pages = plen.div_ceil(page_size);
+        let mut shared: Vec<u32> = Vec::new();
+        let mut best_common = 0usize;
+        let mut pool_hit = None;
+        if self.cfg.share_prefixes {
+            let live = book
+                .tables
+                .iter()
+                .zip(&book.prompts)
+                .filter(|(t, _)| !t.is_empty())
+                .map(|(t, p)| (p.as_slice(), t.as_slice()));
+            let pend = book
+                .pending
+                .iter()
+                .map(|a| (a.prompt.as_slice(), a.table.as_slice()));
+            let sim = extra.iter().map(|(p, t)| (p.as_slice(), t.as_slice()));
+            // NOTE: this scoring (common tokens → full shared pages →
+            // best by (pages, common)) must stay in lockstep with
+            // `PrefixPool::lookup` — the pool is probed "exactly like a
+            // donor", and a divergence would rank the two differently
+            for (donor_prompt, donor_table) in live.chain(pend).chain(sim) {
+                let common = prompt
+                    .iter()
+                    .zip(donor_prompt.iter())
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                // full pages inside BOTH prompts (common <= both
+                // lengths); a donor's table always covers its own
+                // prompt pages
+                let n = (common / page_size).min(donor_table.len());
+                if n > shared.len() || (n == shared.len() && common > best_common) {
+                    shared = donor_table[..n].to_vec();
+                    best_common = common;
+                }
+            }
+            if self.cfg.prefix_cache {
+                if let Some(hit) = book.pool.lookup(prompt, page_size) {
+                    if hit.pages > shared.len()
+                        || (hit.pages == shared.len() && hit.common > best_common)
+                    {
+                        shared = book.pool.entry_pages(hit.idx)[..hit.pages].to_vec();
+                        best_common = hit.common;
+                        pool_hit = Some((hit.idx, hit.pages));
+                    }
+                }
+            }
+        }
+        let n_share = shared.len();
+        debug_assert!(n_share <= prompt_pages);
+        // lazy: prompt pages + one decode page (capped at the worst
+        // case); eager: the full worst case, nothing reserved
+        let table_len =
+            if self.cfg.lazy_growth { (prompt_pages + 1).min(worst) } else { worst };
+        AdmitPlan {
+            fresh: table_len - n_share,
+            reserve: worst - table_len,
+            // only a real sharing admission can copy-on-write: the
+            // boundary page is "copied" when the common prefix extends
+            // past the last fully-shared page (sub-page overlaps with
+            // no shared pages are ordinary private admissions)
+            cow_copy: n_share > 0 && best_common > n_share * page_size,
+            shared,
+            pool_hit,
+        }
+    }
+
+    /// Requests the scheduler may admit *this* tick: the FIFO prefix of
+    /// `queued` (pairs of prompt + decode budget, `total` long) whose
+    /// page commitments — fresh + reserved, net of shareable prefix
+    /// pages — fit the *unreserved* pool.  The **head** additionally
+    /// counts the LRU-evictable retained pages its admission could
+    /// reclaim, in exactly the arithmetic [`Self::admit`] commits —
+    /// this head-exactness is load-bearing: if the simulation said 0
+    /// where the real gate would admit, a queue whose pages are all
+    /// parked would read as page-starved forever and the engine's
+    /// liveness guard would fire.  Later candidates use the plain
+    /// unreserved budget (conservative: the head's admission already
+    /// guarantees the tick makes progress).
+    pub fn admissible_now<'a, I>(&self, queued: I, total: usize, empty: usize) -> usize
+    where
+        I: Iterator<Item = (&'a [i32], usize)>,
+    {
+        let Some(book) = &self.book else { return total };
+        let limit = total.min(empty);
+        if limit == 0 {
+            return 0; // steady-state decode tick: skip the donor scan
+        }
+        let mut budget = book.allocator.unreserved_pages();
+        let mut extra: Vec<(Vec<i32>, Vec<u32>)> = Vec::new();
+        let mut admissible = 0usize;
+        for (prompt, max_new) in queued.take(limit) {
+            let plan = self.plan(prompt, max_new, &extra);
+            let need = plan.fresh + plan.reserve;
+            let fits = need <= budget
+                || (admissible == 0
+                    && need - budget
+                        <= book.pool.evictable_pages(&book.allocator, plan.pool_hit));
+            if !fits {
+                break;
+            }
+            budget = budget.saturating_sub(need);
+            admissible += 1;
+            if self.cfg.share_prefixes {
+                // page ids are placeholders — only the table LENGTH
+                // matters for later candidates' share planning
+                let len = plan.shared.len() + plan.fresh;
+                extra.push((prompt.to_vec(), vec![RESERVED_PAGE; len]));
+            }
+        }
+        admissible
+    }
+
+    /// Plan and **commit** one admission: allocate its fresh pages,
+    /// reserve its growth budget, take references on its shared prefix
+    /// pages, and queue the built block table for [`Self::install`].
+    /// When the unreserved pool cannot cover the need, the LRU evictor
+    /// reclaims retained pages first (pinning the planned shares so
+    /// they survive) — but only when eviction actually covers the
+    /// deficit: a starved admission must not trash retained prefixes
+    /// it cannot be unblocked by.  `false` means genuine starvation —
+    /// the caller stops its refill so FIFO order holds.  Always `true`
+    /// on the dense layout.
+    pub fn admit(&mut self, prompt: &[i32], max_new: usize) -> bool {
+        if self.book.is_none() {
+            return true;
+        }
+        let plan = self.plan(prompt, max_new, &[]);
+        let book = self.book.as_mut().expect("checked above");
+        let need = plan.fresh + plan.reserve;
+        if need > book.allocator.unreserved_pages() {
+            // pin the planned shares: LRU eviction must not reclaim the
+            // very pages this admission is about to reference (and with
+            // the pins baked into the refcounts, the evictable count is
+            // exactly what evict_pages could reclaim)
+            for &p in &plan.shared {
+                book.allocator.retain(p);
+            }
+            let deficit = need - book.allocator.unreserved_pages();
+            if deficit <= book.pool.evictable_pages(&book.allocator, None) {
+                let evicted = book.pool.evict_pages(deficit, &mut book.allocator);
+                self.metrics.evictions += evicted as u64;
+            }
+            // else: genuine starvation — evicting the reclaimable few
+            // would trash retained prefixes without unblocking anything
+            for &p in &plan.shared {
+                book.allocator.release(p);
+            }
+            if need > book.allocator.unreserved_pages() {
+                return false;
+            }
+        }
+        let fresh = book
+            .allocator
+            .admit(plan.fresh, plan.reserve)
+            .expect("admission was gated on unreserved pages");
+        for &p in &plan.shared {
+            book.allocator.retain(p);
+        }
+        self.metrics.shared_pages += plan.shared.len() as u64;
+        self.metrics.cow_copies += plan.cow_copy as u64;
+        if let Some((_, pages)) = plan.pool_hit {
+            self.metrics.prefix_hits += 1;
+            self.metrics.prefix_hit_tokens +=
+                (pages * book.allocator.page_size()) as u64;
+            // re-look the entry up rather than trusting the planned
+            // index: eviction above may have compacted the index
+            if let Some(hit) = book.pool.lookup(prompt, book.allocator.page_size()) {
+                book.pool.touch(hit.idx);
+            }
+        }
+        let shared_n = plan.shared.len();
+        let mut table = plan.shared;
+        table.extend(fresh);
+        book.pending.push_back(Admission {
+            table,
+            shared: shared_n,
+            reserve: plan.reserve,
+            prompt: prompt.to_vec(),
+        });
+        true
+    }
+
+    /// Bind the oldest committed-but-unbound admission to batch slot
+    /// `slot` (the refill loop learns indices only after its admission
+    /// gate ran; FIFO order matches by construction).  No-op on the
+    /// dense layout.
+    pub fn install(&mut self, slot: usize) {
+        let Some(book) = &mut self.book else { return };
+        let adm = book.pending.pop_front().expect("install without a pending admit");
+        book.tables[slot] = adm.table;
+        book.shared[slot] = adm.shared;
+        book.reserved[slot] = adm.reserve;
+        book.prompts[slot] = adm.prompt;
+    }
+
+    /// Admissions committed but not yet bound to a slot (0 between
+    /// refill waves — asserted by the engine and the property tests).
+    pub fn pending_installs(&self) -> usize {
+        self.book.as_ref().map_or(0, |b| b.pending.len())
+    }
+
+    /// Lazy growth: extend `slot`'s block table until it covers a KV
+    /// write at `pos`, converting one admission-time reservation per
+    /// page.  The ledger guarantees the conversion succeeds — a failure
+    /// here is a page-accounting bug, not backpressure.  No-op on the
+    /// dense layout.
+    pub fn grow_to(&mut self, slot: usize, pos: usize) -> Result<()> {
+        let Some(book) = &mut self.book else { return Ok(()) };
+        let page_size = book.allocator.page_size();
+        let needed = pos / page_size + 1;
+        while book.tables[slot].len() < needed {
+            anyhow::ensure!(
+                book.reserved[slot] > 0,
+                "slot {slot} needs page {} of {needed} with no reservation left \
+                 (pos {pos}) — lazy-growth accounting bug",
+                book.tables[slot].len(),
+            );
+            let page = book.allocator.grow_reserved();
+            book.reserved[slot] -= 1;
+            book.tables[slot].push(page);
+            self.metrics.page_grows += 1;
+        }
+        // CoW invariant: the page receiving this tick's appended row is
+        // past the shared prefix and private to this slot
+        debug_assert!(
+            needed - 1 >= book.shared[slot],
+            "decode write would land in a shared prefix page"
+        );
+        debug_assert_eq!(book.allocator.refcount(book.tables[slot][needed - 1]), 1);
+        Ok(())
+    }
+
+    /// Reclaim one slot (every exit path runs through here): its unused
+    /// growth reservations return to the pool, and its pages either
+    /// **park** — clean retirement with the retained prefix pool on:
+    /// the pages fully covered by the prompt enter the pool, the rest
+    /// free — or release outright (`park: false`, the abort/cancel
+    /// path, where prefill may never have written the pages).  No-op on
+    /// the dense layout.
+    pub fn release(&mut self, slot: usize, park: bool) {
+        let Some(book) = &mut self.book else { return };
+        let pages = std::mem::take(&mut book.tables[slot]);
+        let prompt = std::mem::take(&mut book.prompts[slot]);
+        let r = std::mem::take(&mut book.reserved[slot]);
+        if r > 0 {
+            book.allocator.unreserve(r);
+        }
+        book.shared[slot] = 0;
+        if pages.is_empty() {
+            return;
+        }
+        if park && self.cfg.prefix_cache && self.cfg.share_prefixes {
+            let page_size = book.allocator.page_size();
+            book.pool.park(&prompt, pages, page_size, &mut book.allocator);
+        } else {
+            book.allocator.free(pages);
+        }
+    }
+
+    /// The `(B, pages_per_slot)` i32 block table for the current slot
+    /// assignments; unallocated tail entries point at the reserved
+    /// garbage page.  With `for_append`, each slot's leading shared
+    /// prefix entries are ALSO routed to the garbage page: `page_append`
+    /// must never rewrite a donor's (or the retained pool's) live pages
+    /// — the sharer's prefill rows for those positions are
+    /// bit-identical anyway, and skipping the write is what makes
+    /// prefix sharing copy-free — while the decode table keeps the real
+    /// ids so gathers see the shared prefix.
+    ///
+    /// Panics on the dense layout (the engine never builds a block
+    /// table there).
+    pub fn block_table(&self, for_append: bool) -> Result<Tensor> {
+        let book = self.book.as_ref().expect("block table on the dense layout");
+        let pps = book.pages_per_slot;
+        let mut bt = vec![RESERVED_PAGE as i32; self.width * pps];
+        for (slot, pages) in book.tables.iter().enumerate() {
+            let skip = if for_append { book.shared[slot] } else { 0 };
+            for (j, &p) in pages.iter().enumerate().skip(skip) {
+                bt[slot * pps + j] = p as i32;
+            }
+        }
+        Tensor::from_i32(&[self.width, pps], bt)
+    }
+
+    /// Full cross-structure consistency check (property tests run it
+    /// after every operation): allocator partition + ledger, prefix
+    /// index vs allocator, per-slot reservation sum vs the ledger,
+    /// every table page referenced.  Panics on the first violation.
+    /// No-op on the dense layout.
+    pub fn audit(&self) {
+        let Some(book) = &self.book else { return };
+        book.allocator.audit();
+        book.pool.audit(&book.allocator, book.allocator.page_size());
+        let mut reserved = 0usize;
+        for (slot, table) in book.tables.iter().enumerate() {
+            for &p in table {
+                assert!(
+                    p != RESERVED_PAGE && book.allocator.refcount(p) >= 1,
+                    "slot {slot} references unallocated page {p}"
+                );
+            }
+            assert!(
+                book.shared[slot] <= table.len(),
+                "slot {slot} shared count exceeds its table"
+            );
+            reserved += book.reserved[slot];
+        }
+        for adm in &book.pending {
+            for &p in &adm.table {
+                assert!(book.allocator.refcount(p) >= 1, "pending admission page {p} free");
+            }
+            reserved += adm.reserve;
+        }
+        assert_eq!(
+            reserved,
+            book.allocator.reserved_pages(),
+            "per-slot reservations drifted from the ledger"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: usize = 16;
+    const MAX: usize = 160;
+
+    fn mgr(num_pages: usize, cfg: KvCacheConfig) -> KvCacheManager {
+        KvCacheManager::paged(4, MAX, num_pages, PAGE, MAX / PAGE, cfg)
+    }
+
+    fn plan(
+        prompt: &[i32], max_new: usize, lazy: bool, donors: &[(Vec<i32>, Vec<u32>)],
+    ) -> AdmitPlan {
+        let cfg = KvCacheConfig { lazy_growth: lazy, ..Default::default() };
+        mgr(41, cfg).plan(prompt, max_new, donors)
+    }
+
+    #[test]
+    fn pages_needed_covers_lifetime_and_clamps() {
+        let m = mgr(41, KvCacheConfig::default());
+        assert_eq!(m.pages_needed(6, 8), 1, "14 rows fit one page");
+        assert_eq!(m.pages_needed(30, 40), 5, "70 rows need 5 pages");
+        assert_eq!(m.pages_needed(100, 500), 10, "clamped to max_len");
+        assert_eq!(m.pages_needed(0, 4), 1, "empty prompt still holds a row");
+    }
+
+    #[test]
+    fn oversized_requests_are_never_admissible() {
+        // regression (PR-4 satellite): a pool smaller than one slot's
+        // span must reject requests whose worst case exceeds it at
+        // submit — queued, they would head-block the FIFO forever
+        let m = mgr(3, KvCacheConfig::default()); // 2 usable
+        assert!(m.ever_admissible(6, 8), "1-page request fits");
+        assert!(m.ever_admissible(16, 16), "2-page request fits exactly");
+        assert!(!m.ever_admissible(30, 40), "5-page worst case never fits");
+        // the shipped geometry (40 usable, 10-page span) can admit any
+        // single request — the guard exists for smaller provisioning
+        let shipped = mgr(41, KvCacheConfig::default());
+        assert!(shipped.ever_admissible(100, 10_000), "clamped to the span");
+    }
+
+    // ---- admission planner: lazy growth + copy-on-write sharing ----
+
+    #[test]
+    fn eager_plan_is_full_worst_case_up_front() {
+        let p = plan(&[1; 20], 40, false, &[]);
+        assert_eq!(p.fresh, 4, "ceil(60/16) pages allocated at admission");
+        assert_eq!(p.reserve, 0, "eager reserves nothing");
+        assert!(p.shared.is_empty());
+        assert!(!p.cow_copy);
+    }
+
+    #[test]
+    fn lazy_plan_grants_prompt_pages_plus_one_and_reserves_the_rest() {
+        // prompt 20 → 2 pages; +1 decode page; worst case ceil(60/16)=4
+        let p = plan(&[1; 20], 40, true, &[]);
+        assert_eq!(p.fresh, 3);
+        assert_eq!(p.reserve, 1);
+        // total commitment always equals the worst case
+        assert_eq!(p.fresh + p.reserve, plan(&[1; 20], 40, false, &[]).fresh);
+    }
+
+    #[test]
+    fn lazy_plan_caps_the_decode_page_at_the_worst_case() {
+        // prompt 10, budget 3: 13 rows fit the single prompt page — no
+        // extra decode page, nothing to reserve
+        let p = plan(&[1; 10], 3, true, &[]);
+        assert_eq!((p.fresh, p.reserve), (1, 0));
+        // empty prompt still occupies one row
+        let p = plan(&[], 4, true, &[]);
+        assert_eq!((p.fresh, p.reserve), (1, 0));
+    }
+
+    #[test]
+    fn sharing_takes_only_full_common_prefix_pages() {
+        let donor_prompt: Vec<i32> = (0..30).collect();
+        let donor_table: Vec<u32> = vec![7, 8, 9]; // 2 prompt pages + decode page
+        let donors = vec![(donor_prompt.clone(), donor_table)];
+        // identical 30-token prompt: common=30 → 1 full page shared (the
+        // page holding rows 16..29 is the boundary page — it will take
+        // this slot's first decode writes, so it is copied, not shared
+        let p = plan(&donor_prompt, 40, true, &donors);
+        assert_eq!(p.shared, vec![7], "one full prefix page shared");
+        assert!(p.cow_copy, "boundary page with matching rows was privatized");
+        // commitment shrinks by exactly the shared pages
+        let solo = plan(&donor_prompt, 40, true, &[]);
+        assert_eq!(p.fresh + p.reserve + 1, solo.fresh + solo.reserve);
+        // a 32-token twin shares both full pages and cow-copies nothing
+        let two_pages: Vec<i32> = (0..32).collect();
+        let donors = vec![(two_pages.clone(), vec![4, 5, 6])];
+        let p = plan(&two_pages, 8, true, &donors);
+        assert_eq!(p.shared, vec![4, 5]);
+        assert!(!p.cow_copy, "prefix ends exactly on a page boundary");
+    }
+
+    #[test]
+    fn sharing_never_reaches_a_page_either_side_could_write() {
+        // donor prompt 20 (partial page 1), candidate identical: only
+        // page 0 is fully inside both prompts
+        let donor: Vec<i32> = (100..120).collect();
+        let donors = vec![(donor.clone(), vec![3, 4, 5])];
+        let p = plan(&donor, 16, true, &donors);
+        assert_eq!(p.shared, vec![3], "partial pages are never shared");
+        // unrelated prompt shares nothing
+        let q = plan(&[9; 20], 16, true, &donors);
+        assert!(q.shared.is_empty());
+        assert!(!q.cow_copy);
+        // sub-page common prefix: nothing shareable, and with zero
+        // shared pages there is nothing to copy either — an ordinary
+        // private admission, not a CoW event (metric stays meaningful)
+        let mut near = donor.clone();
+        near[10] = -1;
+        let r = plan(&near, 16, true, &donors);
+        assert!(r.shared.is_empty());
+        assert!(!r.cow_copy);
+    }
+
+    #[test]
+    fn best_donor_wins_and_same_wave_donors_are_usable() {
+        let long: Vec<i32> = (0..32).collect();
+        let donors = vec![
+            (long[..16].to_vec(), vec![2, 3]), // 1 shareable page
+            (long.clone(), vec![4, 5, 6]),     // 2 shareable pages
+        ];
+        let p = plan(&long, 8, true, &donors);
+        assert_eq!(p.shared, vec![4, 5], "longest common prefix wins");
+    }
+
+    // ---- retained prefix pool: park / hit / evict lifecycle ----
+
+    /// Admit + install one request into `slot`, asserting the gate
+    /// opened.
+    fn admit_install(m: &mut KvCacheManager, slot: usize, prompt: &[i32], max_new: usize) {
+        assert!(m.admit(prompt, max_new), "admission starved unexpectedly");
+        m.install(slot);
+        m.audit();
+    }
+
+    #[test]
+    fn full_prefix_hit_admits_with_zero_fresh_prompt_pages() {
+        // THE satellite unit test: a prompt that fully hits the
+        // retained pool allocates only its decode page — zero fresh
+        // prompt pages.
+        let mut m = mgr(41, KvCacheConfig::default());
+        let prompt: Vec<i32> = (0..32).collect(); // exactly 2 pages
+        admit_install(&mut m, 0, &prompt, 8);
+        m.release(0, true); // retirement parks both prompt pages
+        assert_eq!(m.retained_pages(), Some(2));
+        let free_before = m.book.as_ref().unwrap().allocator.free_pages();
+        admit_install(&mut m, 1, &prompt, 8);
+        let free_after = m.book.as_ref().unwrap().allocator.free_pages();
+        assert_eq!(
+            free_before - free_after,
+            1,
+            "only the decode page was allocated fresh"
+        );
+        assert_eq!(m.metrics().prefix_hits, 1);
+        assert_eq!(
+            m.metrics().prefix_hit_tokens as usize,
+            prompt.len(),
+            "the whole prompt was served from the retained pool"
+        );
+        assert_eq!(m.retained_pages(), Some(0), "hit pages are outstanding again");
+        // retirement of the sharer re-parks the same pages, no growth
+        m.release(1, true);
+        assert_eq!(m.retained_pages(), Some(2));
+        m.audit();
+    }
+
+    #[test]
+    fn pool_off_restores_pr4_free_at_retirement() {
+        let cfg = KvCacheConfig { prefix_cache: false, ..Default::default() };
+        let mut m = mgr(41, cfg);
+        let prompt: Vec<i32> = (0..32).collect();
+        admit_install(&mut m, 0, &prompt, 8);
+        m.release(0, true);
+        assert_eq!(m.retained_pages(), Some(0), "nothing parks with the pool off");
+        admit_install(&mut m, 1, &prompt, 8);
+        assert_eq!(m.metrics().prefix_hits, 0);
+        assert_eq!(m.metrics().shared_pages, 0, "no donor, nothing shared");
+    }
+
+    #[test]
+    fn abort_release_never_parks() {
+        let mut m = mgr(41, KvCacheConfig::default());
+        let prompt: Vec<i32> = (0..32).collect();
+        admit_install(&mut m, 0, &prompt, 8);
+        m.release(0, false); // cancel/abort: pages may be unwritten
+        assert_eq!(m.retained_pages(), Some(0));
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable);
+        m.audit();
+    }
+
+    #[test]
+    fn starved_admission_evicts_lru_but_never_live_pages() {
+        // pool: 8 usable pages, span 4 pages (max_len 64, page 16)
+        let mut m = KvCacheManager::paged(4, 64, 9, PAGE, 4, KvCacheConfig::default());
+        // two retired prompts park 2 pages each (cold first, hot second)
+        let cold: Vec<i32> = (0..32).collect();
+        let hot: Vec<i32> = (100..132).collect();
+        admit_install(&mut m, 0, &cold, 4);
+        m.release(0, true);
+        admit_install(&mut m, 0, &hot, 4);
+        m.release(0, true);
+        assert_eq!(m.retained_pages(), Some(4));
+        // a hot-prefix admission re-shares 2 pages (touching the entry)
+        admit_install(&mut m, 1, &hot, 4);
+        assert_eq!(m.metrics().prefix_hits, 1);
+        // unrelated demand (4 pages) vs 3 free: eviction must reclaim
+        // from the LRU cold entry; the hot entry's pages are live
+        // (slot 1 references them) and must survive untouched
+        let stranger: Vec<i32> = (900..948).collect(); // 3 pages + budget
+        assert!(m.admit(&stranger, 16), "eviction must unblock the admission");
+        m.install(2);
+        m.audit();
+        assert!(m.metrics().evictions >= 1, "the cold entry was reclaimed");
+        // the hot pages are still shared by slot 1 (refcounted, unharmed)
+        assert_eq!(m.metrics().shared_pages, 2);
+        // full reclamation after everything retires
+        m.release(1, true);
+        m.release(2, true);
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable);
+        assert_eq!(m.reservations(), Some(0));
+        m.audit();
+    }
+
+    #[test]
+    fn admissible_now_counts_evictable_head_for_liveness() {
+        // every usable page parked, nothing in flight: the head of the
+        // queue MUST read as admissible (via eviction) or the engine
+        // would idle with work queued
+        let mut m = KvCacheManager::paged(2, 64, 9, PAGE, 4, KvCacheConfig::default());
+        for (slot, base) in [(0usize, 0i32), (1, 500)] {
+            let p: Vec<i32> = (base..base + 48).collect(); // 3 pages
+            admit_install(&mut m, slot, &p, 16);
+        }
+        m.release(0, true);
+        m.release(1, true);
+        assert_eq!(m.retained_pages(), Some(6), "prompt pages parked");
+        let stranger: Vec<i32> = (900..948).collect();
+        let queued = [(stranger.as_slice(), 16usize)];
+        let n = m.admissible_now(queued.iter().copied(), 1, 2);
+        assert_eq!(n, 1, "head admissibility must see through the parked pool");
+        // and the real gate agrees (sim/commit head exactness)
+        assert!(m.admit(&stranger, 16));
+        m.install(0);
+        m.audit();
+    }
+
+    #[test]
+    fn conservation_across_a_mixed_wave() {
+        let mut m = mgr(21, KvCacheConfig::default()); // 20 usable
+        let shared_prompt: Vec<i32> = (0..32).collect();
+        admit_install(&mut m, 0, &shared_prompt, 40);
+        admit_install(&mut m, 1, &shared_prompt, 8); // shares 2 pages
+        admit_install(&mut m, 2, &[7; 10], 4);
+        assert!(m.metrics().shared_pages >= 2);
+        // grow slot 0 across a boundary
+        m.grow_to(0, 48).unwrap();
+        assert!(m.metrics().page_grows >= 1);
+        m.audit();
+        // retire in donor-first order; pages park, conservation holds
+        m.release(0, true);
+        m.release(1, true);
+        m.release(2, true);
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable, "free + retained covers the pool");
+        assert_eq!(m.reservations(), Some(0));
+        m.audit();
+    }
+}

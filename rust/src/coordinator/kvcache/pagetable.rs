@@ -30,19 +30,35 @@
 //! position it will decode into — see `coordinator/engine.rs`), so
 //! sharing needs no device-side copy.
 //!
+//! Pages can also be **parked**: the retained prefix pool
+//! (`kvcache::prefix_pool`) adopts a retiring slot's reference on its
+//! prompt-prefix pages via [`PageAllocator::park`] instead of letting
+//! them free, so a hot system prompt's KV survives idle gaps between
+//! requests.  A parked page whose only reference is the pool's is
+//! *retained*: not free (it must not be re-handed out — its contents
+//! are live cache state), not outstanding (no block table references
+//! it), and reclaimable on demand through [`PageAllocator::evict`]
+//! when admission would otherwise starve.  A parked page with live
+//! block-table references on top of the pool's is ordinary outstanding
+//! state and can never be evicted.
+//!
 //! **Page 0 is reserved** as the garbage page: the lowered artifacts
 //! route every inactive slot's scatter traffic and every sentinel
 //! block-table entry there, so it must never be handed out.
 //!
 //! Invariants (unit-tested below, exercised end-to-end by the
-//! integration tests and the Python protocol twin):
-//! * conservation: `free_pages() + outstanding() == usable_pages()`,
-//!   where a page is outstanding iff its refcount is ≥ 1 (shared pages
-//!   count once, however many tables reference them);
+//! integration tests, `prop_prefix_pool_conservation`, and the Python
+//! protocol twin):
+//! * conservation: `free_pages() + outstanding() + retained_pages()
+//!   == usable_pages()` — a page is outstanding iff some block table
+//!   references it (shared pages count once, however many tables), and
+//!   retained iff the prefix pool holds its only reference;
 //! * deadlock freedom: `free_pages() >= reserved_pages()` always, so a
 //!   slot holding reservations can always grow;
 //! * no double-allocation: a free page has refcount 0, an allocated
 //!   page's id appears in no free list;
+//! * no live eviction: [`PageAllocator::evict`] refuses any page with a
+//!   block-table reference (refcount above the pool's own);
 //! * exhaustion is a clean `None` (the caller queues the admission),
 //!   never a partial allocation.
 
@@ -57,6 +73,12 @@ pub struct PageAllocator {
     free: Vec<u32>,
     /// Per-page reference count (0 = free; the reserved page is pinned).
     refs: Vec<u32>,
+    /// Per-page "the retained prefix pool holds one of this page's
+    /// references" flag ([`Self::park`] / [`Self::evict`]).
+    parked: Vec<bool>,
+    /// Parked pages whose ONLY reference is the pool's (the evictable
+    /// retained set; maintained incrementally at every transition).
+    retained: usize,
     /// Pages promised to in-flight slots for future growth; kept on the
     /// free list but excluded from admission ([`Self::unreserved_pages`]).
     reserved: usize,
@@ -76,7 +98,15 @@ impl PageAllocator {
         let free: Vec<u32> = (1..num_pages as u32).collect();
         let mut refs = vec![0u32; num_pages];
         refs[RESERVED_PAGE as usize] = 1; // never handed out
-        PageAllocator { free, refs, reserved: 0, num_pages, page_size }
+        PageAllocator {
+            free,
+            refs,
+            parked: vec![false; num_pages],
+            retained: 0,
+            reserved: 0,
+            num_pages,
+            page_size,
+        }
     }
 
     /// Rows per page.
@@ -112,10 +142,18 @@ impl PageAllocator {
         self.free.len() - self.reserved
     }
 
-    /// Pages currently held by at least one slot (refcount ≥ 1; a page
-    /// shared by several block tables counts once).
+    /// Pages currently held by at least one slot (refcount ≥ 1 beyond
+    /// any prefix-pool reference; a page shared by several block tables
+    /// counts once).  Together with [`Self::free_pages`] and
+    /// [`Self::retained_pages`] this partitions the usable pool.
     pub fn outstanding(&self) -> usize {
-        self.usable_pages() - self.free.len()
+        self.usable_pages() - self.free.len() - self.retained
+    }
+
+    /// Parked pages whose only reference is the retained prefix pool's
+    /// (the evictable retained set).
+    pub fn retained_pages(&self) -> usize {
+        self.retained
     }
 
     /// Reference count of one page (0 = free).
@@ -177,35 +215,105 @@ impl PageAllocator {
     }
 
     /// Add one reference to an allocated page (prompt-prefix sharing:
-    /// the new slot's block table points at the donor's page).
+    /// the new slot's block table points at the donor's — or the
+    /// retained prefix pool's — page).  Re-sharing a retained page
+    /// moves it back to outstanding.
     ///
     /// Panics on the reserved page or a free page — sharing garbage or
     /// an unowned page would corrupt another slot's KV state.
     pub fn retain(&mut self, page: u32) {
         assert_ne!(page, RESERVED_PAGE, "retained the reserved garbage page");
+        let p = page as usize;
         assert!(
-            (page as usize) < self.num_pages && self.refs[page as usize] > 0,
+            p < self.num_pages && self.refs[p] > 0,
             "retain of free page {page}"
         );
-        self.refs[page as usize] += 1;
+        if self.parked[p] && self.refs[p] == 1 {
+            // the pool's ref was the only one: retained -> outstanding
+            self.retained -= 1;
+        }
+        self.refs[p] += 1;
     }
 
     /// Drop one reference to a page; it returns to the free list when
-    /// the last reference goes (slot retirement / abort).
+    /// the last reference goes (slot retirement / abort).  A *parked*
+    /// page never reaches the free list this way: when its last
+    /// block-table reference drops it becomes retained (the pool's own
+    /// reference only leaves through [`Self::evict`]).
     ///
     /// Panics on over-release or on releasing the reserved page — both
     /// are coordinator bugs that would silently corrupt another slot's
     /// KV state if let through.
     pub fn release(&mut self, page: u32) {
         assert_ne!(page, RESERVED_PAGE, "freed the reserved garbage page");
+        let p = page as usize;
         assert!(
-            (page as usize) < self.num_pages && self.refs[page as usize] > 0,
+            p < self.num_pages && self.refs[p] > 0,
             "double free of page {page}"
         );
-        self.refs[page as usize] -= 1;
-        if self.refs[page as usize] == 0 {
+        if self.parked[p] {
+            assert!(
+                self.refs[p] > 1,
+                "released the prefix pool's own reference to page {page} \
+                 (parked pages leave through evict)"
+            );
+            self.refs[p] -= 1;
+            if self.refs[p] == 1 {
+                // last block-table ref gone: outstanding -> retained
+                self.retained += 1;
+            }
+            return;
+        }
+        self.refs[p] -= 1;
+        if self.refs[p] == 0 {
             self.free.push(page);
         }
+    }
+
+    /// The retained prefix pool adopts the caller's reference to an
+    /// allocated page (slot retirement parking its prompt-prefix
+    /// pages): no refcount change — ownership of one existing reference
+    /// transfers to the pool — but the page can no longer free through
+    /// [`Self::release`].
+    ///
+    /// Panics on the reserved page, a free page, or a page the pool
+    /// already owns (two index entries claiming one page would
+    /// double-account eviction).
+    pub fn park(&mut self, page: u32) {
+        assert_ne!(page, RESERVED_PAGE, "parked the reserved garbage page");
+        let p = page as usize;
+        assert!(
+            p < self.num_pages && self.refs[p] > 0,
+            "park of free page {page}"
+        );
+        assert!(!self.parked[p], "page {page} parked twice");
+        self.parked[p] = true;
+        if self.refs[p] == 1 {
+            self.retained += 1;
+        }
+    }
+
+    /// Evict one *retained* page: the prefix pool drops its reference
+    /// and the page returns to the free list (LRU reclamation when
+    /// admission would otherwise starve).
+    ///
+    /// Panics unless the page is parked with the pool's reference as
+    /// its only one — evicting a page a live block table still points
+    /// at would corrupt that slot's KV state mid-flight.
+    pub fn evict(&mut self, page: u32) {
+        let p = page as usize;
+        assert!(
+            p < self.num_pages && self.parked[p],
+            "evict of unparked page {page}"
+        );
+        assert_eq!(
+            self.refs[p], 1,
+            "evict of page {page} with live block-table references"
+        );
+        self.parked[p] = false;
+        self.refs[p] = 0;
+        self.retained -= 1;
+        self.free.push(page);
     }
 
     /// Release a whole block table (slot retirement).  Shared pages only
@@ -214,6 +322,52 @@ impl PageAllocator {
         for p in pages {
             self.release(p);
         }
+    }
+
+    /// Full-scan consistency check, used by the property tests after
+    /// every mutation: the free list holds exactly the refcount-0
+    /// unparked pages (no duplicates), parked pages are referenced, the
+    /// retained counter matches its definition, the free/outstanding/
+    /// retained partition conserves the pool, and the reservation
+    /// ledger never overcommits the free list.  Panics with the first
+    /// violation found.
+    pub fn audit(&self) {
+        assert_eq!(self.refs.len(), self.num_pages);
+        assert_eq!(self.parked.len(), self.num_pages);
+        assert!(self.refs[RESERVED_PAGE as usize] >= 1, "garbage page unpinned");
+        assert!(!self.parked[RESERVED_PAGE as usize], "garbage page parked");
+        let mut on_free = vec![false; self.num_pages];
+        for &p in &self.free {
+            let p = p as usize;
+            assert!(p != RESERVED_PAGE as usize && p < self.num_pages);
+            assert!(!on_free[p], "page {p} on the free list twice");
+            on_free[p] = true;
+            assert_eq!(self.refs[p], 0, "free page {p} has references");
+            assert!(!self.parked[p], "free page {p} is parked");
+        }
+        let mut retained = 0usize;
+        for p in 1..self.num_pages {
+            if self.parked[p] {
+                assert!(self.refs[p] >= 1, "parked page {p} unreferenced");
+                if self.refs[p] == 1 {
+                    retained += 1;
+                }
+            }
+            assert!(
+                on_free[p] || self.refs[p] >= 1,
+                "page {p} neither free nor referenced (leaked)"
+            );
+        }
+        assert_eq!(retained, self.retained, "retained counter drifted");
+        assert_eq!(
+            self.free_pages() + self.outstanding() + self.retained_pages(),
+            self.usable_pages(),
+            "free/outstanding/retained partition broken"
+        );
+        assert!(
+            self.free_pages() >= self.reserved_pages(),
+            "reservation ledger overcommits the free list"
+        );
     }
 }
 
@@ -395,6 +549,82 @@ mod tests {
     fn retain_of_reserved_page_panics() {
         let mut a = PageAllocator::new(4, 4);
         a.retain(RESERVED_PAGE);
+    }
+
+    // ---- parked pages (retained prefix pool) ----
+
+    #[test]
+    fn parked_pages_survive_release_and_free_on_evict() {
+        let mut a = PageAllocator::new(6, 4); // 5 usable
+        let t = a.alloc(3).unwrap();
+        a.park(t[0]); // pool adopts the slot's reference to page t[0]
+        a.park(t[1]);
+        assert_eq!(a.retained_pages(), 2, "only the pool references them");
+        assert_eq!(a.outstanding(), 1, "t[2] is plain slot state");
+        a.audit();
+        // a sharer re-activates a retained page: retained -> outstanding
+        a.retain(t[0]);
+        assert_eq!(a.retained_pages(), 1);
+        assert_eq!(a.outstanding(), 2);
+        // ... and its retirement parks it again (release, not free)
+        a.release(t[0]);
+        assert_eq!(a.retained_pages(), 2);
+        assert_eq!(a.free_pages(), 2, "parked pages never hit the free list");
+        a.audit();
+        // eviction is the only door back to the free list
+        a.evict(t[0]);
+        a.evict(t[1]);
+        a.release(t[2]);
+        assert_eq!(a.free_pages(), 5);
+        assert_eq!(a.retained_pages(), 0);
+        assert_eq!(a.outstanding(), 0);
+        a.audit();
+    }
+
+    #[test]
+    #[should_panic(expected = "live block-table references")]
+    fn evict_of_referenced_page_panics() {
+        let mut a = PageAllocator::new(4, 4);
+        let t = a.alloc(1).unwrap();
+        a.park(t[0]);
+        a.retain(t[0]); // a live block table references it
+        a.evict(t[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "prefix pool's own reference")]
+    fn release_of_pool_reference_panics() {
+        let mut a = PageAllocator::new(4, 4);
+        let t = a.alloc(1).unwrap();
+        a.park(t[0]); // refcount 1 now belongs to the pool
+        a.release(t[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "parked twice")]
+    fn double_park_panics() {
+        let mut a = PageAllocator::new(4, 4);
+        let t = a.alloc(1).unwrap();
+        a.park(t[0]);
+        a.park(t[0]);
+    }
+
+    #[test]
+    fn retained_pages_are_not_allocatable_but_are_conserved() {
+        let mut a = PageAllocator::new(5, 4); // 4 usable
+        let t = a.alloc(2).unwrap();
+        a.park(t[0]);
+        a.park(t[1]);
+        // the 2 free pages allocate; the 2 retained ones do not
+        assert!(a.alloc(3).is_none(), "retained pages must not allocate");
+        let u = a.alloc(2).unwrap();
+        assert!(!u.contains(&t[0]) && !u.contains(&t[1]));
+        a.audit();
+        a.free(u);
+        a.evict(t[0]);
+        a.evict(t[1]);
+        assert_eq!(a.free_pages(), 4);
+        a.audit();
     }
 
     /// The satellite reclamation property at the allocator level: an

@@ -1,0 +1,400 @@
+//! Retained prefix pool: a token-indexed LRU cache of parked
+//! prompt-prefix pages (vLLM-style prefix caching with eviction).
+//!
+//! Copy-on-write prefix sharing (PR 4) only helps while a donor slot is
+//! *in flight*: the moment the last block table referencing a prefix
+//! page retires, the page frees and the next request with the same
+//! system prompt re-stores it.  The pool closes that gap.  At slot
+//! retirement the pages *fully covered* by the prompt (never pages a
+//! decode row was written into) are not freed but **parked**: the pool
+//! adopts the slot's reference ([`PageAllocator::park`]) and indexes
+//! the pages under their exact token prefix.  Admission probes the
+//! index exactly like it probes in-flight donors, so a hit re-shares
+//! the parked pages copy-on-write through the PR-4 refcount machinery —
+//! no new artifact, no device copy, zero prompt-page writes on a full
+//! hit.
+//!
+//! **Eviction** is lazy and LRU: parked pages are reclaimed only when
+//! an admission would otherwise starve ([`PrefixPool::evict_pages`]).
+//! Entries are consumed oldest-stamp first and truncated **from the
+//! tail**, because sharers always reference a *prefix* of an entry:
+//! refcounts are non-increasing along an entry's pages, so the
+//! evictable (refcount-1) pages form a suffix, and truncation keeps the
+//! surviving entry a valid token prefix.  A page with a live
+//! block-table reference is never evicted ([`PageAllocator::evict`]
+//! enforces it).
+//!
+//! Entries own **disjoint** page sets (each parked page belongs to
+//! exactly one entry — `park` enforces it), which keeps eviction
+//! accounting exact.  Parking dedups against the index: a retiring
+//! prefix already covered by an entry releases its (bit-identical)
+//! duplicate pages instead of parking them, and a retiring extension of
+//! an existing entry grows that entry in place.
+
+use super::pagetable::PageAllocator;
+
+/// One parked prompt prefix.  `tokens` always spans the entry's pages
+/// exactly: `tokens.len() == pages.len() * page_size`.
+#[derive(Clone, Debug)]
+struct PrefixEntry {
+    /// The token prefix whose KV the pages hold.
+    tokens: Vec<i32>,
+    /// Pool page ids, in position order (page `i` holds rows
+    /// `i*page_size .. (i+1)*page_size`).
+    pages: Vec<u32>,
+    /// LRU clock value of the last hit/park touching this entry.
+    stamp: u64,
+}
+
+/// Best index match for a prompt (see [`PrefixPool::lookup`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(super) struct PrefixHit {
+    /// Index of the matched entry.
+    pub idx: usize,
+    /// Full pages of the entry covered by the common token prefix.
+    pub pages: usize,
+    /// Common token count (may extend into a partial page).
+    pub common: usize,
+}
+
+/// The token-indexed LRU pool of parked prefix pages.
+#[derive(Debug, Default)]
+pub(super) struct PrefixPool {
+    entries: Vec<PrefixEntry>,
+    clock: u64,
+}
+
+impl PrefixPool {
+    /// Number of live index entries (test observability only — the
+    /// manager consumes the pool through `lookup`/`park`/`evict_pages`).
+    #[cfg(test)]
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Best entry for `prompt`: the one sharing the most full pages of
+    /// common token prefix (ties broken toward more common tokens).
+    /// `None` when no entry shares at least one full page.
+    pub fn lookup(&self, prompt: &[i32], page_size: usize) -> Option<PrefixHit> {
+        let mut best: Option<PrefixHit> = None;
+        for (idx, e) in self.entries.iter().enumerate() {
+            let common = prompt
+                .iter()
+                .zip(e.tokens.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            let pages = (common / page_size).min(e.pages.len());
+            if pages == 0 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => pages > b.pages || (pages == b.pages && common > b.common),
+            };
+            if better {
+                best = Some(PrefixHit { idx, pages, common });
+            }
+        }
+        best
+    }
+
+    /// Bump an entry's LRU stamp (admission hit).
+    pub fn touch(&mut self, idx: usize) {
+        self.clock += 1;
+        self.entries[idx].stamp = self.clock;
+    }
+
+    /// Page ids of one entry (admission shares a prefix of these).
+    pub fn entry_pages(&self, idx: usize) -> &[u32] {
+        &self.entries[idx].pages
+    }
+
+    /// Park a retiring slot's block table: the pages fully covered by
+    /// `prompt` move into the index (the pool adopts this slot's
+    /// references), everything else is released.  Dedups against the
+    /// index: a prefix already covered releases its duplicate pages; a
+    /// clean extension of an existing entry grows that entry in place;
+    /// a divergent overlap is released without parking (entries must
+    /// own disjoint pages).
+    pub fn park(
+        &mut self, prompt: &[i32], pages: Vec<u32>, page_size: usize,
+        alloc: &mut PageAllocator,
+    ) {
+        let n_park = (prompt.len() / page_size).min(pages.len());
+        if n_park == 0 {
+            alloc.free(pages);
+            return;
+        }
+        match self.lookup(prompt, page_size) {
+            Some(hit) if hit.pages >= n_park => {
+                // already covered (bit-identical KV): keep the existing
+                // entry, release our duplicates / shared references
+                self.touch(hit.idx);
+                alloc.free(pages);
+            }
+            Some(hit) if self.entries[hit.idx].pages.len() == hit.pages => {
+                // clean extension: the entry is a strict full-page
+                // prefix of ours — grow it with our private tail pages
+                // (ownership of those references transfers to the pool)
+                let n = hit.pages;
+                for &p in &pages[n..n_park] {
+                    alloc.park(p);
+                }
+                self.clock += 1;
+                let e = &mut self.entries[hit.idx];
+                e.pages.extend_from_slice(&pages[n..n_park]);
+                e.tokens = prompt[..n_park * page_size].to_vec();
+                e.stamp = self.clock;
+                // our references on the entry's own span and on any
+                // decode-tail pages are ordinary releases
+                for &p in pages[..n].iter().chain(&pages[n_park..]) {
+                    alloc.release(p);
+                }
+            }
+            Some(_) => {
+                // divergent overlap (the entry's tokens turn away inside
+                // its own span): parking would make two entries claim
+                // the same leading pages, so skip — correctness first,
+                // the hot-prompt case never lands here
+                alloc.free(pages);
+            }
+            None => {
+                for &p in &pages[..n_park] {
+                    alloc.park(p);
+                }
+                self.clock += 1;
+                self.entries.push(PrefixEntry {
+                    tokens: prompt[..n_park * page_size].to_vec(),
+                    pages: pages[..n_park].to_vec(),
+                    stamp: self.clock,
+                });
+                for &p in &pages[n_park..] {
+                    alloc.release(p);
+                }
+            }
+        }
+    }
+
+    /// Evictable pages right now: per entry, the tail run of pages whose
+    /// only reference is the pool's.  With `pin = Some((idx, n))` the
+    /// first `n` pages of entry `idx` are treated as un-evictable (a
+    /// planned admission is about to share them) — the read-only twin
+    /// of the retain-pin [`Self::evict_pages`] callers apply.
+    pub fn evictable_pages(
+        &self, alloc: &PageAllocator, pin: Option<(usize, usize)>,
+    ) -> usize {
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let tail = e
+                    .pages
+                    .iter()
+                    .rev()
+                    .take_while(|&&p| alloc.refcount(p) == 1)
+                    .count();
+                match pin {
+                    Some((idx, n)) if idx == i => tail.min(e.pages.len() - n),
+                    _ => tail,
+                }
+            })
+            .sum()
+    }
+
+    /// Reclaim up to `want` parked pages, least-recently-used entries
+    /// first, truncating each entry from the tail (only refcount-1
+    /// pages — live references pin a page in place).  Emptied entries
+    /// leave the index.  Returns the number of pages actually evicted.
+    pub fn evict_pages(&mut self, want: usize, alloc: &mut PageAllocator) -> usize {
+        let mut evicted = 0usize;
+        while evicted < want {
+            // oldest entry with an evictable tail page
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| {
+                    e.pages.last().is_some_and(|&p| alloc.refcount(p) == 1)
+                })
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i);
+            let Some(i) = victim else { break };
+            let e = &mut self.entries[i];
+            while evicted < want {
+                match e.pages.last() {
+                    Some(&p) if alloc.refcount(p) == 1 => {
+                        alloc.evict(p);
+                        e.pages.pop();
+                        evicted += 1;
+                    }
+                    _ => break,
+                }
+            }
+            e.tokens.truncate(e.pages.len() * alloc.page_size());
+            if e.pages.is_empty() {
+                self.entries.swap_remove(i);
+            }
+        }
+        evicted
+    }
+
+    /// Drop every entry, releasing the pool's references (only used by
+    /// tests/audits; serving keeps the pool alive for the next burst).
+    #[cfg(test)]
+    pub fn evict_all(&mut self, alloc: &mut PageAllocator) -> usize {
+        self.evict_pages(usize::MAX, alloc)
+    }
+
+    /// Cross-check the index against the allocator: entries own
+    /// disjoint, parked, referenced pages and span their tokens
+    /// exactly.  Panics on the first violation (property tests call
+    /// this after every step).
+    pub fn audit(&self, alloc: &PageAllocator, page_size: usize) {
+        let mut seen = std::collections::HashSet::new();
+        for e in &self.entries {
+            assert!(!e.pages.is_empty(), "empty entry left in the index");
+            assert_eq!(
+                e.tokens.len(),
+                e.pages.len() * page_size,
+                "entry tokens do not span its pages"
+            );
+            for &p in &e.pages {
+                assert!(seen.insert(p), "page {p} owned by two entries");
+                assert!(alloc.refcount(p) >= 1, "entry page {p} unreferenced");
+            }
+        }
+        assert!(
+            seen.len() >= alloc.retained_pages(),
+            "allocator retains pages the index does not own"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PS: usize = 4;
+
+    fn pool_with(alloc: &mut PageAllocator, tokens: &[i32]) -> (PrefixPool, Vec<u32>) {
+        // simulate a retiring slot: prompt `tokens`, table covering the
+        // prompt pages plus one decode page
+        let n = tokens.len().div_ceil(PS) + 1;
+        let pages = alloc.alloc(n).unwrap();
+        let mut pool = PrefixPool::default();
+        pool.park(tokens, pages.clone(), PS, alloc);
+        (pool, pages)
+    }
+
+    #[test]
+    fn park_keeps_full_prompt_pages_and_releases_the_tail() {
+        let mut a = PageAllocator::new(12, PS);
+        // 10-token prompt: 2 full pages parked, partial page 3 + decode
+        // page released
+        let toks: Vec<i32> = (0..10).collect();
+        let (pool, pages) = pool_with(&mut a, &toks);
+        assert_eq!(pool.entries(), 1);
+        assert_eq!(a.retained_pages(), 2);
+        assert_eq!(a.outstanding(), 0);
+        assert_eq!(a.free_pages(), 9);
+        pool.audit(&a, PS);
+        a.audit();
+        // lookup finds the full-page overlap only (common is capped by
+        // the entry's own 8 parked tokens)
+        let hit = pool.lookup(&toks, PS).unwrap();
+        assert_eq!((hit.pages, hit.common), (2, 8));
+        assert_eq!(pool.entry_pages(hit.idx), &pages[..2]);
+        // an unrelated prompt misses
+        assert!(pool.lookup(&[99; 10], PS).is_none());
+    }
+
+    #[test]
+    fn duplicate_park_releases_instead_of_double_indexing() {
+        let mut a = PageAllocator::new(12, PS);
+        let toks: Vec<i32> = (0..8).collect();
+        let (mut pool, _) = pool_with(&mut a, &toks);
+        // a second slot with the same prompt retires: its private pages
+        // are duplicates of the entry's and must free, not park
+        let dup = a.alloc(3).unwrap();
+        pool.park(&toks, dup, PS, &mut a);
+        assert_eq!(pool.entries(), 1, "no duplicate entry");
+        assert_eq!(a.retained_pages(), 2);
+        a.audit();
+        pool.audit(&a, PS);
+    }
+
+    #[test]
+    fn extension_grows_the_entry_in_place() {
+        let mut a = PageAllocator::new(12, PS);
+        let short: Vec<i32> = (0..4).collect(); // exactly one page
+        let (mut pool, first) = pool_with(&mut a, &short);
+        assert_eq!(a.retained_pages(), 1);
+        // a longer prompt with the same first page retires; its table
+        // shared the entry's page 0 (refcounted) and adds private tail
+        let long: Vec<i32> = (0..12).collect(); // three full pages
+        a.retain(first[0]);
+        let mut table = vec![first[0]];
+        table.extend(a.alloc(3).unwrap()); // 2 prompt pages + decode page
+        pool.park(&long, table, PS, &mut a);
+        assert_eq!(pool.entries(), 1, "extension, not a second entry");
+        let hit = pool.lookup(&long, PS).unwrap();
+        assert_eq!(hit.pages, 3, "entry now covers all three pages");
+        assert_eq!(pool.entry_pages(hit.idx)[0], first[0], "page 0 kept");
+        assert_eq!(a.retained_pages(), 3);
+        assert_eq!(a.outstanding(), 0);
+        a.audit();
+        pool.audit(&a, PS);
+    }
+
+    #[test]
+    fn lru_eviction_truncates_tails_and_skips_live_references() {
+        let mut a = PageAllocator::new(16, PS);
+        let old: Vec<i32> = (100..108).collect(); // 2 pages, parked first
+        let (mut pool, old_pages) = pool_with(&mut a, &old);
+        let hot: Vec<i32> = (200..208).collect(); // 2 pages, newer
+        let hot_pages = {
+            let n = hot.len().div_ceil(PS) + 1;
+            let pages = a.alloc(n).unwrap();
+            pool.park(&hot, pages.clone(), PS, &mut a);
+            pages
+        };
+        assert_eq!(a.retained_pages(), 4);
+        // a live sharer pins the old entry's first page
+        a.retain(old_pages[0]);
+        assert_eq!(pool.evictable_pages(&a, None), 3);
+        // want 2: the old entry's tail page goes first (LRU), then the
+        // newer entry's tail — the pinned page is never touched
+        let got = pool.evict_pages(2, &mut a);
+        assert_eq!(got, 2);
+        assert_eq!(a.refcount(old_pages[0]), 2, "pinned page survives");
+        assert_eq!(a.refcount(old_pages[1]), 0, "old tail evicted");
+        assert_eq!(a.refcount(hot_pages[1]), 0, "hot tail evicted next");
+        assert_eq!(a.refcount(hot_pages[0]), 1, "hot head still parked");
+        a.audit();
+        pool.audit(&a, PS);
+        // the truncated entries still serve their shorter prefixes
+        assert_eq!(pool.lookup(&hot, PS).unwrap().pages, 1);
+        // draining everything empties the index (pinned page stays)
+        let rest = pool.evict_all(&mut a);
+        assert_eq!(rest, 1);
+        assert_eq!(pool.entries(), 1, "pinned entry survives, truncated");
+        assert_eq!(pool.evictable_pages(&a, None), 0);
+        a.release(old_pages[0]); // sharer retires -> retained again
+        assert_eq!(pool.evict_all(&mut a), 1);
+        assert_eq!(pool.entries(), 0);
+        assert_eq!(a.retained_pages(), 0);
+        a.audit();
+    }
+
+    #[test]
+    fn pin_excludes_planned_shares_from_the_evictable_count() {
+        let mut a = PageAllocator::new(12, PS);
+        let toks: Vec<i32> = (0..12).collect(); // 3 full pages
+        let (pool, _) = pool_with(&mut a, &toks);
+        assert_eq!(pool.evictable_pages(&a, None), 3);
+        let hit = pool.lookup(&toks, PS).unwrap();
+        // an admission about to share 2 pages may only count the third
+        assert_eq!(pool.evictable_pages(&a, Some((hit.idx, 2))), 1);
+        assert_eq!(pool.evictable_pages(&a, Some((hit.idx, 3))), 0);
+    }
+}

@@ -11,10 +11,12 @@
 //!   decode step).
 //! * [`scheduler`] — prefill/decode interleaving policy and admission
 //!   control with backpressure.
-//! * [`pagetable`] — refcounted free-list page allocator + reservation
-//!   ledger for the paged KV cache (block-table serving layout; lazy
-//!   page growth, copy-on-write prefix sharing, admission gated on
-//!   unreserved pages).
+//! * [`kvcache`]  — the KV-cache manager: page allocator + reservation
+//!   ledger ([`kvcache::pagetable`]), lazy growth, copy-on-write prefix
+//!   sharing, and the LRU-evicted retained prefix pool, behind the
+//!   narrow admit/install/grow/release API the engine drives.
+//! * [`sampling`] — per-request greedy/temperature/top-k token
+//!   sampling over one logits row (slot-isolated rng streams).
 //! * [`expert_stats`] — per-expert routing load telemetry (the paper's
 //!   imbalance story made observable: padding waste, load CV).
 //! * [`trace`]    — reproducible arrival-process generation (Poisson,
@@ -25,14 +27,18 @@
 pub mod batcher;
 pub mod engine;
 pub mod expert_stats;
-pub mod pagetable;
+pub mod kvcache;
 pub mod request;
+pub mod sampling;
 pub mod scheduler;
 pub mod trace;
 
 pub use batcher::{Batcher, Slot, SlotState};
-pub use engine::{sample_logits, Engine, EngineConfig, EngineMetrics, KvLayout};
+pub use engine::{Engine, EngineConfig, EngineMetrics};
+pub use sampling::sample_logits;
 pub use expert_stats::ExpertStats;
-pub use pagetable::{PageAllocator, RESERVED_PAGE};
+pub use kvcache::pagetable;
+pub use kvcache::pagetable::{PageAllocator, RESERVED_PAGE};
+pub use kvcache::{KvCacheConfig, KvCacheManager, KvLayout, KvMetrics};
 pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};
 pub use scheduler::{Scheduler, SchedulerConfig};

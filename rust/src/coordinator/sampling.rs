@@ -1,0 +1,115 @@
+//! Per-request token sampling (greedy / temperature / top-k).
+//!
+//! Pure policy over one logits row — no engine state: each decode slot
+//! carries its own [`SamplingParams`] and private [`Rng`] stream, so a
+//! request's generation never depends on which other slots are in
+//! flight (the slot-isolation property the integration tests pin).
+
+use crate::coordinator::request::SamplingParams;
+use crate::rng::Rng;
+
+/// Sample a token id from one logits row per `params`:
+/// * `temperature == 0` — greedy argmax (the serving default), fully
+///   deterministic and rng-free;
+/// * otherwise — softmax at `temperature` over the `top_k` highest
+///   logits (ties broken toward the lower index), drawn from `rng`.
+pub fn sample_logits(row: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
+    debug_assert!(!row.is_empty());
+    if params.temperature <= 0.0 {
+        let mut best = 0usize;
+        let mut bestv = f32::NEG_INFINITY;
+        for (i, &x) in row.iter().enumerate() {
+            if x > bestv {
+                bestv = x;
+                best = i;
+            }
+        }
+        return best as i32;
+    }
+    // candidate set: indices sorted by logit desc (stable on ties);
+    // O(V log V) selection is fine at serving vocab sizes
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| {
+        row[b]
+            .partial_cmp(&row[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let k = params.top_k.unwrap_or(row.len()).clamp(1, row.len());
+    idx.truncate(k);
+    let max = row[idx[0]];
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((row[i] - max) / params.temperature).exp())
+        .collect();
+    idx[rng.categorical(&weights)] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax_and_deterministic() {
+        let row = [0.1f32, 2.5, -1.0, 2.4];
+        let params = SamplingParams::default(); // temperature 0
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(sample_logits(&row, &params, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_with_top_k_1_is_argmax() {
+        let row = [0.3f32, -0.2, 4.0, 1.0];
+        let params = SamplingParams {
+            temperature: 1.3,
+            top_k: Some(1),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(sample_logits(&row, &params, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        // flat logits: top_k=2 keeps the two lowest indices (stable ties)
+        let row = [1.0f32; 6];
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: Some(2),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(11);
+        let mut seen = [0usize; 6];
+        for _ in 0..300 {
+            seen[sample_logits(&row, &params, &mut rng) as usize] += 1;
+        }
+        assert!(seen[0] > 0 && seen[1] > 0, "{seen:?}");
+        assert!(seen[2..].iter().all(|&c| c == 0), "{seen:?}");
+    }
+
+    #[test]
+    fn sampling_is_reproducible_per_seed() {
+        let row: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let params = SamplingParams { temperature: 0.8, ..Default::default() };
+        let draw = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::new(seed);
+            (0..20).map(|_| sample_logits(&row, &params, &mut rng)).collect()
+        };
+        assert_eq!(draw(3), draw(3));
+        assert_ne!(draw(3), draw(4), "different streams should diverge");
+    }
+
+    #[test]
+    fn nonzero_temperature_covers_more_than_argmax() {
+        let row = [1.0f32, 1.1, 0.9, 1.05];
+        let params = SamplingParams { temperature: 2.0, ..Default::default() };
+        let mut rng = Rng::new(5);
+        let distinct: std::collections::HashSet<i32> =
+            (0..200).map(|_| sample_logits(&row, &params, &mut rng)).collect();
+        assert!(distinct.len() > 1, "hot temperature must actually sample");
+    }
+}

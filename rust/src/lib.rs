@@ -29,11 +29,14 @@
 //!   default ([`coordinator::KvLayout::Paged`]): shared page pools
 //!   `(L, num_pages, page_size, nh, dh)` sized to *actual* context
 //!   lengths instead of the dense worst-case `(L, B, Tmax, nh, dh)`
-//!   block, with admission gated on free pages
-//!   ([`coordinator::pagetable`]).  Partial prefills merge refilled
-//!   slots' rows on-device through `page_append` (paged) or `kv_splice`
-//!   (dense), with a host-splice fallback when an older artifact dir
-//!   lacks both.
+//!   block.  Cache policy is its own subsystem
+//!   ([`coordinator::kvcache`]): admission gated on unreserved pages
+//!   ([`coordinator::pagetable`]), lazy growth, copy-on-write prefix
+//!   sharing, and an LRU-evicted retained prefix pool that keeps a hot
+//!   system prompt's KV warm across idle gaps.  Partial prefills merge
+//!   refilled slots' rows on-device through `page_append` (paged) or
+//!   `kv_splice` (dense), with a host-splice fallback when an older
+//!   artifact dir lacks both.
 //! * **Training** ([`train`]): the flattened `(params ++ m ++ v)`
 //!   optimizer state — an order of magnitude wider than the KV-cache
 //!   tuple — chains through [`runtime::Runtime::run_chain_step`], driven

@@ -146,7 +146,9 @@ fn serve(args: &[String]) -> Result<()> {
         .flag("seed", "0", "workload seed");
     let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
     let rt = open_runtime(a.get("artifacts"))?;
-    let mut engine = Engine::new(rt, EngineConfig::default())?;
+    // telemetry on: the serve report prints per-expert routing skew
+    let cfg = EngineConfig { expert_telemetry: true, ..Default::default() };
+    let mut engine = Engine::new(rt, cfg)?;
     println!(
         "engine up: {} slots, max_len {}, {:?} KV layout ({})",
         engine.width(),
@@ -204,8 +206,35 @@ fn serve(args: &[String]) -> Result<()> {
     );
     if m.page_appends + m.page_stalls > 0 {
         println!(
-            "paged: {} page appends, {} page-starvation stalls",
-            m.page_appends, m.page_stalls
+            "paged: {} page appends, {} page-starvation stalls, {} lazy grows, \
+             {} shared pages, {} CoW copies",
+            m.page_appends, m.page_stalls, m.page_grows, m.shared_pages, m.cow_copies
+        );
+        println!(
+            "prefix cache: {} hits / {} tokens served retained / {} evictions \
+             ({} pages parked at exit)",
+            m.prefix_hits,
+            m.prefix_hit_tokens,
+            m.evictions,
+            engine.retained_pages().unwrap_or(0)
+        );
+    }
+    // load-balance skew from the decode artifact's expert-counts output
+    // (absent on artifact dirs that predate it — nothing to report then)
+    let es = &engine.expert_stats;
+    if es.total() > 0 {
+        let frac = es.load_fractions();
+        let hottest: Vec<String> = es
+            .hottest()
+            .into_iter()
+            .take(3)
+            .map(|e| format!("e{e}:{:.0}%", 100.0 * frac[e]))
+            .collect();
+        println!(
+            "expert load ({} routed slots): CV {:.3}  hottest {}",
+            es.total(),
+            es.load_cv(),
+            hottest.join(" ")
         );
     }
     Ok(())

@@ -364,6 +364,46 @@ impl KvCacheShape {
         let shared = (shared_prefix.min(prompt_len) / self.page_size).min(need - 1);
         1 + (usable - need) / (need - shared)
     }
+
+    // ---- retained prefix pool (prefix caching with LRU eviction) ----
+
+    /// Prompt pages a fresh admission must *write* when the leading
+    /// `retained_prefix` tokens of its prompt already sit in the
+    /// retained pool: only full pages can be served from the pool, so
+    /// the partial boundary page (and everything past the retained
+    /// prefix) is written by the admission's own `page_append`.
+    pub fn prompt_pages_written(&self, prompt_len: usize, retained_prefix: usize) -> usize {
+        let total = prompt_len.max(1).min(self.max_len).div_ceil(self.page_size);
+        let hit = (retained_prefix.min(prompt_len) / self.page_size).min(total);
+        total - hit
+    }
+
+    /// Bytes the retained pool holds for a parked `prefix_len`-token
+    /// prompt prefix between requests (full pages only, K and V over
+    /// all layers) — the price of keeping a hot system prompt warm
+    /// across idle gaps, bounded by the evictor to pages the pool can
+    /// spare.
+    pub fn retained_pool_bytes(&self, prefix_len: usize) -> usize {
+        let pages = prefix_len.min(self.max_len) / self.page_size;
+        2 * self.layers * pages * self.page_size * self.row_bytes()
+    }
+
+    /// Hot-system-prompt scenario: `n` requests with the same
+    /// `prompt_len`-token system prompt arrive one at a time, each
+    /// after the previous finished (idle gaps — in-flight CoW sharing
+    /// never applies).  Returns the total prompt KV *pages written*
+    /// across all admissions.  Without retention every admission
+    /// re-stores the whole prompt; with it only the first does, and
+    /// every later one writes just the sub-page boundary tail.
+    pub fn hot_prompt_pages_written(
+        &self, prompt_len: usize, n: usize, retained: bool,
+    ) -> usize {
+        let full = self.prompt_pages_written(prompt_len, 0);
+        if !retained || n == 0 {
+            return n * full;
+        }
+        full + (n.saturating_sub(1)) * self.prompt_pages_written(prompt_len, prompt_len)
+    }
 }
 
 #[cfg(test)]
@@ -517,6 +557,46 @@ mod tests {
         // once every budget is spent the two policies hold the same pages
         let done: Vec<usize> = reqs.iter().map(|&(_, b)| b).collect();
         assert_eq!(kv.lazy_resident_bytes(&reqs, &done), kv.eager_resident_bytes(&reqs));
+    }
+
+    #[test]
+    fn retained_pool_model_tracks_full_pages_only() {
+        let kv = KvCacheShape::serve_default(); // page 16, max_len 160
+        // a 120-token prompt: 8 pages total (ceil), 7 fully retained
+        assert_eq!(kv.prompt_pages_written(120, 0), 8);
+        assert_eq!(kv.prompt_pages_written(120, 120), 1, "boundary page rewritten");
+        assert_eq!(kv.prompt_pages_written(128, 128), 0, "aligned prompt: full hit");
+        assert_eq!(kv.prompt_pages_written(120, 60), 8 - 3, "partial retained prefix");
+        // pool bytes: only full pages park
+        assert_eq!(kv.retained_pool_bytes(15), 0);
+        assert_eq!(
+            kv.retained_pool_bytes(32),
+            2 * kv.layers * 32 * kv.row_bytes(),
+        );
+        // monotone, clamped at the span
+        assert!(kv.retained_pool_bytes(1000) <= kv.retained_pool_bytes(2000));
+    }
+
+    #[test]
+    fn hot_prompt_writes_collapse_under_retention() {
+        let kv = KvCacheShape::serve_default();
+        let (plen, n) = (128, 16); // page-aligned hot system prompt
+        let baseline = kv.hot_prompt_pages_written(plen, n, false);
+        let retained = kv.hot_prompt_pages_written(plen, n, true);
+        assert_eq!(baseline, n * 8, "every admission re-stores 8 pages");
+        assert_eq!(retained, 8, "only the first admission writes");
+        // unaligned prompts still pay their boundary page every time
+        let r = kv.hot_prompt_pages_written(120, n, true);
+        assert_eq!(r, 8 + (n - 1), "boundary page per admission");
+        assert!(r < kv.hot_prompt_pages_written(120, n, false));
+        // degenerate cases
+        assert_eq!(kv.hot_prompt_pages_written(plen, 0, true), 0);
+        assert_eq!(kv.hot_prompt_pages_written(plen, 1, true), 8);
+        // a prompt shorter than one page retains nothing: both equal
+        assert_eq!(
+            kv.hot_prompt_pages_written(10, n, true),
+            kv.hot_prompt_pages_written(10, n, false),
+        );
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Property-based tests (testkit) for the coordinator invariants.
 
 use scattermoe::coordinator::batcher::{Batcher, SlotState};
+use scattermoe::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use scattermoe::coordinator::pagetable::PageAllocator;
 use scattermoe::coordinator::request::{Request, SamplingParams};
 use scattermoe::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
@@ -241,6 +242,100 @@ fn prop_lazy_paged_admission_never_deadlocks() {
             alloc.free_pages() == alloc.usable_pages() && alloc.reserved_pages() == 0,
             "page + reservation conservation after drain",
         )
+    });
+}
+
+/// THE retained-prefix-pool safety property (PR 5 satellite): under
+/// random admit / decode-grow / retire / cancel schedules over the
+/// whole [`KvCacheManager`] — with prefix sharing, parking, pool hits
+/// and LRU eviction all firing — the allocator never evicts a page
+/// with live block-table references (the allocator panics if asked),
+/// and the partition `free + outstanding + retained == usable` plus
+/// the no-deadlock ledger bound `free >= reserved` hold after every
+/// single operation (`KvCacheManager::audit` cross-checks the index,
+/// the ledger and every table besides).  Prompts come from one token
+/// family so retirements dedup/extend/diverge against existing index
+/// entries, and the pool is far smaller than worst-case demand so
+/// admissions must evict to proceed.
+#[test]
+fn prop_prefix_pool_conservation() {
+    const PAGE: usize = 4;
+    const MAX: usize = 16; // slot span: 4 pages
+    const WIDTH: usize = 3;
+    const NUM_PAGES: usize = 9; // 8 usable vs up to 12 committed
+
+    let gen = VecGen {
+        item: PairGen(U64Range(0, 5), U64Range(0, 1_000)),
+        min_len: 1,
+        max_len: 60,
+    };
+    check(60, gen, |script: &Vec<(u64, u64)>| {
+        let base: Vec<i32> = (1..=MAX as i32).collect();
+        let mut m = KvCacheManager::paged(
+            WIDTH, MAX, NUM_PAGES, PAGE, MAX / PAGE, KvCacheConfig::default(),
+        );
+        // per busy slot: (next write pos, decode steps left)
+        let mut slots: Vec<Option<(usize, usize)>> = vec![None; WIDTH];
+        for &(op, arg) in script {
+            match op {
+                // admit into a free slot; prompts share prefixes of one
+                // base sequence (op 2 diverges the tail token so the
+                // pool's divergent-overlap parking path fires too)
+                0 | 1 | 2 => {
+                    let Some(slot) = slots.iter().position(|s| s.is_none()) else {
+                        continue;
+                    };
+                    let plen = 1 + (arg as usize) % 12;
+                    let max_new = 1 + (arg as usize / 12) % 8;
+                    let mut prompt = base[..plen].to_vec();
+                    if op == 2 {
+                        prompt[plen - 1] = -(arg as i32 % 7) - 1;
+                    }
+                    if m.admit(&prompt, max_new) {
+                        m.install(slot);
+                        slots[slot] = Some((plen, max_new - 1));
+                    }
+                    m.audit();
+                    prop_assert(m.pending_installs() == 0, "no dangling admissions")?;
+                }
+                // one decode tick: grow each busy slot to its write
+                // position, retire those out of budget (parking their
+                // prompt-prefix pages)
+                3 => {
+                    for i in 0..WIDTH {
+                        let Some((pos, left)) = slots[i] else { continue };
+                        if left == 0 {
+                            m.release(i, true);
+                            slots[i] = None;
+                        } else {
+                            m.grow_to(i, pos.min(MAX - 1)).map_err(|e| e.to_string())?;
+                            slots[i] = Some((pos + 1, left - 1));
+                        }
+                        m.audit();
+                    }
+                }
+                // cancel one busy slot: the abort path reclaims pages
+                // and reservations but must never park them
+                _ => {
+                    if let Some(i) = slots.iter().position(|s| s.is_some()) {
+                        m.release(i, false);
+                        slots[i] = None;
+                        m.audit();
+                    }
+                }
+            }
+        }
+        // drain: every survivor retires, then conservation closes the
+        // books — parked pages are reclaimable, nothing leaked
+        for (i, s) in slots.iter_mut().enumerate() {
+            if s.take().is_some() {
+                m.release(i, true);
+            }
+        }
+        m.audit();
+        let (reclaimable, usable) = m.page_budget().expect("paged manager");
+        prop_assert(reclaimable == usable, "free + retained covers the pool at idle")?;
+        prop_assert(m.reservations() == Some(0), "reservations fully returned")
     });
 }
 

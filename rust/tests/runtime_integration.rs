@@ -520,6 +520,67 @@ fn lazy_cow_paged_matches_dense_and_eager_bit_identical() {
     assert!(m_lazy.cow_copies > 0, "the boundary page must be copied-on-write");
 }
 
+/// THE retained-prefix acceptance property (PR 5): a repeated system
+/// prompt admitted after an idle gap performs zero prompt-page writes —
+/// every prompt page is served from the retained pool, asserted via
+/// `prefix_hit_tokens` covering the whole prompt — and the output is
+/// bit-identical to a `prefix_cache: false` engine.  In-flight CoW
+/// sharing (PR 4) cannot help here: between the two requests the engine
+/// is fully idle, so no donor block table exists; only the parked pages
+/// carry the prefix across the gap.
+#[test]
+fn retained_prefix_pool_serves_repeated_system_prompt() {
+    let Some(rt) = runtime() else { return };
+    if rt.spec("serve_decode_paged").is_err() {
+        eprintln!("SKIP: artifacts predate serve_decode_paged");
+        return;
+    }
+    // page-aligned "system prompt": exactly 2 full 16-row pages (the
+    // compiled prompt width), so a pool hit covers the WHOLE prompt
+    let sys_prompt: Vec<i32> = (0..32).map(|i| 3 + (i * 7) % 40).collect();
+    let params = SamplingParams { max_new_tokens: 6, ..Default::default() };
+    let run = |prefix_cache: bool| {
+        let cfg = EngineConfig { prefix_cache, ..Default::default() };
+        let mut engine = Engine::new(rt.clone(), cfg).expect("engine");
+        assert_eq!(engine.kv_layout(), KvLayout::Paged);
+        let mut toks = Vec::new();
+        for phase in 0..2 {
+            engine
+                .submit(sys_prompt.clone(), params.clone())
+                .expect("valid")
+                .expect("queued");
+            let mut rs = engine.run_to_completion().expect("serve");
+            assert_eq!(rs.len(), 1, "phase {phase}");
+            assert!(engine.is_idle(), "idle gap between the two requests");
+            toks.push(rs.remove(0).tokens);
+        }
+        let budget = engine.page_budget().unwrap();
+        (toks, engine.metrics.clone(), engine.retained_pages().unwrap(), budget)
+    };
+    let (toks_off, m_off, retained_off, budget_off) = run(false);
+    let (toks_on, m_on, retained_on, budget_on) = run(true);
+    assert_eq!(toks_on, toks_off, "retention must not change a single token");
+    assert_eq!(toks_on[0], toks_on[1], "same greedy prompt, same generation");
+    // PR-4 baseline: the idle gap kills the prefix — everything re-stored
+    assert_eq!(m_off.prefix_hits, 0);
+    assert_eq!(m_off.shared_pages, 0, "no donor survives an idle gap");
+    assert_eq!(retained_off, 0, "nothing parks with the pool off");
+    // retained pool: the second admission re-shares both prompt pages —
+    // zero prompt-page writes, the whole prompt served from the pool
+    assert_eq!(m_on.prefix_hits, 1, "second admission must hit the pool");
+    assert_eq!(
+        m_on.prefix_hit_tokens as usize,
+        sys_prompt.len(),
+        "every prompt token served from retained pages"
+    );
+    assert_eq!(m_on.shared_pages, 2, "both full prompt pages re-shared");
+    assert_eq!(m_on.evictions, 0, "an uncontended pool never evicts");
+    assert!(retained_on >= 2, "the prompt stays parked for the next burst");
+    // conservation either way: parked pages are reclaimable, not leaked
+    assert_eq!(budget_off.0, budget_off.1);
+    assert_eq!(budget_on.0, budget_on.1);
+}
+
 /// Reclamation on the failure paths (satellite): pages AND growth
 /// reservations return to the pool when requests are cancelled
 /// mid-flight or the engine is drained, refcounted shared pages

@@ -51,7 +51,8 @@ expected = {
     "bench_reports/BENCH_serve.json":
         ["serve e2e", "decode step", "kv cache bytes"],
     "bench_reports/BENCH_memory.json":
-        ["kv dense (worst case)", "kv paged ctx=", "kv admitted width"],
+        ["kv dense (worst case)", "kv paged ctx=", "kv admitted width",
+         "kv retained pool bytes", "kv hot-prompt pages written"],
 }
 ok = True
 for path, needles in expected.items():
