@@ -1,26 +1,36 @@
-//! Batched serving example: Poisson request arrivals → admission →
-//! continuous batching → AOT prefill/decode on PJRT; reports the latency
-//! and throughput distributions a serving paper would.
+//! Open-loop serving example: a seeded Poisson arrival stream drives the
+//! engine through the serving front-end — intake/backpressure, optional
+//! TTFT + total-latency deadlines, transient-retry fault handling — and
+//! reports the SLO distributions a serving paper would (TTFT, TPOT,
+//! goodput), plus the host↔device transfer accounting.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve -- --requests 48 --rate 4
+//! # with SLOs + load shedding:
+//! cargo run --release --example serve -- --rate 64 --ttft-deadline-ms 500 --shed-depth 32
 //! ```
 
 use anyhow::Result;
 use scattermoe::benchkit::{write_report, Measurement};
 use scattermoe::cli::Cli;
-use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
+use scattermoe::coordinator::trace::{generate, load_summary, Arrival, TraceConfig};
+use scattermoe::coordinator::{
+    ArrivingRequest, ClockMode, Engine, EngineConfig, FrontendConfig, IntakePolicy,
+    RequestOutcome, RetryPolicy, SamplingParams, ServeFrontend, ServeReport,
+};
 use scattermoe::metrics::{fmt_bytes, Histogram};
-use scattermoe::rng::Rng;
 use scattermoe::runtime::Runtime;
 use scattermoe::tokenizer::SyntheticCorpus;
 
 fn main() -> Result<()> {
-    let cli = Cli::new("serve", "batched serving demo")
+    let cli = Cli::new("serve", "open-loop serving demo")
         .flag("requests", "48", "total requests")
         .flag("rate", "8", "mean arrivals per second (Poisson)")
         .flag("max-new", "12", "decode budget per request")
-        .flag("seed", "0", "workload seed");
+        .flag("seed", "0", "workload seed")
+        .flag("ttft-deadline-ms", "0", "expire requests with no token by this age (0 = off)")
+        .flag("deadline-ms", "0", "total latency budget per request (0 = off)")
+        .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)");
     let a = cli.parse();
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
@@ -55,77 +65,108 @@ fn main() -> Result<()> {
 
     let n = a.get_usize("requests");
     let rate = a.get_f64("rate");
-    let mut corpus = SyntheticCorpus::new(512, a.get_u64("seed"));
-    let mut rng = Rng::new(a.get_u64("seed") ^ 0xA11CE);
+    let max_new = a.get_usize("max-new");
+    let seed = a.get_u64("seed");
 
-    // Poisson arrival schedule (pre-drawn, then replayed against the
-    // engine loop — single-threaded testbed, so arrivals are injected
-    // between ticks)
-    let mut t_arrive = Vec::with_capacity(n);
-    let mut t = 0.0f64;
-    for _ in 0..n {
-        t += rng.exponential(rate);
-        t_arrive.push(t);
+    // seeded open-loop arrival stream (the trace module's generator, so
+    // the same seed replays the same schedule everywhere)
+    let trace = generate(&TraceConfig {
+        n,
+        arrival: Arrival::Poisson { rate },
+        prompt_min: 4,
+        prompt_max: 24,
+        max_new_min: max_new,
+        max_new_max: max_new,
+        seed,
+    });
+    let load = load_summary(&trace, 1.0);
+    println!(
+        "offered load: {:.1} req/s, {:.0} tok/s mean, {:.0} tok/s peak (1s window) over {:.2}s",
+        load.requests_per_s, load.tokens_per_s, load.peak_tokens_per_s, load.span_s,
+    );
+    let mut corpus = SyntheticCorpus::new(512, seed);
+    let arrivals: Vec<ArrivingRequest> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, item)| ArrivingRequest {
+            at: item.at,
+            prompt: corpus.sample(item.prompt_len),
+            params: SamplingParams {
+                max_new_tokens: item.max_new,
+                seed: seed.wrapping_add(i as u64),
+                ..Default::default()
+            },
+            tag: i as u64,
+        })
+        .collect();
+
+    let ttft_ms = a.get_f64("ttft-deadline-ms");
+    let deadline_ms = a.get_f64("deadline-ms");
+    let shed_depth = a.get_usize("shed-depth");
+    let fe_cfg = FrontendConfig {
+        intake: IntakePolicy {
+            shed_queue_depth: (shed_depth > 0).then_some(shed_depth),
+            ..Default::default()
+        },
+        ttft_deadline_s: (ttft_ms > 0.0).then_some(ttft_ms / 1e3),
+        deadline_s: (deadline_ms > 0.0).then_some(deadline_ms / 1e3),
+        retry: RetryPolicy::default(),
+        clock: ClockMode::Wall,
+    };
+    let mut fe = ServeFrontend::new(engine, fe_cfg);
+    fe.push_arrivals(arrivals);
+    let rep = fe.run();
+    let wall = rep.wall_s;
+    if let Some(fault) = rep.fatal.as_deref() {
+        println!("RUN HALTED by permanent fault: {fault}");
     }
+    let engine = fe.engine();
 
-    let started = std::time::Instant::now();
-    let mut next = 0usize;
-    let mut done = Vec::new();
-    let mut rejected = 0usize;
-    while done.len() + rejected < n {
-        let now = started.elapsed().as_secs_f64();
-        while next < n && t_arrive[next] <= now {
-            let prompt = corpus.sample(4 + rng.below(20) as usize);
-            let queued = engine.submit(
-                prompt,
-                SamplingParams {
-                    max_new_tokens: a.get_usize("max-new"),
-                    ..Default::default()
-                },
-            )?;
-            if queued.is_none() {
-                rejected += 1;
-            }
-            next += 1;
-        }
-        if engine.is_idle() && next < n {
-            // nothing in flight; sleep until the next arrival
-            let wait = (t_arrive[next] - started.elapsed().as_secs_f64()).max(0.0);
-            std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.05)));
-            continue;
-        }
-        done.extend(engine.tick()?);
-    }
-    let wall = started.elapsed().as_secs_f64();
-
-    let total_tokens: usize = done.iter().map(|r| r.tokens.len()).sum();
-    let mut ttft = Histogram::new();
-    let mut lat = Histogram::new();
     let mut rate_h = Histogram::new();
-    for r in &done {
-        ttft.record(r.ttft * 1e3);
-        lat.record(r.latency * 1e3);
-        rate_h.record(r.decode_rate());
+    for (_, o) in fe.outcomes() {
+        if let RequestOutcome::Completed(r) = o {
+            rate_h.record(r.decode_rate());
+        }
     }
     println!("\n=== serving report ===");
     println!(
-        "completed {}  rejected {}  wall {:.2}s  throughput {:.1} tok/s",
-        done.len(),
-        rejected,
+        "completed {}  wall {:.2}s  goodput {:.1} tok/s",
+        rep.completed,
         wall,
-        total_tokens as f64 / wall
+        rep.goodput_tok_s(),
     );
     println!(
-        "TTFT   p5/p50/p95: {:>7.1} {:>7.1} {:>7.1} ms",
-        ttft.percentile(0.05),
-        ttft.median(),
-        ttft.percentile(0.95)
+        "outcomes: {} expired-ttft  {} expired-total  {} shed  {} queue-full  \
+         {} never-admissible  {} cancelled  {} drained",
+        rep.expired_ttft,
+        rep.expired_total,
+        rep.shed,
+        rep.rejected_queue_full,
+        rep.rejected_never_admissible,
+        rep.cancelled,
+        rep.drained,
     );
     println!(
-        "E2E    p5/p50/p95: {:>7.1} {:>7.1} {:>7.1} ms",
-        lat.percentile(0.05),
-        lat.median(),
-        lat.percentile(0.95)
+        "robustness: {} deadline misses  {} sheds  {} tick retries",
+        engine.metrics.deadline_misses, engine.metrics.sheds, engine.metrics.retries,
+    );
+    println!(
+        "TTFT   p5/p50/p99: {:>7.1} {:>7.1} {:>7.1} ms",
+        ServeReport::pct(&rep.ttft, 0.05) * 1e3,
+        ServeReport::pct(&rep.ttft, 0.5) * 1e3,
+        ServeReport::pct(&rep.ttft, 0.99) * 1e3,
+    );
+    println!(
+        "TPOT   p5/p50/p99: {:>7.1} {:>7.1} {:>7.1} ms/tok",
+        ServeReport::pct(&rep.tpot, 0.05) * 1e3,
+        ServeReport::pct(&rep.tpot, 0.5) * 1e3,
+        ServeReport::pct(&rep.tpot, 0.99) * 1e3,
+    );
+    println!(
+        "E2E    p5/p50/p99: {:>7.1} {:>7.1} {:>7.1} ms",
+        ServeReport::pct(&rep.e2e, 0.05) * 1e3,
+        ServeReport::pct(&rep.e2e, 0.5) * 1e3,
+        ServeReport::pct(&rep.e2e, 0.99) * 1e3,
     );
     println!(
         "decode rate p50: {:.1} tok/s/req   engine: {} prefills, {} decode steps",
@@ -241,9 +282,10 @@ fn main() -> Result<()> {
     }
 
     // machine-readable perf trajectory (compared across PRs by CI):
-    // tokens/s, decode bytes/step, and the cache footprint per layout
+    // tokens/s, SLO percentiles, decode bytes/step, and the cache
+    // footprint per layout
     let mut e2e = Measurement::scalar(format!("serve e2e ({:?})", engine.kv_layout()), wall);
-    e2e.units_per_iter = total_tokens as f64;
+    e2e.units_per_iter = rep.completed_tokens as f64;
     e2e.set_transfers(&moved, 1);
     let mut step = Measurement::scalar("decode step", wall / steps as f64);
     step.runs = steps as usize;
@@ -263,6 +305,11 @@ fn main() -> Result<()> {
             "kv cache bytes (dense worst case)",
             engine.dense_cache_bytes() as f64,
         ),
+        Measurement::scalar("serve TTFT p50 (s)", ServeReport::pct(&rep.ttft, 0.5)),
+        Measurement::scalar("serve TTFT p99 (s)", ServeReport::pct(&rep.ttft, 0.99)),
+        Measurement::scalar("serve TPOT p50 (s)", ServeReport::pct(&rep.tpot, 0.5)),
+        Measurement::scalar("serve TPOT p99 (s)", ServeReport::pct(&rep.tpot, 0.99)),
+        Measurement::scalar("serve goodput (tok/s)", rep.goodput_tok_s()),
     ];
     write_report("bench_reports/BENCH_serve.json", "serve", &rows);
     Ok(())

@@ -181,6 +181,46 @@ impl Batcher {
         filled
     }
 
+    /// Undo an admission whose prefill never executed: put the slot's
+    /// request back at the *front* of the queue (FIFO order survives a
+    /// failed batch when callers requeue a filled batch in reverse) and
+    /// empty the slot.  Only `Prefilling` slots can be requeued — a slot
+    /// that already decoded tokens has device state the queue cannot
+    /// represent.  Returns whether the slot was requeued.
+    ///
+    /// The push-front may transiently exceed `max_queue`; the bound is
+    /// an *intake* gate, and dropping an already-admitted request to
+    /// honour it would violate conservation.
+    pub fn requeue(&mut self, idx: usize) -> bool {
+        let slot = &mut self.slots[idx];
+        let SlotState::Prefilling(id) = slot.state else {
+            return false;
+        };
+        let req = Request {
+            id,
+            prompt: std::mem::take(&mut slot.prompt),
+            params: slot.params.clone(),
+            arrived: slot.arrived.unwrap_or_else(std::time::Instant::now),
+        };
+        *slot = Slot::empty();
+        self.queue.push_front(req);
+        true
+    }
+
+    /// True while `id` has produced no token yet: still queued, still
+    /// prefilling, or decoding with an empty generation.  This is the
+    /// front-end's TTFT-deadline predicate.
+    pub fn awaiting_first_token(&self, id: RequestId) -> bool {
+        if self.queue.iter().any(|r| r.id == id) {
+            return true;
+        }
+        self.slots.iter().any(|s| match s.state {
+            SlotState::Prefilling(i) => i == id,
+            SlotState::Decoding(i) => i == id && s.generated.is_empty(),
+            SlotState::Empty => false,
+        })
+    }
+
     /// Mark a slot as prefilled and record its first sampled token.
     pub fn complete_prefill(&mut self, idx: usize, first_token: i32) {
         let slot = &mut self.slots[idx];
@@ -506,6 +546,60 @@ mod tests {
         // unknown / already-finished ids are a clean None
         assert!(b.abort(RequestId(0)).is_none());
         assert!(b.abort(RequestId(77)).is_none());
+    }
+
+    #[test]
+    fn requeue_restores_fifo_and_conservation() {
+        let mut b = Batcher::new(2, 8);
+        for i in 0..3 {
+            b.submit(req(i, 2, 4));
+        }
+        let filled = b.refill();
+        assert_eq!(filled, vec![0, 1]);
+        // a failed prefill batch requeues in reverse fill order so the
+        // queue front ends up [0, 1, 2] again
+        for &slot in filled.iter().rev() {
+            assert!(b.requeue(slot));
+        }
+        assert_eq!(b.queue_len(), 3);
+        let ids: Vec<u64> = b.queued_requests().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2], "FIFO order restored");
+        let (adm, fin, act, q) = b.accounting();
+        assert_eq!((adm, fin, act, q), (3, 0, 0, 3), "nothing lost");
+        // the retried refill admits the same requests in the same order
+        let filled = b.refill();
+        assert_eq!(filled, vec![0, 1]);
+        match &b.slots()[0].state {
+            SlotState::Prefilling(id) => assert_eq!(id.0, 0),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn requeue_rejects_non_prefilling_slots() {
+        let mut b = Batcher::new(1, 8);
+        assert!(!b.requeue(0), "empty slot");
+        b.submit(req(5, 2, 4));
+        b.refill();
+        b.complete_prefill(0, 9);
+        assert!(!b.requeue(0), "decoding slot has device state");
+    }
+
+    #[test]
+    fn awaiting_first_token_tracks_lifecycle() {
+        let mut b = Batcher::new(1, 8);
+        b.submit(req(0, 2, 4));
+        b.submit(req(1, 2, 4));
+        let id0 = RequestId(0);
+        let id1 = RequestId(1);
+        assert!(b.awaiting_first_token(id0), "queued");
+        assert!(b.awaiting_first_token(id1), "queued behind");
+        b.refill();
+        assert!(b.awaiting_first_token(id0), "prefilling");
+        b.complete_prefill(0, 9);
+        assert!(!b.awaiting_first_token(id0), "first token sampled");
+        assert!(b.awaiting_first_token(id1), "still queued");
+        assert!(!b.awaiting_first_token(RequestId(77)), "unknown id");
     }
 
     #[test]

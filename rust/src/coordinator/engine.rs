@@ -64,6 +64,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::expert_stats::ExpertStats;
+use crate::coordinator::frontend::faults::{FaultInjector, FaultSite};
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager, KvLayout};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::coordinator::sampling::sample_logits;
@@ -188,6 +189,16 @@ pub struct EngineMetrics {
     pub evictions: u64,
     /// Requests aborted (cancelled or drained) instead of finishing.
     pub aborted: u64,
+    /// Requests expired by the front-end on a TTFT deadline or a
+    /// total-latency budget (cancelled through [`Engine::cancel`], so
+    /// their pages reclaim like any other abort).
+    pub deadline_misses: u64,
+    /// Arrivals shed at the front-end's overload watermark before ever
+    /// reaching the admission queue.
+    pub sheds: u64,
+    /// Engine ticks retried by the front-end to ride out transient
+    /// runtime faults.
+    pub retries: u64,
     /// Time-to-first-token distribution (seconds).
     pub ttft: Histogram,
     /// End-to-end latency distribution (seconds).
@@ -228,6 +239,9 @@ pub struct Engine {
     pos: Vec<i32>,
     /// per-slot last emitted token
     last_token: Vec<i32>,
+    /// deterministic fault schedule guarding every runtime call site
+    /// (disabled by default — one integer increment per call)
+    faults: FaultInjector,
     /// Serving metrics (counters + latency histograms).
     pub metrics: EngineMetrics,
     /// Per-expert routing load telemetry (fed by the decode artifact's
@@ -499,6 +513,7 @@ impl Engine {
             expert_counts_output,
             pos: vec![0; width],
             last_token: vec![0; width],
+            faults: FaultInjector::disabled(),
             metrics: EngineMetrics::default(),
             expert_stats: ExpertStats::new(num_experts),
             runtime,
@@ -564,6 +579,28 @@ impl Engine {
     /// True when partial prefills merge cache rows on-device.
     pub fn splices_on_device(&self) -> bool {
         self.has_device_splice
+    }
+
+    /// Arm a deterministic fault schedule over the engine's runtime call
+    /// sites (chaos testing / recovery drills).  The injector fires
+    /// *before* a guarded call executes, so device state is never left
+    /// half-updated by an injected fault.
+    pub fn inject_faults(&mut self, faults: FaultInjector) {
+        self.faults = faults;
+    }
+
+    /// Run the page allocator's conservation audit
+    /// (`free + outstanding + retained == usable`); panics on violation.
+    /// No-op on the dense layout.  Chaos harnesses call this after
+    /// every tick.
+    pub fn audit_kv(&self) {
+        self.kv.audit();
+    }
+
+    /// True while `id` has produced no token yet (the front-end's
+    /// TTFT-deadline predicate).
+    pub fn awaiting_first_token(&self, id: RequestId) -> bool {
+        self.batcher.awaiting_first_token(id)
     }
 
     /// Submit a request: `Ok(Some(id))` when queued, `Ok(None)` under
@@ -687,7 +724,34 @@ impl Engine {
             // returning without progress would let run_to_completion spin
             return self.do_decode();
         }
-        self.metrics.prefills += 1;
+        // A failed batch must not strand its admitted slots: any slot
+        // still Prefilling (its runtime work never committed) goes back
+        // to the queue front — reversed, so FIFO order survives — and
+        // its pages + growth reservations reclaim.  Slots that already
+        // advanced past prefill (partial per-slot failures) keep their
+        // state; the caller's drain path covers them.
+        match self.prefill_filled(&filled) {
+            Ok(responses) => {
+                self.metrics.prefills += 1;
+                Ok(responses)
+            }
+            Err(e) => {
+                for &slot in filled.iter().rev() {
+                    if self.batcher.requeue(slot) {
+                        self.kv.release(slot, false);
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The fallible body of a prefill tick over already-admitted slots;
+    /// [`Engine::do_prefill`] owns the rollback when this errs.
+    fn prefill_filled(&mut self, filled: &[usize]) -> Result<Vec<Response>> {
+        self.faults
+            .check(FaultSite::Prefill)
+            .map_err(anyhow::Error::new)?;
         // build padded prompt matrix for the WHOLE batch (static shape);
         // rows of in-flight slots are zeros and their outputs are ignored.
         let mut toks = vec![0i32; self.width * self.prompt_width];
@@ -727,12 +791,12 @@ impl Engine {
         // merge ONLY the refilled slots' rows into the live KV state —
         // dense row splice, or page-table scatter on the paged layout
         match self.kv.layout() {
-            KvLayout::Dense => self.splice_cache_rows(kc_new, vc_new, &filled)?,
-            KvLayout::Paged => self.append_pages(kc_new, vc_new, &filled)?,
+            KvLayout::Dense => self.splice_cache_rows(kc_new, vc_new, filled)?,
+            KvLayout::Paged => self.append_pages(kc_new, vc_new, filled)?,
         }
 
         let mut responses = Vec::new();
-        for &i in &filled {
+        for &i in filled {
             let first = self.sample_row(&logits, i)?;
             self.pos[i] = lens[i];
             self.last_token[i] = first;
@@ -759,7 +823,12 @@ impl Engine {
         for &i in &decoding {
             self.kv.grow_to(i, self.pos[i] as usize)?;
         }
-        self.metrics.decode_steps += 1;
+        // the growth above is idempotent, so a fault here (or a failed
+        // execute below) leaves a state a retried tick replays exactly:
+        // no position advanced, no slot rng consumed, caches untouched
+        self.faults
+            .check(FaultSite::Decode)
+            .map_err(anyhow::Error::new)?;
         // steady-state host traffic: two (B,) i32 vectors (plus the
         // (B, pages_per_slot) block table when paged) up, one (B, V)
         // logits matrix (plus the (E,) expert counts when exposed)
@@ -816,6 +885,7 @@ impl Engine {
         self.v_cache = pop_out(&mut outs, &artifact)?.into_buffer()?;
         self.k_cache = pop_out(&mut outs, &artifact)?.into_buffer()?;
         let logits = pop_out(&mut outs, &artifact)?.into_host()?;
+        self.metrics.decode_steps += 1;
         if telemetry {
             if let Some(counts) = counts {
                 // per-expert routed-token counts for the WHOLE static
@@ -871,6 +941,9 @@ impl Engine {
     fn splice_cache_rows(
         &mut self, kc_new: xla::PjRtBuffer, vc_new: xla::PjRtBuffer, slots: &[usize],
     ) -> Result<()> {
+        self.faults
+            .check(FaultSite::Splice)
+            .map_err(anyhow::Error::new)?;
         if slots.len() == self.width {
             // whole batch refilled: adopt wholesale, no copies
             self.k_cache = kc_new;
@@ -923,6 +996,9 @@ impl Engine {
     fn append_pages(
         &mut self, kc_new: xla::PjRtBuffer, vc_new: xla::PjRtBuffer, slots: &[usize],
     ) -> Result<()> {
+        self.faults
+            .check(FaultSite::Append)
+            .map_err(anyhow::Error::new)?;
         let name = self.cfg.page_append_artifact.clone();
         let mut mask = vec![0i32; self.width];
         for &s in slots {

@@ -1,0 +1,223 @@
+//! Deterministic fault injection for the serving loop.
+//!
+//! A [`FaultInjector`] sits in front of every runtime call site inside
+//! `Engine::tick` (prefill execute, cache splice, page append, decode
+//! execute).  It replays a *seeded, pre-drawn* fault schedule keyed by a
+//! monotonic call counter, so a chaos run is exactly reproducible: the
+//! same seed yields the same faults at the same call indices, every run.
+//!
+//! Faults come in two flavours, mirroring how real accelerator stacks
+//! fail:
+//!
+//!   * [`FaultKind::Transient`] — a one-off execute error (watchdog
+//!     blip, preempted stream).  The front-end retries the tick with
+//!     bounded backoff; because the fault is keyed to a call index, the
+//!     retry crosses a *new* index and proceeds.
+//!   * [`FaultKind::Permanent`] — the device is gone.  The front-end
+//!     aborts and drains every admitted request with a typed outcome.
+//!
+//! Injection happens *before* the runtime call, never after: an injected
+//! fault leaves device state exactly as it was, which is what makes
+//! retried ticks bit-identical to a fault-free run.
+
+use std::collections::BTreeMap;
+
+use crate::rng::Rng;
+
+/// How a fault behaves once surfaced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// One-off failure; the same operation retried later succeeds.
+    Transient,
+    /// Unrecoverable failure; the serving loop must drain and halt.
+    Permanent,
+}
+
+/// Which runtime call site a fault fired at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The batched prefill execute.
+    Prefill,
+    /// The dense-cache row splice.
+    Splice,
+    /// The paged-cache page append.
+    Append,
+    /// The decode-step execute.
+    Decode,
+}
+
+/// Error payload carried through `anyhow` when an injected fault fires.
+///
+/// Recover the kind from an `anyhow::Error` chain with [`fault_kind`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultError {
+    /// Transient or permanent.
+    pub kind: FaultKind,
+    /// The call site that faulted.
+    pub site: FaultSite,
+    /// The monotonic call index the fault was scheduled at.
+    pub call: u64,
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "injected {:?} fault at {:?} (call {})",
+            self.kind, self.site, self.call
+        )
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Extract the injected-fault kind from an error chain, if the error
+/// originates from a [`FaultInjector`].  Real runtime errors return
+/// `None` — callers treat those as permanent.
+pub fn fault_kind(err: &anyhow::Error) -> Option<FaultKind> {
+    err.downcast_ref::<FaultError>().map(|f| f.kind)
+}
+
+/// Seeded, deterministic fault schedule over runtime call sites.
+///
+/// The injector counts every guarded runtime call; when the counter hits
+/// a scheduled index the call errs *instead of executing*.  A disabled
+/// injector (the default) is free: one integer increment per call.
+#[derive(Clone, Debug, Default)]
+pub struct FaultInjector {
+    schedule: BTreeMap<u64, FaultKind>,
+    calls: u64,
+    fired: u64,
+}
+
+impl FaultInjector {
+    /// Injector that never fires (production default).
+    pub fn disabled() -> Self {
+        FaultInjector::default()
+    }
+
+    /// Injector firing exactly at the given call indices.
+    pub fn scripted(faults: impl IntoIterator<Item = (u64, FaultKind)>) -> Self {
+        FaultInjector {
+            schedule: faults.into_iter().collect(),
+            calls: 0,
+            fired: 0,
+        }
+    }
+
+    /// Random schedule over the first `horizon` calls: each call index
+    /// independently draws a permanent fault with probability
+    /// `permanent_rate`, else a transient fault with probability
+    /// `transient_rate`.  Same seed, same schedule — the whole chaos
+    /// harness keys off this determinism.
+    pub fn seeded(seed: u64, horizon: u64, transient_rate: f64, permanent_rate: f64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA01_7BAD_5EED_0001);
+        let mut schedule = BTreeMap::new();
+        for call in 0..horizon {
+            let u = rng.uniform();
+            if u < permanent_rate {
+                schedule.insert(call, FaultKind::Permanent);
+            } else if u < permanent_rate + transient_rate {
+                schedule.insert(call, FaultKind::Transient);
+            }
+        }
+        FaultInjector { schedule, calls: 0, fired: 0 }
+    }
+
+    /// Guard one runtime call: errs if a fault is scheduled at the
+    /// current call index, then advances the counter either way.
+    pub fn check(&mut self, site: FaultSite) -> Result<(), FaultError> {
+        let call = self.calls;
+        self.calls += 1;
+        match self.schedule.get(&call) {
+            Some(&kind) => {
+                self.fired += 1;
+                Err(FaultError { kind, site, call })
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Runtime calls guarded so far.
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Faults fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// True when the schedule could still fire (telemetry / tests).
+    pub fn is_armed(&self) -> bool {
+        self.schedule.keys().any(|&c| c >= self.calls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_injector_never_fires() {
+        let mut inj = FaultInjector::disabled();
+        for _ in 0..100 {
+            assert!(inj.check(FaultSite::Decode).is_ok());
+        }
+        assert_eq!(inj.fired(), 0);
+        assert_eq!(inj.calls(), 100);
+        assert!(!inj.is_armed());
+    }
+
+    #[test]
+    fn scripted_schedule_fires_at_exact_indices() {
+        let mut inj = FaultInjector::scripted([
+            (1, FaultKind::Transient),
+            (3, FaultKind::Permanent),
+        ]);
+        assert!(inj.check(FaultSite::Prefill).is_ok()); // call 0
+        let e = inj.check(FaultSite::Prefill).unwrap_err(); // call 1
+        assert_eq!(e.kind, FaultKind::Transient);
+        assert_eq!(e.call, 1);
+        assert!(inj.check(FaultSite::Decode).is_ok()); // call 2
+        let e = inj.check(FaultSite::Decode).unwrap_err(); // call 3
+        assert_eq!(e.kind, FaultKind::Permanent);
+        assert!(!inj.is_armed(), "schedule exhausted");
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let a = FaultInjector::seeded(42, 1000, 0.05, 0.01);
+        let b = FaultInjector::seeded(42, 1000, 0.05, 0.01);
+        assert_eq!(a.schedule, b.schedule);
+        let c = FaultInjector::seeded(43, 1000, 0.05, 0.01);
+        assert_ne!(a.schedule, c.schedule, "different seed, different schedule");
+    }
+
+    #[test]
+    fn seeded_rates_roughly_respected() {
+        let inj = FaultInjector::seeded(7, 10_000, 0.10, 0.02);
+        let total = inj.schedule.len() as f64 / 10_000.0;
+        assert!((total - 0.12).abs() < 0.02, "combined rate ~0.12, got {total}");
+        let perm = inj
+            .schedule
+            .values()
+            .filter(|&&k| k == FaultKind::Permanent)
+            .count() as f64
+            / 10_000.0;
+        assert!((perm - 0.02).abs() < 0.01, "permanent rate ~0.02, got {perm}");
+    }
+
+    #[test]
+    fn fault_kind_survives_anyhow_context_chain() {
+        let err = anyhow::Error::new(FaultError {
+            kind: FaultKind::Transient,
+            site: FaultSite::Append,
+            call: 9,
+        })
+        .context("serve decode step");
+        assert_eq!(fault_kind(&err), Some(FaultKind::Transient));
+        let real = anyhow::anyhow!("actual device error");
+        assert_eq!(fault_kind(&real), None);
+    }
+}

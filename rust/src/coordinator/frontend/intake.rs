@@ -1,0 +1,128 @@
+//! Intake gate: bounded pending queue, typed rejection, load shedding.
+//!
+//! The engine's own admission queue rejects on overflow, but it does so
+//! with an untyped `false`.  The front-end needs to tell callers *why* a
+//! request bounced — a full queue asks for client retry with backoff, an
+//! impossible request asks for a smaller prompt, and a shed under
+//! overload asks for load to be routed elsewhere.  [`IntakePolicy::gate`]
+//! runs before `Engine::submit` and makes that taxonomy explicit.
+
+/// Why the front-end refused a request at intake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded pending queue is full — retry later.
+    QueueFull,
+    /// The request could never be served (over-long prompt or a
+    /// worst-case page need beyond the whole pool) — shrink it.
+    NeverAdmissible,
+    /// Load shedding: the overload watermark tripped on queue depth or
+    /// free-page headroom — route load elsewhere.
+    ShedOverload,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "queue full"),
+            RejectReason::NeverAdmissible => write!(f, "never admissible"),
+            RejectReason::ShedOverload => write!(f, "shed under overload"),
+        }
+    }
+}
+
+/// Backpressure policy applied before a request reaches the engine.
+#[derive(Clone, Copy, Debug)]
+pub struct IntakePolicy {
+    /// Hard cap on the pending queue — at or beyond it, intake rejects
+    /// with [`RejectReason::QueueFull`].
+    pub max_pending: usize,
+    /// Shed watermark on queue depth: at or beyond this many queued
+    /// requests, intake sheds before the hard cap is hit.  `None`
+    /// disables depth-based shedding.
+    pub shed_queue_depth: Option<usize>,
+    /// Shed watermark on page headroom: when fewer than this fraction
+    /// of usable pages is reclaimable, intake sheds.  `None` disables
+    /// page-based shedding (and dense layouts have no page budget).
+    pub shed_min_free_frac: Option<f64>,
+}
+
+impl Default for IntakePolicy {
+    fn default() -> Self {
+        IntakePolicy {
+            max_pending: 256,
+            shed_queue_depth: None,
+            shed_min_free_frac: None,
+        }
+    }
+}
+
+impl IntakePolicy {
+    /// Gate one arrival given the current queue depth and the paged
+    /// layout's `(reclaimable, usable)` page budget (`None` on dense).
+    /// `Ok(())` means the request may proceed to `Engine::submit`.
+    pub fn gate(
+        &self,
+        queue_len: usize,
+        pages: Option<(usize, usize)>,
+    ) -> Result<(), RejectReason> {
+        if queue_len >= self.max_pending {
+            return Err(RejectReason::QueueFull);
+        }
+        if self.shed_queue_depth.is_some_and(|d| queue_len >= d) {
+            return Err(RejectReason::ShedOverload);
+        }
+        if let (Some(frac), Some((reclaimable, usable))) = (self.shed_min_free_frac, pages) {
+            if (reclaimable as f64) < frac * usable as f64 {
+                return Err(RejectReason::ShedOverload);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_only_caps_queue() {
+        let p = IntakePolicy::default();
+        assert_eq!(p.gate(0, None), Ok(()));
+        assert_eq!(p.gate(255, None), Ok(()));
+        assert_eq!(p.gate(256, None), Err(RejectReason::QueueFull));
+        assert_eq!(p.gate(300, None), Err(RejectReason::QueueFull));
+    }
+
+    #[test]
+    fn depth_watermark_sheds_before_hard_cap() {
+        let p = IntakePolicy {
+            max_pending: 16,
+            shed_queue_depth: Some(8),
+            ..Default::default()
+        };
+        assert_eq!(p.gate(7, None), Ok(()));
+        assert_eq!(p.gate(8, None), Err(RejectReason::ShedOverload));
+        // the hard cap still wins when both trip
+        assert_eq!(p.gate(16, None), Err(RejectReason::QueueFull));
+    }
+
+    #[test]
+    fn page_watermark_sheds_on_low_headroom() {
+        let p = IntakePolicy {
+            shed_min_free_frac: Some(0.25),
+            ..Default::default()
+        };
+        // 30/100 reclaimable: above the 25% watermark
+        assert_eq!(p.gate(0, Some((30, 100))), Ok(()));
+        // 20/100 reclaimable: below it
+        assert_eq!(p.gate(0, Some((20, 100))), Err(RejectReason::ShedOverload));
+        // dense layout (no budget): the page watermark is moot
+        assert_eq!(p.gate(0, None), Ok(()));
+    }
+
+    #[test]
+    fn reject_reasons_render() {
+        assert_eq!(RejectReason::QueueFull.to_string(), "queue full");
+        assert_eq!(RejectReason::ShedOverload.to_string(), "shed under overload");
+    }
+}

@@ -1,0 +1,510 @@
+//! Open-loop serving front-end: intake, deadlines, fault recovery.
+//!
+//! The engine is a tick driver; this module is the loop around it that
+//! real serving needs.  [`ServeFrontend`] consumes a time-stamped
+//! arrival stream *open-loop* (arrivals keep coming whether or not the
+//! engine keeps up — the regime where overload behaviour actually
+//! shows) and drives any [`ServingEngine`] through four concerns:
+//!
+//!   * **intake** — every arrival passes the [`IntakePolicy`] gate
+//!     before `submit`; refusals carry a typed [`RejectReason`]
+//!     (full queue / impossible request / load shed).
+//!   * **deadlines** — per-request TTFT deadlines and total-latency
+//!     budgets are checked every step; expired requests cancel through
+//!     the engine, reclaiming their pages and reservations.
+//!   * **fault recovery** — a failed tick is classified via
+//!     [`fault_kind`]: transient faults retry the tick with bounded
+//!     backoff (an engine whose failed tick left no partial state —
+//!     see the injection sites in `Engine::tick` — replays it
+//!     bit-identically); anything else is permanent, and the front-end
+//!     aborts, drains every admitted request with a typed outcome, and
+//!     halts.
+//!   * **SLO reporting** — every arrival ends in exactly one
+//!     [`RequestOutcome`]; [`ServeFrontend::report`] folds them into a
+//!     [`ServeReport`] with TTFT/TPOT/goodput distributions.
+//!
+//! The front-end runs on a wall clock in production and on a virtual
+//! (tick-counted) clock in tests ([`ClockMode`]), where a whole chaos
+//! run — arrivals, expiries, faults, retries — is deterministic given
+//! its seeds.  [`sim::SimEngine`] supplies an artifact-free engine with
+//! the same admission/page machinery, so the chaos property suite runs
+//! on a bare checkout.
+
+pub mod faults;
+pub mod intake;
+pub mod sim;
+pub mod slo;
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{Engine, EngineMetrics};
+use crate::coordinator::request::{RequestId, Response, SamplingParams};
+
+use faults::{fault_kind, FaultKind};
+use intake::{IntakePolicy, RejectReason};
+use slo::ServeReport;
+
+/// The engine surface the front-end drives.  Implemented by the real
+/// PJRT [`Engine`] and by the artifact-free [`sim::SimEngine`] the
+/// chaos suite runs against.
+pub trait ServingEngine {
+    /// Submit a request: `Ok(Some(id))` when queued, `Ok(None)` under
+    /// queue backpressure, `Err` when the request can never be served.
+    fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams)
+        -> Result<Option<RequestId>>;
+    /// Drive one tick; returns any responses completed during it.
+    fn tick(&mut self) -> Result<Vec<Response>>;
+    /// Cancel one request wherever it lives, reclaiming its pages.
+    fn cancel(&mut self, id: RequestId) -> Option<Response>;
+    /// Abort every queued and in-flight request (drain).
+    fn abort_all(&mut self) -> Vec<Response>;
+    /// True when no work remains anywhere.
+    fn is_idle(&self) -> bool;
+    /// Requests waiting for a slot.
+    fn queue_len(&self) -> usize;
+    /// Reclaimable / usable pool pages (`None` on dense layouts).
+    fn page_budget(&self) -> Option<(usize, usize)>;
+    /// True while `id` has produced no token yet.
+    fn awaiting_first_token(&self, id: RequestId) -> bool;
+    /// Serving metrics snapshot.
+    fn metrics(&self) -> &EngineMetrics;
+    /// Mutable metrics (the front-end books sheds/retries/misses here).
+    fn metrics_mut(&mut self) -> &mut EngineMetrics;
+}
+
+impl ServingEngine for Engine {
+    fn submit(
+        &mut self, prompt: Vec<i32>, params: SamplingParams,
+    ) -> Result<Option<RequestId>> {
+        Engine::submit(self, prompt, params)
+    }
+    fn tick(&mut self) -> Result<Vec<Response>> {
+        Engine::tick(self)
+    }
+    fn cancel(&mut self, id: RequestId) -> Option<Response> {
+        Engine::cancel(self, id)
+    }
+    fn abort_all(&mut self) -> Vec<Response> {
+        Engine::abort_all(self)
+    }
+    fn is_idle(&self) -> bool {
+        Engine::is_idle(self)
+    }
+    fn queue_len(&self) -> usize {
+        Engine::queue_len(self)
+    }
+    fn page_budget(&self) -> Option<(usize, usize)> {
+        Engine::page_budget(self)
+    }
+    fn awaiting_first_token(&self, id: RequestId) -> bool {
+        Engine::awaiting_first_token(self, id)
+    }
+    fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+    fn metrics_mut(&mut self) -> &mut EngineMetrics {
+        &mut self.metrics
+    }
+}
+
+/// Bounded-retry policy for transient tick faults.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Consecutive failed ticks tolerated before escalating to a drain.
+    pub max_retries: u32,
+    /// Linear backoff unit: retry `n` waits `n * backoff_s` seconds.
+    pub backoff_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, backoff_s: 0.002 }
+    }
+}
+
+/// How the front-end measures time.
+#[derive(Clone, Copy, Debug)]
+pub enum ClockMode {
+    /// Real wall clock; idle gaps sleep.
+    Wall,
+    /// Deterministic virtual clock: each tick advances time by
+    /// `tick_s`, idle gaps jump straight to the next arrival.  Chaos
+    /// tests run here so deadline expiry is seed-reproducible.
+    Virtual {
+        /// Virtual seconds one engine tick is deemed to take.
+        tick_s: f64,
+    },
+}
+
+/// Front-end configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendConfig {
+    /// Intake gate (queue bound + shed watermarks).  Its `max_pending`
+    /// should not exceed the engine's own `max_queue`, or the engine's
+    /// untyped rejection fires first.
+    pub intake: IntakePolicy,
+    /// Expire a request that produced no token within this many seconds
+    /// of submission (`None` disables TTFT deadlines).
+    pub ttft_deadline_s: Option<f64>,
+    /// Expire a request outright this many seconds after submission
+    /// (`None` disables total-latency budgets).
+    pub deadline_s: Option<f64>,
+    /// Transient-fault retry policy.
+    pub retry: RetryPolicy,
+    /// Wall or virtual time.
+    pub clock: ClockMode,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            intake: IntakePolicy::default(),
+            ttft_deadline_s: None,
+            deadline_s: None,
+            retry: RetryPolicy::default(),
+            clock: ClockMode::Wall,
+        }
+    }
+}
+
+/// One time-stamped arrival in the open-loop stream.
+#[derive(Clone, Debug)]
+pub struct ArrivingRequest {
+    /// Arrival time, seconds from run start.
+    pub at: f64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Generation parameters.
+    pub params: SamplingParams,
+    /// Caller-chosen stable tag.  Outcomes key on it, not on the
+    /// engine's [`RequestId`] (ids burn on queue-full rejections, so
+    /// only the tag is comparable across runs).
+    pub tag: u64,
+}
+
+/// The single terminal outcome of one arrival.
+#[derive(Clone, Debug)]
+pub enum RequestOutcome {
+    /// Finished normally.
+    Completed(Response),
+    /// Refused at intake with a typed reason.
+    Rejected(RejectReason),
+    /// Expired on its TTFT deadline before producing a token.
+    TtftExpired(Response),
+    /// Expired on its total-latency budget.
+    DeadlineExpired(Response),
+    /// Cancelled by the caller.
+    Cancelled(Response),
+    /// Drained by a permanent fault.
+    Drained(Response),
+}
+
+/// What one [`ServeFrontend::step`] left the loop in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontendStatus {
+    /// Work (or future arrivals) remain.
+    Running,
+    /// Every arrival reached a terminal outcome.
+    Done,
+    /// A permanent fault drained the engine; remaining arrivals are
+    /// unserved.
+    Halted,
+}
+
+struct LiveRequest {
+    tag: u64,
+    submitted_at: f64,
+}
+
+/// Open-loop driver around a [`ServingEngine`] (see module docs).
+pub struct ServeFrontend<E: ServingEngine> {
+    engine: E,
+    cfg: FrontendConfig,
+    started: Instant,
+    vnow: f64,
+    arrivals: VecDeque<ArrivingRequest>,
+    live: HashMap<RequestId, LiveRequest>,
+    outcomes: Vec<(u64, RequestOutcome)>,
+    attempts: u32,
+    fatal: Option<String>,
+    ticks: u64,
+}
+
+impl<E: ServingEngine> ServeFrontend<E> {
+    /// Wrap an engine; arrivals are loaded with
+    /// [`ServeFrontend::push_arrivals`].
+    pub fn new(engine: E, cfg: FrontendConfig) -> Self {
+        ServeFrontend {
+            engine,
+            cfg,
+            started: Instant::now(),
+            vnow: 0.0,
+            arrivals: VecDeque::new(),
+            live: HashMap::new(),
+            outcomes: Vec::new(),
+            attempts: 0,
+            fatal: None,
+            ticks: 0,
+        }
+    }
+
+    /// The wrapped engine.
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    /// Mutable access to the wrapped engine.
+    pub fn engine_mut(&mut self) -> &mut E {
+        &mut self.engine
+    }
+
+    /// Load arrivals (merged and kept sorted by arrival time).
+    pub fn push_arrivals(&mut self, items: impl IntoIterator<Item = ArrivingRequest>) {
+        self.arrivals.extend(items);
+        self.arrivals
+            .make_contiguous()
+            .sort_by(|a, b| a.at.total_cmp(&b.at));
+    }
+
+    /// Current time on the configured clock, seconds from run start.
+    pub fn now(&self) -> f64 {
+        match self.cfg.clock {
+            ClockMode::Wall => self.started.elapsed().as_secs_f64(),
+            ClockMode::Virtual { .. } => self.vnow,
+        }
+    }
+
+    /// The permanent fault that halted the run, if any.
+    pub fn fatal(&self) -> Option<&str> {
+        self.fatal.as_deref()
+    }
+
+    /// Terminal outcomes recorded so far, `(tag, outcome)` pairs in
+    /// the order they resolved.
+    pub fn outcomes(&self) -> &[(u64, RequestOutcome)] {
+        &self.outcomes
+    }
+
+    /// Ids currently live in the engine, ascending (deterministic).
+    pub fn live_ids(&self) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> = self.live.keys().copied().collect();
+        ids.sort();
+        ids
+    }
+
+    /// Cancel one live request through the engine, recording a
+    /// [`RequestOutcome::Cancelled`].  Returns whether it was live.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        let Some(lr) = self.live.remove(&id) else {
+            return false;
+        };
+        if let Some(resp) = self.engine.cancel(id) {
+            self.outcomes.push((lr.tag, RequestOutcome::Cancelled(resp)));
+        }
+        true
+    }
+
+    /// Sleep (wall) or jump (virtual) `dt` seconds forward.
+    fn advance(&mut self, dt: f64) {
+        match self.cfg.clock {
+            ClockMode::Wall => {
+                let dt = dt.clamp(0.0, 0.05);
+                if dt > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+                }
+            }
+            ClockMode::Virtual { .. } => self.vnow += dt.max(0.0),
+        }
+    }
+
+    /// Offer every due arrival to the engine through the intake gate.
+    fn offer(&mut self) {
+        let now = self.now();
+        while self.arrivals.front().is_some_and(|a| a.at <= now) {
+            let arr = self.arrivals.pop_front().expect("front just checked");
+            if let Err(reason) = self
+                .cfg
+                .intake
+                .gate(self.engine.queue_len(), self.engine.page_budget())
+            {
+                if reason == RejectReason::ShedOverload {
+                    self.engine.metrics_mut().sheds += 1;
+                }
+                self.outcomes.push((arr.tag, RequestOutcome::Rejected(reason)));
+                continue;
+            }
+            match self.engine.submit(arr.prompt, arr.params) {
+                Ok(Some(id)) => {
+                    self.live
+                        .insert(id, LiveRequest { tag: arr.tag, submitted_at: now });
+                }
+                Ok(None) => {
+                    self.outcomes
+                        .push((arr.tag, RequestOutcome::Rejected(RejectReason::QueueFull)));
+                }
+                Err(_) => {
+                    self.outcomes.push((
+                        arr.tag,
+                        RequestOutcome::Rejected(RejectReason::NeverAdmissible),
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Cancel every live request past its deadline.  The total-latency
+    /// budget is checked first (it subsumes TTFT); the TTFT deadline
+    /// only fires while the request has produced no token.
+    fn expire_deadlines(&mut self) {
+        if self.cfg.ttft_deadline_s.is_none() && self.cfg.deadline_s.is_none() {
+            return;
+        }
+        let now = self.now();
+        let mut expired: Vec<(RequestId, bool)> = Vec::new();
+        for (&id, lr) in &self.live {
+            let age = now - lr.submitted_at;
+            if self.cfg.deadline_s.is_some_and(|d| age >= d) {
+                expired.push((id, false));
+            } else if self.cfg.ttft_deadline_s.is_some_and(|d| age >= d)
+                && self.engine.awaiting_first_token(id)
+            {
+                expired.push((id, true));
+            }
+        }
+        // HashMap iteration order is arbitrary — sort so expiry order
+        // (and therefore the engine's reclamation order) is
+        // deterministic for the chaos runs
+        expired.sort();
+        for (id, is_ttft) in expired {
+            let lr = self.live.remove(&id).expect("collected from live");
+            if let Some(resp) = self.engine.cancel(id) {
+                self.engine.metrics_mut().deadline_misses += 1;
+                let outcome = if is_ttft {
+                    RequestOutcome::TtftExpired(resp)
+                } else {
+                    RequestOutcome::DeadlineExpired(resp)
+                };
+                self.outcomes.push((lr.tag, outcome));
+            }
+        }
+    }
+
+    /// One front-end step: offer due arrivals, expire deadlines, then
+    /// either tick the engine or advance time to the next arrival.
+    pub fn step(&mut self) -> FrontendStatus {
+        if self.fatal.is_some() {
+            return FrontendStatus::Halted;
+        }
+        self.offer();
+        self.expire_deadlines();
+        if self.engine.is_idle() {
+            let Some(next) = self.arrivals.front() else {
+                return FrontendStatus::Done;
+            };
+            let gap = next.at - self.now();
+            match self.cfg.clock {
+                ClockMode::Wall => self.advance(gap),
+                // jump straight to the arrival; `offer` drained every
+                // due arrival above, so `gap > 0` and time advances
+                ClockMode::Virtual { .. } => self.vnow += gap.max(0.0),
+            }
+            return FrontendStatus::Running;
+        }
+        match self.engine.tick() {
+            Ok(responses) => {
+                self.attempts = 0;
+                self.ticks += 1;
+                if let ClockMode::Virtual { tick_s } = self.cfg.clock {
+                    self.vnow += tick_s;
+                }
+                for resp in responses {
+                    if let Some(lr) = self.live.remove(&resp.id) {
+                        self.outcomes.push((lr.tag, RequestOutcome::Completed(resp)));
+                    }
+                }
+                FrontendStatus::Running
+            }
+            Err(e) => self.handle_tick_error(e),
+        }
+    }
+
+    /// Classify a failed tick: transient → bounded retry with linear
+    /// backoff; permanent (or retries exhausted) → abort, drain every
+    /// admitted request with a typed outcome, halt.
+    fn handle_tick_error(&mut self, e: anyhow::Error) -> FrontendStatus {
+        let kind = fault_kind(&e).unwrap_or(FaultKind::Permanent);
+        if kind == FaultKind::Transient && self.attempts < self.cfg.retry.max_retries {
+            self.attempts += 1;
+            self.engine.metrics_mut().retries += 1;
+            let backoff = self.cfg.retry.backoff_s * f64::from(self.attempts);
+            log::warn!(
+                "frontend: transient tick fault (attempt {}/{}, backing off {:.3}s): {e:#}",
+                self.attempts,
+                self.cfg.retry.max_retries,
+                backoff
+            );
+            self.advance(backoff);
+            return FrontendStatus::Running;
+        }
+        log::error!("frontend: permanent tick fault, draining: {e:#}");
+        self.fatal = Some(format!("{e:#}"));
+        for resp in self.engine.abort_all() {
+            if let Some(lr) = self.live.remove(&resp.id) {
+                self.outcomes.push((lr.tag, RequestOutcome::Drained(resp)));
+            }
+        }
+        FrontendStatus::Halted
+    }
+
+    /// Drive steps until the run completes or halts, then report.
+    pub fn run(&mut self) -> ServeReport {
+        loop {
+            match self.step() {
+                FrontendStatus::Running => {}
+                FrontendStatus::Done | FrontendStatus::Halted => break,
+            }
+        }
+        self.report()
+    }
+
+    /// Fold the outcomes into a [`ServeReport`].
+    pub fn report(&self) -> ServeReport {
+        let mut rep = ServeReport {
+            wall_s: self.now(),
+            ticks: self.ticks,
+            fatal: self.fatal.clone(),
+            unserved: self.arrivals.len() as u64,
+            retries: self.engine.metrics().retries,
+            ..Default::default()
+        };
+        for (_, outcome) in &self.outcomes {
+            match outcome {
+                RequestOutcome::Completed(resp) => {
+                    rep.completed += 1;
+                    rep.completed_tokens += resp.tokens.len() as u64;
+                    rep.ttft.record(resp.ttft);
+                    rep.e2e.record(resp.latency);
+                    if resp.tokens.len() >= 2 {
+                        let decode = (resp.latency - resp.ttft).max(0.0);
+                        rep.tpot.record(decode / (resp.tokens.len() - 1) as f64);
+                    }
+                }
+                RequestOutcome::Rejected(RejectReason::QueueFull) => {
+                    rep.rejected_queue_full += 1;
+                }
+                RequestOutcome::Rejected(RejectReason::NeverAdmissible) => {
+                    rep.rejected_never_admissible += 1;
+                }
+                RequestOutcome::Rejected(RejectReason::ShedOverload) => rep.shed += 1,
+                RequestOutcome::TtftExpired(_) => rep.expired_ttft += 1,
+                RequestOutcome::DeadlineExpired(_) => rep.expired_total += 1,
+                RequestOutcome::Cancelled(_) => rep.cancelled += 1,
+                RequestOutcome::Drained(_) => rep.drained += 1,
+            }
+        }
+        rep
+    }
+}

@@ -1,0 +1,443 @@
+//! Artifact-free serving engine for the chaos property suite.
+//!
+//! [`SimEngine`] wires the *real* admission machinery — [`Batcher`],
+//! [`Scheduler`], paged [`KvCacheManager`], [`FaultInjector`] — around a
+//! deterministic token function instead of the PJRT runtime, mirroring
+//! `Engine::tick`'s structure call for call: the same admissible-now
+//! simulation, the same FIFO refill gate, the same lazy growth, the
+//! same release-on-retire/cancel paths, and the same fault-injection
+//! sites with the same rollback contract (a failed prefill requeues its
+//! admitted slots front-first and reclaims their pages).
+//!
+//! Because the token function is a pure function of the slot's private
+//! rng (recreated from the request seed at every admission) and its
+//! prompt, a request that is requeued by a fault and admitted again
+//! replays its token stream bit-identically — the property the chaos
+//! suite pins against a fault-free run of the same seed.  No artifacts,
+//! no device: the whole suite runs on a bare checkout.
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::engine::EngineMetrics;
+use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
+use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
+
+use super::faults::{FaultInjector, FaultSite};
+use super::ServingEngine;
+
+/// Geometry + policy knobs for a [`SimEngine`].
+#[derive(Clone, Copy, Debug)]
+pub struct SimEngineConfig {
+    /// Static decode batch width.
+    pub width: usize,
+    /// Maximum sequence length per slot.
+    pub max_len: usize,
+    /// Maximum prompt length (over-long prompts reject at submit).
+    pub prompt_width: usize,
+    /// Page-pool size including the reserved garbage page.
+    pub num_pages: usize,
+    /// KV rows per page.
+    pub page_size: usize,
+    /// Admission-queue bound.
+    pub max_queue: usize,
+    /// Cache-policy knobs (lazy growth / CoW sharing / retained pool).
+    pub kv: KvCacheConfig,
+    /// Prefill/decode interleaving policy.
+    pub scheduler: SchedulerConfig,
+}
+
+impl Default for SimEngineConfig {
+    fn default() -> Self {
+        SimEngineConfig {
+            width: 4,
+            max_len: 64,
+            prompt_width: 32,
+            num_pages: 21,
+            page_size: 8,
+            max_queue: 64,
+            kv: KvCacheConfig::default(),
+            scheduler: SchedulerConfig::default(),
+        }
+    }
+}
+
+/// Artifact-free engine twin (see module docs).
+pub struct SimEngine {
+    cfg: SimEngineConfig,
+    batcher: Batcher,
+    scheduler: Scheduler,
+    kv: KvCacheManager,
+    /// per-slot next position (= current sequence length)
+    pos: Vec<usize>,
+    faults: FaultInjector,
+    /// Serving metrics (same shape as the real engine's).
+    pub metrics: EngineMetrics,
+    next_id: u64,
+}
+
+impl SimEngine {
+    /// Build a sim engine over a paged KV pool of `cfg`'s geometry.
+    pub fn new(cfg: SimEngineConfig) -> Self {
+        assert!(
+            cfg.max_len % cfg.page_size == 0,
+            "max_len must be page-aligned"
+        );
+        let kv = KvCacheManager::paged(
+            cfg.width,
+            cfg.max_len,
+            cfg.num_pages,
+            cfg.page_size,
+            cfg.max_len / cfg.page_size,
+            cfg.kv,
+        );
+        SimEngine {
+            batcher: Batcher::new(cfg.width, cfg.max_queue),
+            scheduler: Scheduler::new(cfg.scheduler),
+            kv,
+            pos: vec![0; cfg.width],
+            faults: FaultInjector::disabled(),
+            metrics: EngineMetrics::default(),
+            next_id: 0,
+            cfg,
+        }
+    }
+
+    /// Arm a deterministic fault schedule (same sites as the engine).
+    pub fn inject_faults(&mut self, faults: FaultInjector) {
+        self.faults = faults;
+    }
+
+    /// Page-allocator conservation audit; panics on violation.
+    pub fn audit(&self) {
+        self.kv.audit();
+    }
+
+    /// Conservation counters: (admitted, finished, active, queued).
+    pub fn accounting(&self) -> (u64, u64, u64, u64) {
+        self.batcher.accounting()
+    }
+
+    /// Free pages promised to in-flight slots for lazy growth.
+    pub fn page_reservations(&self) -> Option<usize> {
+        self.kv.reservations()
+    }
+
+    /// Submit a request — same contract as `Engine::submit`:
+    /// `Ok(Some(id))` queued, `Ok(None)` queue backpressure, `Err`
+    /// never admissible.
+    pub fn submit(
+        &mut self, prompt: Vec<i32>, params: SamplingParams,
+    ) -> Result<Option<RequestId>> {
+        anyhow::ensure!(
+            prompt.len() <= self.cfg.prompt_width,
+            "prompt of {} tokens exceeds the sim prompt width {}",
+            prompt.len(),
+            self.cfg.prompt_width
+        );
+        if !self.kv.ever_admissible(prompt.len(), params.max_new_tokens) {
+            anyhow::bail!(
+                "request needs {} KV pages worst-case but the pool only holds {}",
+                self.kv.pages_needed(prompt.len(), params.max_new_tokens),
+                self.kv.page_budget().map_or(0, |(_, usable)| usable)
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request::new(id, prompt, params);
+        let rid = req.id;
+        if self.batcher.submit(req) {
+            Ok(Some(rid))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Drive one tick — the same decision structure as `Engine::tick`.
+    pub fn tick(&mut self) -> Result<Vec<Response>> {
+        let (_, _, active, queued) = self.batcher.accounting();
+        let empty = self.cfg.width - active as usize;
+        let admissible = self.kv.admissible_now(
+            self.batcher
+                .queued_requests()
+                .map(|r| (r.prompt.as_slice(), r.params.max_new_tokens)),
+            queued as usize,
+            empty,
+        );
+        if admissible == 0 && queued > 0 && empty > 0 {
+            self.metrics.page_stalls += 1;
+        }
+        let oldest = self.batcher.oldest_wait();
+        let action = self.scheduler.decide(admissible, empty, active as usize, oldest);
+        let out = match action {
+            Action::Prefill => self.do_prefill(),
+            Action::Decode => self.do_decode(),
+            Action::Idle => {
+                anyhow::ensure!(
+                    self.batcher.idle(),
+                    "scheduler idled with work queued or in flight"
+                );
+                Ok(Vec::new())
+            }
+        };
+        self.sync_kv_metrics();
+        out
+    }
+
+    fn sync_kv_metrics(&mut self) {
+        let m = self.kv.metrics().clone();
+        self.metrics.page_grows = m.page_grows;
+        self.metrics.shared_pages = m.shared_pages;
+        self.metrics.cow_copies = m.cow_copies;
+        self.metrics.prefix_hits = m.prefix_hits;
+        self.metrics.prefix_hit_tokens = m.prefix_hit_tokens;
+        self.metrics.evictions = m.evictions;
+    }
+
+    fn do_prefill(&mut self) -> Result<Vec<Response>> {
+        let kv = &mut self.kv;
+        let filled = self
+            .batcher
+            .refill_with(|req| kv.admit(&req.prompt, req.params.max_new_tokens));
+        for &slot in &filled {
+            self.kv.install(slot);
+        }
+        debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
+        if filled.is_empty() {
+            return self.do_decode();
+        }
+        // the injected fault fires before any slot state advances — the
+        // same rollback contract as the engine's prefill: requeue
+        // front-first (reversed) and reclaim pages + reservations
+        if let Err(e) = self.faults.check(FaultSite::Prefill) {
+            for &slot in filled.iter().rev() {
+                if self.batcher.requeue(slot) {
+                    self.kv.release(slot, false);
+                }
+            }
+            return Err(anyhow::Error::new(e));
+        }
+        self.metrics.prefills += 1;
+        let mut responses = Vec::new();
+        for &i in &filled {
+            let plen = self.batcher.slots()[i].prompt.len();
+            let first = self.sim_token(i);
+            self.pos[i] = plen;
+            self.batcher.complete_prefill(i, first);
+            self.metrics.generated_tokens += 1;
+            if let Some(resp) = self.maybe_finish(i, first) {
+                responses.push(resp);
+            }
+        }
+        Ok(responses)
+    }
+
+    fn do_decode(&mut self) -> Result<Vec<Response>> {
+        let decoding = self.batcher.decoding_slots();
+        if decoding.is_empty() {
+            return Ok(Vec::new());
+        }
+        for &i in &decoding {
+            self.kv.grow_to(i, self.pos[i])?;
+        }
+        // growth is idempotent, so a fault here is replayed exactly by
+        // the retried tick — mirroring the engine's decode site
+        self.faults
+            .check(FaultSite::Decode)
+            .map_err(anyhow::Error::new)?;
+        self.metrics.decode_steps += 1;
+        let mut responses = Vec::new();
+        for i in decoding {
+            let tok = self.sim_token(i);
+            self.pos[i] = (self.pos[i] + 1).min(self.cfg.max_len - 1);
+            self.metrics.generated_tokens += 1;
+            if let Some(resp) = self.maybe_finish(i, tok) {
+                responses.push(resp);
+            }
+        }
+        Ok(responses)
+    }
+
+    /// Deterministic stand-in for sample-from-logits: a pure function
+    /// of the slot's private rng stream and its prompt, so identical
+    /// (seed, prompt) admissions replay identical token streams.
+    fn sim_token(&mut self, idx: usize) -> i32 {
+        let slot = self.batcher.slot_mut(idx);
+        let h = slot.prompt.iter().fold(0x9E37u64, |acc, &t| {
+            acc.wrapping_mul(0x0100_0000_01B3).wrapping_add(t as u64)
+        });
+        ((slot.rng.next_u64() ^ h) & 0x7FFF) as i32
+    }
+
+    fn maybe_finish(&mut self, slot: usize, tok: i32) -> Option<Response> {
+        let resp = self.batcher.push_token(slot, tok)?;
+        self.kv.release(slot, true);
+        self.pos[slot] = 0;
+        self.metrics.completed += 1;
+        self.metrics.ttft.record(resp.ttft);
+        self.metrics.latency.record(resp.latency);
+        Some(resp)
+    }
+
+    /// Cancel one request (queued or in-flight), reclaiming its pages.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Response> {
+        let (resp, slot) = self.batcher.abort(id)?;
+        if let Some(slot) = slot {
+            self.kv.release(slot, false);
+            self.pos[slot] = 0;
+        }
+        self.metrics.aborted += 1;
+        self.sync_kv_metrics();
+        Some(resp)
+    }
+
+    /// Abort every queued and in-flight request (drain).
+    pub fn abort_all(&mut self) -> Vec<Response> {
+        let out = self.batcher.abort_all();
+        for slot in 0..self.cfg.width {
+            self.kv.release(slot, false);
+            self.pos[slot] = 0;
+        }
+        self.metrics.aborted += out.len() as u64;
+        self.sync_kv_metrics();
+        out
+    }
+
+    /// Requests waiting for a slot.
+    pub fn queue_len(&self) -> usize {
+        self.batcher.queue_len()
+    }
+
+    /// True when no work remains anywhere.
+    pub fn is_idle(&self) -> bool {
+        self.batcher.idle()
+    }
+
+    /// Reclaimable / usable pool pages.
+    pub fn page_budget(&self) -> Option<(usize, usize)> {
+        self.kv.page_budget()
+    }
+
+    /// True while `id` has produced no token yet.
+    pub fn awaiting_first_token(&self, id: RequestId) -> bool {
+        self.batcher.awaiting_first_token(id)
+    }
+}
+
+impl ServingEngine for SimEngine {
+    fn submit(
+        &mut self, prompt: Vec<i32>, params: SamplingParams,
+    ) -> Result<Option<RequestId>> {
+        SimEngine::submit(self, prompt, params)
+    }
+    fn tick(&mut self) -> Result<Vec<Response>> {
+        SimEngine::tick(self)
+    }
+    fn cancel(&mut self, id: RequestId) -> Option<Response> {
+        SimEngine::cancel(self, id)
+    }
+    fn abort_all(&mut self) -> Vec<Response> {
+        SimEngine::abort_all(self)
+    }
+    fn is_idle(&self) -> bool {
+        SimEngine::is_idle(self)
+    }
+    fn queue_len(&self) -> usize {
+        SimEngine::queue_len(self)
+    }
+    fn page_budget(&self) -> Option<(usize, usize)> {
+        SimEngine::page_budget(self)
+    }
+    fn awaiting_first_token(&self, id: RequestId) -> bool {
+        SimEngine::awaiting_first_token(self, id)
+    }
+    fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+    fn metrics_mut(&mut self) -> &mut EngineMetrics {
+        &mut self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::faults::FaultKind;
+    use super::*;
+
+    fn run_all(engine: &mut SimEngine) -> Vec<Response> {
+        let mut out = Vec::new();
+        let mut guard = 0;
+        while !engine.is_idle() {
+            out.extend(engine.tick().expect("fault-free tick"));
+            engine.audit();
+            guard += 1;
+            assert!(guard < 10_000, "sim failed to drain");
+        }
+        out
+    }
+
+    fn submit_batch(engine: &mut SimEngine, n: u64) {
+        for i in 0..n {
+            let prompt: Vec<i32> = (0..4 + (i % 5) as i32).map(|j| 1 + j).collect();
+            let params = SamplingParams {
+                max_new_tokens: 2 + (i % 4) as usize,
+                seed: i,
+                ..Default::default()
+            };
+            engine
+                .submit(prompt, params)
+                .expect("admissible")
+                .expect("queued");
+        }
+    }
+
+    #[test]
+    fn fault_free_run_completes_and_conserves() {
+        let mut engine = SimEngine::new(SimEngineConfig::default());
+        submit_batch(&mut engine, 10);
+        let responses = run_all(&mut engine);
+        assert_eq!(responses.len(), 10);
+        assert_eq!(engine.metrics.completed, 10);
+        let (reclaimable, usable) = engine.page_budget().expect("paged");
+        assert_eq!(reclaimable, usable, "full pool reclaimable after drain");
+        assert_eq!(engine.page_reservations(), Some(0));
+    }
+
+    #[test]
+    fn transient_prefill_fault_requeues_and_replays_identically() {
+        let tokens_of = |faults: Option<FaultInjector>| -> Vec<(u64, Vec<i32>)> {
+            let mut engine = SimEngine::new(SimEngineConfig::default());
+            if let Some(f) = faults {
+                engine.inject_faults(f);
+            }
+            submit_batch(&mut engine, 6);
+            let mut out = Vec::new();
+            let mut guard = 0;
+            while !engine.is_idle() {
+                match engine.tick() {
+                    Ok(rs) => out.extend(rs),
+                    Err(e) => {
+                        assert!(
+                            super::super::faults::fault_kind(&e).is_some(),
+                            "only injected faults expected: {e:#}"
+                        );
+                    }
+                }
+                engine.audit();
+                guard += 1;
+                assert!(guard < 10_000, "sim failed to drain");
+            }
+            let mut pairs: Vec<(u64, Vec<i32>)> =
+                out.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+            pairs.sort();
+            pairs
+        };
+        let baseline = tokens_of(None);
+        let faulted = tokens_of(Some(FaultInjector::scripted([
+            (0, FaultKind::Transient),
+            (2, FaultKind::Transient),
+        ])));
+        assert_eq!(baseline, faulted, "retried requests replay bit-identically");
+    }
+}

@@ -23,10 +23,16 @@
 //!   bursty) for the serving experiments.
 //! * [`engine`]   — ties it together around [`crate::runtime::Runtime`]:
 //!   worker loop, tokenizer-in/tokenizer-out, latency metrics.
+//! * [`frontend`] — the open-loop serving front-end above the engine:
+//!   typed intake/backpressure, TTFT + total-latency deadlines,
+//!   transient-retry / permanent-drain fault handling, and SLO
+//!   reporting (plus the artifact-free [`frontend::sim::SimEngine`]
+//!   twin the seeded chaos suite runs against).
 
 pub mod batcher;
 pub mod engine;
 pub mod expert_stats;
+pub mod frontend;
 pub mod kvcache;
 pub mod request;
 pub mod sampling;
@@ -35,6 +41,14 @@ pub mod trace;
 
 pub use batcher::{Batcher, Slot, SlotState};
 pub use engine::{Engine, EngineConfig, EngineMetrics};
+pub use frontend::faults::{fault_kind, FaultError, FaultInjector, FaultKind, FaultSite};
+pub use frontend::intake::{IntakePolicy, RejectReason};
+pub use frontend::sim::{SimEngine, SimEngineConfig};
+pub use frontend::slo::ServeReport;
+pub use frontend::{
+    ArrivingRequest, ClockMode, FrontendConfig, FrontendStatus, RequestOutcome,
+    RetryPolicy, ServeFrontend, ServingEngine,
+};
 pub use sampling::sample_logits;
 pub use expert_stats::ExpertStats;
 pub use kvcache::pagetable;

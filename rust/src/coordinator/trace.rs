@@ -83,9 +83,14 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceItem> {
                     }
                 }
             };
-            t += rng.exponential(rate);
-            let span = (cfg.prompt_max - cfg.prompt_min + 1) as u64;
-            let nspan = (cfg.max_new_max - cfg.max_new_min + 1) as u64;
+            // degenerate rates (0, negative, NaN from a bad division)
+            // clamp to a tiny-but-positive rate: arrivals stay finite
+            // and monotone instead of stacking at +inf
+            t += rng.exponential(if rate > 1e-9 { rate } else { 1e-9 });
+            // inverted bounds (max < min) collapse to the min instead
+            // of underflowing usize
+            let span = cfg.prompt_max.saturating_sub(cfg.prompt_min) as u64 + 1;
+            let nspan = cfg.max_new_max.saturating_sub(cfg.max_new_min) as u64 + 1;
             TraceItem {
                 at: t,
                 prompt_len: cfg.prompt_min + rng.below(span) as usize,
@@ -105,6 +110,50 @@ pub fn offered_load(trace: &[TraceItem]) -> f64 {
     };
     let tokens: usize = trace.iter().map(|r| r.prompt_len + r.max_new).sum();
     tokens as f64 / last.at.max(1e-9)
+}
+
+/// Offered-load summary of a trace ([`load_summary`]): the mean rates
+/// plus the peak demand a sliding window sees — the number that decides
+/// whether a burst overruns the front-end's shed watermark.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LoadSummary {
+    /// Trace span in seconds (first to last arrival).
+    pub span_s: f64,
+    /// Mean arrival rate over the span, requests/s.
+    pub requests_per_s: f64,
+    /// Mean offered load over the span, tokens/s.
+    pub tokens_per_s: f64,
+    /// Peak offered load over any `window_s` window, tokens/s.
+    pub peak_tokens_per_s: f64,
+}
+
+/// Summarise a trace's offered load, with the peak taken over a sliding
+/// window of `window_s` seconds.  Empty traces and degenerate windows
+/// yield a zero summary, not a panic.
+pub fn load_summary(trace: &[TraceItem], window_s: f64) -> LoadSummary {
+    let (Some(first), Some(last)) = (trace.first(), trace.last()) else {
+        return LoadSummary::default();
+    };
+    let span = (last.at - first.at).max(1e-9);
+    let w = if window_s > 1e-9 { window_s } else { 1e-9 };
+    let tokens: usize = trace.iter().map(|r| r.prompt_len + r.max_new).sum();
+    let mut peak = 0.0f64;
+    let mut start = 0usize;
+    let mut win_tokens = 0usize;
+    for item in trace {
+        win_tokens += item.prompt_len + item.max_new;
+        while trace[start].at < item.at - w {
+            win_tokens -= trace[start].prompt_len + trace[start].max_new;
+            start += 1;
+        }
+        peak = peak.max(win_tokens as f64 / w);
+    }
+    LoadSummary {
+        span_s: span,
+        requests_per_s: trace.len() as f64 / span,
+        tokens_per_s: tokens as f64 / span,
+        peak_tokens_per_s: peak,
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +221,72 @@ mod tests {
     fn offered_load_positive() {
         let tr = generate(&TraceConfig::default());
         assert!(offered_load(&tr) > 0.0);
+    }
+
+    #[test]
+    fn zero_rate_stays_finite_and_monotone() {
+        // degenerate rate parameters must not produce +inf arrival
+        // times (exponential(0) = inf) — they clamp to a tiny rate
+        for arrival in [
+            Arrival::Poisson { rate: 0.0 },
+            Arrival::Bursty { calm_rate: 0.0, burst_rate: 0.0, dwell_s: 0.0 },
+        ] {
+            let tr = generate(&TraceConfig { n: 16, arrival, ..Default::default() });
+            assert_eq!(tr.len(), 16);
+            for w in tr.windows(2) {
+                assert!(w[0].at.is_finite() && w[1].at >= w[0].at);
+            }
+        }
+    }
+
+    #[test]
+    fn inverted_length_bounds_collapse_to_min() {
+        // max < min must not underflow; every length collapses to min
+        let cfg = TraceConfig {
+            n: 32,
+            prompt_min: 10,
+            prompt_max: 3,
+            max_new_min: 8,
+            max_new_max: 2,
+            ..Default::default()
+        };
+        for r in generate(&cfg) {
+            assert_eq!(r.prompt_len, 10);
+            assert_eq!(r.max_new, 8);
+        }
+    }
+
+    #[test]
+    fn load_summary_degenerate_inputs_are_zero_not_panic() {
+        assert_eq!(load_summary(&[], 1.0), LoadSummary::default());
+        // zero / negative windows clamp instead of dividing by zero
+        let tr = generate(&TraceConfig::default());
+        let s = load_summary(&tr, 0.0);
+        assert!(s.peak_tokens_per_s.is_finite());
+        let s = load_summary(&tr, -3.0);
+        assert!(s.peak_tokens_per_s.is_finite());
+    }
+
+    #[test]
+    fn load_summary_peak_at_least_mean() {
+        let tr = generate(&TraceConfig { n: 400, ..Default::default() });
+        let s = load_summary(&tr, 1.0);
+        assert!(s.span_s > 0.0);
+        assert!(s.requests_per_s > 0.0);
+        assert!(
+            s.peak_tokens_per_s >= s.tokens_per_s * 0.99,
+            "peak {} below mean {}",
+            s.peak_tokens_per_s,
+            s.tokens_per_s
+        );
+        // a burstier process concentrates more tokens into the window
+        let bursty = generate(&TraceConfig {
+            n: 400,
+            arrival: Arrival::Bursty { calm_rate: 1.0, burst_rate: 80.0, dwell_s: 1.0 },
+            ..Default::default()
+        });
+        let sb = load_summary(&bursty, 1.0);
+        assert!(sb.peak_tokens_per_s / sb.tokens_per_s > s.peak_tokens_per_s / s.tokens_per_s);
     }
 
     #[test]

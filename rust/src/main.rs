@@ -4,15 +4,18 @@
 //!   info    — list artifacts and workload metadata from the manifest
 //!   verify  — parse + compile every artifact on the PJRT client
 //!   train   — run the training driver on an lm_* artifact pair
-//!   serve   — run the serving engine on a synthetic request trace
+//!   serve   — open-loop serving run (deadlines, shedding, SLO report)
 //!
 //! See `examples/` for narrower end-to-end drivers and `rust/benches/`
 //! for the paper-figure benchmark harnesses.
 
 use anyhow::Result;
 use scattermoe::cli::Cli;
-use scattermoe::coordinator::{Engine, EngineConfig, SamplingParams};
-use scattermoe::rng::Rng;
+use scattermoe::coordinator::trace::{generate, load_summary, Arrival, TraceConfig};
+use scattermoe::coordinator::{
+    ArrivingRequest, Engine, EngineConfig, FrontendConfig, IntakePolicy, SamplingParams,
+    ServeFrontend, ServeReport,
+};
 use scattermoe::runtime::Runtime;
 use scattermoe::tokenizer::SyntheticCorpus;
 use scattermoe::train::{StatePlacement, Trainer};
@@ -140,15 +143,19 @@ fn train(args: &[String]) -> Result<()> {
 }
 
 fn serve(args: &[String]) -> Result<()> {
-    let cli = artifacts_flag(Cli::new("scattermoe serve", "synthetic serving run"))
+    let cli = artifacts_flag(Cli::new("scattermoe serve", "open-loop serving run"))
         .flag("requests", "32", "number of requests")
+        .flag("rate", "16", "mean arrivals per second (Poisson)")
         .flag("max-new", "16", "tokens per request")
-        .flag("seed", "0", "workload seed");
+        .flag("seed", "0", "workload seed")
+        .flag("ttft-deadline-ms", "0", "expire requests with no token by this age (0 = off)")
+        .flag("deadline-ms", "0", "total latency budget per request (0 = off)")
+        .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)");
     let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
     let rt = open_runtime(a.get("artifacts"))?;
     // telemetry on: the serve report prints per-expert routing skew
     let cfg = EngineConfig { expert_telemetry: true, ..Default::default() };
-    let mut engine = Engine::new(rt, cfg)?;
+    let engine = Engine::new(rt, cfg)?;
     println!(
         "engine up: {} slots, max_len {}, {:?} KV layout ({})",
         engine.width(),
@@ -157,40 +164,83 @@ fn serve(args: &[String]) -> Result<()> {
         scattermoe::metrics::fmt_bytes(engine.cache_bytes() as u64),
     );
 
-    let mut corpus = SyntheticCorpus::new(512, a.get_u64("seed"));
-    let mut rng = Rng::new(a.get_u64("seed") ^ 0xF00D);
-    let n = a.get_usize("requests");
-    let mut rejected = 0usize;
-    for _ in 0..n {
-        let prompt_len = 4 + rng.below(24) as usize;
-        let prompt = corpus.sample(prompt_len);
-        let params = SamplingParams {
-            max_new_tokens: a.get_usize("max-new"),
-            ..Default::default()
-        };
-        if engine.submit(prompt, params)?.is_none() {
-            rejected += 1; // queue backpressure — reported, not silent
-        }
-    }
-    if rejected > 0 {
-        println!("admission rejected {rejected}/{n} requests (queue full)");
-    }
-    let t0 = std::time::Instant::now();
-    let responses = engine.run_to_completion()?;
-    let dt = t0.elapsed().as_secs_f64();
-    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let seed = a.get_u64("seed");
+    let max_new = a.get_usize("max-new");
+    let trace = generate(&TraceConfig {
+        n: a.get_usize("requests"),
+        arrival: Arrival::Poisson { rate: a.get_f64("rate") },
+        prompt_min: 4,
+        prompt_max: 27,
+        max_new_min: max_new,
+        max_new_max: max_new,
+        seed,
+    });
+    let load = load_summary(&trace, 1.0);
     println!(
-        "served {} requests / {} tokens in {:.2}s  ({:.1} tok/s)",
-        responses.len(),
-        toks,
-        dt,
-        toks as f64 / dt
+        "offered load: {:.1} req/s, {:.0} tok/s mean, {:.0} tok/s peak (1s window)",
+        load.requests_per_s, load.tokens_per_s, load.peak_tokens_per_s,
+    );
+    let mut corpus = SyntheticCorpus::new(512, seed);
+    let arrivals: Vec<ArrivingRequest> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, item)| ArrivingRequest {
+            at: item.at,
+            prompt: corpus.sample(item.prompt_len),
+            params: SamplingParams {
+                max_new_tokens: item.max_new,
+                seed: seed.wrapping_add(i as u64),
+                ..Default::default()
+            },
+            tag: i as u64,
+        })
+        .collect();
+    let ttft_ms = a.get_f64("ttft-deadline-ms");
+    let deadline_ms = a.get_f64("deadline-ms");
+    let shed_depth = a.get_usize("shed-depth");
+    let fe_cfg = FrontendConfig {
+        intake: IntakePolicy {
+            shed_queue_depth: (shed_depth > 0).then_some(shed_depth),
+            ..Default::default()
+        },
+        ttft_deadline_s: (ttft_ms > 0.0).then_some(ttft_ms / 1e3),
+        deadline_s: (deadline_ms > 0.0).then_some(deadline_ms / 1e3),
+        ..Default::default()
+    };
+    let mut fe = ServeFrontend::new(engine, fe_cfg);
+    fe.push_arrivals(arrivals);
+    let rep = fe.run();
+    if let Some(fault) = rep.fatal.as_deref() {
+        println!("RUN HALTED by permanent fault: {fault}");
+    }
+    let engine = fe.engine();
+    println!(
+        "served {} requests / {} tokens in {:.2}s  (goodput {:.1} tok/s)",
+        rep.completed,
+        rep.completed_tokens,
+        rep.wall_s,
+        rep.goodput_tok_s(),
+    );
+    println!(
+        "outcomes: {} expired-ttft  {} expired-total  {} shed  {} queue-full  \
+         {} never-admissible  {} drained",
+        rep.expired_ttft,
+        rep.expired_total,
+        rep.shed,
+        rep.rejected_queue_full,
+        rep.rejected_never_admissible,
+        rep.drained,
     );
     let m = &engine.metrics;
     println!(
-        "ttft p50 {:.0} ms   latency p50 {:.0} ms   decode steps {}   prefills {}",
-        m.ttft.median() * 1e3,
-        m.latency.median() * 1e3,
+        "robustness: {} deadline misses  {} sheds  {} tick retries",
+        m.deadline_misses, m.sheds, m.retries,
+    );
+    println!(
+        "ttft p50 {:.0} ms   tpot p50 {:.1} ms   e2e p50 {:.0} ms   decode steps {}   prefills {}",
+        ServeReport::pct(&rep.ttft, 0.5) * 1e3,
+        ServeReport::pct(&rep.tpot, 0.5) * 1e3,
+        ServeReport::pct(&rep.e2e, 0.5) * 1e3,
         m.decode_steps,
         m.prefills
     );

@@ -1,0 +1,317 @@
+//! Seeded chaos suite for the open-loop serving front-end.
+//!
+//! Every test drives the artifact-free `SimEngine` (the real admission /
+//! paging / scheduling machinery around a deterministic token function)
+//! through the `ServeFrontend` on a virtual clock, so the whole run —
+//! arrivals, deadline expiries, cancels, injected faults, retries,
+//! drains — is reproducible from its seeds on a bare checkout.
+//!
+//! The headline property (`prop_chaos_serving_conserves_pages`): under a
+//! random seeded schedule of arrivals, cancels, deadline expiries and
+//! injected faults, the page allocator conserves after *every* step
+//! (`free + outstanding + retained == usable`), the loop never
+//! deadlocks, nothing strands a slot or a reservation, and every
+//! request that completes in both the chaos run and a fault-free run of
+//! the same seed produces bit-identical tokens.
+
+use std::collections::BTreeMap;
+
+use scattermoe::coordinator::frontend::faults::{FaultInjector, FaultKind};
+use scattermoe::coordinator::frontend::intake::IntakePolicy;
+use scattermoe::coordinator::frontend::sim::{SimEngine, SimEngineConfig};
+use scattermoe::coordinator::frontend::slo::ServeReport;
+use scattermoe::coordinator::frontend::{
+    ArrivingRequest, ClockMode, FrontendConfig, FrontendStatus, RequestOutcome,
+    RetryPolicy, ServeFrontend,
+};
+use scattermoe::coordinator::trace::{generate, Arrival, TraceConfig};
+use scattermoe::coordinator::SamplingParams;
+use scattermoe::rng::Rng;
+use scattermoe::testkit::{check, prop_assert, PairGen, U64Range};
+
+/// One hand-placed arrival with a deterministic prompt.
+fn arrival(tag: u64, at: f64, prompt_len: usize, max_new: usize) -> ArrivingRequest {
+    let prompt: Vec<i32> = (0..prompt_len)
+        .map(|j| ((tag * 31 + j as u64) % 89 + 1) as i32)
+        .collect();
+    ArrivingRequest {
+        at,
+        prompt,
+        params: SamplingParams { max_new_tokens: max_new, seed: tag, ..Default::default() },
+        tag,
+    }
+}
+
+/// Seeded open-loop arrival stream: Poisson or bursty by flavor, with
+/// per-request prompts/seeds derived from the same seed.
+fn arrivals_for(seed: u64, flavor: u64) -> Vec<ArrivingRequest> {
+    let arrival_process = if flavor % 2 == 0 {
+        Arrival::Poisson { rate: 40.0 }
+    } else {
+        Arrival::Bursty { calm_rate: 5.0, burst_rate: 120.0, dwell_s: 0.2 }
+    };
+    let trace = generate(&TraceConfig {
+        n: 24,
+        arrival: arrival_process,
+        prompt_min: 2,
+        prompt_max: 30,
+        max_new_min: 1,
+        max_new_max: 12,
+        seed,
+    });
+    let mut prng = Rng::new(seed ^ 0xA11CE5);
+    trace
+        .iter()
+        .enumerate()
+        .map(|(i, item)| {
+            let prompt: Vec<i32> =
+                (0..item.prompt_len).map(|_| (prng.below(97) + 1) as i32).collect();
+            ArrivingRequest {
+                at: item.at,
+                prompt,
+                params: SamplingParams {
+                    max_new_tokens: item.max_new,
+                    seed: seed.wrapping_add(i as u64),
+                    ..Default::default()
+                },
+                tag: i as u64,
+            }
+        })
+        .collect()
+}
+
+/// Tokens of every request that completed, keyed by arrival tag.
+fn completed_tokens(outcomes: &[(u64, RequestOutcome)]) -> BTreeMap<u64, Vec<i32>> {
+    outcomes
+        .iter()
+        .filter_map(|(tag, o)| match o {
+            RequestOutcome::Completed(resp) => Some((*tag, resp.tokens.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+struct ChaosRun {
+    report: ServeReport,
+    completed: BTreeMap<u64, Vec<i32>>,
+}
+
+/// Drive one full seeded run: open-loop arrivals, a 7% chance of
+/// cancelling the oldest live request after every running step, TTFT +
+/// total deadlines, and (optionally) an injected fault schedule.  After
+/// EVERY step the allocator is audited; the run is bounded to catch
+/// deadlock; at the end nothing may remain stranded.
+fn run_chaos(seed: u64, flavor: u64, faults: Option<FaultInjector>) -> ChaosRun {
+    let mut engine = SimEngine::new(SimEngineConfig::default());
+    if let Some(f) = faults {
+        engine.inject_faults(f);
+    }
+    let cfg = FrontendConfig {
+        intake: IntakePolicy {
+            max_pending: 64,
+            shed_queue_depth: Some(48),
+            shed_min_free_frac: None,
+        },
+        ttft_deadline_s: Some(0.25),
+        deadline_s: Some(1.5),
+        retry: RetryPolicy { max_retries: 3, backoff_s: 0.001 },
+        clock: ClockMode::Virtual { tick_s: 0.01 },
+    };
+    let mut fe = ServeFrontend::new(engine, cfg);
+    fe.push_arrivals(arrivals_for(seed, flavor));
+    let mut cancel_rng = Rng::new(seed ^ 0xCA9CE1);
+    let mut steps = 0u64;
+    loop {
+        let status = fe.step();
+        // allocator conservation after every single step
+        fe.engine().audit();
+        steps += 1;
+        assert!(steps < 50_000, "no-deadlock bound exceeded (seed {seed})");
+        match status {
+            FrontendStatus::Running => {
+                if cancel_rng.below(100) < 7 {
+                    if let Some(&id) = fe.live_ids().first() {
+                        fe.cancel(id);
+                    }
+                }
+            }
+            FrontendStatus::Done | FrontendStatus::Halted => break,
+        }
+    }
+    // zero stranded slots: every page and reservation is back
+    let (reclaimable, usable) = fe.engine().page_budget().expect("paged sim");
+    assert_eq!(
+        reclaimable, usable,
+        "pages stranded after run (seed {seed}): {reclaimable}/{usable}"
+    );
+    assert_eq!(fe.engine().page_reservations(), Some(0), "reservations stranded");
+    ChaosRun { report: fe.report(), completed: completed_tokens(fe.outcomes()) }
+}
+
+/// THE chaos acceptance property (see module docs).
+#[test]
+fn prop_chaos_serving_conserves_pages() {
+    check(
+        40,
+        PairGen(U64Range(0, 1 << 20), U64Range(0, 4)),
+        |&(seed, flavor)| {
+            // fault-free baseline: must complete without halting
+            let baseline = run_chaos(seed, flavor, None);
+            prop_assert(baseline.report.fatal.is_none(), "fault-free run halted")?;
+            // chaos run: seeded transient + permanent fault schedule
+            let chaos = run_chaos(
+                seed,
+                flavor,
+                Some(FaultInjector::seeded(seed ^ 0xFA17, 4000, 0.05, 0.002)),
+            );
+            // every request that completed in BOTH runs is bit-identical
+            for (tag, tokens) in &chaos.completed {
+                if let Some(base) = baseline.completed.get(tag) {
+                    prop_assert(
+                        tokens == base,
+                        "surviving request diverged from fault-free tokens",
+                    )?;
+                }
+            }
+            // every arrival is accounted for in both runs
+            prop_assert(
+                baseline.report.accounted() == 24 && chaos.report.accounted() == 24,
+                "outcome accounting lost arrivals",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+/// Transient faults ride out through bounded retry: the run completes,
+/// counts its retries, and every token matches the fault-free run.
+#[test]
+fn transient_fault_retries_to_bit_identical_completion() {
+    let serve = |faults: Option<FaultInjector>| {
+        let mut engine = SimEngine::new(SimEngineConfig::default());
+        if let Some(f) = faults {
+            engine.inject_faults(f);
+        }
+        let mut fe = ServeFrontend::new(
+            engine,
+            FrontendConfig {
+                clock: ClockMode::Virtual { tick_s: 0.01 },
+                ..Default::default()
+            },
+        );
+        fe.push_arrivals((0..6).map(|i| arrival(i, 0.0, 8, 4)));
+        let report = fe.run();
+        (report, completed_tokens(fe.outcomes()))
+    };
+    let (base_rep, base_tokens) = serve(None);
+    assert_eq!(base_rep.completed, 6);
+    let (rep, tokens) = serve(Some(FaultInjector::scripted([
+        (0, FaultKind::Transient),
+        (2, FaultKind::Transient),
+    ])));
+    assert!(rep.fatal.is_none(), "transient faults must not halt the run");
+    assert_eq!(rep.completed, 6, "every request completes after retries");
+    assert!(rep.retries >= 2, "retries counted, got {}", rep.retries);
+    assert_eq!(tokens, base_tokens, "retried tokens bit-identical");
+}
+
+/// A permanent fault aborts, drains every admitted request with a typed
+/// outcome, reclaims every page, and leaves the report marked fatal.
+#[test]
+fn permanent_fault_drains_with_typed_outcomes() {
+    let mut engine = SimEngine::new(SimEngineConfig::default());
+    engine.inject_faults(FaultInjector::scripted([(2, FaultKind::Permanent)]));
+    let mut fe = ServeFrontend::new(
+        engine,
+        FrontendConfig {
+            clock: ClockMode::Virtual { tick_s: 0.01 },
+            ..Default::default()
+        },
+    );
+    fe.push_arrivals((0..6).map(|i| arrival(i, 0.0, 8, 6)));
+    let report = fe.run();
+    fe.engine().audit();
+    assert!(report.fatal.is_some(), "permanent fault must surface in the report");
+    assert!(report.drained > 0, "admitted requests drain with typed outcomes");
+    assert_eq!(
+        report.drained + report.completed + report.cancelled,
+        6,
+        "every arrival accounted: {report:?}"
+    );
+    let (reclaimable, usable) = fe.engine().page_budget().expect("paged sim");
+    assert_eq!(reclaimable, usable, "drain reclaims every page");
+    assert_eq!(fe.engine().page_reservations(), Some(0));
+}
+
+/// TTFT deadlines expire queued requests through the cancel path: pages
+/// reclaim, the misses are counted, and requests already decoding are
+/// untouched.
+#[test]
+fn ttft_deadline_expires_queued_requests_and_reclaims_pages() {
+    let engine = SimEngine::new(SimEngineConfig::default());
+    let mut fe = ServeFrontend::new(
+        engine,
+        FrontendConfig {
+            ttft_deadline_s: Some(0.05),
+            clock: ClockMode::Virtual { tick_s: 0.02 },
+            ..Default::default()
+        },
+    );
+    fe.push_arrivals((0..16).map(|i| arrival(i, 0.0, 8, 24)));
+    let report = fe.run();
+    fe.engine().audit();
+    assert!(report.expired_ttft > 0, "queued requests must expire: {report:?}");
+    assert!(report.completed > 0, "in-flight requests must survive: {report:?}");
+    assert_eq!(report.expired_ttft + report.completed, 16);
+    assert_eq!(
+        fe.engine().metrics.deadline_misses,
+        report.expired_ttft + report.expired_total,
+        "engine counter mirrors the report"
+    );
+    let (reclaimable, usable) = fe.engine().page_budget().expect("paged sim");
+    assert_eq!(reclaimable, usable, "expiry reclaims every page");
+}
+
+/// The shed watermark refuses arrivals beyond the queue-depth line with
+/// a typed outcome and counts them in the engine metrics.
+#[test]
+fn shed_watermark_rejects_typed_and_counts() {
+    let engine = SimEngine::new(SimEngineConfig::default());
+    let mut fe = ServeFrontend::new(
+        engine,
+        FrontendConfig {
+            intake: IntakePolicy {
+                max_pending: 8,
+                shed_queue_depth: Some(4),
+                shed_min_free_frac: None,
+            },
+            clock: ClockMode::Virtual { tick_s: 0.01 },
+            ..Default::default()
+        },
+    );
+    fe.push_arrivals((0..16).map(|i| arrival(i, 0.0, 4, 2)));
+    let report = fe.run();
+    assert_eq!(report.shed, 12, "everything past the watermark sheds: {report:?}");
+    assert_eq!(report.completed, 4, "everything admitted completes");
+    assert_eq!(fe.engine().metrics.sheds, report.shed, "engine counter mirrors");
+}
+
+/// An impossible request (prompt beyond the compiled width) rejects at
+/// intake with the typed `NeverAdmissible` outcome instead of erroring
+/// the loop or head-blocking the queue.
+#[test]
+fn never_admissible_rejection_is_typed() {
+    let engine = SimEngine::new(SimEngineConfig::default());
+    let mut fe = ServeFrontend::new(
+        engine,
+        FrontendConfig {
+            clock: ClockMode::Virtual { tick_s: 0.01 },
+            ..Default::default()
+        },
+    );
+    fe.push_arrivals([arrival(0, 0.0, 40, 4), arrival(1, 0.0, 4, 4)]);
+    let report = fe.run();
+    assert_eq!(report.rejected_never_admissible, 1, "{report:?}");
+    assert_eq!(report.completed, 1);
+    assert!(report.fatal.is_none());
+}

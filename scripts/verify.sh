@@ -19,6 +19,14 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# Seeded chaos suite: deterministic fault/deadline/cancel schedules over
+# the artifact-free sim engine, re-run under a pinned seed so the exact
+# acceptance schedule is reproduced on every checkout (the plain
+# `cargo test` above already ran it under the default seed; this pins
+# the gate even if the default ever changes).
+echo "== tier-1: seeded chaos suite (fixed seed) =="
+SCATTERMOE_TEST_SEED=12648430 cargo test -q --test chaos_props
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== lint: cargo fmt --check =="
     cargo fmt --check
@@ -49,7 +57,9 @@ if [ -f artifacts/manifest.json ]; then
 import json, sys
 expected = {
     "bench_reports/BENCH_serve.json":
-        ["serve e2e", "decode step", "kv cache bytes"],
+        ["serve e2e", "decode step", "kv cache bytes",
+         "serve TTFT p50", "serve TTFT p99", "serve TPOT p50",
+         "serve TPOT p99", "serve goodput"],
     "bench_reports/BENCH_memory.json":
         ["kv dense (worst case)", "kv paged ctx=", "kv admitted width",
          "kv retained pool bytes", "kv hot-prompt pages written"],
