@@ -4,10 +4,17 @@
 //! reports the SLO distributions a serving paper would (TTFT, TPOT,
 //! goodput), plus the host↔device transfer accounting.
 //!
+//! A second pass replays the same arrival schedule through a chunked-
+//! prefill engine with per-token streaming and reports the `serve
+//! chunked TTFT/TPOT` keys CI gates on (skipped when the main pass is
+//! already `--chunked`).
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example serve -- --requests 48 --rate 4
 //! # with SLOs + load shedding:
 //! cargo run --release --example serve -- --rate 64 --ttft-deadline-ms 500 --shed-depth 32
+//! # chunked main pass with streaming:
+//! cargo run --release --example serve -- --chunked --chunk-tokens 16 --stream
 //! ```
 
 use anyhow::Result;
@@ -30,13 +37,21 @@ fn main() -> Result<()> {
         .flag("seed", "0", "workload seed")
         .flag("ttft-deadline-ms", "0", "expire requests with no token by this age (0 = off)")
         .flag("deadline-ms", "0", "total latency budget per request (0 = off)")
-        .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)");
+        .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)")
+        .switch("chunked", "run the MAIN pass with chunked prefill (the comparison pass always runs)")
+        .flag("chunk-tokens", "16", "per-step prefill token budget (chunked passes)")
+        .switch("stream", "per-token streaming on the main pass (the chunked pass always streams)");
     let a = cli.parse();
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
     // expert_telemetry: record the decode artifact's per-expert routing
     // counts (costs one (E,) download per tick — fine for a demo run)
-    let cfg = EngineConfig { expert_telemetry: true, ..Default::default() };
+    let cfg = EngineConfig {
+        expert_telemetry: true,
+        chunked_prefill: a.get_bool("chunked"),
+        prefill_chunk_tokens: a.get_usize("chunk-tokens"),
+        ..Default::default()
+    };
     let mut engine = Engine::new(rt.clone(), cfg)?;
     let decode_name = match engine.kv_layout() {
         scattermoe::coordinator::KvLayout::Paged => "serve_decode_paged",
@@ -112,9 +127,10 @@ fn main() -> Result<()> {
         deadline_s: (deadline_ms > 0.0).then_some(deadline_ms / 1e3),
         retry: RetryPolicy::default(),
         clock: ClockMode::Wall,
+        stream: a.get_bool("stream"),
     };
     let mut fe = ServeFrontend::new(engine, fe_cfg);
-    fe.push_arrivals(arrivals);
+    fe.push_arrivals(arrivals.clone());
     let rep = fe.run();
     let wall = rep.wall_s;
     if let Some(fault) = rep.fatal.as_deref() {
@@ -174,6 +190,22 @@ fn main() -> Result<()> {
         engine.metrics.prefills,
         engine.metrics.decode_steps
     );
+    if a.get_bool("stream") {
+        println!(
+            "TTFS   p5/p50/p99: {:>7.1} {:>7.1} {:>7.1} ms (first *streamed* token)",
+            ServeReport::pct(&rep.ttfs, 0.05) * 1e3,
+            ServeReport::pct(&rep.ttfs, 0.5) * 1e3,
+            ServeReport::pct(&rep.ttfs, 0.99) * 1e3,
+        );
+    }
+    if a.get_bool("chunked") {
+        println!(
+            "chunked prefill: {} chunks / {} prompt tokens paced, {} mixed steps",
+            engine.metrics.prefill_chunks,
+            engine.metrics.chunk_tokens_prefilled,
+            engine.metrics.mixed_steps,
+        );
+    }
     for (name, st) in engine.runtime_stats() {
         // transfer-only entries (host-splice fallback, kv_cache_init)
         // never execute but must still show their bytes
@@ -297,7 +329,7 @@ fn main() -> Result<()> {
         (decode_after.bytes_to_host - decode_before.bytes_to_host) as f64 / steps as f64;
     step.chain_bytes_per_iter =
         (decode_after.chain_bytes - decode_before.chain_bytes) as f64 / steps as f64;
-    let rows = vec![
+    let mut rows = vec![
         e2e,
         step,
         Measurement::scalar("kv cache bytes (live layout)", engine.cache_bytes() as f64),
@@ -311,6 +343,64 @@ fn main() -> Result<()> {
         Measurement::scalar("serve TPOT p99 (s)", ServeReport::pct(&rep.tpot, 0.99)),
         Measurement::scalar("serve goodput (tok/s)", rep.goodput_tok_s()),
     ];
+
+    // comparison pass: the SAME arrival schedule through a chunked-
+    // prefill engine with per-token streaming, so CI can track what
+    // chunk co-scheduling buys (TTFT) and costs (TPOT) across PRs.
+    // Skipped only when the main pass was already chunked.
+    if !a.get_bool("chunked") {
+        let chunked_cfg = EngineConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: a.get_usize("chunk-tokens"),
+            ..Default::default()
+        };
+        let mut ch_engine = Engine::new(rt.clone(), chunked_cfg)?;
+        // same warmup as the main pass so compile time stays out of TTFT
+        ch_engine
+            .submit(vec![3, 4, 5], SamplingParams { max_new_tokens: 2, ..Default::default() })?;
+        ch_engine.run_to_completion()?;
+        let mut ch_fe = ServeFrontend::new(
+            ch_engine,
+            FrontendConfig { stream: true, ..fe_cfg },
+        );
+        ch_fe.push_arrivals(arrivals);
+        let ch_rep = ch_fe.run();
+        let cm = &ch_fe.engine().metrics;
+        println!("\n=== chunked-prefill comparison pass ===");
+        if let Some(fault) = ch_rep.fatal.as_deref() {
+            println!("RUN HALTED by permanent fault: {fault}");
+        }
+        println!(
+            "completed {}  goodput {:.1} tok/s   {} chunks / {} prompt tokens paced, \
+             {} mixed steps",
+            ch_rep.completed,
+            ch_rep.goodput_tok_s(),
+            cm.prefill_chunks,
+            cm.chunk_tokens_prefilled,
+            cm.mixed_steps,
+        );
+        println!(
+            "chunked TTFT p50/p99: {:>7.1} {:>7.1} ms   TPOT p50/p99: {:>7.1} {:>7.1} ms/tok",
+            ServeReport::pct(&ch_rep.ttft, 0.5) * 1e3,
+            ServeReport::pct(&ch_rep.ttft, 0.99) * 1e3,
+            ServeReport::pct(&ch_rep.tpot, 0.5) * 1e3,
+            ServeReport::pct(&ch_rep.tpot, 0.99) * 1e3,
+        );
+        println!(
+            "time-to-first-streamed-token p50 {:.1} ms  p99 {:.1} ms  ({} streams)",
+            ServeReport::pct(&ch_rep.ttfs, 0.5) * 1e3,
+            ServeReport::pct(&ch_rep.ttfs, 0.99) * 1e3,
+            ch_rep.ttfs.len(),
+        );
+        rows.extend([
+            Measurement::scalar("serve chunked TTFT p50 (s)", ServeReport::pct(&ch_rep.ttft, 0.5)),
+            Measurement::scalar("serve chunked TTFT p99 (s)", ServeReport::pct(&ch_rep.ttft, 0.99)),
+            Measurement::scalar("serve chunked TPOT p50 (s)", ServeReport::pct(&ch_rep.tpot, 0.5)),
+            Measurement::scalar("serve chunked TPOT p99 (s)", ServeReport::pct(&ch_rep.tpot, 0.99)),
+            Measurement::scalar("serve chunked TTFS p50 (s)", ServeReport::pct(&ch_rep.ttfs, 0.5)),
+            Measurement::scalar("serve chunked goodput (tok/s)", ch_rep.goodput_tok_s()),
+        ]);
+    }
     write_report("bench_reports/BENCH_serve.json", "serve", &rows);
     Ok(())
 }

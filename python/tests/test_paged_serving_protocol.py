@@ -22,7 +22,18 @@ simulated:
   token-indexed LRU index instead of freeing them, admission probes the
   index exactly like it probes in-flight donors, and parked pages are
   evicted (LRU, tail-first, never past a live reference) only when an
-  admission would otherwise starve.
+  admission would otherwise starve;
+* ``chunked``  — PR 7: the retained policy under *mixed-phase steps* —
+  admission books only the first chunk's pages (reservations cover the
+  rest), the prompt cursor advances under a per-tick token budget while
+  other slots keep decoding in the same tick, and the single batched
+  ``prefill``/``page_append`` call runs when the last chunk lands.
+  Chunk advances are bookkeeping-only, so a simulated prefill fault at
+  a chunk boundary requeues the finishers with nothing committed and
+  the re-admission replays bit-identically.  Mid-chunk slots get their
+  decode-side block-table row suppressed to the garbage page — the
+  decode scatter's inert lane must never write into pages a donor (or
+  the retained pool) still references.
 
 All runs must emit bit-for-bit identical tokens, across admission waves
 that force page reuse, growth, cross-wave prefix sharing, idle-gap
@@ -49,6 +60,10 @@ TINY = tr.ModelConfig(
 WIDTH, PROMPT_W, MAX_LEN, PAGE = 3, 6, 16, 4
 PAGES_PER_SLOT = MAX_LEN // PAGE
 NUM_PAGES = 1 + (WIDTH * PAGES_PER_SLOT) // 2  # half the worst case + sentinel
+#: Per-tick prompt-token budget of the ``chunked`` policy.  One page row
+#: (the Rust engine's validated minimum): prompts longer than a page
+#: span several ticks, interleaving with other slots' decode steps.
+CHUNK_TOKENS = PAGE
 
 #: A page-aligned "system prompt" (exactly one full page): the retained
 #: pool serves ALL of its pages on a repeat, so its re-admission
@@ -286,10 +301,13 @@ class _Pool:
                 assert alloc.refs[p] >= 1 and alloc.parked[p]
 
 
-def _plan(prompt, max_new, lazy, donors, pool=None):
+def _plan(prompt, max_new, lazy, donors, pool=None, chunked=False):
     """Twin of KvCacheManager::plan: (shared, fresh, reserve, cow_copy,
     pool_hit_pages) — the pool is probed strictly last, so live donors
-    win ties (pool_hit_pages > 0 only when retention itself served)."""
+    win ties (pool_hit_pages > 0 only when retention itself served).
+    Under ``chunked`` the table only covers the FIRST chunk's pages
+    (never fewer than the shared prefix); everything else is reserved
+    and converted chunk-by-chunk as the prefill cursor walks."""
     plen = max(len(prompt), 1)
     worst = _commitment(plen, max_new)
     prompt_pages = _pages_for(plen)
@@ -312,24 +330,36 @@ def _plan(prompt, max_new, lazy, donors, pool=None):
         ):
             shared, best_common = list(best[0]["pages"][:best[1]]), best[2]
             pool_pages = best[1]
-    table_len = min(prompt_pages + 1, worst) if lazy else worst
+    if chunked:
+        first = _pages_for(min(plen, CHUNK_TOKENS))
+        table_len = min(max(first, len(shared)), worst)
+    elif lazy:
+        table_len = min(prompt_pages + 1, worst)
+    else:
+        table_len = worst
     fresh = table_len - len(shared)
     cow = bool(shared) and best_common > len(shared) * PAGE
     return shared, fresh, worst - table_len, cow, pool_pages
 
 
-def _serve(params, mode, cancel=None, phases=None):
+def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
     """Drive the serving loop under one policy; returns (tokens, alloc,
     stats).  ``phases`` is a list of request lists: each phase drains
     fully before the next is enqueued — the idle gap only the retained
     prefix pool survives.  ``cancel=(rid, after_emissions)`` aborts a
     request once it has emitted that many tokens (the mid-flight
-    failure path, which reclaims but never parks)."""
-    assert mode in ("dense", "eager", "lazy", "retained")
+    failure path, which reclaims but never parks).  ``chunk_fault``
+    (chunked mode only) simulates one transient prefill fault the first
+    time chunked finishers would run: they requeue front-first with
+    pages and reservations reclaimed and nothing committed, so the
+    re-admission must replay bit-identically."""
+    assert mode in ("dense", "eager", "lazy", "retained", "chunked")
     paged = mode != "dense"
-    lazy = mode in ("lazy", "retained")
+    lazy = mode in ("lazy", "retained", "chunked")
     share = lazy  # CoW sharing rides on the lazy block-table machinery
-    retain = mode == "retained"
+    retain = mode in ("retained", "chunked")
+    chunked = mode == "chunked"
+    fault_pending = chunked and chunk_fault
     phases = [list(p) for p in (phases or [_requests()])]
     reqs = [r for phase in phases for r in phase]
     toks_out = {i: [] for i in range(len(reqs))}
@@ -338,13 +368,15 @@ def _serve(params, mode, cancel=None, phases=None):
     slots = [None] * WIDTH  # request id or None
     pos = [0] * WIDTH
     last = [0] * WIDTH
+    prefilled = [None] * WIDTH  # chunked-prefill cursor (None = not chunking)
     alloc = _Alloc()
     pool = _Pool()
     tables = [[] for _ in range(WIDTH)]
     shared_ct = [0] * WIDTH  # leading shared entries per slot
     reserved_ct = [0] * WIDTH  # per-slot growth budget
     stats = {"grows": 0, "shared": 0, "cow": 0, "hits": 0, "hit_tokens": 0,
-             "evictions": 0, "admissions": {}}
+             "evictions": 0, "admissions": {}, "chunks": 0, "requeues": 0,
+             "mixed_ticks": 0}
     if paged:
         kc = jnp.zeros((TINY.n_layers, NUM_PAGES, PAGE, TINY.n_heads, TINY.d_head))
         vc = jnp.zeros_like(kc)
@@ -352,9 +384,13 @@ def _serve(params, mode, cancel=None, phases=None):
         kc = jnp.zeros((TINY.n_layers, WIDTH, MAX_LEN, TINY.n_heads, TINY.d_head))
         vc = jnp.zeros_like(kc)
 
-    def block_table(for_append=False):
+    def block_table(for_append=False, suppress=()):
         bt = np.zeros((WIDTH, PAGES_PER_SLOT), np.int32)
         for s, pages in enumerate(tables):
+            if s in suppress:
+                continue  # whole row -> garbage page: the decode
+                # scatter's inert lane must not touch a mid-chunk
+                # slot's real (possibly donor-shared) pages
             skip = shared_ct[s] if for_append else 0
             bt[s, skip:len(pages)] = pages[skip:]
         return jnp.asarray(bt)
@@ -372,11 +408,20 @@ def _serve(params, mode, cancel=None, phases=None):
             alloc.unreserve(reserved_ct[s])
         tables[s], shared_ct[s], reserved_ct[s] = [], 0, 0
         slots[s] = None
+        prefilled[s] = None
 
     def refill(queue):
+        # Chunked mode: only prefill-COMPLETE slots donate CoW prefixes.
+        # A mid-chunk slot's pages hold no KV yet (writes happen at its
+        # final chunk's prefill), and chunking breaks the monolithic
+        # all-or-nothing wave requeue — a sharer could outlive or outrun
+        # its donor and read/orphan unwritten pages.  Pool donors are
+        # always written (parked only at clean retirement), so the pool
+        # probe below is unchanged.
         donors = (
             [(reqs[slots[s]][0], tables[s]) for s in range(WIDTH)
-             if slots[s] is not None and tables[s]]
+             if slots[s] is not None and tables[s]
+             and (not chunked or prefilled[s] is None)]
             if share else []
         )
         filled = []
@@ -387,7 +432,7 @@ def _serve(params, mode, cancel=None, phases=None):
             if paged:
                 shared, fresh, reserve, cow, pool_pages = _plan(
                     reqs[rid][0], budget[rid], lazy,
-                    donors, pool if retain else None,
+                    donors, pool if retain else None, chunked=chunked,
                 )
                 need = fresh + reserve
                 if retain and need > alloc.unreserved():
@@ -420,7 +465,9 @@ def _serve(params, mode, cancel=None, phases=None):
                     "shared": len(shared), "fresh": fresh,
                     "pool_pages": pool_pages,
                 }
-                if share:
+                if share and not chunked:
+                    # same-wave sharing is monolithic-only: a chunked
+                    # wave's admissions prefill at independent times
                     donors.append((reqs[rid][0], tables[s]))
             queue.pop(0)
             slots[s] = rid
@@ -466,9 +513,13 @@ def _serve(params, mode, cancel=None, phases=None):
             cancelled.add(rid)
             reclaim(s, park=False)  # mid-flight abort: no parking
 
-    def do_decode():
+    def do_decode(decoding=None, suppress=()):
         nonlocal kc, vc
-        active = [s for s in range(WIDTH) if slots[s] is not None]
+        active = (
+            list(decoding)
+            if decoding is not None
+            else [s for s in range(WIDTH) if slots[s] is not None]
+        )
         if paged:
             for s in active:
                 needed = pos[s] // PAGE + 1
@@ -484,7 +535,7 @@ def _serve(params, mode, cancel=None, phases=None):
         t = jnp.asarray(np.array(last, np.int32))
         if paged:
             logits, kc, vc = tr.decode_step_paged(
-                params, kc, vc, block_table(), p, t, TINY
+                params, kc, vc, block_table(suppress=suppress), p, t, TINY
             )
         else:
             logits, kc, vc = tr.decode_step(params, kc, vc, p, t, TINY)
@@ -503,15 +554,79 @@ def _serve(params, mode, cancel=None, phases=None):
         for _ in range(300):
             if not queue and all(s is None for s in slots):
                 break  # phase drained: the idle gap before the next one
-            filled = refill(queue) if queue else []
-            if filled:
-                do_prefill(filled)
-            elif any(s is not None for s in slots):
-                do_decode()
+            if chunked:
+                # mixed-phase tick, mirroring Engine::tick_mixed: admit
+                # greedily, advance chunk cursors under the token
+                # budget, run the single batched prefill for finishers,
+                # decode the already-decoding slots — all in one tick
+                filled = refill(queue) if queue else []
+                for s in filled:
+                    prefilled[s] = 0
+                chunking = [s for s in range(WIDTH)
+                            if slots[s] is not None and prefilled[s] is not None]
+                decoding = [s for s in range(WIDTH)
+                            if slots[s] is not None and prefilled[s] is None]
+                if not chunking and not decoding:
+                    raise AssertionError(
+                        "stuck: queue non-empty but nothing admitted/active"
+                    )
+                budget_now = CHUNK_TOKENS
+                finishers = []
+                advanced = False
+                for s in chunking:
+                    plen = len(reqs[slots[s]][0])
+                    if prefilled[s] >= plen:
+                        finishers.append(s)  # rolled-back leftover
+                        continue
+                    if budget_now == 0:
+                        continue
+                    take = min(plen - prefilled[s], budget_now)
+                    budget_now -= take
+                    prefilled[s] += take
+                    stats["chunks"] += 1
+                    advanced = True
+                    # convert reservations exactly as far as the cursor
+                    # walked (KvCacheManager::grow_prefill)
+                    while len(tables[s]) < _pages_for(prefilled[s]):
+                        assert reserved_ct[s] > 0, "chunk walked past ledger"
+                        tables[s].append(alloc.grow())
+                        reserved_ct[s] -= 1
+                        stats["grows"] += 1
+                    if prefilled[s] >= plen:
+                        finishers.append(s)
+                if finishers and fault_pending:
+                    # transient prefill fault at the chunk boundary:
+                    # nothing was committed, so requeue front-first with
+                    # every page and reservation reclaimed
+                    fault_pending = False
+                    stats["requeues"] += len(finishers)
+                    for s in reversed(finishers):
+                        queue.insert(0, slots[s])
+                        alloc.release(tables[s])
+                        alloc.unreserve(reserved_ct[s])
+                        tables[s], shared_ct[s], reserved_ct[s] = [], 0, 0
+                        slots[s] = None
+                        prefilled[s] = None
+                elif finishers:
+                    do_prefill(finishers)
+                    for s in finishers:
+                        prefilled[s] = None
+                if decoding:
+                    if advanced:
+                        stats["mixed_ticks"] += 1
+                    still = [s for s in range(WIDTH)
+                             if slots[s] is not None and prefilled[s] is not None]
+                    do_decode(decoding, suppress=still)
             else:
-                raise AssertionError(
-                    "stuck: queue non-empty but nothing admitted/active"
-                )
+                filled = refill(queue) if queue else []
+                if filled:
+                    do_prefill(filled)
+                elif any(s is not None for s in slots):
+                    do_decode()
+                else:
+                    raise AssertionError(
+                        "stuck: queue non-empty but nothing admitted/active"
+                    )
             if paged:
                 alloc.check_conservation()
                 pool.audit(alloc)
@@ -601,6 +716,44 @@ def test_cancelled_donor_never_parks_but_pool_conserves():
     alloc.check_conservation()
     assert alloc.reserved == 0
     assert len(alloc.free) + alloc.retained == alloc.usable()
+
+
+def test_chunked_prefill_three_way_bit_identical():
+    """PR 7's twin acceptance: monolithic vs chunked vs chunked-under-
+    retry must be bit-for-bit identical through page growth, CoW prefix
+    sharing and retained-pool hits.  Chunk pacing is pure scheduling —
+    the only things allowed to differ are the interleaving statistics."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    base = _requests()
+    phases = [base + [(list(ALIGNED_PROMPT), 3)],
+              [(list(ALIGNED_PROMPT), 3), (base[0][0], 3)]]
+    dense, _, _ = _serve(params, "dense", phases=phases)
+    mono, _, _ = _serve(params, "retained", phases=phases)
+    chunked, alloc_c, stats_c = _serve(params, "chunked", phases=phases)
+    retried, alloc_r, stats_r = _serve(
+        params, "chunked", phases=phases, chunk_fault=True
+    )
+    assert mono == dense, f"monolithic {mono} != dense {dense}"
+    assert chunked == dense, f"chunked {chunked} != dense {dense}"
+    assert retried == dense, f"chunked-under-retry {retried} != dense {dense}"
+    # the mixed-phase machinery genuinely engaged
+    n_reqs = sum(len(p) for p in phases)
+    assert stats_c["chunks"] > n_reqs, (
+        f"multi-chunk prefills must happen: {stats_c['chunks']} chunk "
+        f"advances over {n_reqs} requests"
+    )
+    assert stats_c["mixed_ticks"] > 0, "chunks must co-schedule with decode"
+    assert stats_c["grows"] > 0, "chunked admission must convert reservations"
+    assert stats_c["shared"] > 0 and stats_c["cow"] > 0, (
+        "prefix sharing must survive chunked admission"
+    )
+    assert stats_c["hits"] >= 1, "the retained pool must serve the repeat"
+    # the retry run really faulted and requeued, then conserved
+    assert stats_r["requeues"] >= 1, "the injected chunk fault never fired"
+    for alloc in (alloc_c, alloc_r):
+        alloc.check_conservation()
+        assert alloc.reserved == 0
+        assert len(alloc.free) + alloc.retained == alloc.usable()
 
 
 def test_never_admissible_request_rejected_at_submit_queue_drains():

@@ -24,6 +24,11 @@ pub enum SlotState {
     Empty,
     /// Waiting for the prefill of its sequence.
     Prefilling(RequestId),
+    /// In chunked prefill: admitted, walking its prompt a bounded token
+    /// budget per step ([`Slot::prefilled`] tracks progress), no token
+    /// sampled yet.  The slot interleaves chunk advances with other
+    /// slots' decode steps instead of blocking the queue.
+    Chunking(RequestId),
     /// Actively decoding.
     Decoding(RequestId),
 }
@@ -49,6 +54,10 @@ pub struct Slot {
     pub arrived: Option<std::time::Instant>,
     /// When the first token was sampled (TTFT).
     pub first_token_at: Option<std::time::Instant>,
+    /// Prompt tokens whose prefill chunks have been scheduled so far
+    /// (only meaningful in [`SlotState::Chunking`]; the slot's prefill
+    /// completes when this reaches the prompt length).
+    pub prefilled: usize,
 }
 
 impl Slot {
@@ -62,6 +71,7 @@ impl Slot {
             started: None,
             arrived: None,
             first_token_at: None,
+            prefilled: 0,
         }
     }
 
@@ -154,7 +164,20 @@ impl Batcher {
     /// refill entirely (the head-of-line request keeps its place, so
     /// FIFO admission order is preserved under page starvation —
     /// later, smaller requests must not overtake it).
-    pub fn refill_with<F: FnMut(&Request) -> bool>(&mut self, mut admit: F) -> Vec<usize> {
+    pub fn refill_with<F: FnMut(&Request) -> bool>(&mut self, admit: F) -> Vec<usize> {
+        self.fill_slots(admit, false)
+    }
+
+    /// [`Self::refill_with`], but admitted requests enter the
+    /// [`SlotState::Chunking`] state (chunked-prefill admission): the
+    /// prompt will be prefilled a bounded token budget per step instead
+    /// of in one whole-batch call.  Same FIFO / first-rejection-stops
+    /// contract as `refill_with`.
+    pub fn refill_chunked_with<F: FnMut(&Request) -> bool>(&mut self, admit: F) -> Vec<usize> {
+        self.fill_slots(admit, true)
+    }
+
+    fn fill_slots<F: FnMut(&Request) -> bool>(&mut self, mut admit: F, chunked: bool) -> Vec<usize> {
         let mut filled = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if slot.state != SlotState::Empty {
@@ -167,7 +190,11 @@ impl Batcher {
             // xor with a salt so seed 0 doesn't collapse onto Rng(0)
             let rng = Rng::new(req.params.seed ^ 0x5A17_5EED_0F5A_17ED);
             *slot = Slot {
-                state: SlotState::Prefilling(req.id),
+                state: if chunked {
+                    SlotState::Chunking(req.id)
+                } else {
+                    SlotState::Prefilling(req.id)
+                },
                 prompt: req.prompt,
                 generated: Vec::new(),
                 params: req.params,
@@ -175,6 +202,7 @@ impl Batcher {
                 started: Some(std::time::Instant::now()),
                 arrived: Some(req.arrived),
                 first_token_at: None,
+                prefilled: 0,
             };
             filled.push(i);
         }
@@ -184,16 +212,20 @@ impl Batcher {
     /// Undo an admission whose prefill never executed: put the slot's
     /// request back at the *front* of the queue (FIFO order survives a
     /// failed batch when callers requeue a filled batch in reverse) and
-    /// empty the slot.  Only `Prefilling` slots can be requeued — a slot
-    /// that already decoded tokens has device state the queue cannot
-    /// represent.  Returns whether the slot was requeued.
+    /// empty the slot.  Only `Prefilling` / `Chunking` slots can be
+    /// requeued — a slot that already decoded tokens has device state
+    /// the queue cannot represent.  A half-chunked slot restarts from
+    /// chunk zero on re-admission; its tokens replay bit-identically
+    /// because the per-slot rng is recreated from the request seed and
+    /// was never consumed before the first sampled token.  Returns
+    /// whether the slot was requeued.
     ///
     /// The push-front may transiently exceed `max_queue`; the bound is
     /// an *intake* gate, and dropping an already-admitted request to
     /// honour it would violate conservation.
     pub fn requeue(&mut self, idx: usize) -> bool {
         let slot = &mut self.slots[idx];
-        let SlotState::Prefilling(id) = slot.state else {
+        let (SlotState::Prefilling(id) | SlotState::Chunking(id)) = slot.state else {
             return false;
         };
         let req = Request {
@@ -215,20 +247,33 @@ impl Batcher {
             return true;
         }
         self.slots.iter().any(|s| match s.state {
-            SlotState::Prefilling(i) => i == id,
+            SlotState::Prefilling(i) | SlotState::Chunking(i) => i == id,
             SlotState::Decoding(i) => i == id && s.generated.is_empty(),
             SlotState::Empty => false,
         })
     }
 
     /// Mark a slot as prefilled and record its first sampled token.
+    /// Accepts both monolithic (`Prefilling`) and chunked (`Chunking`)
+    /// in-prefill states — a chunked slot completes here once its last
+    /// chunk has been scheduled and the prefill call sampled its token.
     pub fn complete_prefill(&mut self, idx: usize, first_token: i32) {
         let slot = &mut self.slots[idx];
-        if let SlotState::Prefilling(id) = slot.state {
+        if let SlotState::Prefilling(id) | SlotState::Chunking(id) = slot.state {
             slot.state = SlotState::Decoding(id);
             slot.generated.push(first_token);
             slot.first_token_at = Some(std::time::Instant::now());
         }
+    }
+
+    /// Indices currently in chunked prefill, batch order.
+    pub fn chunking_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.state, SlotState::Chunking(_)))
+            .map(|(i, _)| i)
+            .collect()
     }
 
     /// Indices currently decoding.
@@ -294,7 +339,11 @@ impl Batcher {
             ));
         }
         let slot_idx = self.slots.iter().position(|s| {
-            matches!(s.state, SlotState::Decoding(i) | SlotState::Prefilling(i) if i == id)
+            matches!(
+                s.state,
+                SlotState::Decoding(i) | SlotState::Prefilling(i) | SlotState::Chunking(i)
+                    if i == id
+            )
         })?;
         let slot = &mut self.slots[slot_idx];
         let resp = Response {
@@ -314,7 +363,9 @@ impl Batcher {
     pub fn abort_all(&mut self) -> Vec<Response> {
         let mut out = Vec::new();
         for slot in &mut self.slots {
-            if let SlotState::Decoding(id) | SlotState::Prefilling(id) = slot.state {
+            if let SlotState::Decoding(id) | SlotState::Prefilling(id) | SlotState::Chunking(id) =
+                slot.state
+            {
                 out.push(Response {
                     id,
                     tokens: std::mem::take(&mut slot.generated),
@@ -600,6 +651,63 @@ mod tests {
         assert!(!b.awaiting_first_token(id0), "first token sampled");
         assert!(b.awaiting_first_token(id1), "still queued");
         assert!(!b.awaiting_first_token(RequestId(77)), "unknown id");
+    }
+
+    #[test]
+    fn chunked_refill_enters_chunking_state() {
+        let mut b = Batcher::new(2, 8);
+        for i in 0..3 {
+            b.submit(req(i, 6, 4));
+        }
+        let filled = b.refill_chunked_with(|_| true);
+        assert_eq!(filled, vec![0, 1]);
+        assert_eq!(b.chunking_slots(), vec![0, 1]);
+        assert!(b.decoding_slots().is_empty());
+        for &i in &filled {
+            assert!(matches!(b.slots()[i].state, SlotState::Chunking(_)));
+            assert_eq!(b.slots()[i].prefilled, 0);
+        }
+        // completion transitions Chunking -> Decoding like Prefilling
+        b.slot_mut(0).prefilled = 6;
+        b.complete_prefill(0, 42);
+        assert_eq!(b.decoding_slots(), vec![0]);
+        assert_eq!(b.chunking_slots(), vec![1]);
+        assert_eq!(b.slots()[0].generated, vec![42]);
+    }
+
+    #[test]
+    fn requeue_restores_half_chunked_slot_to_queue_head() {
+        let mut b = Batcher::new(1, 8);
+        b.submit(req(0, 8, 4));
+        b.submit(req(1, 2, 4));
+        b.refill_chunked_with(|_| true);
+        b.slot_mut(0).prefilled = 5; // half-chunked
+        assert!(b.requeue(0), "chunking slots can requeue");
+        let ids: Vec<u64> = b.queued_requests().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1], "FIFO order restored");
+        let (adm, fin, act, q) = b.accounting();
+        assert_eq!((adm, fin, act, q), (2, 0, 0, 2), "nothing lost");
+        // re-admission restarts chunk progress from zero
+        b.refill_chunked_with(|_| true);
+        assert_eq!(b.slots()[0].prefilled, 0);
+    }
+
+    #[test]
+    fn abort_and_awaiting_cover_chunking_slots() {
+        let mut b = Batcher::new(2, 8);
+        b.submit(req(0, 6, 4));
+        b.submit(req(1, 6, 4));
+        b.refill_chunked_with(|_| true);
+        b.slot_mut(0).prefilled = 3;
+        assert!(b.awaiting_first_token(RequestId(0)), "mid-chunk = no token yet");
+        let (resp, slot) = b.abort(RequestId(0)).expect("mid-chunk abort");
+        assert_eq!(resp.finish, FinishReason::Aborted);
+        assert!(resp.tokens.is_empty(), "no tokens sampled mid-chunk");
+        assert_eq!(slot, Some(0), "slot returned so pages can be reclaimed");
+        // drain covers the remaining chunking slot too
+        let drained = b.abort_all();
+        assert_eq!(drained.len(), 1);
+        assert!(b.idle());
     }
 
     #[test]

@@ -115,6 +115,19 @@ pub struct EngineConfig {
     /// an extra `(E,)` host download per tick, and the steady-state
     /// transfer assertions pin the logits-only baseline.
     pub expert_telemetry: bool,
+    /// Mixed-phase steps: split each prompt's prefill into bounded
+    /// token-budget *chunks* interleaved with other slots' decode steps
+    /// ([`Engine::tick`] composes admission + chunk advances + decode in
+    /// one step), instead of one whole-batch prefill tick that blocks
+    /// every decoder.  `false` (the default) keeps the monolithic
+    /// one-phase-per-tick scheduler — the bit-identical equivalence
+    /// baseline every chunked test compares against.
+    pub chunked_prefill: bool,
+    /// Per-step prompt-token budget shared (slot-index order) by all
+    /// in-chunked-prefill slots when `chunked_prefill` is on.  Rejected
+    /// at [`Engine::new`] when 0 or smaller than one page row — see
+    /// [`validate_chunk_config`].
+    pub prefill_chunk_tokens: usize,
     /// Admission-queue bound (submissions beyond it are rejected).
     pub max_queue: usize,
     /// Prefill/decode interleaving policy.
@@ -137,11 +150,77 @@ impl Default for EngineConfig {
             share_prefixes: true,
             prefix_cache: true,
             expert_telemetry: false,
+            chunked_prefill: false,
+            prefill_chunk_tokens: 16,
             max_queue: 256,
             scheduler: SchedulerConfig::default(),
             seed: 0,
         }
     }
+}
+
+/// Typed rejection for an unusable chunked-prefill configuration,
+/// raised at [`Engine::new`] (and the sim twin's build) instead of a
+/// mid-tick panic or a silent no-progress spin.  Downcastable through
+/// `anyhow` so callers can tell a config error from a runtime fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkConfigError {
+    /// `prefill_chunk_tokens == 0`: a zero budget can never advance a
+    /// chunked prefill, so the first admitted request would spin the
+    /// engine forever.
+    ZeroChunk,
+    /// The chunk budget is smaller than one KV page row on the paged
+    /// layout: chunked admission grants whole first-chunk *pages*, so a
+    /// sub-page budget would promise page-granular progress the step
+    /// can never make.
+    ChunkBelowPageSize {
+        /// Configured `prefill_chunk_tokens`.
+        chunk_tokens: usize,
+        /// Rows per KV pool page (from the paged artifact meta).
+        page_size: usize,
+    },
+}
+
+impl std::fmt::Display for ChunkConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChunkConfigError::ZeroChunk => write!(
+                f,
+                "prefill_chunk_tokens = 0: a chunked prefill could never \
+                 make progress"
+            ),
+            ChunkConfigError::ChunkBelowPageSize { chunk_tokens, page_size } => write!(
+                f,
+                "prefill_chunk_tokens = {chunk_tokens} is smaller than one \
+                 KV page row ({page_size} tokens) — chunked admission \
+                 grants whole pages, so the budget must cover at least one"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ChunkConfigError {}
+
+/// Validate the chunked-prefill knobs (pure — unit-testable without
+/// artifacts).  `page_size` is `Some` on the paged KV layout, where the
+/// chunk budget must cover at least one page row; `None` on the dense
+/// layout, where only the zero-budget spin is rejected.  A disabled
+/// `chunked` config is always valid: the knobs are inert.
+pub fn validate_chunk_config(
+    chunked: bool, chunk_tokens: usize, page_size: Option<usize>,
+) -> Result<(), ChunkConfigError> {
+    if !chunked {
+        return Ok(());
+    }
+    if chunk_tokens == 0 {
+        return Err(ChunkConfigError::ZeroChunk);
+    }
+    if let Some(page_size) = page_size {
+        if chunk_tokens < page_size {
+            return Err(ChunkConfigError::ChunkBelowPageSize { chunk_tokens, page_size });
+        }
+    }
+    Ok(())
 }
 
 /// Serving statistics snapshot.
@@ -199,6 +278,14 @@ pub struct EngineMetrics {
     /// Engine ticks retried by the front-end to ride out transient
     /// runtime faults.
     pub retries: u64,
+    /// Prefill chunk advances committed (chunked mode: one per slot per
+    /// step that moved its prefill cursor).
+    pub prefill_chunks: u64,
+    /// Prompt tokens walked by committed chunk advances (chunked mode).
+    pub chunk_tokens_prefilled: u64,
+    /// Steps that advanced prefill chunks *and* ran a decode step — the
+    /// mixed-phase co-scheduling the monolithic scheduler cannot do.
+    pub mixed_steps: u64,
     /// Time-to-first-token distribution (seconds).
     pub ttft: Histogram,
     /// End-to-end latency distribution (seconds).
@@ -242,6 +329,12 @@ pub struct Engine {
     /// deterministic fault schedule guarding every runtime call site
     /// (disabled by default — one integer increment per call)
     faults: FaultInjector,
+    /// per-token commit log since the last [`Engine::take_token_events`]
+    /// drain: `(request, token)` pushed exactly when a token enters its
+    /// request's final output (the streaming front-end forwards these to
+    /// per-request channels each tick; callers that never drain pay
+    /// O(generated tokens) host memory, nothing else)
+    token_events: Vec<(RequestId, i32)>,
     /// Serving metrics (counters + latency histograms).
     pub metrics: EngineMetrics,
     /// Per-expert routing load telemetry (fed by the decode artifact's
@@ -254,6 +347,10 @@ impl Engine {
     /// Build the engine: loads manifest shapes, materialises params via
     /// the init artifact, zero-initialises the KV caches on device.
     pub fn new(runtime: std::sync::Arc<Runtime>, cfg: EngineConfig) -> Result<Engine> {
+        // layout-independent chunk validation first (zero budget spins);
+        // the paged arm below re-validates against the page geometry
+        validate_chunk_config(cfg.chunked_prefill, cfg.prefill_chunk_tokens, None)
+            .map_err(anyhow::Error::new)?;
         let prefill = runtime.spec(&cfg.prefill_artifact)?.clone();
         let width = prefill.inputs[0].shape[0];
         let prompt_width = prefill.inputs[0].shape[1];
@@ -267,6 +364,7 @@ impl Engine {
             lazy_growth: cfg.lazy_growth,
             share_prefixes: cfg.share_prefixes,
             prefix_cache: cfg.prefix_cache,
+            chunk_rows: cfg.chunked_prefill.then_some(cfg.prefill_chunk_tokens),
         };
 
         // Optional per-tick expert routing telemetry: a decode artifact
@@ -334,6 +432,12 @@ impl Engine {
                 // and the declared output→input chains
                 let meta = pd.checked_paged_meta(3, 2)?;
                 let append_meta = pa.checked_paged_meta(0, 4)?;
+                validate_chunk_config(
+                    cfg.chunked_prefill,
+                    cfg.prefill_chunk_tokens,
+                    Some(meta.page_size),
+                )
+                .map_err(anyhow::Error::new)?;
                 anyhow::ensure!(
                     meta == append_meta,
                     "paged geometry disagrees: '{}' {meta:?} vs '{}' {append_meta:?}",
@@ -514,6 +618,7 @@ impl Engine {
             pos: vec![0; width],
             last_token: vec![0; width],
             faults: FaultInjector::disabled(),
+            token_events: Vec::new(),
             metrics: EngineMetrics::default(),
             expert_stats: ExpertStats::new(num_experts),
             runtime,
@@ -640,8 +745,22 @@ impl Engine {
         }
     }
 
+    /// Drain the per-token commit log accumulated since the last call:
+    /// `(request, token)` pairs in commit order — exactly the tokens
+    /// that entered request outcomes, so a streaming front-end can
+    /// forward them to per-request channels with no duplication or
+    /// reordering.  Ticks that fail commit nothing and log nothing.
+    pub fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        std::mem::take(&mut self.token_events)
+    }
+
     /// Drive one tick; returns any responses completed during it.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
+        if self.cfg.chunked_prefill {
+            let out = self.tick_mixed();
+            self.sync_kv_metrics();
+            return out;
+        }
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.width - active as usize;
         // requests the scheduler may admit THIS tick: the FIFO prefix
@@ -677,6 +796,171 @@ impl Engine {
         };
         self.sync_kv_metrics();
         out
+    }
+
+    /// One mixed-phase step (`chunked_prefill: true`): admission, chunk
+    /// advances, and a decode step compose into the *same* tick instead
+    /// of the monolithic either/or.
+    ///
+    /// Order of operations (the failure story depends on it):
+    ///
+    /// 1. **Admit** greedily — chunked prefill removed the batch-restart
+    ///    cost, so every page-admissible request takes an empty slot now;
+    ///    the cache manager books only the first chunk's pages (plus the
+    ///    reservation ledger for the rest).
+    /// 2. **Plan** chunk advances: the step's `prefill_chunk_tokens`
+    ///    budget is split over in-prefill slots in slot-index order;
+    ///    slots whose cursor reaches the prompt end are this step's
+    ///    *finishers*.
+    /// 3. **Pre-check every fault site the step will hit** (prefill +
+    ///    splice/append when there are finishers, decode when there are
+    ///    decoders) *before committing anything*.  A mixed step has two
+    ///    fallible phases; letting an injected fault fire between them
+    ///    would drop phase-1 responses on the floor.  An injected fault
+    ///    therefore always errors out a *clean* step: no cursor moved,
+    ///    no rng consumed, no device call issued — the front-end's retry
+    ///    replays it bit-identically.  (Admitted slots stay `Chunking`
+    ///    across the retry; admission itself mutates nothing the replay
+    ///    depends on.)
+    /// 4. **Commit** cursor advances (converting reservations into real
+    ///    pages chunk by chunk), run the prefill artifact once over the
+    ///    finishers, then one decode step over the slots that were
+    ///    *already* decoding when the tick began (a finisher starts
+    ///    decoding next tick, exactly like the monolithic path).
+    ///
+    /// A *genuine* runtime error from the finisher prefill requeues the
+    /// finishers (front of queue, pages + reservations released) like
+    /// the monolithic rollback; a genuine decode error after a committed
+    /// prefill falls into the same permanent-drain recovery the
+    /// monolithic engine has for partial per-slot failures.
+    fn tick_mixed(&mut self) -> Result<Vec<Response>> {
+        let (_, _, active, queued) = self.batcher.accounting();
+        let empty = self.width - active as usize;
+        let admissible = self.kv.admissible_now(
+            self.batcher
+                .queued_requests()
+                .map(|r| (r.prompt.as_slice(), r.params.max_new_tokens)),
+            queued as usize,
+            empty,
+        );
+        if admissible == 0 && queued > 0 && empty > 0 {
+            self.metrics.page_stalls += 1;
+        }
+        let mut chunking = self.batcher.chunking_slots();
+        // captured BEFORE finishers complete prefill: a slot that gets
+        // its first token this step starts decoding next step
+        let decoding = self.batcher.decoding_slots();
+        let step = self
+            .scheduler
+            .decide_mixed(admissible, empty, chunking.len(), decoding.len());
+        if step.is_idle() {
+            anyhow::ensure!(
+                self.batcher.idle(),
+                "mixed scheduler idled with work queued or in flight"
+            );
+            return Ok(Vec::new());
+        }
+
+        // Phase 1: greedy admission on the first chunk's pages.
+        if step.admit {
+            let kv = &mut self.kv;
+            let filled = self
+                .batcher
+                .refill_chunked_with(|req| kv.admit(&req.prompt, req.params.max_new_tokens));
+            for &slot in &filled {
+                self.kv.install(slot);
+                // scrub the previous occupant's decode-lane state — the
+                // mixed decode uploads full-width vectors every step
+                self.pos[slot] = 0;
+                self.last_token[slot] = 0;
+            }
+            debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
+            chunking.extend(filled);
+            chunking.sort_unstable();
+        }
+
+        // Phase 2: plan chunk advances under the step's token budget
+        // (slot-index order; a freshly admitted short prompt can finish
+        // its whole prefill in its admission step).
+        let mut budget = self.cfg.prefill_chunk_tokens;
+        let mut advances: Vec<(usize, usize, usize)> = Vec::new(); // (slot, cursor', took)
+        let mut finishers: Vec<usize> = Vec::new();
+        for &i in &chunking {
+            let slot = &self.batcher.slots()[i];
+            let plen = slot.prompt.len().min(self.prompt_width).max(1);
+            if slot.prefilled >= plen {
+                // fully chunked already (a previous step's finisher
+                // prefill was rolled back): just needs the artifact call
+                finishers.push(i);
+                continue;
+            }
+            if budget == 0 {
+                continue;
+            }
+            let take = (plen - slot.prefilled).min(budget);
+            budget -= take;
+            let cursor = slot.prefilled + take;
+            advances.push((i, cursor, take));
+            if cursor >= plen {
+                finishers.push(i);
+            }
+        }
+
+        // Phase 3: pre-check every fault site this step will hit.
+        if !finishers.is_empty() {
+            self.faults
+                .check(FaultSite::Prefill)
+                .map_err(anyhow::Error::new)?;
+            match self.kv.layout() {
+                KvLayout::Dense => self
+                    .faults
+                    .check(FaultSite::Splice)
+                    .map_err(anyhow::Error::new)?,
+                KvLayout::Paged => self
+                    .faults
+                    .check(FaultSite::Append)
+                    .map_err(anyhow::Error::new)?,
+            }
+        }
+        if !decoding.is_empty() {
+            self.faults
+                .check(FaultSite::Decode)
+                .map_err(anyhow::Error::new)?;
+        }
+
+        // Phase 4: commit.  Cursor advances convert reserved pages into
+        // table pages exactly as far as the cursor walked.
+        let advanced = !advances.is_empty();
+        for &(i, cursor, took) in &advances {
+            self.kv.grow_prefill(i, cursor)?;
+            self.batcher.slot_mut(i).prefilled = cursor;
+            self.metrics.prefill_chunks += 1;
+            self.metrics.chunk_tokens_prefilled += took as u64;
+        }
+        let mut responses = Vec::new();
+        if !finishers.is_empty() {
+            match self.prefill_filled(&finishers, false) {
+                Ok(r) => {
+                    self.metrics.prefills += 1;
+                    responses.extend(r);
+                }
+                Err(e) => {
+                    for &slot in finishers.iter().rev() {
+                        if self.batcher.requeue(slot) {
+                            self.kv.release(slot, false);
+                        }
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        if !decoding.is_empty() {
+            if advanced {
+                self.metrics.mixed_steps += 1;
+            }
+            responses.extend(self.decode_slots(&decoding, false)?);
+        }
+        Ok(responses)
     }
 
     /// Run ticks until every submitted request finished.
@@ -730,7 +1014,7 @@ impl Engine {
         // its pages + growth reservations reclaim.  Slots that already
         // advanced past prefill (partial per-slot failures) keep their
         // state; the caller's drain path covers them.
-        match self.prefill_filled(&filled) {
+        match self.prefill_filled(&filled, true) {
             Ok(responses) => {
                 self.metrics.prefills += 1;
                 Ok(responses)
@@ -746,23 +1030,28 @@ impl Engine {
         }
     }
 
-    /// The fallible body of a prefill tick over already-admitted slots;
-    /// [`Engine::do_prefill`] owns the rollback when this errs.
-    fn prefill_filled(&mut self, filled: &[usize]) -> Result<Vec<Response>> {
-        self.faults
-            .check(FaultSite::Prefill)
-            .map_err(anyhow::Error::new)?;
+    /// The fallible body of a prefill tick over already-admitted slots
+    /// (monolithic `Prefilling` batches and mixed-step `Chunking`
+    /// finishers alike); the caller owns the rollback when this errs.
+    /// `check_faults: false` is the mixed step, whose fault sites were
+    /// pre-checked before anything committed.
+    fn prefill_filled(&mut self, filled: &[usize], check_faults: bool) -> Result<Vec<Response>> {
+        if check_faults {
+            self.faults
+                .check(FaultSite::Prefill)
+                .map_err(anyhow::Error::new)?;
+        }
         // build padded prompt matrix for the WHOLE batch (static shape);
-        // rows of in-flight slots are zeros and their outputs are ignored.
+        // rows of slots outside `filled` are zeros and their outputs are
+        // ignored.
         let mut toks = vec![0i32; self.width * self.prompt_width];
         let mut lens = vec![1i32; self.width];
-        for (i, slot) in self.batcher.slots().iter().enumerate() {
-            if let SlotState::Prefilling(_) = slot.state {
-                let l = slot.prompt.len().min(self.prompt_width).max(1);
-                lens[i] = l as i32;
-                for (j, &t) in slot.prompt.iter().take(l).enumerate() {
-                    toks[i * self.prompt_width + j] = t;
-                }
+        for &i in filled {
+            let slot = &self.batcher.slots()[i];
+            let l = slot.prompt.len().min(self.prompt_width).max(1);
+            lens[i] = l as i32;
+            for (j, &t) in slot.prompt.iter().take(l).enumerate() {
+                toks[i * self.prompt_width + j] = t;
             }
         }
         let toks_b = self.runtime.upload_tensor_for(
@@ -791,8 +1080,8 @@ impl Engine {
         // merge ONLY the refilled slots' rows into the live KV state —
         // dense row splice, or page-table scatter on the paged layout
         match self.kv.layout() {
-            KvLayout::Dense => self.splice_cache_rows(kc_new, vc_new, filled)?,
-            KvLayout::Paged => self.append_pages(kc_new, vc_new, filled)?,
+            KvLayout::Dense => self.splice_cache_rows(kc_new, vc_new, filled, check_faults)?,
+            KvLayout::Paged => self.append_pages(kc_new, vc_new, filled, check_faults)?,
         }
 
         let mut responses = Vec::new();
@@ -800,7 +1089,15 @@ impl Engine {
             let first = self.sample_row(&logits, i)?;
             self.pos[i] = lens[i];
             self.last_token[i] = first;
+            let id = match self.batcher.slots()[i].state {
+                SlotState::Prefilling(id) | SlotState::Chunking(id) => id,
+                ref s => anyhow::bail!("prefilled slot {i} in state {s:?}"),
+            };
             self.batcher.complete_prefill(i, first);
+            // prompt KV is now written: the slot may donate CoW
+            // prefixes (chunked admission gates donors on this)
+            self.kv.mark_prefilled(i);
+            self.token_events.push((id, first));
             self.metrics.generated_tokens += 1;
             // a 1-token request can finish right at prefill
             if let Some(resp) = self.maybe_finish(i, first) {
@@ -815,20 +1112,30 @@ impl Engine {
         if decoding.is_empty() {
             return Ok(Vec::new());
         }
+        self.decode_slots(&decoding, true)
+    }
+
+    /// One decode artifact call over `decoding`'s slots (the whole
+    /// static batch runs; only these rows are sampled).  `check_faults:
+    /// false` is the mixed step, whose decode fault site was pre-checked
+    /// before anything committed.
+    fn decode_slots(&mut self, decoding: &[usize], check_faults: bool) -> Result<Vec<Response>> {
         // lazy page growth: this tick appends each active slot's KV row
         // at `pos`; any slot whose `pos` crossed into an unallocated
         // page converts one admission-time reservation into a real page
         // first (the ledger guarantees success — a failure here is a
         // page-accounting bug, not backpressure)
-        for &i in &decoding {
+        for &i in decoding {
             self.kv.grow_to(i, self.pos[i] as usize)?;
         }
         // the growth above is idempotent, so a fault here (or a failed
         // execute below) leaves a state a retried tick replays exactly:
         // no position advanced, no slot rng consumed, caches untouched
-        self.faults
-            .check(FaultSite::Decode)
-            .map_err(anyhow::Error::new)?;
+        if check_faults {
+            self.faults
+                .check(FaultSite::Decode)
+                .map_err(anyhow::Error::new)?;
+        }
         // steady-state host traffic: two (B,) i32 vectors (plus the
         // (B, pages_per_slot) block table when paged) up, one (B, V)
         // logits matrix (plus the (E,) expert counts when exposed)
@@ -846,10 +1153,26 @@ impl Engine {
         )?;
         let table_b = match self.kv.layout() {
             KvLayout::Dense => None,
-            KvLayout::Paged => Some(
-                self.runtime
-                    .upload_tensor_for(&artifact, &self.kv.block_table(false)?)?,
-            ),
+            KvLayout::Paged => {
+                let mut table = self.kv.block_table(false)?;
+                // A mid-chunk slot already owns real pages (first chunk
+                // plus growth), but its decode lane is inert padding: the
+                // artifact's unconditional KV scatter would write its
+                // stale `pos` row — possibly into a CoW-*shared* prefix
+                // page, corrupting the donor.  Route the whole lane to
+                // the garbage page until its prefill completes (its real
+                // pages are filled by `page_append` at the final chunk).
+                let chunking = self.batcher.chunking_slots();
+                if !chunking.is_empty() {
+                    let cols = table.shape[1];
+                    let t = table.as_i32_mut()?;
+                    for &s in &chunking {
+                        t[s * cols..(s + 1) * cols]
+                            .fill(crate::coordinator::kvcache::pagetable::RESERVED_PAGE as i32);
+                    }
+                }
+                Some(self.runtime.upload_tensor_for(&artifact, &table)?)
+            }
         };
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(5 + self.params.len());
         args.push(&pos_b);
@@ -899,10 +1222,15 @@ impl Engine {
         }
 
         let mut responses = Vec::new();
-        for i in decoding {
+        for &i in decoding {
             let tok = self.sample_row(&logits, i)?;
             self.pos[i] = (self.pos[i] + 1).min(self.max_len as i32 - 1);
             self.last_token[i] = tok;
+            let id = match self.batcher.slots()[i].state {
+                SlotState::Decoding(id) => id,
+                ref s => anyhow::bail!("decoding slot {i} in state {s:?}"),
+            };
+            self.token_events.push((id, tok));
             self.metrics.generated_tokens += 1;
             if let Some(resp) = self.maybe_finish(i, tok) {
                 responses.push(resp);
@@ -940,10 +1268,13 @@ impl Engine {
     /// host-side row copy otherwise.
     fn splice_cache_rows(
         &mut self, kc_new: xla::PjRtBuffer, vc_new: xla::PjRtBuffer, slots: &[usize],
+        check_faults: bool,
     ) -> Result<()> {
-        self.faults
-            .check(FaultSite::Splice)
-            .map_err(anyhow::Error::new)?;
+        if check_faults {
+            self.faults
+                .check(FaultSite::Splice)
+                .map_err(anyhow::Error::new)?;
+        }
         if slots.len() == self.width {
             // whole batch refilled: adopt wholesale, no copies
             self.k_cache = kc_new;
@@ -995,10 +1326,13 @@ impl Engine {
     /// device; only the mask and table are staged.
     fn append_pages(
         &mut self, kc_new: xla::PjRtBuffer, vc_new: xla::PjRtBuffer, slots: &[usize],
+        check_faults: bool,
     ) -> Result<()> {
-        self.faults
-            .check(FaultSite::Append)
-            .map_err(anyhow::Error::new)?;
+        if check_faults {
+            self.faults
+                .check(FaultSite::Append)
+                .map_err(anyhow::Error::new)?;
+        }
         let name = self.cfg.page_append_artifact.clone();
         let mut mask = vec![0i32; self.width];
         for &s in slots {
@@ -1155,4 +1489,39 @@ mod tests {
         }
     }
 
+    #[test]
+    fn chunk_config_rejects_zero_and_sub_page_budgets() {
+        // regression for the mid-tick spin: a zero chunk budget must be
+        // a typed build-time error, never an engine that ticks forever
+        assert_eq!(
+            validate_chunk_config(true, 0, None),
+            Err(ChunkConfigError::ZeroChunk)
+        );
+        assert_eq!(
+            validate_chunk_config(true, 0, Some(8)),
+            Err(ChunkConfigError::ZeroChunk),
+            "zero budget outranks the page-size check"
+        );
+        // paged layout: the budget must cover at least one page row
+        assert_eq!(
+            validate_chunk_config(true, 7, Some(8)),
+            Err(ChunkConfigError::ChunkBelowPageSize { chunk_tokens: 7, page_size: 8 })
+        );
+        assert_eq!(validate_chunk_config(true, 8, Some(8)), Ok(()));
+        // dense layout has no page granularity to violate
+        assert_eq!(validate_chunk_config(true, 1, None), Ok(()));
+        // disabled chunking makes the knobs inert
+        assert_eq!(validate_chunk_config(false, 0, Some(8)), Ok(()));
+    }
+
+    #[test]
+    fn chunk_config_error_downcasts_through_anyhow() {
+        let err = anyhow::Error::new(ChunkConfigError::ZeroChunk);
+        assert_eq!(
+            err.downcast_ref::<ChunkConfigError>(),
+            Some(&ChunkConfigError::ZeroChunk),
+            "callers must be able to tell a config error from a fault"
+        );
+        assert!(err.to_string().contains("prefill_chunk_tokens"));
+    }
 }

@@ -22,6 +22,19 @@
 //!   * **SLO reporting** — every arrival ends in exactly one
 //!     [`RequestOutcome`]; [`ServeFrontend::report`] folds them into a
 //!     [`ServeReport`] with TTFT/TPOT/goodput distributions.
+//!   * **per-token streaming** — with [`FrontendConfig::stream`] on,
+//!     every submitted request gets a [`TokenStream`] channel
+//!     ([`ServeFrontend::take_stream`]).  After each successful tick
+//!     the front-end drains the engine's per-token commit log
+//!     ([`ServingEngine::take_token_events`]) and forwards each token
+//!     to its request's channel, *then* processes terminal outcomes —
+//!     so a stream always carries its final token before its
+//!     [`StreamEvent::End`].  The front-end owns the senders: exactly
+//!     one `End` terminates every stream on every terminal path
+//!     (completion, cancel, deadline expiry, drain — halting included),
+//!     and a failed tick forwards nothing (the engine commits nothing),
+//!     so transient-fault retries can never duplicate a token.
+//!     Time-to-first-*streamed*-token lands in [`ServeReport::ttfs`].
 //!
 //! The front-end runs on a wall clock in production and on a virtual
 //! (tick-counted) clock in tests ([`ClockMode`]), where a whole chaos
@@ -36,12 +49,14 @@ pub mod sim;
 pub mod slo;
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::engine::{Engine, EngineMetrics};
 use crate::coordinator::request::{RequestId, Response, SamplingParams};
+use crate::metrics::Histogram;
 
 use faults::{fault_kind, FaultKind};
 use intake::{IntakePolicy, RejectReason};
@@ -69,6 +84,10 @@ pub trait ServingEngine {
     fn page_budget(&self) -> Option<(usize, usize)>;
     /// True while `id` has produced no token yet.
     fn awaiting_first_token(&self, id: RequestId) -> bool;
+    /// Drain the per-token commit log since the last call: `(request,
+    /// token)` pairs in the exact order tokens entered request
+    /// outcomes.  Failed ticks commit nothing and log nothing.
+    fn take_token_events(&mut self) -> Vec<(RequestId, i32)>;
     /// Serving metrics snapshot.
     fn metrics(&self) -> &EngineMetrics;
     /// Mutable metrics (the front-end books sheds/retries/misses here).
@@ -102,11 +121,47 @@ impl ServingEngine for Engine {
     fn awaiting_first_token(&self, id: RequestId) -> bool {
         Engine::awaiting_first_token(self, id)
     }
+    fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        Engine::take_token_events(self)
+    }
     fn metrics(&self) -> &EngineMetrics {
         &self.metrics
     }
     fn metrics_mut(&mut self) -> &mut EngineMetrics {
         &mut self.metrics
+    }
+}
+
+/// One event on a request's [`TokenStream`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// One committed output token, in generation order.
+    Token(i32),
+    /// The stream's single terminator: sent exactly once, on whatever
+    /// terminal path the request takes (completion, cancel, deadline
+    /// expiry, drain).  No event follows it.
+    End,
+}
+
+/// Receiving half of one request's per-token stream (see
+/// [`ServeFrontend::take_stream`]).  Tokens appear as the driving loop
+/// ticks; the sequence is always a prefix of the request's final
+/// outcome tokens, and equals them exactly when it completes, followed
+/// by one [`StreamEvent::End`].  Dropping the stream is fine — the
+/// front-end ignores send failures to a departed consumer.
+pub struct TokenStream {
+    rx: mpsc::Receiver<StreamEvent>,
+}
+
+impl TokenStream {
+    /// Non-blocking poll: the next event if one is ready.
+    pub fn try_next(&self) -> Option<StreamEvent> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Drain every event currently buffered (non-blocking).
+    pub fn drain(&self) -> Vec<StreamEvent> {
+        self.rx.try_iter().collect()
     }
 }
 
@@ -156,6 +211,11 @@ pub struct FrontendConfig {
     pub retry: RetryPolicy,
     /// Wall or virtual time.
     pub clock: ClockMode,
+    /// Open a per-request [`TokenStream`] for every submitted arrival
+    /// and forward committed tokens each tick (see the module docs'
+    /// streaming bullet).  Off by default: non-streaming callers keep
+    /// the exact PR-6 loop.
+    pub stream: bool,
 }
 
 impl Default for FrontendConfig {
@@ -166,6 +226,7 @@ impl Default for FrontendConfig {
             deadline_s: None,
             retry: RetryPolicy::default(),
             clock: ClockMode::Wall,
+            stream: false,
         }
     }
 }
@@ -217,6 +278,9 @@ pub enum FrontendStatus {
 struct LiveRequest {
     tag: u64,
     submitted_at: f64,
+    /// Whether a token has been forwarded to this request's stream yet
+    /// (the time-to-first-streamed-token edge).
+    streamed: bool,
 }
 
 /// Open-loop driver around a [`ServingEngine`] (see module docs).
@@ -228,6 +292,14 @@ pub struct ServeFrontend<E: ServingEngine> {
     arrivals: VecDeque<ArrivingRequest>,
     live: HashMap<RequestId, LiveRequest>,
     outcomes: Vec<(u64, RequestOutcome)>,
+    /// Sending halves of live requests' streams, owned here so every
+    /// terminal path terminates its stream exactly once (removal from
+    /// this map IS the termination edge).
+    senders: HashMap<RequestId, mpsc::Sender<StreamEvent>>,
+    /// Receiving halves parked by tag until the caller collects them.
+    streams: HashMap<u64, TokenStream>,
+    /// Time-to-first-streamed-token samples (streaming runs only).
+    ttfs: Histogram,
     attempts: u32,
     fatal: Option<String>,
     ticks: u64,
@@ -245,6 +317,9 @@ impl<E: ServingEngine> ServeFrontend<E> {
             arrivals: VecDeque::new(),
             live: HashMap::new(),
             outcomes: Vec::new(),
+            senders: HashMap::new(),
+            streams: HashMap::new(),
+            ttfs: Histogram::default(),
             attempts: 0,
             fatal: None,
             ticks: 0,
@@ -295,6 +370,47 @@ impl<E: ServingEngine> ServeFrontend<E> {
         ids
     }
 
+    /// Collect the [`TokenStream`] of the arrival tagged `tag`, if one
+    /// was opened (streaming on, the arrival was submitted) and has not
+    /// been collected yet.  The stream is yours from here; the
+    /// front-end keeps only the sending half.
+    pub fn take_stream(&mut self, tag: u64) -> Option<TokenStream> {
+        self.streams.remove(&tag)
+    }
+
+    /// Terminate `id`'s stream with its single [`StreamEvent::End`].
+    /// Dropping the sender from the map makes the edge exactly-once:
+    /// every terminal path calls this, and only the first call finds a
+    /// sender.
+    fn finish_stream(&mut self, id: RequestId) {
+        if let Some(tx) = self.senders.remove(&id) {
+            let _ = tx.send(StreamEvent::End);
+        }
+    }
+
+    /// Forward the engine's committed tokens to their streams (in
+    /// commit order), recording the first-streamed-token edge per
+    /// request.  Called only after a *successful* tick — a failed tick
+    /// commits nothing, so retries can never duplicate a token.
+    fn forward_token_events(&mut self) {
+        let events = self.engine.take_token_events();
+        if !self.cfg.stream {
+            return;
+        }
+        let now = self.now();
+        for (id, tok) in events {
+            if let Some(tx) = self.senders.get(&id) {
+                let _ = tx.send(StreamEvent::Token(tok));
+            }
+            if let Some(lr) = self.live.get_mut(&id) {
+                if !lr.streamed {
+                    lr.streamed = true;
+                    self.ttfs.record(now - lr.submitted_at);
+                }
+            }
+        }
+    }
+
     /// Cancel one live request through the engine, recording a
     /// [`RequestOutcome::Cancelled`].  Returns whether it was live.
     pub fn cancel(&mut self, id: RequestId) -> bool {
@@ -304,6 +420,7 @@ impl<E: ServingEngine> ServeFrontend<E> {
         if let Some(resp) = self.engine.cancel(id) {
             self.outcomes.push((lr.tag, RequestOutcome::Cancelled(resp)));
         }
+        self.finish_stream(id);
         true
     }
 
@@ -338,8 +455,18 @@ impl<E: ServingEngine> ServeFrontend<E> {
             }
             match self.engine.submit(arr.prompt, arr.params) {
                 Ok(Some(id)) => {
-                    self.live
-                        .insert(id, LiveRequest { tag: arr.tag, submitted_at: now });
+                    self.live.insert(
+                        id,
+                        LiveRequest { tag: arr.tag, submitted_at: now, streamed: false },
+                    );
+                    if self.cfg.stream {
+                        let (tx, rx) = mpsc::channel();
+                        self.senders.insert(id, tx);
+                        // tag collision (caller reuse) drops the older
+                        // uncollected stream — tags are the caller's
+                        // namespace to keep unique
+                        self.streams.insert(arr.tag, TokenStream { rx });
+                    }
                 }
                 Ok(None) => {
                     self.outcomes
@@ -389,6 +516,7 @@ impl<E: ServingEngine> ServeFrontend<E> {
                 };
                 self.outcomes.push((lr.tag, outcome));
             }
+            self.finish_stream(id);
         }
     }
 
@@ -420,10 +548,15 @@ impl<E: ServingEngine> ServeFrontend<E> {
                 if let ClockMode::Virtual { tick_s } = self.cfg.clock {
                     self.vnow += tick_s;
                 }
+                // streams first: a completing request's final token must
+                // reach its channel before the End its outcome sends
+                self.forward_token_events();
                 for resp in responses {
-                    if let Some(lr) = self.live.remove(&resp.id) {
+                    let id = resp.id;
+                    if let Some(lr) = self.live.remove(&id) {
                         self.outcomes.push((lr.tag, RequestOutcome::Completed(resp)));
                     }
+                    self.finish_stream(id);
                 }
                 FrontendStatus::Running
             }
@@ -451,10 +584,22 @@ impl<E: ServingEngine> ServeFrontend<E> {
         }
         log::error!("frontend: permanent tick fault, draining: {e:#}");
         self.fatal = Some(format!("{e:#}"));
+        // the failed tick committed nothing deliverable — discard any
+        // stale events so a halted stream never carries tokens its
+        // request's outcome does not
+        let _ = self.engine.take_token_events();
         for resp in self.engine.abort_all() {
-            if let Some(lr) = self.live.remove(&resp.id) {
+            let id = resp.id;
+            if let Some(lr) = self.live.remove(&id) {
                 self.outcomes.push((lr.tag, RequestOutcome::Drained(resp)));
             }
+            self.finish_stream(id);
+        }
+        // halting must still terminate every stream exactly once, even
+        // for ids the drain did not surface
+        let orphans: Vec<RequestId> = self.senders.keys().copied().collect();
+        for id in orphans {
+            self.finish_stream(id);
         }
         FrontendStatus::Halted
     }
@@ -478,6 +623,7 @@ impl<E: ServingEngine> ServeFrontend<E> {
             fatal: self.fatal.clone(),
             unserved: self.arrivals.len() as u64,
             retries: self.engine.metrics().retries,
+            ttfs: self.ttfs.clone(),
             ..Default::default()
         };
         for (_, outcome) in &self.outcomes {

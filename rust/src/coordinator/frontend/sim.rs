@@ -18,8 +18,8 @@
 
 use anyhow::Result;
 
-use crate::coordinator::batcher::Batcher;
-use crate::coordinator::engine::EngineMetrics;
+use crate::coordinator::batcher::{Batcher, SlotState};
+use crate::coordinator::engine::{validate_chunk_config, EngineMetrics};
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
@@ -46,6 +46,11 @@ pub struct SimEngineConfig {
     pub kv: KvCacheConfig,
     /// Prefill/decode interleaving policy.
     pub scheduler: SchedulerConfig,
+    /// Mixed-phase steps (chunked prefill co-scheduled with decode) —
+    /// the same scheduling surface as `EngineConfig::chunked_prefill`.
+    pub chunked_prefill: bool,
+    /// Per-step prompt-token budget for in-chunked-prefill slots.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for SimEngineConfig {
@@ -59,6 +64,8 @@ impl Default for SimEngineConfig {
             max_queue: 64,
             kv: KvCacheConfig::default(),
             scheduler: SchedulerConfig::default(),
+            chunked_prefill: false,
+            prefill_chunk_tokens: 16,
         }
     }
 }
@@ -75,24 +82,43 @@ pub struct SimEngine {
     /// Serving metrics (same shape as the real engine's).
     pub metrics: EngineMetrics,
     next_id: u64,
+    /// Per-token stream buffer — same contract as the engine's: pushed
+    /// only at commit points, drained by [`SimEngine::take_token_events`].
+    token_events: Vec<(RequestId, i32)>,
 }
 
 impl SimEngine {
     /// Build a sim engine over a paged KV pool of `cfg`'s geometry.
+    /// Panics on an invalid chunk config — use [`SimEngine::try_new`]
+    /// to handle that as an error.
     pub fn new(cfg: SimEngineConfig) -> Self {
+        SimEngine::try_new(cfg).expect("valid sim config")
+    }
+
+    /// Fallible constructor: rejects chunk budgets the mixed scheduler
+    /// cannot honour, with the same typed error as `Engine::new`.
+    pub fn try_new(cfg: SimEngineConfig) -> Result<Self> {
         assert!(
             cfg.max_len % cfg.page_size == 0,
             "max_len must be page-aligned"
         );
+        validate_chunk_config(
+            cfg.chunked_prefill,
+            cfg.prefill_chunk_tokens,
+            Some(cfg.page_size),
+        )
+        .map_err(anyhow::Error::new)?;
+        let mut kv_cfg = cfg.kv;
+        kv_cfg.chunk_rows = cfg.chunked_prefill.then_some(cfg.prefill_chunk_tokens);
         let kv = KvCacheManager::paged(
             cfg.width,
             cfg.max_len,
             cfg.num_pages,
             cfg.page_size,
             cfg.max_len / cfg.page_size,
-            cfg.kv,
+            kv_cfg,
         );
-        SimEngine {
+        Ok(SimEngine {
             batcher: Batcher::new(cfg.width, cfg.max_queue),
             scheduler: Scheduler::new(cfg.scheduler),
             kv,
@@ -100,8 +126,14 @@ impl SimEngine {
             faults: FaultInjector::disabled(),
             metrics: EngineMetrics::default(),
             next_id: 0,
+            token_events: Vec::new(),
             cfg,
-        }
+        })
+    }
+
+    /// Drain the per-token stream buffer (same contract as the engine).
+    pub fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        std::mem::take(&mut self.token_events)
     }
 
     /// Arm a deterministic fault schedule (same sites as the engine).
@@ -156,6 +188,11 @@ impl SimEngine {
 
     /// Drive one tick — the same decision structure as `Engine::tick`.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
+        if self.cfg.chunked_prefill {
+            let out = self.tick_mixed();
+            self.sync_kv_metrics();
+            return out;
+        }
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.cfg.width - active as usize;
         let admissible = self.kv.admissible_now(
@@ -183,6 +220,139 @@ impl SimEngine {
         };
         self.sync_kv_metrics();
         out
+    }
+
+    /// Mixed-phase step — `Engine::tick_mixed`'s four phases (admit →
+    /// plan → pre-check → commit) minus the device-only fault sites:
+    /// the sim's monolithic path only ever checks `Prefill` and
+    /// `Decode`, so the mixed path pre-checks exactly those two, keeping
+    /// sim-vs-sim chaos comparisons self-consistent.  An injected fault
+    /// commits nothing (admitted slots stay in-chunked-prefill; their
+    /// rng streams are untouched, so the retried step replays
+    /// bit-identically).
+    fn tick_mixed(&mut self) -> Result<Vec<Response>> {
+        let (_, _, active, queued) = self.batcher.accounting();
+        let empty = self.cfg.width - active as usize;
+        let admissible = self.kv.admissible_now(
+            self.batcher
+                .queued_requests()
+                .map(|r| (r.prompt.as_slice(), r.params.max_new_tokens)),
+            queued as usize,
+            empty,
+        );
+        if admissible == 0 && queued > 0 && empty > 0 {
+            self.metrics.page_stalls += 1;
+        }
+        let mut chunking = self.batcher.chunking_slots();
+        let decoding = self.batcher.decoding_slots();
+        let step = self
+            .scheduler
+            .decide_mixed(admissible, empty, chunking.len(), decoding.len());
+        if step.is_idle() {
+            anyhow::ensure!(
+                self.batcher.idle(),
+                "mixed scheduler idled with work queued or in flight"
+            );
+            return Ok(Vec::new());
+        }
+
+        if step.admit {
+            let kv = &mut self.kv;
+            let filled = self
+                .batcher
+                .refill_chunked_with(|req| kv.admit(&req.prompt, req.params.max_new_tokens));
+            for &slot in &filled {
+                self.kv.install(slot);
+                self.pos[slot] = 0;
+            }
+            debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
+            chunking.extend(filled);
+            chunking.sort_unstable();
+        }
+
+        let mut budget = self.cfg.prefill_chunk_tokens;
+        let mut advances: Vec<(usize, usize, usize)> = Vec::new(); // (slot, cursor', took)
+        let mut finishers: Vec<usize> = Vec::new();
+        for &i in &chunking {
+            let slot = &self.batcher.slots()[i];
+            let plen = slot.prompt.len().min(self.cfg.prompt_width).max(1);
+            if slot.prefilled >= plen {
+                finishers.push(i);
+                continue;
+            }
+            if budget == 0 {
+                continue;
+            }
+            let take = (plen - slot.prefilled).min(budget);
+            budget -= take;
+            let cursor = slot.prefilled + take;
+            advances.push((i, cursor, take));
+            if cursor >= plen {
+                finishers.push(i);
+            }
+        }
+
+        if !finishers.is_empty() {
+            self.faults
+                .check(FaultSite::Prefill)
+                .map_err(anyhow::Error::new)?;
+        }
+        if !decoding.is_empty() {
+            self.faults
+                .check(FaultSite::Decode)
+                .map_err(anyhow::Error::new)?;
+        }
+
+        let advanced = !advances.is_empty();
+        for &(i, cursor, took) in &advances {
+            self.kv.grow_prefill(i, cursor)?;
+            self.batcher.slot_mut(i).prefilled = cursor;
+            self.metrics.prefill_chunks += 1;
+            self.metrics.chunk_tokens_prefilled += took as u64;
+        }
+        let mut responses = Vec::new();
+        if !finishers.is_empty() {
+            self.metrics.prefills += 1;
+            for &i in &finishers {
+                let plen = self.batcher.slots()[i].prompt.len();
+                let id = match self.batcher.slots()[i].state {
+                    SlotState::Prefilling(id) | SlotState::Chunking(id) => id,
+                    ref s => anyhow::bail!("prefilled slot {i} in state {s:?}"),
+                };
+                let first = self.sim_token(i);
+                self.pos[i] = plen;
+                self.batcher.complete_prefill(i, first);
+                self.kv.mark_prefilled(i);
+                self.token_events.push((id, first));
+                self.metrics.generated_tokens += 1;
+                if let Some(resp) = self.maybe_finish(i, first) {
+                    responses.push(resp);
+                }
+            }
+        }
+        if !decoding.is_empty() {
+            if advanced {
+                self.metrics.mixed_steps += 1;
+            }
+            for &i in &decoding {
+                self.kv.grow_to(i, self.pos[i])?;
+            }
+            self.metrics.decode_steps += 1;
+            for i in decoding {
+                let id = match self.batcher.slots()[i].state {
+                    SlotState::Decoding(id) => id,
+                    ref s => anyhow::bail!("decoding slot {i} in state {s:?}"),
+                };
+                let tok = self.sim_token(i);
+                self.pos[i] = (self.pos[i] + 1).min(self.cfg.max_len - 1);
+                self.token_events.push((id, tok));
+                self.metrics.generated_tokens += 1;
+                if let Some(resp) = self.maybe_finish(i, tok) {
+                    responses.push(resp);
+                }
+            }
+        }
+        Ok(responses)
     }
 
     fn sync_kv_metrics(&mut self) {
@@ -222,9 +392,15 @@ impl SimEngine {
         let mut responses = Vec::new();
         for &i in &filled {
             let plen = self.batcher.slots()[i].prompt.len();
+            let id = match self.batcher.slots()[i].state {
+                SlotState::Prefilling(id) | SlotState::Chunking(id) => id,
+                ref s => anyhow::bail!("prefilled slot {i} in state {s:?}"),
+            };
             let first = self.sim_token(i);
             self.pos[i] = plen;
             self.batcher.complete_prefill(i, first);
+            self.kv.mark_prefilled(i);
+            self.token_events.push((id, first));
             self.metrics.generated_tokens += 1;
             if let Some(resp) = self.maybe_finish(i, first) {
                 responses.push(resp);
@@ -249,8 +425,13 @@ impl SimEngine {
         self.metrics.decode_steps += 1;
         let mut responses = Vec::new();
         for i in decoding {
+            let id = match self.batcher.slots()[i].state {
+                SlotState::Decoding(id) => id,
+                ref s => anyhow::bail!("decoding slot {i} in state {s:?}"),
+            };
             let tok = self.sim_token(i);
             self.pos[i] = (self.pos[i] + 1).min(self.cfg.max_len - 1);
+            self.token_events.push((id, tok));
             self.metrics.generated_tokens += 1;
             if let Some(resp) = self.maybe_finish(i, tok) {
                 responses.push(resp);
@@ -358,6 +539,9 @@ impl ServingEngine for SimEngine {
     fn metrics_mut(&mut self) -> &mut EngineMetrics {
         &mut self.metrics
     }
+    fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        SimEngine::take_token_events(self)
+    }
 }
 
 #[cfg(test)]
@@ -439,5 +623,101 @@ mod tests {
             (2, FaultKind::Transient),
         ])));
         assert_eq!(baseline, faulted, "retried requests replay bit-identically");
+    }
+
+    #[test]
+    fn try_new_rejects_degenerate_chunk_budgets() {
+        let cfg = SimEngineConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 0,
+            ..Default::default()
+        };
+        assert!(SimEngine::try_new(cfg).is_err(), "zero chunk budget");
+        let cfg = SimEngineConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 4, // below page_size = 8
+            ..Default::default()
+        };
+        assert!(SimEngine::try_new(cfg).is_err(), "sub-page chunk budget");
+        let cfg = SimEngineConfig {
+            chunked_prefill: false,
+            prefill_chunk_tokens: 0,
+            ..Default::default()
+        };
+        assert!(SimEngine::try_new(cfg).is_ok(), "budget unused when monolithic");
+    }
+
+    /// Chunked pacing must not change a single generated token: the sim
+    /// token is a pure function of (seed, prompt), so monolithic and
+    /// mixed-phase schedules of the same arrivals produce bit-identical
+    /// per-request streams — only the interleaving differs.
+    #[test]
+    fn chunked_schedule_is_bit_identical_to_monolithic() {
+        let tokens_of = |chunked: bool| -> (Vec<(u64, Vec<i32>)>, EngineMetrics) {
+            let mut engine = SimEngine::new(SimEngineConfig {
+                chunked_prefill: chunked,
+                prefill_chunk_tokens: 8,
+                ..Default::default()
+            });
+            for i in 0..6u64 {
+                let plen = 10 + (i % 3) as i32 * 5; // 10 / 15 / 20 tokens
+                let prompt: Vec<i32> = (0..plen).map(|j| 1 + j).collect();
+                let params = SamplingParams {
+                    max_new_tokens: 3 + (i % 3) as usize,
+                    seed: i,
+                    ..Default::default()
+                };
+                engine
+                    .submit(prompt, params)
+                    .expect("admissible")
+                    .expect("queued");
+            }
+            let out = run_all(&mut engine);
+            let mut pairs: Vec<(u64, Vec<i32>)> =
+                out.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+            pairs.sort();
+            (pairs, engine.metrics.clone())
+        };
+        let (mono, mono_m) = tokens_of(false);
+        let (chunked, m) = tokens_of(true);
+        assert_eq!(mono, chunked, "pacing must not change tokens");
+        assert_eq!(mono_m.prefill_chunks, 0, "monolithic path never chunks");
+        assert!(
+            m.prefill_chunks as usize > chunked.len(),
+            "multi-chunk prefills happened ({} chunks for {} requests)",
+            m.prefill_chunks,
+            chunked.len()
+        );
+        assert!(m.mixed_steps > 0, "chunks co-scheduled with decode steps");
+    }
+
+    #[test]
+    fn mid_chunk_cancel_reclaims_pages_and_reservations() {
+        let mut engine = SimEngine::new(SimEngineConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 8,
+            ..Default::default()
+        });
+        let prompt: Vec<i32> = (0..20).collect();
+        let params = SamplingParams {
+            max_new_tokens: 8,
+            seed: 7,
+            ..Default::default()
+        };
+        let id = engine.submit(prompt, params).unwrap().unwrap();
+        // one tick admits the request and walks its first 8-token chunk;
+        // the remaining pages are still held as reservations
+        engine.tick().expect("fault-free tick");
+        assert!(!engine.is_idle(), "prefill is mid-chunk");
+        assert!(
+            engine.page_reservations().unwrap() > 0,
+            "unchunked tail still reserved"
+        );
+        let resp = engine.cancel(id).expect("in-flight cancel");
+        assert!(resp.tokens.is_empty(), "cancelled before first token");
+        let (reclaimable, usable) = engine.page_budget().unwrap();
+        assert_eq!(reclaimable, usable, "all pages reclaimed after cancel");
+        assert_eq!(engine.page_reservations(), Some(0), "reservations freed");
+        engine.audit();
     }
 }

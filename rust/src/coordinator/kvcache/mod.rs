@@ -77,11 +77,31 @@ pub struct KvCacheConfig {
     /// Requires `share_prefixes`; `false` restores the PR-4 baseline
     /// where prefix pages die with their last block-table reference.
     pub prefix_cache: bool,
+    /// Chunked-prefill admission (`Some(chunk_rows)`): a lazy admission
+    /// grants only the pages covering the prompt's *first chunk*
+    /// (`min(prompt_len, chunk_rows)` rows, never fewer than the shared
+    /// prefix pages) and reserves the rest of the worst case; chunk
+    /// advances convert reservations through
+    /// [`KvCacheManager::grow_prefill`].  `None` (default) keeps the
+    /// monolithic prompt-pages-plus-decode-page grant.  Prefix-pool
+    /// probing is unchanged, but live CoW donors are restricted to
+    /// slots whose prefill has *completed*
+    /// ([`KvCacheManager::mark_prefilled`]): a mid-chunk slot's pages
+    /// hold no KV yet, and chunking breaks the monolithic guarantee
+    /// that a whole admission wave prefills (or requeues) atomically —
+    /// a sharer could outrun or outlive an unwritten donor and read
+    /// garbage or permanently orphan the shared page.
+    pub chunk_rows: Option<usize>,
 }
 
 impl Default for KvCacheConfig {
     fn default() -> Self {
-        KvCacheConfig { lazy_growth: true, share_prefixes: true, prefix_cache: true }
+        KvCacheConfig {
+            lazy_growth: true,
+            share_prefixes: true,
+            prefix_cache: true,
+            chunk_rows: None,
+        }
     }
 }
 
@@ -168,6 +188,11 @@ struct PagedBook {
     /// Per-slot count of leading block-table entries shared from a
     /// donor (`page_append` routes these chunks to the garbage page).
     shared: Vec<usize>,
+    /// Per-slot "prompt KV fully written" flag
+    /// ([`KvCacheManager::mark_prefilled`]).  Only consulted under
+    /// chunked admission, where it gates CoW donor eligibility; the
+    /// monolithic paths keep their PR-6 behaviour bit-for-bit.
+    prefilled: Vec<bool>,
     /// Admissions committed by [`KvCacheManager::admit`] awaiting their
     /// [`KvCacheManager::install`] slot binding, in FIFO order.
     pending: VecDeque<Admission>,
@@ -217,6 +242,7 @@ impl KvCacheManager {
                 prompts: vec![Vec::new(); width],
                 reserved: vec![0; width],
                 shared: vec![0; width],
+                prefilled: vec![false; width],
                 pending: VecDeque::new(),
             }),
             cfg,
@@ -320,15 +346,23 @@ impl KvCacheManager {
         let mut best_common = 0usize;
         let mut pool_hit = None;
         if self.cfg.share_prefixes {
+            // Chunked admission shares only from prefill-COMPLETE live
+            // donors, and never from same-wave pending admissions: an
+            // unwritten donor's pages hold no KV, and without the
+            // monolithic wave's atomic prefill-or-requeue a sharer can
+            // outrun or outlive the donor (see `chunk_rows` docs).
+            let chunked = self.cfg.chunk_rows.is_some();
             let live = book
                 .tables
                 .iter()
                 .zip(&book.prompts)
-                .filter(|(t, _)| !t.is_empty())
-                .map(|(t, p)| (p.as_slice(), t.as_slice()));
+                .zip(&book.prefilled)
+                .filter(move |((t, _), &done)| !t.is_empty() && (!chunked || done))
+                .map(|((t, p), _)| (p.as_slice(), t.as_slice()));
             let pend = book
                 .pending
                 .iter()
+                .filter(move |_| !chunked)
                 .map(|a| (a.prompt.as_slice(), a.table.as_slice()));
             let sim = extra.iter().map(|(p, t)| (p.as_slice(), t.as_slice()));
             // NOTE: this scoring (common tokens → full shared pages →
@@ -365,9 +399,17 @@ impl KvCacheManager {
         let n_share = shared.len();
         debug_assert!(n_share <= prompt_pages);
         // lazy: prompt pages + one decode page (capped at the worst
-        // case); eager: the full worst case, nothing reserved
-        let table_len =
-            if self.cfg.lazy_growth { (prompt_pages + 1).min(worst) } else { worst };
+        // case); eager: the full worst case, nothing reserved; chunked
+        // lazy: only the first chunk's pages (never fewer than the
+        // shared prefix — those entries live in the table from day one)
+        let table_len = match (self.cfg.lazy_growth, self.cfg.chunk_rows) {
+            (false, _) => worst,
+            (true, None) => (prompt_pages + 1).min(worst),
+            (true, Some(chunk)) => {
+                let chunk_pages = plen.min(chunk.max(1)).div_ceil(page_size);
+                chunk_pages.max(n_share).min(worst)
+            }
+        };
         AdmitPlan {
             fresh: table_len - n_share,
             reserve: worst - table_len,
@@ -417,9 +459,12 @@ impl KvCacheManager {
             }
             budget = budget.saturating_sub(need);
             admissible += 1;
-            if self.cfg.share_prefixes {
+            if self.cfg.share_prefixes && self.cfg.chunk_rows.is_none() {
                 // page ids are placeholders — only the table LENGTH
-                // matters for later candidates' share planning
+                // matters for later candidates' share planning.  Skipped
+                // under chunked admission, where same-wave donors are
+                // ineligible (their pages are unwritten) — the sim must
+                // mirror the gate's arithmetic exactly
                 let len = plan.shared.len() + plan.fresh;
                 extra.push((prompt.to_vec(), vec![RESERVED_PAGE; len]));
             }
@@ -508,6 +553,17 @@ impl KvCacheManager {
         book.shared[slot] = adm.shared;
         book.reserved[slot] = adm.reserve;
         book.prompts[slot] = adm.prompt;
+        book.prefilled[slot] = false;
+    }
+
+    /// Record that `slot`'s prompt KV is fully written (the engine calls
+    /// this when the slot's prefill commits).  Under chunked admission
+    /// this is what makes the slot eligible as a CoW prefix donor; the
+    /// monolithic planner ignores the flag.  No-op on the dense layout.
+    pub fn mark_prefilled(&mut self, slot: usize) {
+        if let Some(book) = &mut self.book {
+            book.prefilled[slot] = true;
+        }
     }
 
     /// Admissions committed but not yet bound to a slot (0 between
@@ -547,6 +603,33 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Chunked-prefill growth: extend `slot`'s block table until it
+    /// covers the first `rows` prompt rows, converting reservations like
+    /// [`Self::grow_to`].  Unlike `grow_to` this carries no CoW write
+    /// asserts — a chunk walk legitimately passes *through* the shared
+    /// prefix (those pages are already in the table and the append-side
+    /// block table routes their rows to the garbage page, so they are
+    /// never written).  No-op on the dense layout or when the table
+    /// already covers the rows.
+    pub fn grow_prefill(&mut self, slot: usize, rows: usize) -> Result<()> {
+        let Some(book) = &mut self.book else { return Ok(()) };
+        let page_size = book.allocator.page_size();
+        let needed = rows.max(1).div_ceil(page_size);
+        while book.tables[slot].len() < needed {
+            anyhow::ensure!(
+                book.reserved[slot] > 0,
+                "slot {slot} needs chunk page {} of {needed} with no reservation \
+                 left (rows {rows}) — chunked-admission accounting bug",
+                book.tables[slot].len(),
+            );
+            let page = book.allocator.grow_reserved();
+            book.reserved[slot] -= 1;
+            book.tables[slot].push(page);
+            self.metrics.page_grows += 1;
+        }
+        Ok(())
+    }
+
     /// Reclaim one slot (every exit path runs through here): its unused
     /// growth reservations return to the pool, and its pages either
     /// **park** — clean retirement with the retained prefix pool on:
@@ -563,6 +646,7 @@ impl KvCacheManager {
             book.allocator.unreserve(r);
         }
         book.shared[slot] = 0;
+        book.prefilled[slot] = false;
         if pages.is_empty() {
             return;
         }
@@ -886,6 +970,119 @@ mod tests {
         assert!(m.admit(&stranger, 16));
         m.install(0);
         m.audit();
+    }
+
+    // ---- chunked-prefill admission (chunk_rows) ----
+
+    #[test]
+    fn chunked_plan_grants_first_chunk_and_reserves_the_rest() {
+        // prompt 40 (3 pages), chunk 16 (1 page), budget 40: worst =
+        // ceil(80/16) = 5 pages; admission grants only the chunk page
+        let cfg = KvCacheConfig { chunk_rows: Some(16), ..Default::default() };
+        let p = mgr(41, cfg).plan(&[1; 40], 40, &[]);
+        assert_eq!((p.fresh, p.reserve), (1, 4));
+        // total commitment still equals the worst case
+        assert_eq!(p.fresh + p.reserve, 5);
+        // a prompt shorter than the chunk admits like one chunk
+        let p = mgr(41, cfg).plan(&[1; 10], 3, &[]);
+        assert_eq!((p.fresh, p.reserve), (1, 0));
+    }
+
+    #[test]
+    fn chunked_plan_keeps_shared_prefix_pages_in_the_table() {
+        // the shared prefix (2 pages) exceeds the first chunk (1 page):
+        // the table still holds every shared entry — sharing is
+        // unchanged by chunking, only fresh-page timing moves
+        let cfg = KvCacheConfig { chunk_rows: Some(16), ..Default::default() };
+        let donor: Vec<i32> = (0..32).collect();
+        let donors = vec![(donor.clone(), vec![4, 5, 6])];
+        let p = mgr(41, cfg).plan(&donor, 40, &donors);
+        assert_eq!(p.shared, vec![4, 5], "chunking must not shrink sharing");
+        assert_eq!(p.fresh, 0, "shared pages already cover the first chunk");
+        // commitment unchanged vs the monolithic plan
+        let mono = mgr(41, KvCacheConfig::default()).plan(&donor, 40, &donors);
+        assert_eq!(
+            p.shared.len() + p.fresh + p.reserve,
+            mono.shared.len() + mono.fresh + mono.reserve
+        );
+    }
+
+    #[test]
+    fn grow_prefill_converts_reservations_chunk_by_chunk() {
+        let cfg = KvCacheConfig { chunk_rows: Some(16), ..Default::default() };
+        let mut m = mgr(41, cfg);
+        let prompt: Vec<i32> = (0..40).collect(); // 3 prompt pages
+        admit_install(&mut m, 0, &prompt, 40);
+        assert_eq!(m.reservations(), Some(4));
+        // chunk walk: 16 rows covered at admission, then 32, then 40
+        m.grow_prefill(0, 16).unwrap();
+        assert_eq!(m.reservations(), Some(4), "chunk 1 already covered");
+        m.grow_prefill(0, 32).unwrap();
+        assert_eq!(m.reservations(), Some(3));
+        m.grow_prefill(0, 40).unwrap();
+        assert_eq!(m.reservations(), Some(2), "prompt fully paged");
+        m.audit();
+        // decode growth continues from the same ledger
+        m.grow_to(0, 48).unwrap();
+        assert_eq!(m.reservations(), Some(1));
+        // mid-prefill release (the cancel path) reclaims pages AND the
+        // remaining reservations
+        m.release(0, false);
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable);
+        assert_eq!(m.reservations(), Some(0));
+        m.audit();
+    }
+
+    #[test]
+    fn chunked_admissible_now_matches_the_chunked_gate() {
+        // head-exactness must hold under chunked admission arithmetic
+        // too: the sim and the gate share plan(), so a pool with room
+        // for one first-chunk grant admits exactly one
+        let cfg = KvCacheConfig { chunk_rows: Some(16), ..Default::default() };
+        let mut m = KvCacheManager::paged(2, 64, 5, PAGE, 4, cfg); // 4 usable
+        let big: Vec<i32> = (0..48).collect(); // worst 4 pages
+        let queued = [(big.as_slice(), 16usize)];
+        let n = m.admissible_now(queued.iter().copied(), 1, 2);
+        assert_eq!(n, 1);
+        assert!(m.admit(&big, 16), "sim and gate agree");
+        m.install(0);
+        m.audit();
+    }
+
+    #[test]
+    fn chunked_sharing_waits_for_donor_prefill() {
+        // regression (PR-7): a mid-chunk slot's pages hold no KV — it
+        // must not donate CoW prefixes until its prefill commits, or a
+        // sharer can read garbage / orphan the page under requeue
+        let cfg = KvCacheConfig { chunk_rows: Some(16), ..Default::default() };
+        let mut m = mgr(41, cfg);
+        let prompt: Vec<i32> = (0..32).collect(); // 2 full pages
+        admit_install(&mut m, 0, &prompt, 8);
+        // donor admitted but unprefilled: an identical prompt shares 0
+        admit_install(&mut m, 1, &prompt, 8);
+        assert_eq!(m.metrics().shared_pages, 0, "unwritten donor must not share");
+        m.release(1, false);
+        // prefill commits → the same admission now shares both pages
+        m.mark_prefilled(0);
+        admit_install(&mut m, 1, &prompt, 8);
+        assert_eq!(m.metrics().shared_pages, 2, "written donor shares normally");
+        // same-wave pending admissions never donate under chunking
+        assert!(m.admit(&prompt, 8), "pending admission");
+        assert!(m.admit(&prompt, 8), "second of the wave");
+        assert_eq!(
+            m.metrics().shared_pages,
+            2 + 2 + 2,
+            "both wave members shared only from the prefilled live donor"
+        );
+        m.install(2);
+        m.install(3);
+        m.audit();
+        // the monolithic planner ignores the flag entirely (PR-6 parity)
+        let mut mono = mgr(41, KvCacheConfig::default());
+        admit_install(&mut mono, 0, &prompt, 8);
+        admit_install(&mut mono, 1, &prompt, 8);
+        assert_eq!(mono.metrics().shared_pages, 2, "monolithic shares unprefilled");
     }
 
     #[test]

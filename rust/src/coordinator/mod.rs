@@ -40,14 +40,16 @@ pub mod scheduler;
 pub mod trace;
 
 pub use batcher::{Batcher, Slot, SlotState};
-pub use engine::{Engine, EngineConfig, EngineMetrics};
+pub use engine::{
+    validate_chunk_config, ChunkConfigError, Engine, EngineConfig, EngineMetrics,
+};
 pub use frontend::faults::{fault_kind, FaultError, FaultInjector, FaultKind, FaultSite};
 pub use frontend::intake::{IntakePolicy, RejectReason};
 pub use frontend::sim::{SimEngine, SimEngineConfig};
 pub use frontend::slo::ServeReport;
 pub use frontend::{
     ArrivingRequest, ClockMode, FrontendConfig, FrontendStatus, RequestOutcome,
-    RetryPolicy, ServeFrontend, ServingEngine,
+    RetryPolicy, ServeFrontend, ServingEngine, StreamEvent, TokenStream,
 };
 pub use sampling::sample_logits;
 pub use expert_stats::ExpertStats;
@@ -55,4 +57,4 @@ pub use kvcache::pagetable;
 pub use kvcache::pagetable::{PageAllocator, RESERVED_PAGE};
 pub use kvcache::{KvCacheConfig, KvCacheManager, KvLayout, KvMetrics};
 pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};
-pub use scheduler::{Scheduler, SchedulerConfig};
+pub use scheduler::{MixedStep, Scheduler, SchedulerConfig};

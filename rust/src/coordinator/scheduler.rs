@@ -39,6 +39,27 @@ pub enum Action {
     Idle,
 }
 
+/// Mixed-phase step composition (chunked-prefill mode): unlike
+/// [`Action`], which picks *one* phase per tick, a mixed step can admit,
+/// advance prefill chunks, and decode in the same engine tick — chunked
+/// prefill removes the batch-restart cost that made those alternatives.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MixedStep {
+    /// Fill empty slots from the (page-admissible) queue this tick.
+    pub admit: bool,
+    /// Advance in-prefill slots by the step's chunk token budget.
+    pub chunk: bool,
+    /// Run one decode step for the in-flight batch.
+    pub decode: bool,
+}
+
+impl MixedStep {
+    /// True when the step does nothing — only legal with no work anywhere.
+    pub fn is_idle(&self) -> bool {
+        !(self.admit || self.chunk || self.decode)
+    }
+}
+
 /// Pure decision function over the observable batch state.
 #[derive(Clone, Debug)]
 pub struct Scheduler {
@@ -94,6 +115,29 @@ impl Scheduler {
             Action::Prefill
         } else {
             Action::Idle
+        }
+    }
+
+    /// Decide the mixed-phase step (chunked-prefill mode).
+    ///
+    /// With chunked prefill a prefill no longer restarts the whole
+    /// batch, so `min_fill` / `max_active_frac` gating would only add
+    /// queueing delay: the policy admits whenever the page-admissible
+    /// FIFO prefix and an empty slot exist, advances chunks whenever
+    /// in-prefill slots exist, and decodes whenever decoding slots
+    /// exist — all in the same step.
+    ///
+    /// Liveness mirrors [`Self::decide`]: the step is idle only when
+    /// no admissible, in-prefill, or decoding work exists (a
+    /// page-starved queue with a busy batch reads `admissible == 0`,
+    /// so the step decodes and retirement frees pages).
+    pub fn decide_mixed(
+        &self, admissible: usize, empty_slots: usize, chunking: usize, decoding: usize,
+    ) -> MixedStep {
+        MixedStep {
+            admit: admissible.min(empty_slots) > 0,
+            chunk: chunking > 0,
+            decode: decoding > 0,
         }
     }
 }
@@ -160,6 +204,45 @@ mod tests {
                         } else {
                             assert_eq!(a, Action::Idle);
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_step_composes_all_phases() {
+        let s = sched();
+        // admissible work, chunking slots, and decoders: all three fire
+        let step = s.decide_mixed(2, 1, 1, 2);
+        assert_eq!(step, MixedStep { admit: true, chunk: true, decode: true });
+        // page-starved queue with a busy batch: decode only (liveness —
+        // retirement frees the pages the head is waiting for)
+        let step = s.decide_mixed(0, 1, 0, 3);
+        assert_eq!(step, MixedStep { admit: false, chunk: false, decode: true });
+        // no empty slot: admission waits even with an admissible head
+        let step = s.decide_mixed(2, 0, 1, 3);
+        assert_eq!(step, MixedStep { admit: false, chunk: true, decode: true });
+    }
+
+    #[test]
+    fn mixed_step_never_idle_while_work_exists() {
+        // Liveness sweep over the mixed decision: any state with
+        // admissible, in-prefill, or decoding work must make progress.
+        let s = sched();
+        for empty in 0..=3usize {
+            for admissible in 0..=3usize {
+                for chunking in 0..=3usize {
+                    for decoding in 0..=3usize {
+                        let step = s.decide_mixed(admissible, empty, chunking, decoding);
+                        let work =
+                            admissible.min(empty) > 0 || chunking > 0 || decoding > 0;
+                        assert_eq!(
+                            !step.is_idle(),
+                            work,
+                            "admissible={admissible} empty={empty} \
+                             chunking={chunking} decoding={decoding}"
+                        );
                     }
                 }
             }

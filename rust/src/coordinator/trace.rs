@@ -123,6 +123,10 @@ pub struct LoadSummary {
     pub requests_per_s: f64,
     /// Mean offered load over the span, tokens/s.
     pub tokens_per_s: f64,
+    /// Mean *prompt*-token rate over the span, tokens/s — the demand a
+    /// chunked-prefill budget must absorb per second of trace time
+    /// (decode tokens excluded: they pace themselves one per step).
+    pub prompt_tokens_per_s: f64,
     /// Peak offered load over any `window_s` window, tokens/s.
     pub peak_tokens_per_s: f64,
 }
@@ -137,6 +141,7 @@ pub fn load_summary(trace: &[TraceItem], window_s: f64) -> LoadSummary {
     let span = (last.at - first.at).max(1e-9);
     let w = if window_s > 1e-9 { window_s } else { 1e-9 };
     let tokens: usize = trace.iter().map(|r| r.prompt_len + r.max_new).sum();
+    let prompt_tokens: usize = trace.iter().map(|r| r.prompt_len).sum();
     let mut peak = 0.0f64;
     let mut start = 0usize;
     let mut win_tokens = 0usize;
@@ -152,6 +157,7 @@ pub fn load_summary(trace: &[TraceItem], window_s: f64) -> LoadSummary {
         span_s: span,
         requests_per_s: trace.len() as f64 / span,
         tokens_per_s: tokens as f64 / span,
+        prompt_tokens_per_s: prompt_tokens as f64 / span,
         peak_tokens_per_s: peak,
     }
 }
@@ -273,6 +279,12 @@ mod tests {
         let s = load_summary(&tr, 1.0);
         assert!(s.span_s > 0.0);
         assert!(s.requests_per_s > 0.0);
+        assert!(
+            s.prompt_tokens_per_s > 0.0 && s.prompt_tokens_per_s < s.tokens_per_s,
+            "prompt rate {} should be a strict share of total {}",
+            s.prompt_tokens_per_s,
+            s.tokens_per_s
+        );
         assert!(
             s.peak_tokens_per_s >= s.tokens_per_s * 0.99,
             "peak {} below mean {}",

@@ -150,11 +150,19 @@ fn serve(args: &[String]) -> Result<()> {
         .flag("seed", "0", "workload seed")
         .flag("ttft-deadline-ms", "0", "expire requests with no token by this age (0 = off)")
         .flag("deadline-ms", "0", "total latency budget per request (0 = off)")
-        .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)");
+        .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)")
+        .switch("chunked", "chunked prefill: co-schedule prompt chunks with decode steps")
+        .flag("chunk-tokens", "16", "per-step prefill token budget (chunked mode)")
+        .switch("stream", "per-token streaming: report time-to-first-streamed-token");
     let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
     let rt = open_runtime(a.get("artifacts"))?;
     // telemetry on: the serve report prints per-expert routing skew
-    let cfg = EngineConfig { expert_telemetry: true, ..Default::default() };
+    let cfg = EngineConfig {
+        expert_telemetry: true,
+        chunked_prefill: a.get_bool("chunked"),
+        prefill_chunk_tokens: a.get_usize("chunk-tokens"),
+        ..Default::default()
+    };
     let engine = Engine::new(rt, cfg)?;
     println!(
         "engine up: {} slots, max_len {}, {:?} KV layout ({})",
@@ -177,8 +185,8 @@ fn serve(args: &[String]) -> Result<()> {
     });
     let load = load_summary(&trace, 1.0);
     println!(
-        "offered load: {:.1} req/s, {:.0} tok/s mean, {:.0} tok/s peak (1s window)",
-        load.requests_per_s, load.tokens_per_s, load.peak_tokens_per_s,
+        "offered load: {:.1} req/s, {:.0} tok/s mean ({:.0} prompt), {:.0} tok/s peak (1s window)",
+        load.requests_per_s, load.tokens_per_s, load.prompt_tokens_per_s, load.peak_tokens_per_s,
     );
     let mut corpus = SyntheticCorpus::new(512, seed);
     let arrivals: Vec<ArrivingRequest> = trace
@@ -205,6 +213,7 @@ fn serve(args: &[String]) -> Result<()> {
         },
         ttft_deadline_s: (ttft_ms > 0.0).then_some(ttft_ms / 1e3),
         deadline_s: (deadline_ms > 0.0).then_some(deadline_ms / 1e3),
+        stream: a.get_bool("stream"),
         ..Default::default()
     };
     let mut fe = ServeFrontend::new(engine, fe_cfg);
@@ -244,6 +253,25 @@ fn serve(args: &[String]) -> Result<()> {
         m.decode_steps,
         m.prefills
     );
+    if a.get_bool("chunked") {
+        println!(
+            "chunked prefill: {} chunks / {} prompt tokens paced, {} mixed steps \
+             (budget {} tok/step)",
+            m.prefill_chunks,
+            m.chunk_tokens_prefilled,
+            m.mixed_steps,
+            a.get_usize("chunk-tokens"),
+        );
+    }
+    if a.get_bool("stream") {
+        println!(
+            "streaming: time-to-first-streamed-token p50 {:.0} ms  p99 {:.0} ms \
+             ({} streams)",
+            ServeReport::pct(&rep.ttfs, 0.5) * 1e3,
+            ServeReport::pct(&rep.ttfs, 0.99) * 1e3,
+            rep.ttfs.len(),
+        );
+    }
     let x = engine.transfer_totals();
     println!(
         "host<->device: up {}  down {}  chain {} ({} round-trips)   splices: {} device / {} host",

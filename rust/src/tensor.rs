@@ -146,6 +146,14 @@ impl Tensor {
         }
     }
 
+    /// Mutably borrow the payload as i32 (errors on dtype mismatch).
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match &mut self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
     /// Convert to an XLA literal (host copy).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();

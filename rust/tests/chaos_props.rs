@@ -22,7 +22,7 @@ use scattermoe::coordinator::frontend::sim::{SimEngine, SimEngineConfig};
 use scattermoe::coordinator::frontend::slo::ServeReport;
 use scattermoe::coordinator::frontend::{
     ArrivingRequest, ClockMode, FrontendConfig, FrontendStatus, RequestOutcome,
-    RetryPolicy, ServeFrontend,
+    RetryPolicy, ServeFrontend, StreamEvent, TokenStream,
 };
 use scattermoe::coordinator::trace::{generate, Arrival, TraceConfig};
 use scattermoe::coordinator::SamplingParams;
@@ -91,9 +91,34 @@ fn completed_tokens(outcomes: &[(u64, RequestOutcome)]) -> BTreeMap<u64, Vec<i32
         .collect()
 }
 
+/// The tokens an outcome carried, for every outcome that was actually
+/// submitted (rejected arrivals never enter the engine and never get a
+/// stream).
+fn outcome_tokens(o: &RequestOutcome) -> Option<&[i32]> {
+    match o {
+        RequestOutcome::Completed(r)
+        | RequestOutcome::TtftExpired(r)
+        | RequestOutcome::DeadlineExpired(r)
+        | RequestOutcome::Cancelled(r)
+        | RequestOutcome::Drained(r) => Some(&r.tokens),
+        RequestOutcome::Rejected(_) => None,
+    }
+}
+
+/// Sim geometry for one run: monolithic prefill, or mixed-phase steps
+/// with a 16-token chunk budget (two pages of the default geometry).
+fn sim_config(chunked: bool) -> SimEngineConfig {
+    SimEngineConfig {
+        chunked_prefill: chunked,
+        prefill_chunk_tokens: 16,
+        ..Default::default()
+    }
+}
+
 struct ChaosRun {
     report: ServeReport,
     completed: BTreeMap<u64, Vec<i32>>,
+    prefill_chunks: u64,
 }
 
 /// Drive one full seeded run: open-loop arrivals, a 7% chance of
@@ -101,8 +126,10 @@ struct ChaosRun {
 /// total deadlines, and (optionally) an injected fault schedule.  After
 /// EVERY step the allocator is audited; the run is bounded to catch
 /// deadlock; at the end nothing may remain stranded.
-fn run_chaos(seed: u64, flavor: u64, faults: Option<FaultInjector>) -> ChaosRun {
-    let mut engine = SimEngine::new(SimEngineConfig::default());
+fn run_chaos(
+    seed: u64, flavor: u64, chunked: bool, faults: Option<FaultInjector>,
+) -> ChaosRun {
+    let mut engine = SimEngine::new(sim_config(chunked));
     if let Some(f) = faults {
         engine.inject_faults(f);
     }
@@ -145,7 +172,11 @@ fn run_chaos(seed: u64, flavor: u64, faults: Option<FaultInjector>) -> ChaosRun 
         "pages stranded after run (seed {seed}): {reclaimable}/{usable}"
     );
     assert_eq!(fe.engine().page_reservations(), Some(0), "reservations stranded");
-    ChaosRun { report: fe.report(), completed: completed_tokens(fe.outcomes()) }
+    ChaosRun {
+        report: fe.report(),
+        completed: completed_tokens(fe.outcomes()),
+        prefill_chunks: fe.engine().metrics.prefill_chunks,
+    }
 }
 
 /// THE chaos acceptance property (see module docs).
@@ -156,12 +187,13 @@ fn prop_chaos_serving_conserves_pages() {
         PairGen(U64Range(0, 1 << 20), U64Range(0, 4)),
         |&(seed, flavor)| {
             // fault-free baseline: must complete without halting
-            let baseline = run_chaos(seed, flavor, None);
+            let baseline = run_chaos(seed, flavor, false, None);
             prop_assert(baseline.report.fatal.is_none(), "fault-free run halted")?;
             // chaos run: seeded transient + permanent fault schedule
             let chaos = run_chaos(
                 seed,
                 flavor,
+                false,
                 Some(FaultInjector::seeded(seed ^ 0xFA17, 4000, 0.05, 0.002)),
             );
             // every request that completed in BOTH runs is bit-identical
@@ -181,6 +213,219 @@ fn prop_chaos_serving_conserves_pages() {
             Ok(())
         },
     );
+}
+
+/// The mixed-phase twin of the headline property: the same random-walk
+/// schedules (arrivals, cancels, deadline expiries, seeded faults) with
+/// chunked prefill co-scheduled against decode.  Page conservation is
+/// audited after every step inside `run_chaos`, the 50k-step deadlock
+/// bound applies, nothing strands, and every request completing in both
+/// the chaos and fault-free mixed runs is bit-identical — chunk pacing
+/// must never leak into token values, even across fault retries that
+/// re-walk a half-chunked prefill.
+#[test]
+fn prop_chaos_mixed_phase_conserves_pages() {
+    check(
+        40,
+        PairGen(U64Range(0, 1 << 20), U64Range(0, 4)),
+        |&(seed, flavor)| {
+            let baseline = run_chaos(seed, flavor, true, None);
+            prop_assert(baseline.report.fatal.is_none(), "fault-free mixed run halted")?;
+            prop_assert(
+                baseline.prefill_chunks > 0,
+                "mixed run never exercised chunked prefill",
+            )?;
+            let chaos = run_chaos(
+                seed,
+                flavor,
+                true,
+                Some(FaultInjector::seeded(seed ^ 0xFA17, 4000, 0.05, 0.002)),
+            );
+            for (tag, tokens) in &chaos.completed {
+                if let Some(base) = baseline.completed.get(tag) {
+                    prop_assert(
+                        tokens == base,
+                        "surviving mixed-phase request diverged from fault-free tokens",
+                    )?;
+                }
+            }
+            prop_assert(
+                baseline.report.accounted() == 24 && chaos.report.accounted() == 24,
+                "mixed-phase outcome accounting lost arrivals",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+/// Streaming exactly-once property: under random mixed-phase schedules
+/// with cancels, deadline expiries and seeded transient/permanent
+/// faults, every submitted request's stream carries a prefix of its
+/// final outcome tokens (equal on completion), in order, without
+/// duplicates, and is terminated by exactly one `End` — the last event
+/// on the channel — on every terminal path, halting included.
+#[test]
+fn prop_streaming_exactly_once_under_chaos() {
+    check(
+        30,
+        PairGen(U64Range(0, 1 << 20), U64Range(0, 4)),
+        |&(seed, flavor)| {
+            // odd flavors are bursty; the high bit picks monolithic vs
+            // mixed-phase so the property pins both schedulers
+            let chunked = flavor >= 2;
+            let mut engine = SimEngine::new(sim_config(chunked));
+            engine.inject_faults(FaultInjector::seeded(seed ^ 0x57AE, 4000, 0.05, 0.002));
+            let cfg = FrontendConfig {
+                intake: IntakePolicy {
+                    max_pending: 64,
+                    shed_queue_depth: Some(48),
+                    shed_min_free_frac: None,
+                },
+                ttft_deadline_s: Some(0.25),
+                deadline_s: Some(1.5),
+                retry: RetryPolicy { max_retries: 3, backoff_s: 0.001 },
+                clock: ClockMode::Virtual { tick_s: 0.01 },
+                stream: true,
+            };
+            let mut fe = ServeFrontend::new(engine, cfg);
+            fe.push_arrivals(arrivals_for(seed, flavor));
+            let mut cancel_rng = Rng::new(seed ^ 0xCA9CE1);
+            let mut streams: BTreeMap<u64, TokenStream> = BTreeMap::new();
+            let mut events: BTreeMap<u64, Vec<StreamEvent>> = BTreeMap::new();
+            let mut steps = 0u64;
+            loop {
+                let status = fe.step();
+                fe.engine().audit();
+                steps += 1;
+                prop_assert(steps < 50_000, "no-deadlock bound exceeded")?;
+                // collect newly opened streams, then drain everything
+                // buffered so far — incremental consumption, the way a
+                // live client would read
+                for tag in 0..24u64 {
+                    if let Some(s) = fe.take_stream(tag) {
+                        streams.insert(tag, s);
+                    }
+                }
+                for (tag, s) in &streams {
+                    events.entry(*tag).or_default().extend(s.drain());
+                }
+                match status {
+                    FrontendStatus::Running => {
+                        if cancel_rng.below(100) < 7 {
+                            if let Some(&id) = fe.live_ids().first() {
+                                fe.cancel(id);
+                            }
+                        }
+                    }
+                    FrontendStatus::Done | FrontendStatus::Halted => break,
+                }
+            }
+            // the terminal step's Ends land after the loop's last drain
+            for (tag, s) in &streams {
+                events.entry(*tag).or_default().extend(s.drain());
+            }
+            let outcomes: BTreeMap<u64, &RequestOutcome> =
+                fe.outcomes().iter().map(|(t, o)| (*t, o)).collect();
+            for (tag, evs) in &events {
+                let ends = evs.iter().filter(|e| **e == StreamEvent::End).count();
+                prop_assert(ends == 1, "stream must carry exactly one End")?;
+                prop_assert(
+                    evs.last() == Some(&StreamEvent::End),
+                    "no event may follow a stream's End",
+                )?;
+                let streamed: Vec<i32> = evs
+                    .iter()
+                    .filter_map(|e| match e {
+                        StreamEvent::Token(t) => Some(*t),
+                        StreamEvent::End => None,
+                    })
+                    .collect();
+                let Some(outcome) = outcomes.get(tag) else {
+                    return prop_assert(false, "streamed request lost its outcome");
+                };
+                let Some(toks) = outcome_tokens(outcome) else {
+                    return prop_assert(false, "rejected arrivals must not stream");
+                };
+                prop_assert(
+                    streamed.len() <= toks.len() && streamed[..] == toks[..streamed.len()],
+                    "streamed tokens must be an in-order prefix of outcome tokens",
+                )?;
+                if matches!(outcome, RequestOutcome::Completed(_)) {
+                    prop_assert(
+                        streamed.len() == toks.len(),
+                        "a completed stream must equal its outcome tokens",
+                    )?;
+                }
+            }
+            // the converse: every submitted arrival opened a stream
+            for (tag, o) in &outcomes {
+                if outcome_tokens(o).is_some() {
+                    prop_assert(
+                        events.contains_key(tag),
+                        "submitted request never opened a stream",
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Deterministic streaming regression: transient tick faults retry to
+/// completion without ever duplicating, dropping or reordering a
+/// streamed token, in both monolithic and mixed-phase schedules.
+#[test]
+fn streaming_survives_transient_retry_without_duplicates() {
+    for chunked in [false, true] {
+        let mut engine = SimEngine::new(sim_config(chunked));
+        engine.inject_faults(FaultInjector::scripted([
+            (0, FaultKind::Transient),
+            (2, FaultKind::Transient),
+        ]));
+        let mut fe = ServeFrontend::new(
+            engine,
+            FrontendConfig {
+                clock: ClockMode::Virtual { tick_s: 0.01 },
+                stream: true,
+                ..Default::default()
+            },
+        );
+        fe.push_arrivals((0..6).map(|i| arrival(i, 0.0, 8, 4)));
+        let report = fe.run();
+        assert!(report.fatal.is_none());
+        assert_eq!(report.completed, 6, "chunked={chunked}: {report:?}");
+        assert!(report.retries >= 2, "retries counted: {}", report.retries);
+        assert!(
+            !ServeReport::pct(&report.ttfs, 0.5).is_nan(),
+            "ttfs distribution is JSON-safe"
+        );
+        let completed = completed_tokens(fe.outcomes());
+        for tag in 0..6u64 {
+            let stream = fe.take_stream(tag).expect("stream per submitted request");
+            let evs = stream.drain();
+            assert_eq!(
+                evs.last(),
+                Some(&StreamEvent::End),
+                "chunked={chunked} tag={tag}: stream ends exactly once"
+            );
+            let streamed: Vec<i32> = evs
+                .iter()
+                .filter_map(|e| match e {
+                    StreamEvent::Token(t) => Some(*t),
+                    StreamEvent::End => None,
+                })
+                .collect();
+            assert_eq!(
+                &streamed, &completed[&tag],
+                "chunked={chunked} tag={tag}: streamed tokens equal final tokens"
+            );
+            assert_eq!(
+                evs.iter().filter(|e| **e == StreamEvent::End).count(),
+                1,
+                "exactly one End"
+            );
+        }
+    }
 }
 
 /// Transient faults ride out through bounded retry: the run completes,
