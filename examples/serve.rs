@@ -22,8 +22,9 @@ use scattermoe::benchkit::{write_report, Measurement};
 use scattermoe::cli::Cli;
 use scattermoe::coordinator::trace::{generate, load_summary, Arrival, TraceConfig};
 use scattermoe::coordinator::{
-    ArrivingRequest, ClockMode, Engine, EngineConfig, FrontendConfig, IntakePolicy,
-    RequestOutcome, RetryPolicy, SamplingParams, ServeFrontend, ServeReport,
+    ArrivingRequest, ClockMode, ClusterConfig, ClusterFrontend, Engine, EngineConfig,
+    FrontendConfig, IntakePolicy, RequestOutcome, RetryPolicy, SamplingParams,
+    ServeFrontend, ServeReport,
 };
 use scattermoe::metrics::{fmt_bytes, Histogram};
 use scattermoe::runtime::Runtime;
@@ -40,7 +41,9 @@ fn main() -> Result<()> {
         .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)")
         .switch("chunked", "run the MAIN pass with chunked prefill (the comparison pass always runs)")
         .flag("chunk-tokens", "16", "per-step prefill token budget (chunked passes)")
-        .switch("stream", "per-token streaming on the main pass (the chunked pass always streams)");
+        .switch("stream", "per-token streaming on the main pass (the chunked pass always streams)")
+        .flag("replicas", "2", "multi-replica pass: engines behind the prefix-affinity router (<2 = skip)")
+        .flag("kill-replica-at-ms", "0", "multi-replica pass: kill replica 0 at this wall time (0 = off)");
     let a = cli.parse();
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
@@ -363,7 +366,7 @@ fn main() -> Result<()> {
             ch_engine,
             FrontendConfig { stream: true, ..fe_cfg },
         );
-        ch_fe.push_arrivals(arrivals);
+        ch_fe.push_arrivals(arrivals.clone());
         let ch_rep = ch_fe.run();
         let cm = &ch_fe.engine().metrics;
         println!("\n=== chunked-prefill comparison pass ===");
@@ -399,6 +402,93 @@ fn main() -> Result<()> {
             Measurement::scalar("serve chunked TPOT p99 (s)", ServeReport::pct(&ch_rep.tpot, 0.99)),
             Measurement::scalar("serve chunked TTFS p50 (s)", ServeReport::pct(&ch_rep.ttfs, 0.5)),
             Measurement::scalar("serve chunked goodput (tok/s)", ch_rep.goodput_tok_s()),
+        ]);
+    }
+    // multi-replica pass: the SAME arrival schedule fanned out over an
+    // engine pool behind the prefix-affinity router, optionally killing
+    // replica 0 mid-run to exercise drain → re-offer → seed-replay.  CI
+    // gates the cluster goodput / tail-latency / reroute keys.
+    let replicas = a.get_usize("replicas");
+    if replicas > 1 {
+        let kill_ms = a.get_f64("kill-replica-at-ms");
+        let mut engines = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let mut e = Engine::new(
+                rt.clone(),
+                EngineConfig {
+                    chunked_prefill: a.get_bool("chunked"),
+                    prefill_chunk_tokens: a.get_usize("chunk-tokens"),
+                    ..Default::default()
+                },
+            )?;
+            // same warmup as the main pass: compile time stays out of TTFT
+            e.submit(
+                vec![3, 4, 5],
+                SamplingParams { max_new_tokens: 2, ..Default::default() },
+            )?;
+            e.run_to_completion()?;
+            engines.push(e);
+        }
+        let mut cluster = ClusterFrontend::new(
+            engines,
+            ClusterConfig { frontend: fe_cfg, ..Default::default() },
+        );
+        cluster.push_arrivals(arrivals);
+        if kill_ms > 0.0 {
+            cluster.kill_replica_at(0, kill_ms / 1e3);
+        }
+        let crep = cluster.run();
+        println!("\n=== multi-replica pass ({replicas} replicas) ===");
+        if let Some(fault) = crep.merged.fatal.as_deref() {
+            println!("RUN HALTED: {fault}");
+        }
+        println!(
+            "completed {}  goodput {:.1} tok/s  TTFT p50/p99 {:.1}/{:.1} ms",
+            crep.merged.completed,
+            crep.merged.goodput_tok_s(),
+            ServeReport::pct(&crep.merged.ttft, 0.5) * 1e3,
+            ServeReport::pct(&crep.merged.ttft, 0.99) * 1e3,
+        );
+        println!(
+            "routing: {} affinity / {} fallback   deaths: {}  re-offers: {}  \
+             re-routed outcomes: {}",
+            crep.affinity_hits,
+            crep.affinity_fallbacks,
+            crep.replicas_dead,
+            crep.reroutes,
+            crep.merged.re_routed,
+        );
+        let st = &crep.store;
+        println!(
+            "prefix store: {} uploads ({} pages / {})  {} probe hits  \
+             {} pages warm-started ({})",
+            st.uploads,
+            st.uploaded_pages,
+            fmt_bytes(st.uploaded_bytes),
+            st.hits,
+            st.downloaded_pages,
+            fmt_bytes(st.downloaded_bytes),
+        );
+        for (r, pr) in crep.per_replica.iter().enumerate() {
+            println!(
+                "  replica {r}: {} completed  {} drained  {} re-routed-in  \
+                 goodput {:.1} tok/s",
+                pr.completed,
+                pr.drained,
+                pr.re_routed,
+                pr.goodput_tok_s(),
+            );
+        }
+        rows.extend([
+            Measurement::scalar(
+                "serve replicas goodput (tok/s)",
+                crep.merged.goodput_tok_s(),
+            ),
+            Measurement::scalar(
+                "serve replicas p99 TTFT (s)",
+                ServeReport::pct(&crep.merged.ttft, 0.99),
+            ),
+            Measurement::scalar("serve replicas reroute count", crep.reroutes as f64),
         ]);
     }
     write_report("bench_reports/BENCH_serve.json", "serve", &rows);

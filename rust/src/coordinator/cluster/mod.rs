@@ -1,0 +1,542 @@
+//! Multi-replica serving: a fault-tolerant engine pool behind a
+//! prefix-affinity router.
+//!
+//! One [`ServeFrontend`] drives one engine; this module is the layer
+//! above it that a multi-GPU service needs.  [`ClusterFrontend`] owns
+//! the global clock and arrival stream and fans requests out to an
+//! [`EnginePool`] of N replicas — each a full `ServeFrontend` with its
+//! own intake gate, deadlines, and fault recovery — through three
+//! separately-testable pieces:
+//!
+//!   * **routing** — every due arrival passes the [`Router`]: the
+//!     prompt-prefix hash concentrates shared system prompts on one
+//!     replica's retained prefix pool, with a deterministic
+//!     least-loaded fallback on queue depth / free-page fraction
+//!     (see `router.rs`).
+//!   * **prefix sharing across replicas** — completed prompts upload
+//!     their page-aligned prefix to the [`HostPrefixStore`] on miss;
+//!     a routed request that hits the store warm-starts the prefix
+//!     into its target replica's retained pool before submission
+//!     ([`ServingEngine::warm_prefix`]), so a re-routed or restarted
+//!     replica serves the same system prompts without a cold prefill
+//!     (see `prefix_store.rs`).
+//!   * **replica death → drain → re-offer → replay** — a replica that
+//!     halts (permanent fault escalation, or a scripted kill via
+//!     [`ClusterFrontend::kill_replica_at`]) drains through the
+//!     existing `abort_all` path into typed
+//!     [`RequestOutcome::Drained`] outcomes.  The cluster intercepts
+//!     those instead of recording them: each drained request is
+//!     *re-offered* to a healthy replica, where seed-based replay
+//!     ([`crate::coordinator::request::SamplingParams::seed`]) makes
+//!     the re-served tokens bit-identical to an undisturbed run.  Its
+//!     terminal outcome carries the `re_routed` flag and counts
+//!     exactly once in [`ServeReport::accounted`].  Only when no
+//!     healthy replica remains does `Drained` become terminal.
+//!
+//! Per-token streaming stays a single-replica concern: the cluster
+//! forces `stream: false` on its replicas (a re-offered request would
+//! otherwise need cross-replica stream splicing — out of scope here).
+//!
+//! With [`SimEngine`] replicas ([`ClusterFrontend::sim`]) the whole
+//! cluster — arrivals, routing, kills, drains, re-offers — runs on the
+//! virtual clock, artifact-free and deterministic under its seeds;
+//! `rust/tests/chaos_props.rs` property-tests allocator conservation
+//! on every replica after every step and token-equality of surviving
+//! completions against a fault-free single-replica run.
+
+pub mod prefix_store;
+pub mod router;
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::Instant;
+
+use super::frontend::sim::{SimEngine, SimEngineConfig};
+use super::frontend::slo::ServeReport;
+use super::frontend::{
+    ArrivingRequest, ClockMode, FrontendConfig, FrontendStatus, RequestOutcome,
+    ServeFrontend, ServingEngine,
+};
+
+pub use prefix_store::{HostPrefixStore, PrefixStoreConfig, PrefixStoreStats};
+pub use router::{ReplicaLoad, RouteDecision, Router, RouterPolicy};
+
+/// Cluster configuration: the per-replica front-end config plus the
+/// routing and host-prefix-store policies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterConfig {
+    /// Per-replica front-end config (intake, deadlines, retry, clock).
+    /// The clock also drives the cluster's own routing loop; `stream`
+    /// is forced off (see module docs).
+    pub frontend: FrontendConfig,
+    /// Prefix-affinity routing policy.
+    pub router: RouterPolicy,
+    /// Host prefix store geometry (match `page_tokens` to the
+    /// replicas' KV page size).
+    pub store: PrefixStoreConfig,
+}
+
+/// N engine replicas, each wrapped in its own [`ServeFrontend`], with
+/// liveness tracking.  The pool is dumb on purpose: routing lives in
+/// [`Router`], drain/re-offer policy in [`ClusterFrontend`].
+pub struct EnginePool<E: ServingEngine> {
+    replicas: Vec<PoolReplica<E>>,
+}
+
+struct PoolReplica<E: ServingEngine> {
+    fe: ServeFrontend<E>,
+    alive: bool,
+}
+
+impl<E: ServingEngine> EnginePool<E> {
+    /// Wrap each engine in a front-end with `cfg`.
+    pub fn new(engines: Vec<E>, cfg: FrontendConfig) -> Self {
+        EnginePool {
+            replicas: engines
+                .into_iter()
+                .map(|e| PoolReplica { fe: ServeFrontend::new(e, cfg), alive: true })
+                .collect(),
+        }
+    }
+
+    /// Number of replicas (dead ones included).
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// True when the pool holds no replicas at all.
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Whether replica `i` is still serving.
+    pub fn alive(&self, i: usize) -> bool {
+        self.replicas[i].alive
+    }
+
+    /// True while at least one replica is serving.
+    pub fn any_alive(&self) -> bool {
+        self.replicas.iter().any(|r| r.alive)
+    }
+
+    /// Replica `i`'s front-end.
+    pub fn frontend(&self, i: usize) -> &ServeFrontend<E> {
+        &self.replicas[i].fe
+    }
+
+    /// Mutable access to replica `i`'s front-end (tests inject faults
+    /// through here).
+    pub fn frontend_mut(&mut self, i: usize) -> &mut ServeFrontend<E> {
+        &mut self.replicas[i].fe
+    }
+
+    /// Load snapshot of every replica, for the router.
+    pub fn loads(&self) -> Vec<ReplicaLoad> {
+        self.replicas
+            .iter()
+            .map(|r| ReplicaLoad {
+                alive: r.alive,
+                queue_len: r.fe.engine().queue_len() + r.fe.live_ids().len(),
+                page_budget: r.fe.engine().page_budget(),
+            })
+            .collect()
+    }
+
+    fn mark_dead(&mut self, i: usize) {
+        self.replicas[i].alive = false;
+    }
+}
+
+/// One request's terminal outcome at cluster level.
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    /// The arrival's caller-chosen tag.
+    pub tag: u64,
+    /// Replica the outcome landed on (for a re-offered request: the
+    /// replica that finally resolved it, not the one that drained).
+    pub replica: usize,
+    /// True when the request was re-offered after a replica death —
+    /// the satellite flag: one accounted outcome, plus this bit.
+    pub re_routed: bool,
+    /// The terminal outcome itself.
+    pub outcome: RequestOutcome,
+}
+
+/// End-of-run cluster accounting: the merged [`ServeReport`] plus the
+/// cluster-only dimensions (per-replica splits, re-offers, store
+/// traffic, routing mix).
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Every outcome folded into one report.  `re_routed` counts the
+    /// flagged outcomes; `accounted()` still covers each request
+    /// exactly once.
+    pub merged: ServeReport,
+    /// The same outcomes split by resolving replica.
+    pub per_replica: Vec<ServeReport>,
+    /// Re-offer events (≥ `merged.re_routed`: a request re-offered
+    /// twice — its second home also died — counts twice here, once
+    /// there).
+    pub reroutes: u64,
+    /// Replicas dead by end of run.
+    pub replicas_dead: usize,
+    /// Host prefix store traffic.
+    pub store: PrefixStoreStats,
+    /// Arrivals routed by prefix affinity.
+    pub affinity_hits: u64,
+    /// Arrivals routed by the least-loaded fallback.
+    pub affinity_fallbacks: u64,
+}
+
+/// Open-loop driver over an [`EnginePool`] (see module docs).
+pub struct ClusterFrontend<E: ServingEngine> {
+    pool: EnginePool<E>,
+    router: Router,
+    store: HostPrefixStore,
+    clock: ClockMode,
+    started: Instant,
+    vnow: f64,
+    arrivals: VecDeque<ArrivingRequest>,
+    /// Every routed request, by tag, for replay on re-offer.
+    requests: HashMap<u64, ArrivingRequest>,
+    /// Tags routed but not yet terminal.
+    open: HashSet<u64>,
+    /// Tags re-offered at least once.
+    re_routed: HashSet<u64>,
+    outcomes: Vec<ClusterOutcome>,
+    /// Scripted deaths: `(replica, cluster_time_s)`.
+    kills: Vec<(usize, f64)>,
+    reroutes: u64,
+    replicas_dead: usize,
+    affinity_hits: u64,
+    affinity_fallbacks: u64,
+    steps: u64,
+}
+
+impl<E: ServingEngine> ClusterFrontend<E> {
+    /// A cluster over the given engines.  Panics on an empty pool.
+    pub fn new(engines: Vec<E>, cfg: ClusterConfig) -> Self {
+        assert!(!engines.is_empty(), "a cluster needs at least one replica");
+        let mut fe_cfg = cfg.frontend;
+        // per-token streaming is a single-replica concern (module docs)
+        fe_cfg.stream = false;
+        ClusterFrontend {
+            pool: EnginePool::new(engines, fe_cfg),
+            router: Router::new(cfg.router),
+            store: HostPrefixStore::new(cfg.store),
+            clock: fe_cfg.clock,
+            started: Instant::now(),
+            vnow: 0.0,
+            arrivals: VecDeque::new(),
+            requests: HashMap::new(),
+            open: HashSet::new(),
+            re_routed: HashSet::new(),
+            outcomes: Vec::new(),
+            kills: Vec::new(),
+            reroutes: 0,
+            replicas_dead: 0,
+            affinity_hits: 0,
+            affinity_fallbacks: 0,
+            steps: 0,
+        }
+    }
+
+    /// The replica pool (tests audit per-replica allocators here).
+    pub fn pool(&self) -> &EnginePool<E> {
+        &self.pool
+    }
+
+    /// Mutable pool access (tests inject per-replica faults here).
+    pub fn pool_mut(&mut self) -> &mut EnginePool<E> {
+        &mut self.pool
+    }
+
+    /// The host prefix store.
+    pub fn store(&self) -> &HostPrefixStore {
+        &self.store
+    }
+
+    /// Terminal outcomes recorded so far, in resolution order.
+    pub fn outcomes(&self) -> &[ClusterOutcome] {
+        &self.outcomes
+    }
+
+    /// Cluster steps taken (tests bound runaway loops on this).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Current time on the configured clock, seconds from run start.
+    pub fn now(&self) -> f64 {
+        match self.clock {
+            ClockMode::Wall => self.started.elapsed().as_secs_f64(),
+            ClockMode::Virtual { .. } => self.vnow,
+        }
+    }
+
+    /// Load arrivals into the global stream (merged, sorted by time).
+    pub fn push_arrivals(&mut self, items: impl IntoIterator<Item = ArrivingRequest>) {
+        self.arrivals.extend(items);
+        self.arrivals
+            .make_contiguous()
+            .sort_by(|a, b| a.at.total_cmp(&b.at));
+    }
+
+    /// Script replica `replica`'s death at cluster time `at_s`: the
+    /// first step at or past that time force-drains it and re-offers
+    /// its admitted requests to healthy replicas.
+    pub fn kill_replica_at(&mut self, replica: usize, at_s: f64) {
+        assert!(replica < self.pool.len(), "no such replica");
+        self.kills.push((replica, at_s));
+    }
+
+    /// One cluster step: fire due scripted kills, route due arrivals,
+    /// step every live replica once (harvesting outcomes and handling
+    /// deaths), then advance the clock.
+    pub fn step(&mut self) -> FrontendStatus {
+        self.steps += 1;
+        let now = self.now();
+
+        // 1. scripted kills due at this time
+        let due: Vec<usize> = self
+            .kills
+            .iter()
+            .filter(|&&(r, t)| t <= now && self.pool.alive(r))
+            .map(|&(r, _)| r)
+            .collect();
+        self.kills.retain(|&(r, t)| t > now && self.pool.alive(r));
+        for r in due {
+            if self.pool.alive(r) {
+                self.pool.frontend_mut(r).force_drain("scripted replica death");
+                self.handle_death(r);
+            }
+        }
+
+        // 2. route due arrivals (parked while no replica is alive)
+        while self.pool.any_alive() && self.arrivals.front().is_some_and(|a| a.at <= now)
+        {
+            let arr = self.arrivals.pop_front().expect("front just checked");
+            self.dispatch(arr);
+        }
+
+        // 3. step every live replica once; harvest its outcomes
+        let mut any_running = false;
+        for r in 0..self.pool.len() {
+            if !self.pool.alive(r) {
+                continue;
+            }
+            let status = self.pool.frontend_mut(r).step();
+            match status {
+                FrontendStatus::Halted => self.handle_death(r),
+                FrontendStatus::Running => {
+                    any_running = true;
+                    self.harvest(r);
+                }
+                FrontendStatus::Done => self.harvest(r),
+            }
+        }
+
+        // 4. advance the cluster clock
+        match self.clock {
+            ClockMode::Virtual { tick_s } => {
+                if any_running {
+                    self.vnow += tick_s;
+                } else if let Some(a) = self.arrivals.front() {
+                    // every replica idle: jump to the next arrival
+                    self.vnow = self.vnow.max(a.at);
+                } else if let Some(t) =
+                    self.kills.iter().map(|&(_, t)| t).reduce(f64::min)
+                {
+                    // …or to the next scripted kill, so a kill after
+                    // the last arrival still fires
+                    self.vnow = self.vnow.max(t);
+                }
+            }
+            ClockMode::Wall => {
+                if !any_running {
+                    if let Some(a) = self.arrivals.front() {
+                        let gap = (a.at - self.now()).clamp(0.0, 0.05);
+                        if gap > 0.0 {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+                        }
+                    }
+                }
+            }
+        }
+
+        // 5. status
+        if self.arrivals.is_empty() && self.open.is_empty() {
+            return FrontendStatus::Done;
+        }
+        if !self.pool.any_alive() {
+            return FrontendStatus::Halted;
+        }
+        FrontendStatus::Running
+    }
+
+    /// Drive steps until the run completes or halts, then report.
+    pub fn run(&mut self) -> ClusterReport {
+        loop {
+            match self.step() {
+                FrontendStatus::Running => {}
+                FrontendStatus::Done | FrontendStatus::Halted => break,
+            }
+        }
+        self.report()
+    }
+
+    /// Route one arrival: pick a replica, warm its prefix pool from
+    /// the host store, and hand it to that replica's front-end.
+    fn dispatch(&mut self, mut arr: ArrivingRequest) {
+        let loads = self.pool.loads();
+        let Some(decision) = self.router.route(&arr.prompt, &loads) else {
+            // no healthy replica: park it back; the run halts with
+            // these counted unserved
+            self.arrivals.push_front(arr);
+            return;
+        };
+        if decision.affinity {
+            self.affinity_hits += 1;
+        } else {
+            self.affinity_fallbacks += 1;
+        }
+        if self.store.probe(&arr.prompt) > 0 {
+            let warmed = self
+                .pool
+                .frontend_mut(decision.replica)
+                .engine_mut()
+                .warm_prefix(&arr.prompt);
+            self.store.record_download(warmed);
+        }
+        self.requests.insert(arr.tag, arr.clone());
+        self.open.insert(arr.tag);
+        // due immediately on the replica's own clock (its front-end
+        // stamps submission time when it offers the request)
+        arr.at = 0.0;
+        self.pool.frontend_mut(decision.replica).push_arrivals([arr]);
+    }
+
+    /// Record replica `r`'s freshly harvested outcomes.  Only called
+    /// while `r` is alive, so no `Drained` outcome can appear here — a
+    /// front-end only drains when it halts, and halted replicas route
+    /// through [`ClusterFrontend::handle_death`], which owns the
+    /// re-offer decision.
+    fn harvest(&mut self, r: usize) {
+        for (tag, outcome) in self.pool.frontend_mut(r).take_outcomes() {
+            self.record(r, tag, outcome);
+        }
+    }
+
+    /// A replica died: mark it, then re-offer every request its drain
+    /// surfaced — plus its not-yet-offered arrivals — to healthy
+    /// replicas.  Non-drain outcomes it resolved before dying (same
+    /// step rejections, expiries) stay terminal.  With no healthy
+    /// replica left, drains become terminal and arrivals park back on
+    /// the global queue as unserved.
+    fn handle_death(&mut self, r: usize) {
+        self.pool.mark_dead(r);
+        self.replicas_dead += 1;
+        let harvested = self.pool.frontend_mut(r).take_outcomes();
+        let unserved = self.pool.frontend_mut(r).take_unserved();
+        for (tag, outcome) in harvested {
+            match outcome {
+                RequestOutcome::Drained(_) if self.pool.any_alive() => {
+                    self.re_offer(tag);
+                }
+                outcome => self.record(r, tag, outcome),
+            }
+        }
+        for arr in unserved {
+            if self.pool.any_alive() {
+                // an assigned-but-unoffered request replays wherever
+                // it lands; it counts as re-routed all the same
+                self.reroutes += 1;
+                self.re_routed.insert(arr.tag);
+                self.dispatch(arr);
+            } else {
+                self.open.remove(&arr.tag);
+                self.arrivals.push_front(arr);
+            }
+        }
+    }
+
+    /// Re-offer a drained request to a healthy replica.  Replay is
+    /// bit-identical by construction: the clone carries the original
+    /// prompt and `SamplingParams` (seed included), and generated
+    /// tokens are a pure function of those.
+    fn re_offer(&mut self, tag: u64) {
+        let arr = self
+            .requests
+            .get(&tag)
+            .expect("drained request was routed through dispatch")
+            .clone();
+        self.reroutes += 1;
+        self.re_routed.insert(tag);
+        self.dispatch(arr);
+    }
+
+    /// Record one terminal outcome; completions feed the host prefix
+    /// store (upload-on-miss).
+    fn record(&mut self, replica: usize, tag: u64, outcome: RequestOutcome) {
+        if matches!(outcome, RequestOutcome::Completed(_)) {
+            if let Some(arr) = self.requests.get(&tag) {
+                self.store.offer(&arr.prompt);
+            }
+        }
+        self.open.remove(&tag);
+        self.outcomes.push(ClusterOutcome {
+            tag,
+            replica,
+            re_routed: self.re_routed.contains(&tag),
+            outcome,
+        });
+    }
+
+    /// Fold the run into a [`ClusterReport`].  Meaningful after the
+    /// run reaches `Done` or `Halted` (mid-run it reflects work so
+    /// far).
+    pub fn report(&self) -> ClusterReport {
+        // per-replica base: its own front-end report (clock span,
+        // ticks, retries, fatal) — outcome counters are zero there
+        // because the cluster harvested them, so fold ours back in
+        let mut per_replica: Vec<ServeReport> =
+            (0..self.pool.len()).map(|r| self.pool.frontend(r).report()).collect();
+        let mut merged = ServeReport {
+            wall_s: self.now(),
+            ticks: per_replica.iter().map(|p| p.ticks).sum(),
+            unserved: self.arrivals.len() as u64,
+            retries: per_replica.iter().map(|p| p.retries).sum(),
+            fatal: (!self.pool.any_alive()).then(|| "every replica dead".to_string()),
+            ..Default::default()
+        };
+        for co in &self.outcomes {
+            merged.record_outcome(&co.outcome);
+            per_replica[co.replica].record_outcome(&co.outcome);
+            if co.re_routed {
+                merged.re_routed += 1;
+                per_replica[co.replica].re_routed += 1;
+            }
+        }
+        ClusterReport {
+            merged,
+            per_replica,
+            reroutes: self.reroutes,
+            replicas_dead: self.replicas_dead,
+            store: *self.store.stats(),
+            affinity_hits: self.affinity_hits,
+            affinity_fallbacks: self.affinity_fallbacks,
+        }
+    }
+}
+
+impl ClusterFrontend<SimEngine> {
+    /// An artifact-free simulated cluster: `replicas` independent
+    /// [`SimEngine`]s (each with its own paged KV pool) under one
+    /// router — the `SimCluster` twin the chaos suite drives.  Panics
+    /// if the sim config is invalid or `replicas` is 0.
+    pub fn sim(replicas: usize, sim_cfg: SimEngineConfig, mut cfg: ClusterConfig) -> Self {
+        // keep store pages aligned with the simulated KV pools
+        cfg.store.page_tokens = sim_cfg.page_size;
+        let engines: Vec<SimEngine> =
+            (0..replicas).map(|_| SimEngine::new(sim_cfg)).collect();
+        ClusterFrontend::new(engines, cfg)
+    }
+}

@@ -1,0 +1,282 @@
+//! Shared host-side prefix store backing the per-replica retained
+//! prefix pools.
+//!
+//! One replica's retained pool dies with it; a shared system prompt
+//! re-routed after a replica death would otherwise prefill from
+//! scratch on its new home.  The store keeps the *page-aligned token
+//! prefixes* of completed prompts host-side: a completion uploads its
+//! prefix on miss, and routing probes the store so the target replica
+//! can warm-start the prefix into its own retained pool
+//! ([`crate::coordinator::frontend::ServingEngine::warm_prefix`] →
+//! `KvCacheManager::preload_prefix`) before the request is offered.
+//!
+//! Like the device pools, the store is bounded and LRU-evicted, and
+//! every page crossing it is counted (upload = replica→host on
+//! completion, download = host→replica on warm-start) in the same
+//! spirit as the runtime's `TransferTotals` — the cluster bench
+//! reports these beside goodput.  The store holds tokens, not KV: on
+//! the simulator that is the whole truth (sim tokens are a pure
+//! function of seed and prompt), and on the real engine the byte
+//! counts price the future device upload path (see ROADMAP).
+
+/// Host prefix store geometry and accounting config.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixStoreConfig {
+    /// Tokens per stored page — match the replicas' KV page size so
+    /// warm-started pages line up with the device pools.
+    pub page_tokens: usize,
+    /// Resident-page bound; least-recently-used entries evict past it.
+    pub capacity_pages: usize,
+    /// KV bytes one token occupies, for transfer accounting only.
+    pub bytes_per_token: usize,
+}
+
+impl Default for PrefixStoreConfig {
+    fn default() -> Self {
+        PrefixStoreConfig { page_tokens: 16, capacity_pages: 256, bytes_per_token: 256 }
+    }
+}
+
+/// Monotonic transfer / hit counters for the store.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStoreStats {
+    /// Upload events (completed prompts that added pages).
+    pub uploads: u64,
+    /// Pages uploaded replica→host.
+    pub uploaded_pages: u64,
+    /// Bytes uploaded replica→host.
+    pub uploaded_bytes: u64,
+    /// Routing probes that found a stored prefix.
+    pub hits: u64,
+    /// Routing probes that found nothing.
+    pub misses: u64,
+    /// Pages downloaded host→replica on warm-start.
+    pub downloaded_pages: u64,
+    /// Bytes downloaded host→replica on warm-start.
+    pub downloaded_bytes: u64,
+    /// Pages evicted by the capacity bound.
+    pub evicted_pages: u64,
+}
+
+#[derive(Clone, Debug)]
+struct StoreEntry {
+    /// Page-aligned token prefix this entry holds.
+    tokens: Vec<i32>,
+    /// LRU stamp (larger = more recently used).
+    stamp: u64,
+}
+
+/// The shared host-side prefix store (see module docs).
+#[derive(Debug)]
+pub struct HostPrefixStore {
+    cfg: PrefixStoreConfig,
+    entries: Vec<StoreEntry>,
+    clock: u64,
+    stats: PrefixStoreStats,
+}
+
+impl HostPrefixStore {
+    /// An empty store with the given geometry.
+    pub fn new(cfg: PrefixStoreConfig) -> Self {
+        assert!(cfg.page_tokens > 0, "page_tokens must be positive");
+        HostPrefixStore { cfg, entries: Vec::new(), clock: 0, stats: PrefixStoreStats::default() }
+    }
+
+    /// Transfer / hit counters so far.
+    pub fn stats(&self) -> &PrefixStoreStats {
+        &self.stats
+    }
+
+    /// Resident entries.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Resident pages across all entries.
+    pub fn pages(&self) -> usize {
+        self.entries.iter().map(|e| e.tokens.len() / self.cfg.page_tokens).sum()
+    }
+
+    /// Full pages `prompt` could contribute or consume.
+    fn full_pages(&self, prompt: &[i32]) -> usize {
+        prompt.len() / self.cfg.page_tokens
+    }
+
+    /// Best entry for `prompt`: `(index, covered_full_pages)` maximised
+    /// over the common token prefix; ties go to the fresher entry.
+    fn best(&self, prompt: &[i32]) -> Option<(usize, usize)> {
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let common =
+                    e.tokens.iter().zip(prompt).take_while(|(a, b)| a == b).count();
+                (i, common / self.cfg.page_tokens)
+            })
+            .max_by_key(|&(i, pages)| (pages, self.entries[i].stamp))
+    }
+
+    /// Routing probe: full pages of `prompt` the store holds (0 on
+    /// miss).  A hit bumps the entry's LRU stamp; the caller follows a
+    /// positive probe with `warm_prefix` on the target replica and
+    /// books the transfer through [`HostPrefixStore::record_download`].
+    pub fn probe(&mut self, prompt: &[i32]) -> usize {
+        match self.best(prompt) {
+            Some((idx, pages)) if pages > 0 => {
+                self.clock += 1;
+                self.entries[idx].stamp = self.clock;
+                self.stats.hits += 1;
+                pages
+            }
+            _ => {
+                self.stats.misses += 1;
+                0
+            }
+        }
+    }
+
+    /// Book `pages` downloaded host→replica (the pages a warm-start
+    /// actually installed in the replica's retained pool).
+    pub fn record_download(&mut self, pages: usize) {
+        self.stats.downloaded_pages += pages as u64;
+        self.stats.downloaded_bytes +=
+            (pages * self.cfg.page_tokens * self.cfg.bytes_per_token) as u64;
+    }
+
+    /// Upload-on-miss after a completion: store `prompt`'s page-aligned
+    /// prefix if not already resident.  A covered prefix only bumps the
+    /// LRU; a clean extension of a resident prefix uploads just the
+    /// missing tail pages; anything else becomes its own entry (host
+    /// entries hold tokens, not device pages — overlap costs capacity,
+    /// never correctness).  Evicts LRU entries past the capacity bound.
+    pub fn offer(&mut self, prompt: &[i32]) {
+        let n = self.full_pages(prompt);
+        if n == 0 {
+            return;
+        }
+        self.clock += 1;
+        let tokens = &prompt[..n * self.cfg.page_tokens];
+        match self.best(prompt) {
+            Some((idx, covered)) if covered >= n => {
+                self.entries[idx].stamp = self.clock;
+            }
+            Some((idx, covered))
+                if covered > 0
+                    && self.entries[idx].tokens.len()
+                        == covered * self.cfg.page_tokens =>
+            {
+                self.entries[idx].tokens = tokens.to_vec();
+                self.entries[idx].stamp = self.clock;
+                self.count_upload(n - covered);
+            }
+            _ => {
+                self.entries
+                    .push(StoreEntry { tokens: tokens.to_vec(), stamp: self.clock });
+                self.count_upload(n);
+            }
+        }
+        self.evict_to_capacity();
+    }
+
+    fn count_upload(&mut self, pages: usize) {
+        self.stats.uploads += 1;
+        self.stats.uploaded_pages += pages as u64;
+        self.stats.uploaded_bytes +=
+            (pages * self.cfg.page_tokens * self.cfg.bytes_per_token) as u64;
+    }
+
+    /// Evict least-recently-used entries until the capacity bound
+    /// holds.  A single entry larger than the whole bound stays — a
+    /// store that evicted its only tenant would churn uploads forever.
+    fn evict_to_capacity(&mut self) {
+        while self.pages() > self.cfg.capacity_pages && self.entries.len() > 1 {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+                .expect("entries checked non-empty");
+            let gone = self.entries.remove(victim);
+            self.stats.evicted_pages +=
+                (gone.tokens.len() / self.cfg.page_tokens) as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(capacity_pages: usize) -> HostPrefixStore {
+        HostPrefixStore::new(PrefixStoreConfig {
+            page_tokens: 4,
+            capacity_pages,
+            bytes_per_token: 10,
+        })
+    }
+
+    #[test]
+    fn upload_on_miss_dedups_and_extends() {
+        let mut s = store(64);
+        let prompt: Vec<i32> = (0..10).collect(); // 2 full pages + tail
+        s.offer(&prompt);
+        assert_eq!((s.entries(), s.pages()), (1, 2));
+        assert_eq!(s.stats().uploaded_pages, 2);
+        assert_eq!(s.stats().uploaded_bytes, 2 * 4 * 10);
+        // resident prefix: no second upload
+        s.offer(&prompt);
+        assert_eq!(s.stats().uploaded_pages, 2);
+        // clean extension uploads only the missing tail page
+        let longer: Vec<i32> = (0..13).collect(); // 3 full pages
+        s.offer(&longer);
+        assert_eq!((s.entries(), s.pages()), (1, 3));
+        assert_eq!(s.stats().uploaded_pages, 3);
+        // divergent prompt becomes its own entry
+        let other: Vec<i32> = (100..108).collect();
+        s.offer(&other);
+        assert_eq!((s.entries(), s.pages()), (2, 5));
+        // sub-page prompts contribute nothing
+        s.offer(&[1, 2, 3]);
+        assert_eq!(s.entries(), 2);
+    }
+
+    #[test]
+    fn probe_reports_coverage_and_counts_hits() {
+        let mut s = store(64);
+        assert_eq!(s.probe(&[1, 2, 3, 4]), 0);
+        assert_eq!(s.stats().misses, 1);
+        let prompt: Vec<i32> = (0..8).collect();
+        s.offer(&prompt);
+        // identical prompt: both pages covered
+        assert_eq!(s.probe(&prompt), 2);
+        // shared first page only
+        assert_eq!(s.probe(&[0, 1, 2, 3, 9, 9, 9, 9]), 1);
+        assert_eq!(s.stats().hits, 2);
+        s.record_download(2);
+        assert_eq!(s.stats().downloaded_pages, 2);
+        assert_eq!(s.stats().downloaded_bytes, 2 * 4 * 10);
+    }
+
+    #[test]
+    fn capacity_evicts_lru_entries() {
+        let mut s = store(4);
+        let a: Vec<i32> = (0..8).collect();
+        let b: Vec<i32> = (100..108).collect();
+        s.offer(&a);
+        s.offer(&b);
+        assert_eq!(s.pages(), 4);
+        // touch `a` so `b` is the LRU victim
+        assert_eq!(s.probe(&a), 2);
+        let c: Vec<i32> = (200..208).collect();
+        s.offer(&c);
+        assert!(s.pages() <= 4);
+        assert_eq!(s.stats().evicted_pages, 2);
+        assert_eq!(s.probe(&a), 2, "recently-used entry survived");
+        assert_eq!(s.probe(&b), 0, "LRU entry evicted");
+        // a lone oversized tenant is kept, not churned
+        let mut s = store(1);
+        s.offer(&a);
+        assert_eq!((s.entries(), s.pages()), (1, 2));
+    }
+}

@@ -1,0 +1,227 @@
+//! Prefix-affinity request router.
+//!
+//! Routing wants two things in tension: *affinity* (requests sharing a
+//! prompt prefix should land on the same replica, so its retained
+//! prefix pool — not N cold pools — serves the hits) and *balance*
+//! (never pile onto a busy or page-starved replica just because the
+//! hash says so).  [`Router::route`] resolves it lexicographically:
+//! the prefix-hash replica wins while it is alive, its queue is
+//! shallow, and its page pool has headroom; otherwise a deterministic
+//! least-loaded scan picks the fallback.  The router holds no mutable
+//! state — the same prompt and the same loads always produce the same
+//! decision, which the seeded chaos runs rely on.
+
+/// Tunables for the affinity/balance trade-off.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterPolicy {
+    /// Prompt tokens hashed for the affinity decision.  Requests that
+    /// agree on this many leading tokens (a shared system prompt)
+    /// map to the same preferred replica.
+    pub affinity_tokens: usize,
+    /// Outstanding-work depth beyond which the preferred replica is
+    /// considered overloaded and the least-loaded fallback takes over.
+    pub max_affinity_queue: usize,
+    /// Minimum reclaimable-page fraction the preferred replica must
+    /// hold; below it (page pressure) the fallback takes over.  Dense
+    /// layouts report no budget and never trip this.
+    pub min_affinity_free_frac: f64,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> Self {
+        RouterPolicy {
+            affinity_tokens: 16,
+            max_affinity_queue: 8,
+            min_affinity_free_frac: 0.1,
+        }
+    }
+}
+
+/// One replica's load snapshot, as the router sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaLoad {
+    /// False once the replica halted (dead replicas never route).
+    pub alive: bool,
+    /// Outstanding work: queued + in-flight requests.
+    pub queue_len: usize,
+    /// Reclaimable / usable pool pages (`None` on dense layouts).
+    pub page_budget: Option<(usize, usize)>,
+}
+
+impl ReplicaLoad {
+    /// Reclaimable fraction of the page pool; dense layouts (no
+    /// budget) count as fully free.
+    fn free_frac(&self) -> f64 {
+        match self.page_budget {
+            Some((_, 0)) | None => 1.0,
+            Some((reclaimable, usable)) => reclaimable as f64 / usable as f64,
+        }
+    }
+
+    /// Reclaimable pages for the least-loaded tie-break (dense =
+    /// unbounded).
+    fn free_pages(&self) -> usize {
+        self.page_budget.map_or(usize::MAX, |(reclaimable, _)| reclaimable)
+    }
+}
+
+/// Where one request goes, and why.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    /// Index of the chosen replica.
+    pub replica: usize,
+    /// True when the prefix-hash preference held; false when load or
+    /// death forced the least-loaded fallback.
+    pub affinity: bool,
+}
+
+/// The stateless prefix-affinity router (see module docs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Router {
+    policy: RouterPolicy,
+}
+
+impl Router {
+    /// A router with the given policy.
+    pub fn new(policy: RouterPolicy) -> Self {
+        Router { policy }
+    }
+
+    /// The policy in force.
+    pub fn policy(&self) -> &RouterPolicy {
+        &self.policy
+    }
+
+    /// The prefix-hash preferred replica for `prompt` among `n`
+    /// replicas: FNV-1a over the first `affinity_tokens` tokens, so
+    /// shared system prompts concentrate on one retained prefix pool.
+    pub fn preferred(&self, prompt: &[i32], n: usize) -> usize {
+        debug_assert!(n > 0, "routing over an empty pool");
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for &t in prompt.iter().take(self.policy.affinity_tokens.max(1)) {
+            // zero-extend through u32 so negative token ids hash the
+            // same on every platform
+            h ^= u64::from(t as u32);
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        (h % n as u64) as usize
+    }
+
+    /// Route one request: the preferred replica while it is alive,
+    /// shallow, and page-free; else the deterministic least-loaded
+    /// fallback (shallowest queue, then most reclaimable pages, then
+    /// lowest index).  `None` only when no replica is alive.
+    pub fn route(&self, prompt: &[i32], loads: &[ReplicaLoad]) -> Option<RouteDecision> {
+        if loads.is_empty() || loads.iter().all(|l| !l.alive) {
+            return None;
+        }
+        let preferred = self.preferred(prompt, loads.len());
+        let p = &loads[preferred];
+        if p.alive
+            && p.queue_len <= self.policy.max_affinity_queue
+            && p.free_frac() >= self.policy.min_affinity_free_frac
+        {
+            return Some(RouteDecision { replica: preferred, affinity: true });
+        }
+        let replica = loads
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.alive)
+            .min_by_key(|&(i, l)| (l.queue_len, std::cmp::Reverse(l.free_pages()), i))
+            .map(|(i, _)| i)
+            .expect("an alive replica exists");
+        Some(RouteDecision { replica, affinity: false })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(n: usize) -> Vec<ReplicaLoad> {
+        vec![ReplicaLoad { alive: true, queue_len: 0, page_budget: Some((20, 20)) }; n]
+    }
+
+    #[test]
+    fn shared_prefixes_concentrate_on_one_replica() {
+        let router = Router::new(RouterPolicy { affinity_tokens: 8, ..Default::default() });
+        let system: Vec<i32> = (100..108).collect();
+        let mut a = system.clone();
+        a.extend([1, 2, 3]);
+        let mut b = system.clone();
+        b.extend([9, 9, 9, 9]);
+        assert_eq!(router.preferred(&a, 3), router.preferred(&b, 3));
+        // and the full route agrees when that replica is healthy
+        let da = router.route(&a, &idle(3)).unwrap();
+        let db = router.route(&b, &idle(3)).unwrap();
+        assert_eq!(da.replica, db.replica);
+        assert!(da.affinity && db.affinity);
+        // distinct prefixes spread: over many prompts, >1 replica is hit
+        let hit: std::collections::HashSet<usize> = (0..32)
+            .map(|k| router.preferred(&[k * 17 + 1; 8], 3))
+            .collect();
+        assert!(hit.len() > 1, "hash degenerated to one replica");
+    }
+
+    #[test]
+    fn overloaded_or_starved_preferred_falls_back_least_loaded() {
+        let router = Router::new(RouterPolicy {
+            affinity_tokens: 4,
+            max_affinity_queue: 2,
+            min_affinity_free_frac: 0.25,
+        });
+        let prompt = [5, 6, 7, 8];
+        let p = router.preferred(&prompt, 3);
+        // deep queue on the preferred replica trips the fallback
+        let mut loads = idle(3);
+        loads[p].queue_len = 3;
+        let d = router.route(&prompt, &loads).unwrap();
+        assert!(!d.affinity);
+        assert_ne!(d.replica, p, "fallback left the overloaded replica");
+        // page starvation trips it too
+        let mut loads = idle(3);
+        loads[p].page_budget = Some((2, 20)); // 10% < 25%
+        let d = router.route(&prompt, &loads).unwrap();
+        assert!(!d.affinity);
+        assert_ne!(d.replica, p);
+        // the fallback itself is deterministic: shallowest queue wins,
+        // and equal queues break to the most reclaimable pages
+        let mut loads = idle(3);
+        loads[p].queue_len = 5;
+        for (i, l) in loads.iter_mut().enumerate() {
+            if i != p {
+                l.page_budget = Some((3 + i, 20));
+            }
+        }
+        let d = router.route(&prompt, &loads).unwrap();
+        let expect = if p == 2 { 1 } else { 2 }; // highest index != p has most free
+        assert_eq!(d.replica, expect, "most free pages won the tie");
+    }
+
+    #[test]
+    fn dead_replicas_never_route() {
+        let router = Router::default();
+        let prompt = [1, 2, 3];
+        let p = router.preferred(&prompt, 2);
+        let mut loads = idle(2);
+        loads[p].alive = false;
+        let d = router.route(&prompt, &loads).unwrap();
+        assert_ne!(d.replica, p);
+        assert!(!d.affinity);
+        // all dead: nowhere to route
+        loads[1 - p].alive = false;
+        assert!(router.route(&prompt, &loads).is_none());
+    }
+
+    #[test]
+    fn routing_is_a_pure_function() {
+        let router = Router::default();
+        let loads = idle(4);
+        for k in 0..16 {
+            let prompt = vec![k; 24];
+            let a = router.route(&prompt, &loads).unwrap();
+            let b = router.route(&prompt, &loads).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+}

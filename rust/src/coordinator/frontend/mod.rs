@@ -57,6 +57,7 @@ use anyhow::Result;
 use crate::coordinator::engine::{Engine, EngineMetrics};
 use crate::coordinator::request::{RequestId, Response, SamplingParams};
 use crate::metrics::Histogram;
+use crate::rng::Rng;
 
 use faults::{fault_kind, FaultKind};
 use intake::{IntakePolicy, RejectReason};
@@ -92,6 +93,17 @@ pub trait ServingEngine {
     fn metrics(&self) -> &EngineMetrics;
     /// Mutable metrics (the front-end books sheds/retries/misses here).
     fn metrics_mut(&mut self) -> &mut EngineMetrics;
+    /// Warm-start `prompt`'s full-page prefix into the engine's retained
+    /// prefix pool (host prefix store download, see
+    /// `coordinator::cluster`).  Returns the pages actually installed.
+    /// Default: no-op — the real [`Engine`] keeps it that way until a
+    /// device KV upload path exists, because parking pages that hold no
+    /// real KV would route prefix sharers at garbage state.  The
+    /// simulator overrides it (sim tokens are a pure function of seed
+    /// and prompt, so warmed pages only change admission arithmetic).
+    fn warm_prefix(&mut self, _prompt: &[i32]) -> usize {
+        0
+    }
 }
 
 impl ServingEngine for Engine {
@@ -165,18 +177,54 @@ impl TokenStream {
     }
 }
 
-/// Bounded-retry policy for transient tick faults.
+/// Bounded-retry policy for transient tick faults: capped exponential
+/// backoff with deterministic seeded jitter.
+///
+/// Retry `n` (1-based) waits `min(base_backoff_s * 2^(n-1),
+/// max_backoff_s)` seconds, scaled down by up to `jitter_frac` using a
+/// jitter value derived purely from `(seed, n)` — so a same-seed replay
+/// waits bit-identical durations (the virtual-clock chaos runs depend
+/// on this), while distinct seeds decorrelate retry storms across
+/// replicas.
 #[derive(Clone, Copy, Debug)]
 pub struct RetryPolicy {
     /// Consecutive failed ticks tolerated before escalating to a drain.
     pub max_retries: u32,
-    /// Linear backoff unit: retry `n` waits `n * backoff_s` seconds.
-    pub backoff_s: f64,
+    /// First retry's backoff; doubles per subsequent retry.
+    pub base_backoff_s: f64,
+    /// Exponential growth cap (applied before jitter).
+    pub max_backoff_s: f64,
+    /// Fraction of the capped backoff the jitter may shave off, in
+    /// `[0, 1]`.  `0.0` gives the pure capped-doubling schedule.
+    pub jitter_frac: f64,
+    /// Jitter seed.  Same seed, same schedule — bit-identical replay.
+    pub seed: u64,
 }
 
 impl Default for RetryPolicy {
     fn default() -> Self {
-        RetryPolicy { max_retries: 3, backoff_s: 0.002 }
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff_s: 0.002,
+            max_backoff_s: 0.050,
+            jitter_frac: 0.25,
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff before retry `attempt` (1-based).  A pure function
+    /// of the policy and the attempt number: `backoff_s(n)` is in
+    /// `[(1 - jitter_frac) * b, b]` where `b = min(base_backoff_s *
+    /// 2^(n-1), max_backoff_s)`.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let n = attempt.max(1);
+        let doubled = self.base_backoff_s * f64::powi(2.0, (n - 1).min(62) as i32);
+        let capped = doubled.min(self.max_backoff_s);
+        let mut jitter_rng =
+            Rng::new(self.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(u64::from(n)));
+        capped * (1.0 - self.jitter_frac.clamp(0.0, 1.0) * jitter_rng.uniform())
     }
 }
 
@@ -564,17 +612,18 @@ impl<E: ServingEngine> ServeFrontend<E> {
         }
     }
 
-    /// Classify a failed tick: transient → bounded retry with linear
-    /// backoff; permanent (or retries exhausted) → abort, drain every
-    /// admitted request with a typed outcome, halt.
+    /// Classify a failed tick: transient → bounded retry with capped
+    /// exponential backoff (seeded jitter, see [`RetryPolicy`]);
+    /// permanent (or retries exhausted) → abort, drain every admitted
+    /// request with a typed outcome, halt.
     fn handle_tick_error(&mut self, e: anyhow::Error) -> FrontendStatus {
         let kind = fault_kind(&e).unwrap_or(FaultKind::Permanent);
         if kind == FaultKind::Transient && self.attempts < self.cfg.retry.max_retries {
             self.attempts += 1;
             self.engine.metrics_mut().retries += 1;
-            let backoff = self.cfg.retry.backoff_s * f64::from(self.attempts);
+            let backoff = self.cfg.retry.backoff_s(self.attempts);
             log::warn!(
-                "frontend: transient tick fault (attempt {}/{}, backing off {:.3}s): {e:#}",
+                "frontend: transient tick fault (attempt {}/{}, backing off {:.4}s): {e:#}",
                 self.attempts,
                 self.cfg.retry.max_retries,
                 backoff
@@ -583,9 +632,24 @@ impl<E: ServingEngine> ServeFrontend<E> {
             return FrontendStatus::Running;
         }
         log::error!("frontend: permanent tick fault, draining: {e:#}");
-        self.fatal = Some(format!("{e:#}"));
-        // the failed tick committed nothing deliverable — discard any
-        // stale events so a halted stream never carries tokens its
+        self.force_drain(&format!("{e:#}"));
+        FrontendStatus::Halted
+    }
+
+    /// Halt this front-end as if a permanent fault struck: mark it
+    /// fatal, abort every queued and in-flight request into
+    /// [`RequestOutcome::Drained`] outcomes, and terminate every open
+    /// stream exactly once.  The cluster layer calls this for scripted
+    /// replica deaths, then re-offers the drained requests to a healthy
+    /// replica (seed-based replay keeps the re-served tokens
+    /// bit-identical).  No-op if the front-end already halted.
+    pub fn force_drain(&mut self, reason: &str) {
+        if self.fatal.is_some() {
+            return;
+        }
+        self.fatal = Some(reason.to_string());
+        // the interrupted work committed nothing deliverable — discard
+        // any stale events so a halted stream never carries tokens its
         // request's outcome does not
         let _ = self.engine.take_token_events();
         for resp in self.engine.abort_all() {
@@ -601,7 +665,20 @@ impl<E: ServingEngine> ServeFrontend<E> {
         for id in orphans {
             self.finish_stream(id);
         }
-        FrontendStatus::Halted
+    }
+
+    /// Take ownership of the outcomes recorded since the last call
+    /// (the cluster layer harvests these every step so re-offerable
+    /// drains never double-count).
+    pub fn take_outcomes(&mut self) -> Vec<(u64, RequestOutcome)> {
+        std::mem::take(&mut self.outcomes)
+    }
+
+    /// Take ownership of every arrival not yet offered to the engine
+    /// (the cluster layer reclaims these from a dead replica and
+    /// re-routes them).
+    pub fn take_unserved(&mut self) -> Vec<ArrivingRequest> {
+        self.arrivals.drain(..).collect()
     }
 
     /// Drive steps until the run completes or halts, then report.
@@ -627,30 +704,62 @@ impl<E: ServingEngine> ServeFrontend<E> {
             ..Default::default()
         };
         for (_, outcome) in &self.outcomes {
-            match outcome {
-                RequestOutcome::Completed(resp) => {
-                    rep.completed += 1;
-                    rep.completed_tokens += resp.tokens.len() as u64;
-                    rep.ttft.record(resp.ttft);
-                    rep.e2e.record(resp.latency);
-                    if resp.tokens.len() >= 2 {
-                        let decode = (resp.latency - resp.ttft).max(0.0);
-                        rep.tpot.record(decode / (resp.tokens.len() - 1) as f64);
-                    }
-                }
-                RequestOutcome::Rejected(RejectReason::QueueFull) => {
-                    rep.rejected_queue_full += 1;
-                }
-                RequestOutcome::Rejected(RejectReason::NeverAdmissible) => {
-                    rep.rejected_never_admissible += 1;
-                }
-                RequestOutcome::Rejected(RejectReason::ShedOverload) => rep.shed += 1,
-                RequestOutcome::TtftExpired(_) => rep.expired_ttft += 1,
-                RequestOutcome::DeadlineExpired(_) => rep.expired_total += 1,
-                RequestOutcome::Cancelled(_) => rep.cancelled += 1,
-                RequestOutcome::Drained(_) => rep.drained += 1,
-            }
+            rep.record_outcome(outcome);
         }
         rep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::RetryPolicy;
+
+    /// With jitter off the schedule is pure capped doubling — pin it
+    /// exactly (doubling an f64 is exact, so these equalities hold
+    /// bit-for-bit on every platform).
+    #[test]
+    fn backoff_schedule_is_capped_doubling_without_jitter() {
+        let p = RetryPolicy {
+            max_retries: 8,
+            base_backoff_s: 0.001,
+            max_backoff_s: 0.004,
+            jitter_frac: 0.0,
+            seed: 7,
+        };
+        assert_eq!(p.backoff_s(1), 0.001);
+        assert_eq!(p.backoff_s(2), 0.002);
+        assert_eq!(p.backoff_s(3), 0.004);
+        assert_eq!(p.backoff_s(4), 0.004, "cap holds from here on");
+        assert_eq!(p.backoff_s(100), 0.004);
+        // attempt 0 is clamped to the first retry
+        assert_eq!(p.backoff_s(0), p.backoff_s(1));
+    }
+
+    /// Jitter only ever shaves the capped value (never exceeds it,
+    /// never shaves more than `jitter_frac`), and the schedule is a
+    /// pure function of `(seed, attempt)` — bit-identical on replay.
+    #[test]
+    fn backoff_jitter_is_bounded_and_seed_deterministic() {
+        let p = RetryPolicy { seed: 42, ..RetryPolicy::default() };
+        let q = RetryPolicy { seed: 42, ..RetryPolicy::default() };
+        for attempt in 1..=10 {
+            let b = p.backoff_s(attempt);
+            let cap = (p.base_backoff_s * f64::powi(2.0, attempt as i32 - 1))
+                .min(p.max_backoff_s);
+            assert!(b <= cap, "attempt {attempt}: {b} exceeds capped {cap}");
+            assert!(
+                b >= cap * (1.0 - p.jitter_frac),
+                "attempt {attempt}: {b} shaved below jitter floor"
+            );
+            assert!(b > 0.0);
+            // replay: same seed, same attempt, same bits
+            assert_eq!(b.to_bits(), q.backoff_s(attempt).to_bits());
+        }
+        // a different seed decorrelates the schedule
+        let r = RetryPolicy { seed: 43, ..RetryPolicy::default() };
+        assert!(
+            (1..=10).any(|n| r.backoff_s(n).to_bits() != p.backoff_s(n).to_bits()),
+            "seed 43 produced the identical 10-step schedule as seed 42"
+        );
     }
 }

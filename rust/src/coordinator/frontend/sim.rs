@@ -542,6 +542,14 @@ impl ServingEngine for SimEngine {
     fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
         SimEngine::take_token_events(self)
     }
+    /// Warm-start the replica's retained prefix pool from the host
+    /// prefix store.  Safe in the simulator because sim tokens are a
+    /// pure function of (seed, prompt) — warmed pages change admission
+    /// arithmetic, never output tokens.  The real engine keeps the
+    /// trait's no-op default until a device KV upload path exists.
+    fn warm_prefix(&mut self, prompt: &[i32]) -> usize {
+        self.kv.preload_prefix(prompt)
+    }
 }
 
 #[cfg(test)]

@@ -295,6 +295,51 @@ impl KvCacheManager {
         self.book.as_ref().map(|b| b.allocator.page_size())
     }
 
+    /// Warm-start the retained prefix pool with `prompt`'s full-page
+    /// prefix, as if a slot with that prompt had just retired (the host
+    /// prefix store's download path, see `coordinator::cluster`).
+    /// Pages come from the *unreserved* free pool only — a preload
+    /// never competes with committed growth reservations and never
+    /// evicts locally-warmed entries — and they enter the pool through
+    /// the same [`PrefixPool::park`] path retirement uses, so dedup
+    /// against existing entries, LRU eviction, and the allocator's
+    /// conservation ledger all hold unchanged.  Returns the pages
+    /// actually added to the retained pool: 0 on the dense layout, with
+    /// retention off, when the pool already covers the prefix, or when
+    /// free headroom is insufficient.
+    pub fn preload_prefix(&mut self, prompt: &[i32]) -> usize {
+        if !self.cfg.prefix_cache {
+            return 0;
+        }
+        let Some(book) = &mut self.book else { return 0 };
+        let page_size = book.allocator.page_size();
+        let full_pages = prompt.len() / page_size;
+        if full_pages == 0 {
+            return 0;
+        }
+        if book
+            .pool
+            .lookup(prompt, page_size)
+            .is_some_and(|h| h.pages >= full_pages)
+        {
+            return 0;
+        }
+        let Some(pages) = book.allocator.alloc(full_pages) else {
+            return 0;
+        };
+        let before = book.allocator.retained_pages();
+        // park() dedups against overlapping entries and frees whatever
+        // it does not keep — the retained delta is what the download
+        // actually installed
+        book.pool.park(
+            &prompt[..full_pages * page_size],
+            pages,
+            page_size,
+            &mut book.allocator,
+        );
+        book.allocator.retained_pages() - before
+    }
+
     /// Worst-case pages a request needs over its whole lifetime
     /// (prompt + generation budget, clamped to the context span) — what
     /// eager admission allocates and lazy admission commits (allocated
@@ -1105,5 +1150,44 @@ mod tests {
         assert_eq!(reclaimable, usable, "free + retained covers the pool");
         assert_eq!(m.reservations(), Some(0));
         m.audit();
+    }
+
+    #[test]
+    fn preload_prefix_parks_pages_and_serves_the_next_admission() {
+        let mut m = mgr(41, KvCacheConfig::default());
+        let prompt: Vec<i32> = (0..40).collect(); // 2 full pages + remainder
+        assert_eq!(m.preload_prefix(&prompt), 2, "both full pages parked");
+        assert_eq!(m.retained_pages(), Some(2));
+        m.audit();
+        // idempotent: the pool already covers this prefix
+        assert_eq!(m.preload_prefix(&prompt), 0);
+        // the next admission of the same prompt shares the warmed pages
+        admit_install(&mut m, 0, &prompt, 8);
+        assert_eq!(m.metrics().prefix_hits, 1, "admission hit the warmed entry");
+        assert!(m.metrics().prefix_hit_tokens >= 32);
+        m.release(0, true);
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable, "conservation holds after retirement");
+        m.audit();
+    }
+
+    #[test]
+    fn preload_prefix_respects_headroom_retention_and_layout() {
+        // sub-page prompts install nothing
+        let mut m = mgr(41, KvCacheConfig::default());
+        assert_eq!(m.preload_prefix(&[1; 10]), 0, "no full page to park");
+        // never competes with growth reservations: lazy slot holds the
+        // pool's headroom hostage, the preload declines instead
+        let mut small = mgr(5, KvCacheConfig::default()); // 4 usable
+        admit_install(&mut small, 0, &[7; 20], 30); // 3 fresh + 1 reserved
+        assert_eq!(small.reservations(), Some(1));
+        let long: Vec<i32> = (100..148).collect(); // wants 3 pages
+        assert_eq!(small.preload_prefix(&long), 0, "unreserved headroom too small");
+        small.audit();
+        // retention off / dense layout: structurally a no-op
+        let cfg = KvCacheConfig { prefix_cache: false, ..Default::default() };
+        assert_eq!(mgr(41, cfg).preload_prefix(&[1; 40]), 0);
+        let mut dense = KvCacheManager::dense(4, MAX, KvCacheConfig::default());
+        assert_eq!(dense.preload_prefix(&[1; 40]), 0);
     }
 }

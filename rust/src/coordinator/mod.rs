@@ -28,8 +28,14 @@
 //!   transient-retry / permanent-drain fault handling, and SLO
 //!   reporting (plus the artifact-free [`frontend::sim::SimEngine`]
 //!   twin the seeded chaos suite runs against).
+//! * [`cluster`]  — multi-replica serving above the front-end: an
+//!   [`cluster::EnginePool`] of N replicas behind a prefix-affinity
+//!   [`cluster::Router`] with least-loaded fallback, a shared
+//!   host-side prefix store warm-starting per-replica retained pools,
+//!   and replica-death drain → re-offer → bit-identical replay.
 
 pub mod batcher;
+pub mod cluster;
 pub mod engine;
 pub mod expert_stats;
 pub mod frontend;
@@ -40,6 +46,11 @@ pub mod scheduler;
 pub mod trace;
 
 pub use batcher::{Batcher, Slot, SlotState};
+pub use cluster::{
+    ClusterConfig, ClusterFrontend, ClusterOutcome, ClusterReport, EnginePool,
+    HostPrefixStore, PrefixStoreConfig, PrefixStoreStats, ReplicaLoad, RouteDecision,
+    Router, RouterPolicy,
+};
 pub use engine::{
     validate_chunk_config, ChunkConfigError, Engine, EngineConfig, EngineMetrics,
 };

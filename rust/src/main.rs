@@ -13,8 +13,8 @@ use anyhow::Result;
 use scattermoe::cli::Cli;
 use scattermoe::coordinator::trace::{generate, load_summary, Arrival, TraceConfig};
 use scattermoe::coordinator::{
-    ArrivingRequest, Engine, EngineConfig, FrontendConfig, IntakePolicy, SamplingParams,
-    ServeFrontend, ServeReport,
+    ArrivingRequest, ClusterConfig, ClusterFrontend, Engine, EngineConfig,
+    FrontendConfig, IntakePolicy, SamplingParams, ServeFrontend, ServeReport,
 };
 use scattermoe::runtime::Runtime;
 use scattermoe::tokenizer::SyntheticCorpus;
@@ -153,7 +153,9 @@ fn serve(args: &[String]) -> Result<()> {
         .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)")
         .switch("chunked", "chunked prefill: co-schedule prompt chunks with decode steps")
         .flag("chunk-tokens", "16", "per-step prefill token budget (chunked mode)")
-        .switch("stream", "per-token streaming: report time-to-first-streamed-token");
+        .switch("stream", "per-token streaming: report time-to-first-streamed-token")
+        .flag("replicas", "1", "engine replicas behind the prefix-affinity router")
+        .flag("kill-replica-at-ms", "0", "kill replica 0 at this wall time (0 = off; needs --replicas > 1)");
     let a = cli.parse_from(args).map_err(|e| anyhow::anyhow!(e))?;
     let rt = open_runtime(a.get("artifacts"))?;
     // telemetry on: the serve report prints per-expert routing skew
@@ -163,13 +165,15 @@ fn serve(args: &[String]) -> Result<()> {
         prefill_chunk_tokens: a.get_usize("chunk-tokens"),
         ..Default::default()
     };
-    let engine = Engine::new(rt, cfg)?;
+    let replicas = a.get_usize("replicas").max(1);
+    let engine = Engine::new(rt.clone(), cfg.clone())?;
     println!(
-        "engine up: {} slots, max_len {}, {:?} KV layout ({})",
+        "engine up: {} slots, max_len {}, {:?} KV layout ({}){}",
         engine.width(),
         engine.max_len(),
         engine.kv_layout(),
         scattermoe::metrics::fmt_bytes(engine.cache_bytes() as u64),
+        if replicas > 1 { format!("  × {replicas} replicas") } else { String::new() },
     );
 
     let seed = a.get_u64("seed");
@@ -216,6 +220,74 @@ fn serve(args: &[String]) -> Result<()> {
         stream: a.get_bool("stream"),
         ..Default::default()
     };
+    if replicas > 1 {
+        // multi-replica path: fan the same schedule out over an engine
+        // pool behind the prefix-affinity router; a scripted kill
+        // exercises replica-death drain → re-offer → seed-replay
+        let mut engines = vec![engine];
+        for _ in 1..replicas {
+            engines.push(Engine::new(rt.clone(), cfg.clone())?);
+        }
+        let mut cluster = ClusterFrontend::new(
+            engines,
+            ClusterConfig { frontend: fe_cfg, ..Default::default() },
+        );
+        cluster.push_arrivals(arrivals);
+        let kill_ms = a.get_f64("kill-replica-at-ms");
+        if kill_ms > 0.0 {
+            cluster.kill_replica_at(0, kill_ms / 1e3);
+        }
+        let crep = cluster.run();
+        if let Some(fault) = crep.merged.fatal.as_deref() {
+            println!("RUN HALTED: {fault}");
+        }
+        println!(
+            "served {} requests / {} tokens in {:.2}s  (goodput {:.1} tok/s)",
+            crep.merged.completed,
+            crep.merged.completed_tokens,
+            crep.merged.wall_s,
+            crep.merged.goodput_tok_s(),
+        );
+        println!(
+            "cluster: {} affinity / {} fallback routes   deaths {}  re-offers {}  \
+             re-routed outcomes {}  unserved {}",
+            crep.affinity_hits,
+            crep.affinity_fallbacks,
+            crep.replicas_dead,
+            crep.reroutes,
+            crep.merged.re_routed,
+            crep.merged.unserved,
+        );
+        println!(
+            "ttft p50 {:.0} ms  p99 {:.0} ms   tpot p50 {:.1} ms",
+            ServeReport::pct(&crep.merged.ttft, 0.5) * 1e3,
+            ServeReport::pct(&crep.merged.ttft, 0.99) * 1e3,
+            ServeReport::pct(&crep.merged.tpot, 0.5) * 1e3,
+        );
+        let st = &crep.store;
+        println!(
+            "prefix store: {} uploads ({} pages / {})  {} probe hits  \
+             {} pages warm-started ({})",
+            st.uploads,
+            st.uploaded_pages,
+            scattermoe::metrics::fmt_bytes(st.uploaded_bytes),
+            st.hits,
+            st.downloaded_pages,
+            scattermoe::metrics::fmt_bytes(st.downloaded_bytes),
+        );
+        for (r, pr) in crep.per_replica.iter().enumerate() {
+            println!(
+                "  replica {r}: {} completed  {} drained  {} re-routed-in  \
+                 goodput {:.1} tok/s{}",
+                pr.completed,
+                pr.drained,
+                pr.re_routed,
+                pr.goodput_tok_s(),
+                if cluster.pool().alive(r) { "" } else { "  [dead]" },
+            );
+        }
+        return Ok(());
+    }
     let mut fe = ServeFrontend::new(engine, fe_cfg);
     fe.push_arrivals(arrivals);
     let rep = fe.run();

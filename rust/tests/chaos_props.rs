@@ -16,6 +16,9 @@
 
 use std::collections::BTreeMap;
 
+use scattermoe::coordinator::cluster::{
+    ClusterConfig, ClusterFrontend, ClusterOutcome, ClusterReport,
+};
 use scattermoe::coordinator::frontend::faults::{FaultInjector, FaultKind};
 use scattermoe::coordinator::frontend::intake::IntakePolicy;
 use scattermoe::coordinator::frontend::sim::{SimEngine, SimEngineConfig};
@@ -141,8 +144,9 @@ fn run_chaos(
         },
         ttft_deadline_s: Some(0.25),
         deadline_s: Some(1.5),
-        retry: RetryPolicy { max_retries: 3, backoff_s: 0.001 },
+        retry: RetryPolicy { max_retries: 3, base_backoff_s: 0.001, ..Default::default() },
         clock: ClockMode::Virtual { tick_s: 0.01 },
+        stream: false,
     };
     let mut fe = ServeFrontend::new(engine, cfg);
     fe.push_arrivals(arrivals_for(seed, flavor));
@@ -283,7 +287,7 @@ fn prop_streaming_exactly_once_under_chaos() {
                 },
                 ttft_deadline_s: Some(0.25),
                 deadline_s: Some(1.5),
-                retry: RetryPolicy { max_retries: 3, backoff_s: 0.001 },
+                retry: RetryPolicy { max_retries: 3, base_backoff_s: 0.001, ..Default::default() },
                 clock: ClockMode::Virtual { tick_s: 0.01 },
                 stream: true,
             };
@@ -539,6 +543,206 @@ fn shed_watermark_rejects_typed_and_counts() {
     assert_eq!(report.shed, 12, "everything past the watermark sheds: {report:?}");
     assert_eq!(report.completed, 4, "everything admitted completes");
     assert_eq!(fe.engine().metrics.sheds, report.shed, "engine counter mirrors");
+}
+
+// ---------------------------------------------------------------------------
+// Multi-replica cluster chaos: replica-kill schedules over the SimCluster
+// ---------------------------------------------------------------------------
+
+/// Tokens of every cluster-level completion, keyed by arrival tag.
+fn cluster_completed_tokens(outcomes: &[ClusterOutcome]) -> BTreeMap<u64, Vec<i32>> {
+    outcomes
+        .iter()
+        .filter_map(|co| match &co.outcome {
+            RequestOutcome::Completed(resp) => Some((co.tag, resp.tokens.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Cluster config mirroring `run_chaos`'s per-replica front-end, with
+/// default routing and host-prefix-store policies.
+fn cluster_config() -> ClusterConfig {
+    ClusterConfig {
+        frontend: FrontendConfig {
+            intake: IntakePolicy {
+                max_pending: 64,
+                shed_queue_depth: Some(48),
+                shed_min_free_frac: None,
+            },
+            ttft_deadline_s: Some(0.25),
+            deadline_s: Some(1.5),
+            retry: RetryPolicy { max_retries: 3, base_backoff_s: 0.001, ..Default::default() },
+            clock: ClockMode::Virtual { tick_s: 0.01 },
+            stream: false,
+        },
+        ..Default::default()
+    }
+}
+
+struct ClusterChaosRun {
+    report: ClusterReport,
+    completed: BTreeMap<u64, Vec<i32>>,
+}
+
+/// Drive one seeded multi-replica run under a scripted replica-kill
+/// schedule.  After EVERY cluster step every replica's allocator is
+/// audited (dead ones included — drain must have reclaimed their
+/// pages); the run is bounded to catch routing/re-offer livelock; at
+/// the end every dead replica's pool must be fully reclaimable with no
+/// reservations stranded, and every arrival must carry exactly one
+/// typed outcome.
+fn run_cluster_chaos(
+    seed: u64, flavor: u64, replicas: usize, kills: &[(usize, f64)],
+) -> ClusterChaosRun {
+    let mut cluster = ClusterFrontend::sim(replicas, sim_config(false), cluster_config());
+    cluster.push_arrivals(arrivals_for(seed, flavor));
+    for &(r, t) in kills {
+        cluster.kill_replica_at(r % replicas, t);
+    }
+    loop {
+        let status = cluster.step();
+        for r in 0..cluster.pool().len() {
+            cluster.pool().frontend(r).engine().audit();
+        }
+        assert!(
+            cluster.steps() < 50_000,
+            "cluster no-deadlock bound exceeded (seed {seed})"
+        );
+        match status {
+            FrontendStatus::Running => {}
+            FrontendStatus::Done | FrontendStatus::Halted => break,
+        }
+    }
+    for r in 0..cluster.pool().len() {
+        if !cluster.pool().alive(r) {
+            let engine = cluster.pool().frontend(r).engine();
+            let (reclaimable, usable) = engine.page_budget().expect("paged sim");
+            assert_eq!(
+                reclaimable, usable,
+                "dead replica {r} stranded pages (seed {seed}): {reclaimable}/{usable}"
+            );
+            assert_eq!(
+                engine.page_reservations(),
+                Some(0),
+                "dead replica {r} stranded reservations (seed {seed})"
+            );
+        }
+    }
+    // exactly one typed outcome per routed request
+    let mut tags: Vec<u64> = cluster.outcomes().iter().map(|co| co.tag).collect();
+    tags.sort_unstable();
+    let before = tags.len();
+    tags.dedup();
+    assert_eq!(tags.len(), before, "a request carried two outcomes (seed {seed})");
+    ClusterChaosRun {
+        completed: cluster_completed_tokens(cluster.outcomes()),
+        report: cluster.report(),
+    }
+}
+
+/// THE replica-death acceptance property: under random seeded
+/// replica-kill schedules over a 3-replica SimCluster, every replica's
+/// allocator conserves after every cluster step, dead replicas end
+/// fully reclaimed, no admitted request is lost (each of the 24
+/// arrivals carries exactly one typed outcome — kills never leak or
+/// double-count), and every completion surviving the kills is
+/// bit-identical to the fault-free single-replica run of the same
+/// seed (seed-based replay on re-offer).
+#[test]
+fn prop_chaos_replica_death_conserves_pages_and_tokens() {
+    check(
+        30,
+        PairGen(U64Range(0, 1 << 20), U64Range(0, 4)),
+        |&(seed, flavor)| {
+            // fault-free single-replica baseline for token comparison
+            let baseline = run_chaos(seed, flavor, false, None);
+            prop_assert(baseline.report.fatal.is_none(), "fault-free run halted")?;
+            // 1–2 kills at seeded replicas/times: at least one of the
+            // three replicas always survives
+            let mut krng = Rng::new(seed ^ 0xD1E0FF);
+            let kills: Vec<(usize, f64)> = (0..1 + krng.below(2) as usize)
+                .map(|_| (krng.below(3) as usize, krng.below(50) as f64 * 0.01))
+                .collect();
+            let cluster = run_cluster_chaos(seed, flavor, 3, &kills);
+            for (tag, tokens) in &cluster.completed {
+                if let Some(base) = baseline.completed.get(tag) {
+                    prop_assert(
+                        tokens == base,
+                        "re-served request diverged from fault-free tokens",
+                    )?;
+                }
+            }
+            prop_assert(
+                cluster.report.merged.accounted() == 24,
+                "cluster outcome accounting lost arrivals across replica deaths",
+            )?;
+            prop_assert(
+                cluster.report.merged.unserved == 0,
+                "arrivals left unserved with replicas still alive",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+/// Scripted replica-death acceptance: kill the busier of two replicas
+/// mid-flight.  Its live work drains, re-offers to the survivor, and
+/// completes bit-identically to a fault-free run; nothing is lost,
+/// every re-offered request carries the `re_routed` flag, and the dead
+/// replica's allocator audits clean.
+#[test]
+fn scripted_replica_death_drains_reoffers_and_replays() {
+    let n = 12u64;
+    // generous intake, no deadlines: every re-offered request must
+    // actually complete on the survivor
+    let mut cfg = cluster_config();
+    cfg.frontend.intake.shed_queue_depth = None;
+    cfg.frontend.ttft_deadline_s = None;
+    cfg.frontend.deadline_s = None;
+    // fault-free single-replica baseline
+    let mut base = ClusterFrontend::sim(1, sim_config(false), cfg);
+    base.push_arrivals((0..n).map(|i| arrival(i, 0.0, 8, 6)));
+    let base_report = base.run();
+    assert_eq!(base_report.merged.completed, n, "{base_report:?}");
+    let base_tokens = cluster_completed_tokens(base.outcomes());
+
+    let mut cluster = ClusterFrontend::sim(2, sim_config(false), cfg);
+    cluster.push_arrivals((0..n).map(|i| arrival(i, 0.0, 8, 6)));
+    // let work spread and enter decode, then kill the busier replica
+    for _ in 0..3 {
+        assert_eq!(cluster.step(), FrontendStatus::Running);
+    }
+    let victim = (0..cluster.pool().len())
+        .max_by_key(|&r| {
+            cluster.pool().frontend(r).live_ids().len()
+                + cluster.pool().frontend(r).engine().queue_len()
+        })
+        .expect("two replicas");
+    assert!(
+        !cluster.pool().frontend(victim).live_ids().is_empty(),
+        "victim must hold live work for the kill to matter"
+    );
+    cluster.kill_replica_at(victim, cluster.now());
+    let report = cluster.run();
+
+    assert_eq!(report.replicas_dead, 1, "{report:?}");
+    assert!(!cluster.pool().alive(victim));
+    assert!(report.reroutes > 0, "death must re-offer live work: {report:?}");
+    assert!(report.merged.re_routed > 0, "re-offered outcomes carry the flag");
+    assert_eq!(report.merged.accounted(), n, "zero admitted requests lost");
+    assert_eq!(report.merged.completed, n, "every request completes: {report:?}");
+    assert_eq!(report.merged.drained, 0, "drains re-offer instead of terminating");
+    // re-served tokens are bit-identical to the undisturbed run
+    assert_eq!(cluster_completed_tokens(cluster.outcomes()), base_tokens);
+    // the dead replica's pool reclaimed everything
+    let engine = cluster.pool().frontend(victim).engine();
+    let (reclaimable, usable) = engine.page_budget().expect("paged sim");
+    assert_eq!(reclaimable, usable, "dead replica reclaims every page");
+    assert_eq!(engine.page_reservations(), Some(0));
+    // per-replica split covers the merged accounting exactly
+    let split: u64 = report.per_replica.iter().map(ServeReport::accounted).sum();
+    assert_eq!(split, n, "per-replica reports cover each request once");
 }
 
 /// An impossible request (prompt beyond the compiled width) rejects at

@@ -25,7 +25,10 @@ cargo test -q
 # `cargo test` above already ran it under the default seed; these pin
 # the gate even if the default ever changes).  Three seeds: the
 # historical PR-6 pin plus two more covering distinct mixed-phase
-# chunk/decode interleavings of the PR-7 random-walk properties.
+# chunk/decode interleavings of the PR-7 random-walk properties.  The
+# suite also carries the PR-8 multi-replica layer (replica-kill
+# schedules over the SimCluster: drain → re-offer → bit-identical
+# replay, per-replica conservation), pinned under the same seeds.
 echo "== tier-1: seeded chaos suite (fixed seeds) =="
 SCATTERMOE_TEST_SEED=12648430 cargo test -q --test chaos_props
 SCATTERMOE_TEST_SEED=3735928559 cargo test -q --test chaos_props
@@ -65,7 +68,9 @@ expected = {
          "serve TTFT p50", "serve TTFT p99", "serve TPOT p50",
          "serve TPOT p99", "serve goodput",
          "serve chunked TTFT p50", "serve chunked TTFT p99",
-         "serve chunked TPOT p50", "serve chunked TPOT p99"],
+         "serve chunked TPOT p50", "serve chunked TPOT p99",
+         "serve replicas goodput", "serve replicas p99 TTFT",
+         "serve replicas reroute count"],
     "bench_reports/BENCH_memory.json":
         ["kv dense (worst case)", "kv paged ctx=", "kv admitted width",
          "kv retained pool bytes", "kv hot-prompt pages written"],
