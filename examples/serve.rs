@@ -43,7 +43,9 @@ fn main() -> Result<()> {
         .flag("chunk-tokens", "16", "per-step prefill token budget (chunked passes)")
         .switch("stream", "per-token streaming on the main pass (the chunked pass always streams)")
         .flag("replicas", "2", "multi-replica pass: engines behind the prefix-affinity router (<2 = skip)")
-        .flag("kill-replica-at-ms", "0", "multi-replica pass: kill replica 0 at this wall time (0 = off)");
+        .flag("kill-replica-at-ms", "0", "multi-replica pass: kill replica 0 at this wall time (0 = off)")
+        .flag("overcommit-factor", "2", "overcommit pass: reservation-ledger watermark (1 = strict gate)")
+        .flag("host-tier-mb", "8", "overcommit pass: host-tier capacity for preemptive swap (MiB)");
     let a = cli.parse();
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
@@ -402,6 +404,78 @@ fn main() -> Result<()> {
             Measurement::scalar("serve chunked TPOT p99 (s)", ServeReport::pct(&ch_rep.tpot, 0.99)),
             Measurement::scalar("serve chunked TTFS p50 (s)", ServeReport::pct(&ch_rep.ttfs, 0.5)),
             Measurement::scalar("serve chunked goodput (tok/s)", ch_rep.goodput_tok_s()),
+        ]);
+    }
+    // overcommitted two-tier pass: the SAME arrival schedule through an
+    // engine whose reservation ledger promises growth past the free
+    // list and whose preempted pages pin to the host tier.  This is the
+    // memmodel::width_latency_tradeoff curve, measured: the hierarchy
+    // buys admitted width and prices it in preemption-replay tail
+    // latency — CI gates the width and p99-TTFT keys across PRs.
+    {
+        let factor = a.get_f64("overcommit-factor").max(1.0);
+        let tier_bytes = a.get_usize("host-tier-mb") * 1024 * 1024;
+        let mut oc_engine = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                chunked_prefill: a.get_bool("chunked"),
+                prefill_chunk_tokens: a.get_usize("chunk-tokens"),
+                overcommit_factor: factor,
+                host_tier_bytes: tier_bytes,
+                ..Default::default()
+            },
+        )?;
+        // same warmup as the main pass: compile time stays out of TTFT
+        oc_engine
+            .submit(vec![3, 4, 5], SamplingParams { max_new_tokens: 2, ..Default::default() })?;
+        oc_engine.run_to_completion()?;
+        let mut oc_fe = ServeFrontend::new(oc_engine, fe_cfg);
+        oc_fe.push_arrivals(arrivals.clone());
+        let oc_rep = oc_fe.run();
+        let oc_engine = oc_fe.engine();
+        let om = &oc_engine.metrics;
+        println!(
+            "\n=== overcommitted two-tier pass (factor {factor}, host tier {}) ===",
+            fmt_bytes(tier_bytes as u64),
+        );
+        if let Some(fault) = oc_rep.fatal.as_deref() {
+            println!("RUN HALTED by permanent fault: {fault}");
+        }
+        println!(
+            "completed {}  goodput {:.1} tok/s  admitted width peak {}  \
+             TTFT p50/p99 {:.1}/{:.1} ms",
+            oc_rep.completed,
+            oc_rep.goodput_tok_s(),
+            om.peak_admitted,
+            ServeReport::pct(&oc_rep.ttft, 0.5) * 1e3,
+            ServeReport::pct(&oc_rep.ttft, 0.99) * 1e3,
+        );
+        println!(
+            "preemption: {} victims requeued, {} restored from a host-tier pin",
+            om.preemptions, om.swap_ins,
+        );
+        if let Some(ts) = oc_engine.host_tier_stats() {
+            println!(
+                "host tier: {} resident  moved {} to host / {} back to device",
+                fmt_bytes(oc_engine.host_tier_bytes() as u64),
+                fmt_bytes(ts.bytes_to_host),
+                fmt_bytes(ts.bytes_to_device),
+            );
+        }
+        rows.extend([
+            Measurement::scalar(
+                "serve overcommit admitted width",
+                om.peak_admitted as f64,
+            ),
+            Measurement::scalar(
+                "serve overcommit p99 TTFT (s)",
+                ServeReport::pct(&oc_rep.ttft, 0.99),
+            ),
+            Measurement::scalar(
+                "serve overcommit goodput (tok/s)",
+                oc_rep.goodput_tok_s(),
+            ),
+            Measurement::scalar("serve overcommit preemptions", om.preemptions as f64),
         ]);
     }
     // multi-replica pass: the SAME arrival schedule fanned out over an

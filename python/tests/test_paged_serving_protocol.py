@@ -33,7 +33,25 @@ simulated:
   the re-admission replays bit-identically.  Mid-chunk slots get their
   decode-side block-table row suppressed to the garbage page — the
   decode scatter's inert lane must never write into pages a donor (or
-  the retained pool) still references.
+  the retained pool) still references;
+* ``swap``     — PR 9: the retained policy over an *overcommitted*
+  reservation ledger — admission may promise growth up to
+  ``floor(free × factor)`` pages (fresh pages never overcommit, only
+  reservations inflate), so a growth step can genuinely run dry.  The
+  fallback ladder twins ``Engine::ensure_decode_growth``: spill
+  retained prefix pages to the host tier first (no live request is
+  touched), then preempt the youngest fully-private decoder with its
+  pages pinned to the host tier, then plain-requeue the youngest
+  decoder.  A preempted request re-enters the queue at the FRONT with
+  its pages released; re-admission unpins the host-tier reservation
+  and the seed replay regenerates every token bit-identically (the
+  pin is the capacity/accounting half of the swap — the restore is
+  recomputed, vLLM's "recompute" semantics with swap-mode accounting).
+  Device conservation (``free + outstanding + retained == usable``)
+  and host conservation (``pinned + cached + free == cap``) are
+  asserted on every tick.  At factor 1.0 the gate arithmetic reduces
+  bit-identically to ``retained`` and the preemption machinery is
+  provably inert.
 
 All runs must emit bit-for-bit identical tokens, across admission waves
 that force page reuse, growth, cross-wave prefix sharing, idle-gap
@@ -108,7 +126,8 @@ class _Alloc:
     """Refcount + reservation-ledger + parked-page twin of
     coordinator/kvcache/pagetable.rs (page 0 reserved as garbage)."""
 
-    def __init__(self, num_pages=NUM_PAGES):
+    def __init__(self, num_pages=NUM_PAGES, overcommit=1.0):
+        assert overcommit >= 1.0
         self.num_pages = num_pages
         self.free = list(range(1, num_pages))
         self.refs = [0] * num_pages
@@ -116,6 +135,7 @@ class _Alloc:
         self.parked = [False] * num_pages
         self.retained = 0
         self.reserved = 0
+        self.overcommit = overcommit
 
     def usable(self):
         return self.num_pages - 1
@@ -123,9 +143,17 @@ class _Alloc:
     def unreserved(self):
         return len(self.free) - self.reserved
 
+    def budget(self):
+        """Pages available to new admissions under the overcommit
+        factor: floor(free * f) - reserved (pagetable.rs
+        `admission_budget`; at 1.0 exactly `unreserved`)."""
+        return max(0, int(len(self.free) * self.overcommit) - self.reserved)
+
     def admit(self, fresh, reserve):
-        if fresh + reserve > self.unreserved():
+        if fresh + reserve > self.budget():
             return None
+        if fresh > len(self.free):
+            return None  # only *reservations* overcommit
         pages = [self.free.pop() for _ in range(fresh)]
         for p in pages:
             assert self.refs[p] == 0, "double allocation"
@@ -141,6 +169,15 @@ class _Alloc:
         assert self.refs[p] == 0
         self.refs[p] = 1
         return p
+
+    def try_grow(self):
+        """`grow` that reports dry growth (`None`) instead of
+        asserting — the overcommitted ledger's preemption signal
+        (pagetable.rs `try_grow_reserved`)."""
+        assert self.reserved > 0, "grow without a reservation"
+        if not self.free:
+            return None
+        return self.grow()
 
     def retain(self, p):
         assert p != 0 and self.refs[p] > 0, "retain of free/garbage page"
@@ -193,7 +230,8 @@ class _Alloc:
             if self.refs[p] >= 1 and not (self.parked[p] and self.refs[p] == 1)
         )
         assert len(self.free) + outstanding + retained == self.usable(), "page leak"
-        assert len(self.free) >= self.reserved, "ledger overcommitted"
+        if self.overcommit == 1.0:
+            assert len(self.free) >= self.reserved, "ledger overcommitted"
         for p in self.free:
             assert self.refs[p] == 0 and not self.parked[p]
 
@@ -301,6 +339,55 @@ class _Pool:
                 assert alloc.refs[p] >= 1 and alloc.parked[p]
 
 
+class _HostTier:
+    """Page-count twin of coordinator/kvcache/host_tier.rs: one host
+    capacity shared by preemptive swap-out *pins* (keyed by request)
+    and spilled retained-prefix *cached* pages, with the tier's
+    conservation law (`pinned + cached + free == cap`) checked every
+    tick.  Pins carry no bytes in the twin — exactly the Rust engine's
+    swap contract, where the pin is the capacity/accounting half and
+    the restore is seed-replay recomputed."""
+
+    def __init__(self, cap_pages):
+        self.cap = cap_pages
+        self.pins = {}  # request id -> pinned page count
+        self.cached = 0  # spilled retained-prefix pages
+        self.stats = {"swapped_out": 0, "swapped_in": 0, "demoted": 0}
+
+    def pinned(self):
+        return sum(self.pins.values())
+
+    def free(self):
+        return self.cap - self.pinned() - self.cached
+
+    def can_pin(self, n):
+        return 0 < n <= self.free()
+
+    def pin(self, rid, n):
+        assert self.can_pin(n) and rid not in self.pins
+        self.pins[rid] = n
+        self.stats["swapped_out"] += n
+
+    def unpin(self, rid):
+        n = self.pins.pop(rid)
+        self.stats["swapped_in"] += n
+        return n
+
+    def demote(self, n):
+        """Best-effort spill accounting: cached pages die with the
+        twin's pool eviction, so demotion only books while there is
+        headroom."""
+        if 0 < n <= self.free():
+            self.cached += n
+            self.stats["demoted"] += n
+
+    def check_conservation(self):
+        assert all(n > 0 for n in self.pins.values()), "empty pin"
+        free = self.cap - self.pinned() - self.cached
+        assert free >= 0, "host tier overcommitted"
+        assert self.pinned() + self.cached + free == self.cap
+
+
 def _plan(prompt, max_new, lazy, donors, pool=None, chunked=False):
     """Twin of KvCacheManager::plan: (shared, fresh, reserve, cow_copy,
     pool_hit_pages) — the pool is probed strictly last, so live donors
@@ -342,7 +429,8 @@ def _plan(prompt, max_new, lazy, donors, pool=None, chunked=False):
     return shared, fresh, worst - table_len, cow, pool_pages
 
 
-def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
+def _serve(params, mode, cancel=None, phases=None, chunk_fault=False,
+           overcommit=3.0):
     """Drive the serving loop under one policy; returns (tokens, alloc,
     stats).  ``phases`` is a list of request lists: each phase drains
     fully before the next is enqueued — the idle gap only the retained
@@ -352,13 +440,16 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
     (chunked mode only) simulates one transient prefill fault the first
     time chunked finishers would run: they requeue front-first with
     pages and reservations reclaimed and nothing committed, so the
-    re-admission must replay bit-identically."""
-    assert mode in ("dense", "eager", "lazy", "retained", "chunked")
+    re-admission must replay bit-identically.  ``overcommit`` (swap
+    mode only) is the reservation-ledger factor: 1.0 is the strict
+    gate, provably inert preemption machinery."""
+    assert mode in ("dense", "eager", "lazy", "retained", "chunked", "swap")
     paged = mode != "dense"
-    lazy = mode in ("lazy", "retained", "chunked")
+    lazy = mode in ("lazy", "retained", "chunked", "swap")
     share = lazy  # CoW sharing rides on the lazy block-table machinery
-    retain = mode in ("retained", "chunked")
+    retain = mode in ("retained", "chunked", "swap")
     chunked = mode == "chunked"
+    swap = mode == "swap"
     fault_pending = chunked and chunk_fault
     phases = [list(p) for p in (phases or [_requests()])]
     reqs = [r for phase in phases for r in phase]
@@ -369,14 +460,17 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
     pos = [0] * WIDTH
     last = [0] * WIDTH
     prefilled = [None] * WIDTH  # chunked-prefill cursor (None = not chunking)
-    alloc = _Alloc()
+    alloc = _Alloc(overcommit=overcommit if swap else 1.0)
     pool = _Pool()
+    host = _HostTier(alloc.usable()) if swap else None
+    preempt_saved = {}  # rid -> tokens emitted before its last preemption
+    queue_box = {"q": []}  # the live phase queue, visible to preemption
     tables = [[] for _ in range(WIDTH)]
     shared_ct = [0] * WIDTH  # leading shared entries per slot
     reserved_ct = [0] * WIDTH  # per-slot growth budget
     stats = {"grows": 0, "shared": 0, "cow": 0, "hits": 0, "hit_tokens": 0,
              "evictions": 0, "admissions": {}, "chunks": 0, "requeues": 0,
-             "mixed_ticks": 0}
+             "mixed_ticks": 0, "preemptions": 0, "swap_ins": 0, "spills": 0}
     if paged:
         kc = jnp.zeros((TINY.n_layers, NUM_PAGES, PAGE, TINY.n_heads, TINY.d_head))
         vc = jnp.zeros_like(kc)
@@ -435,14 +529,14 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
                     donors, pool if retain else None, chunked=chunked,
                 )
                 need = fresh + reserve
-                if retain and need > alloc.unreserved():
+                if retain and need > alloc.budget():
                     # pin the planned shares, then LRU-evict the deficit
                     # — exactly KvCacheManager::admit's starved path,
                     # and only when eviction actually covers it (a
                     # hopeless admission must not trash the pool)
                     for p in shared:
                         alloc.retain(p)
-                    deficit = need - alloc.unreserved()
+                    deficit = need - alloc.budget()
                     if deficit <= pool.evictable(alloc):
                         stats["evictions"] += pool.evict(deficit, alloc)
                     alloc.release(shared)
@@ -471,6 +565,11 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
                     donors.append((reqs[rid][0], tables[s]))
             queue.pop(0)
             slots[s] = rid
+            if host is not None and rid in host.pins:
+                # host->device restore half of the swap: the pin leaves
+                # the tier and the seed replay rewrites the KV
+                host.unpin(rid)
+                stats["swap_ins"] += 1
             filled.append(s)
         return filled
 
@@ -507,11 +606,50 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
     def emit(s, tok):
         rid = slots[s]
         toks_out[rid].append(tok)
+        saved = preempt_saved.get(rid)
+        if saved is not None and len(toks_out[rid]) <= len(saved):
+            # exactly-once delivery: the replay must regenerate the
+            # already-emitted prefix bit-identically (the Rust engine
+            # suppresses these re-emissions with its `emitted` cursor)
+            assert tok == saved[len(toks_out[rid]) - 1], \
+                "seed replay diverged from the preempted run"
         if len(toks_out[rid]) >= budget[rid]:
             reclaim(s, park=True)  # retire; prefix pages may park
         elif cancel is not None and cancel == (rid, len(toks_out[rid])):
             cancelled.add(rid)
             reclaim(s, park=False)  # mid-flight abort: no parking
+
+    def preempt_for_growth():
+        """Dry-growth fallback ladder, twinning
+        Engine::ensure_decode_growth: (1) spill retained prefix pages
+        to the host tier — cheapest, no live request touched; (2)
+        preempt the youngest fully-private decoder, pinning its pages
+        to the host tier where it has headroom; (3) plain-requeue the
+        youngest decoder (always legal — releasing shared pages only
+        drops refcounts).  Each call frees at least one page or
+        shrinks the decoding set, so the caller's retry terminates."""
+        if pool.evictable(alloc) > 0:
+            spilled = pool.evict(1, alloc)
+            host.demote(spilled)
+            stats["spills"] += spilled
+            return
+        decoding = [t for t in range(WIDTH)
+                    if slots[t] is not None and tables[t]]
+        assert decoding, "page deficit with no preemptible decoder"
+        private = [t for t in decoding
+                   if all(alloc.refs[p] == 1 and not alloc.parked[p]
+                          for p in tables[t])]
+        victim = max(private or decoding, key=lambda t: slots[t])
+        rid = slots[victim]
+        if victim in private and host.can_pin(len(tables[victim])):
+            host.pin(rid, len(tables[victim]))
+        if len(toks_out[rid]) > len(preempt_saved.get(rid, [])):
+            preempt_saved[rid] = list(toks_out[rid])
+        toks_out[rid] = []  # the seed replay regenerates everything
+        reclaim(victim, park=False)  # preempted pages never park
+        pos[victim], last[victim] = 0, 0
+        queue_box["q"].insert(0, rid)  # requeue at the FRONT
+        stats["preemptions"] += 1
 
     def do_decode(decoding=None, suppress=()):
         nonlocal kc, vc
@@ -522,12 +660,20 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
         )
         if paged:
             for s in active:
+                if slots[s] is None:
+                    continue  # preempted by an earlier grower this tick
                 needed = pos[s] // PAGE + 1
-                while len(tables[s]) < needed:
+                while slots[s] is not None and len(tables[s]) < needed:
                     assert reserved_ct[s] > 0, "growth past the reservation"
-                    tables[s].append(alloc.grow())
+                    page = alloc.try_grow() if swap else alloc.grow()
+                    if page is None:
+                        preempt_for_growth()  # may preempt s itself
+                        continue
+                    tables[s].append(page)
                     reserved_ct[s] -= 1
                     stats["grows"] += 1
+                if slots[s] is None:
+                    continue  # s was its own victim: row goes inert
                 # CoW invariant: the write-target page is private
                 assert needed - 1 >= shared_ct[s]
                 assert alloc.refs[tables[s][needed - 1]] == 1
@@ -549,7 +695,7 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
 
     next_rid = 0
     for phase in phases:
-        queue = list(range(next_rid, next_rid + len(phase)))
+        queue = queue_box["q"] = list(range(next_rid, next_rid + len(phase)))
         next_rid += len(phase)
         for _ in range(300):
             if not queue and all(s is None for s in slots):
@@ -630,7 +776,12 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False):
             if paged:
                 alloc.check_conservation()
                 pool.audit(alloc)
+                if host is not None:
+                    host.check_conservation()
         assert not queue and all(s is None for s in slots), "phase did not drain"
+    if host is not None:
+        assert not host.pins, "host-tier pins stranded after the run"
+        stats["host"] = dict(host.stats)
     for rid in cancelled:
         del toks_out[rid]
     return toks_out, alloc, stats
@@ -754,6 +905,45 @@ def test_chunked_prefill_three_way_bit_identical():
         alloc.check_conservation()
         assert alloc.reserved == 0
         assert len(alloc.free) + alloc.retained == alloc.usable()
+
+
+def test_swap_overcommit_preempts_replays_and_conserves_both_tiers():
+    """PR 9's twin acceptance: the overcommitted ledger admits wider
+    than the free list, growth genuinely runs dry, the youngest
+    fully-private decoder is preempted with its pages pinned to the
+    host tier, and every preempted request's seed replay regenerates
+    its tokens bit-identically — dense-oracle equality, exactly-once
+    outcomes, and two-tier conservation (device ``free + outstanding +
+    retained == usable``, host ``pinned + cached + free == cap``) on
+    every tick.  At factor 1.0 the machinery must be provably inert
+    and mechanically bit-identical to the ``retained`` policy."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    dense, _, _ = _serve(params, "dense")
+    swapped, alloc, stats = _serve(params, "swap")
+    assert swapped == dense, f"swap {swapped} != dense {dense}"
+    # the overcommitted ledger genuinely ran dry and preempted
+    assert stats["preemptions"] > 0, "factor 3.0 over a half-size pool must preempt"
+    assert stats["swap_ins"] > 0, "host-tier pins must restore on re-admission"
+    assert stats["swap_ins"] <= stats["preemptions"]
+    # every page the tier absorbed came back out (pins drain; the twin
+    # never re-promotes spilled pages, so only pin traffic round-trips)
+    assert stats["host"]["swapped_out"] == stats["host"]["swapped_in"]
+    # end state: ledger clean, every device page free or parked
+    alloc.check_conservation()
+    assert alloc.reserved == 0
+    assert len(alloc.free) + alloc.retained == alloc.usable()
+    # the strict factor keeps every gate bit-identical to `retained`:
+    # same tokens AND the same mechanical trajectory, zero preemptions
+    retained, _, stats_m = _serve(params, "retained")
+    strict, alloc_1, stats_1 = _serve(params, "swap", overcommit=1.0)
+    assert strict == dense, f"strict swap {strict} != dense {dense}"
+    assert stats_1["preemptions"] == 0, "strict gate must keep preemption inert"
+    assert stats_1["swap_ins"] == 0 and stats_1["spills"] == 0
+    assert stats_1["host"] == {"swapped_out": 0, "swapped_in": 0, "demoted": 0}
+    for k in ("grows", "shared", "cow", "hits", "evictions", "admissions"):
+        assert stats_1[k] == stats_m[k], f"strict swap diverged from retained on {k}"
+    alloc_1.check_conservation()
+    assert alloc_1.reserved == 0
 
 
 def test_never_admissible_request_rejected_at_submit_queue_drains():

@@ -58,6 +58,12 @@ pub struct Slot {
     /// (only meaningful in [`SlotState::Chunking`]; the slot's prefill
     /// completes when this reaches the prompt length).
     pub prefilled: usize,
+    /// Tokens this request already streamed to the client in an earlier
+    /// admission, before a preemption (0 for a fresh request).  During
+    /// the seed-replay after re-admission the engine suppresses token
+    /// events until `generated` grows past this cursor, so the client
+    /// sees every token exactly once.
+    pub emitted: usize,
 }
 
 impl Slot {
@@ -72,6 +78,7 @@ impl Slot {
             arrived: None,
             first_token_at: None,
             prefilled: 0,
+            emitted: 0,
         }
     }
 
@@ -203,6 +210,7 @@ impl Batcher {
                 arrived: Some(req.arrived),
                 first_token_at: None,
                 prefilled: 0,
+                emitted: req.emitted,
             };
             filled.push(i);
         }
@@ -233,6 +241,37 @@ impl Batcher {
             prompt: std::mem::take(&mut slot.prompt),
             params: slot.params.clone(),
             arrived: slot.arrived.unwrap_or_else(std::time::Instant::now),
+            emitted: slot.emitted,
+        };
+        *slot = Slot::empty();
+        self.queue.push_front(req);
+        true
+    }
+
+    /// Preempt a *decoding* slot: put its request back at the front of
+    /// the queue so it re-admits before anything newer (it was admitted
+    /// first — FIFO survives the round trip).  Unlike [`Self::requeue`],
+    /// the slot has already sampled tokens; they are dropped here and
+    /// regenerated bit-identically on re-admission, because the per-slot
+    /// rng is recreated from the request seed and the sampling stream is
+    /// a pure function of (seed, position).  The `emitted` cursor is
+    /// advanced to cover every token generated so far, so the replay
+    /// suppresses re-delivery (exactly-once streaming).  The caller owns
+    /// the KV side: swap the slot's pages to the host tier (or release
+    /// them) *before* the next admission pass.  Returns whether the slot
+    /// was preempted.
+    pub fn preempt(&mut self, idx: usize) -> bool {
+        let slot = &mut self.slots[idx];
+        let SlotState::Decoding(id) = slot.state else {
+            return false;
+        };
+        let emitted = slot.generated.len().max(slot.emitted);
+        let req = Request {
+            id,
+            prompt: std::mem::take(&mut slot.prompt),
+            params: slot.params.clone(),
+            arrived: slot.arrived.unwrap_or_else(std::time::Instant::now),
+            emitted,
         };
         *slot = Slot::empty();
         self.queue.push_front(req);
@@ -241,14 +280,17 @@ impl Batcher {
 
     /// True while `id` has produced no token yet: still queued, still
     /// prefilling, or decoding with an empty generation.  This is the
-    /// front-end's TTFT-deadline predicate.
+    /// front-end's TTFT-deadline predicate.  A preempted request that
+    /// already streamed tokens (`emitted > 0`) is *not* awaiting — its
+    /// first token reached the client before the preemption, so the
+    /// TTFT deadline must not fire during the replay.
     pub fn awaiting_first_token(&self, id: RequestId) -> bool {
-        if self.queue.iter().any(|r| r.id == id) {
+        if self.queue.iter().any(|r| r.id == id && r.emitted == 0) {
             return true;
         }
         self.slots.iter().any(|s| match s.state {
-            SlotState::Prefilling(i) | SlotState::Chunking(i) => i == id,
-            SlotState::Decoding(i) => i == id && s.generated.is_empty(),
+            SlotState::Prefilling(i) | SlotState::Chunking(i) => i == id && s.emitted == 0,
+            SlotState::Decoding(i) => i == id && s.generated.is_empty() && s.emitted == 0,
             SlotState::Empty => false,
         })
     }
@@ -690,6 +732,58 @@ mod tests {
         // re-admission restarts chunk progress from zero
         b.refill_chunked_with(|_| true);
         assert_eq!(b.slots()[0].prefilled, 0);
+    }
+
+    #[test]
+    fn preempt_requeues_decoding_slot_with_emitted_cursor() {
+        let mut b = Batcher::new(1, 8);
+        b.submit(req(0, 2, 8));
+        b.submit(req(1, 2, 8));
+        b.refill();
+        b.complete_prefill(0, 9);
+        b.push_token(0, 11); // two tokens streamed so far
+        assert!(b.preempt(0), "decoding slots can be preempted");
+        assert_eq!(b.slots()[0].state, SlotState::Empty);
+        let front = b.queued_requests().next().expect("requeued at front");
+        assert_eq!(front.id.0, 0, "preempted request re-admits before newer work");
+        assert_eq!(front.emitted, 2, "cursor covers every streamed token");
+        assert_eq!(front.prompt.len(), 2, "prompt restored for the replay prefill");
+        let (adm, fin, act, q) = b.accounting();
+        assert_eq!((adm, fin, act, q), (2, 0, 0, 2), "nothing lost");
+        // the replayed request already streamed tokens, so the TTFT
+        // deadline predicate must not see it as awaiting
+        assert!(!b.awaiting_first_token(RequestId(0)));
+        assert!(b.awaiting_first_token(RequestId(1)), "fresh request still is");
+        // re-admission carries the cursor into the slot
+        let filled = b.refill();
+        assert_eq!(filled, vec![0]);
+        assert_eq!(b.slots()[0].emitted, 2);
+        assert!(!b.awaiting_first_token(RequestId(0)), "not awaiting in-slot either");
+        // only Decoding slots can be preempted
+        assert!(!b.preempt(0), "prefilling slot requeues instead");
+    }
+
+    #[test]
+    fn requeue_and_repreempt_keep_the_emitted_high_water_mark() {
+        let mut b = Batcher::new(1, 8);
+        b.submit(req(0, 4, 8));
+        b.refill();
+        b.complete_prefill(0, 9);
+        b.push_token(0, 10);
+        b.push_token(0, 11); // three tokens streamed
+        assert!(b.preempt(0));
+        b.refill_chunked_with(|_| true); // chunked replay admission
+        assert_eq!(b.slots()[0].emitted, 3);
+        // a fault-requeue mid-replay keeps the cursor...
+        assert!(b.requeue(0));
+        assert_eq!(b.queued_requests().next().unwrap().emitted, 3);
+        b.refill();
+        b.complete_prefill(0, 9); // replayed token 1 of 3 — suppressed upstream
+        // ...and a second preemption during the replay must not shrink it
+        assert!(b.preempt(0));
+        assert_eq!(b.queued_requests().next().unwrap().emitted, 3, "max(1, 3)");
+        let (adm, fin, act, q) = b.accounting();
+        assert_eq!((adm, fin, act, q), (1, 0, 0, 1), "conserved across round trips");
     }
 
     #[test]

@@ -14,12 +14,16 @@
 //!     least-loaded fallback on queue depth / free-page fraction
 //!     (see `router.rs`).
 //!   * **prefix sharing across replicas** — completed prompts upload
-//!     their page-aligned prefix to the [`HostPrefixStore`] on miss;
-//!     a routed request that hits the store warm-starts the prefix
-//!     into its target replica's retained pool before submission
-//!     ([`ServingEngine::warm_prefix`]), so a re-routed or restarted
-//!     replica serves the same system prompts without a cold prefill
-//!     (see `prefix_store.rs`).
+//!     their page-aligned prefix to the [`HostPrefixStore`] on miss —
+//!     tokens always, plus the actual KV page bytes when the resolving
+//!     replica has a host KV tier to export them from
+//!     ([`ServingEngine::export_prefix`]); a routed request that hits
+//!     the store warm-starts the prefix into its target replica's
+//!     retained pool before submission
+//!     ([`ServingEngine::warm_prefix_kv`], shipping the stored bytes
+//!     when present), so a re-routed or restarted replica serves the
+//!     same system prompts without a cold prefill (see
+//!     `prefix_store.rs`).
 //!   * **replica death → drain → re-offer → replay** — a replica that
 //!     halts (permanent fault escalation, or a scripted kill via
 //!     [`ClusterFrontend::kill_replica_at`]) drains through the
@@ -399,12 +403,22 @@ impl<E: ServingEngine> ClusterFrontend<E> {
             self.affinity_fallbacks += 1;
         }
         if self.store.probe(&arr.prompt) > 0 {
+            // ship stored KV bytes when the store has them; a replica
+            // without a host tier ignores the payload and warms
+            // logically (the simulator path, where tokens regenerate)
+            let payload = self.store.payload_for(&arr.prompt);
             let warmed = self
                 .pool
                 .frontend_mut(decision.replica)
                 .engine_mut()
-                .warm_prefix(&arr.prompt);
-            self.store.record_download(warmed);
+                .warm_prefix_kv(&arr.prompt, payload.as_ref());
+            self.store.record_warm(warmed);
+            if warmed > 0 {
+                if let Some(bytes) = payload.as_ref().and_then(|kv| kv.bytes.as_ref())
+                {
+                    self.store.record_download(warmed, bytes.len());
+                }
+            }
         }
         self.requests.insert(arr.tag, arr.clone());
         self.open.insert(arr.tag);
@@ -474,11 +488,18 @@ impl<E: ServingEngine> ClusterFrontend<E> {
     }
 
     /// Record one terminal outcome; completions feed the host prefix
-    /// store (upload-on-miss).
+    /// store (upload-on-miss).  A live resolving replica with a host
+    /// KV tier also exports the actual KV bytes of the prefix it just
+    /// served, so the store can ship them on the next warm-start; a
+    /// dead replica (drain-path completions) falls back to the
+    /// token-only offer.
     fn record(&mut self, replica: usize, tag: u64, outcome: RequestOutcome) {
         if matches!(outcome, RequestOutcome::Completed(_)) {
-            if let Some(arr) = self.requests.get(&tag) {
-                self.store.offer(&arr.prompt);
+            if let Some(prompt) = self.requests.get(&tag).map(|a| a.prompt.clone()) {
+                let kv = self.pool.alive(replica).then(|| {
+                    self.pool.frontend_mut(replica).engine_mut().export_prefix(&prompt)
+                });
+                self.store.offer_with_payload(&prompt, kv.flatten());
             }
         }
         self.open.remove(&tag);

@@ -7,19 +7,27 @@
 //! prefixes* of completed prompts host-side: a completion uploads its
 //! prefix on miss, and routing probes the store so the target replica
 //! can warm-start the prefix into its own retained pool
-//! ([`crate::coordinator::frontend::ServingEngine::warm_prefix`] →
-//! `KvCacheManager::preload_prefix`) before the request is offered.
+//! ([`crate::coordinator::frontend::ServingEngine::warm_prefix_kv`] →
+//! `KvCacheManager::warm_prefix_host`) before the request is offered.
 //!
-//! Like the device pools, the store is bounded and LRU-evicted, and
-//! every page crossing it is counted (upload = replica→host on
-//! completion, download = host→replica on warm-start) in the same
-//! spirit as the runtime's `TransferTotals` — the cluster bench
-//! reports these beside goodput.  The store holds tokens, not KV: on
-//! the simulator that is the whole truth (sim tokens are a pure
-//! function of seed and prompt), and on the real engine the byte
-//! counts price the future device upload path (see ROADMAP).
+//! Entries hold tokens always, and — when the completing replica has a
+//! host KV tier to stage them in — the actual KV page bytes
+//! ([`PrefixKv`], via `ServingEngine::export_prefix`).  On the
+//! simulator tokens are the whole truth (sim tokens are a pure
+//! function of seed and prompt); on the real engine the payload is
+//! what turns a warm-start from a logical reservation into a device
+//! upload of previously computed KV.
+//!
+//! The stats keep those two worlds apart: *logical* counters (offers,
+//! probe hits, pages stored or warm-started) track bookkeeping events
+//! that move no KV, while *transfer* counters (uploads/downloads with
+//! their page and byte totals) count only real payload bytes crossing
+//! the store — the same discipline as the runtime's `TransferTotals`.
+//! Like the device pools, the store is bounded and LRU-evicted.
 
-/// Host prefix store geometry and accounting config.
+use crate::coordinator::kvcache::host_tier::PrefixKv;
+
+/// Host prefix store geometry config.
 #[derive(Clone, Copy, Debug)]
 pub struct PrefixStoreConfig {
     /// Tokens per stored page — match the replicas' KV page size so
@@ -27,41 +35,57 @@ pub struct PrefixStoreConfig {
     pub page_tokens: usize,
     /// Resident-page bound; least-recently-used entries evict past it.
     pub capacity_pages: usize,
-    /// KV bytes one token occupies, for transfer accounting only.
-    pub bytes_per_token: usize,
 }
 
 impl Default for PrefixStoreConfig {
     fn default() -> Self {
-        PrefixStoreConfig { page_tokens: 16, capacity_pages: 256, bytes_per_token: 256 }
+        PrefixStoreConfig { page_tokens: 16, capacity_pages: 256 }
     }
 }
 
-/// Monotonic transfer / hit counters for the store.
-#[derive(Clone, Copy, Debug, Default)]
+/// Monotonic counters for the store, split into *logical* bookkeeping
+/// events (no KV bytes move) and *byte-moving transfers* (real payload
+/// bytes crossing the store boundary).  Conflating the two was a bug:
+/// a token-only warm-start on the simulator used to book priced
+/// "bytes" that no hardware ever moved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PrefixStoreStats {
-    /// Upload events (completed prompts that added pages).
-    pub uploads: u64,
-    /// Pages uploaded replica→host.
-    pub uploaded_pages: u64,
-    /// Bytes uploaded replica→host.
-    pub uploaded_bytes: u64,
+    // -- logical events: bookkeeping only --
+    /// Completions offered to the store (≥ 1 full page).
+    pub offers: u64,
+    /// Token pages added to the store by offers.
+    pub stored_pages: u64,
     /// Routing probes that found a stored prefix.
     pub hits: u64,
     /// Routing probes that found nothing.
     pub misses: u64,
-    /// Pages downloaded host→replica on warm-start.
-    pub downloaded_pages: u64,
-    /// Bytes downloaded host→replica on warm-start.
-    pub downloaded_bytes: u64,
-    /// Pages evicted by the capacity bound.
+    /// Pages warm-started into replica pools (logical reservation;
+    /// payload-backed or not).
+    pub warmed_pages: u64,
+    /// Token pages evicted by the capacity bound.
     pub evicted_pages: u64,
+    // -- byte-moving transfers: real KV payload only --
+    /// Payload uploads (completions that attached KV bytes).
+    pub uploads: u64,
+    /// KV pages uploaded replica→store.
+    pub uploaded_pages: u64,
+    /// KV bytes uploaded replica→store (actual payload length).
+    pub uploaded_bytes: u64,
+    /// Payload downloads (warm-starts that shipped KV bytes).
+    pub downloads: u64,
+    /// KV pages downloaded store→replica on payload-backed warm-starts.
+    pub downloaded_pages: u64,
+    /// KV bytes downloaded store→replica (actual payload length).
+    pub downloaded_bytes: u64,
 }
 
 #[derive(Clone, Debug)]
 struct StoreEntry {
     /// Page-aligned token prefix this entry holds.
     tokens: Vec<i32>,
+    /// Real KV page bytes for a (possibly shorter) prefix of `tokens`,
+    /// when the completing replica could export them.
+    kv: Option<PrefixKv>,
     /// LRU stamp (larger = more recently used).
     stamp: u64,
 }
@@ -82,7 +106,7 @@ impl HostPrefixStore {
         HostPrefixStore { cfg, entries: Vec::new(), clock: 0, stats: PrefixStoreStats::default() }
     }
 
-    /// Transfer / hit counters so far.
+    /// Logical / transfer counters so far.
     pub fn stats(&self) -> &PrefixStoreStats {
         &self.stats
     }
@@ -92,7 +116,7 @@ impl HostPrefixStore {
         self.entries.len()
     }
 
-    /// Resident pages across all entries.
+    /// Resident token pages across all entries.
     pub fn pages(&self) -> usize {
         self.entries.iter().map(|e| e.tokens.len() / self.cfg.page_tokens).sum()
     }
@@ -118,8 +142,9 @@ impl HostPrefixStore {
 
     /// Routing probe: full pages of `prompt` the store holds (0 on
     /// miss).  A hit bumps the entry's LRU stamp; the caller follows a
-    /// positive probe with `warm_prefix` on the target replica and
-    /// books the transfer through [`HostPrefixStore::record_download`].
+    /// positive probe with a warm-start on the target replica and
+    /// books it through [`HostPrefixStore::record_warm`] (plus
+    /// [`HostPrefixStore::record_download`] when payload bytes moved).
     pub fn probe(&mut self, prompt: &[i32]) -> usize {
         match self.best(prompt) {
             Some((idx, pages)) if pages > 0 => {
@@ -135,30 +160,73 @@ impl HostPrefixStore {
         }
     }
 
-    /// Book `pages` downloaded host→replica (the pages a warm-start
-    /// actually installed in the replica's retained pool).
-    pub fn record_download(&mut self, pages: usize) {
+    /// The deepest stored KV payload usable for `prompt`: its tokens
+    /// must be an *exact* prefix of the prompt (a replica warms the
+    /// prompt's own tokens against the payload's bytes, so a divergent
+    /// payload would serve another prompt's KV as this one's).
+    pub fn payload_for(&self, prompt: &[i32]) -> Option<PrefixKv> {
+        self.entries
+            .iter()
+            .filter_map(|e| e.kv.as_ref())
+            .filter(|kv| {
+                prompt.len() >= kv.tokens.len()
+                    && prompt[..kv.tokens.len()] == kv.tokens[..]
+            })
+            .max_by_key(|kv| kv.pages)
+            .cloned()
+    }
+
+    /// Book `pages` logically warm-started into a replica's retained
+    /// pool (no bytes implied — pair with
+    /// [`HostPrefixStore::record_download`] when payload moved).
+    pub fn record_warm(&mut self, pages: usize) {
+        self.stats.warmed_pages += pages as u64;
+    }
+
+    /// Book one payload download: `pages` installed on the replica from
+    /// `bytes` of real KV shipped store→replica.
+    pub fn record_download(&mut self, pages: usize, bytes: usize) {
+        if pages == 0 && bytes == 0 {
+            return;
+        }
+        self.stats.downloads += 1;
         self.stats.downloaded_pages += pages as u64;
-        self.stats.downloaded_bytes +=
-            (pages * self.cfg.page_tokens * self.cfg.bytes_per_token) as u64;
+        self.stats.downloaded_bytes += bytes as u64;
+    }
+
+    /// Token-only [`HostPrefixStore::offer_with_payload`].
+    pub fn offer(&mut self, prompt: &[i32]) {
+        self.offer_with_payload(prompt, None);
     }
 
     /// Upload-on-miss after a completion: store `prompt`'s page-aligned
     /// prefix if not already resident.  A covered prefix only bumps the
-    /// LRU; a clean extension of a resident prefix uploads just the
+    /// LRU; a clean extension of a resident prefix stores just the
     /// missing tail pages; anything else becomes its own entry (host
     /// entries hold tokens, not device pages — overlap costs capacity,
-    /// never correctness).  Evicts LRU entries past the capacity bound.
-    pub fn offer(&mut self, prompt: &[i32]) {
+    /// never correctness).  A payload with real bytes whose tokens
+    /// page-align and prefix the prompt attaches to the entry when it
+    /// deepens the entry's KV coverage — only then do the transfer
+    /// counters move.  Evicts LRU entries past the capacity bound.
+    pub fn offer_with_payload(&mut self, prompt: &[i32], payload: Option<PrefixKv>) {
         let n = self.full_pages(prompt);
         if n == 0 {
             return;
         }
         self.clock += 1;
+        self.stats.offers += 1;
+        let payload = payload.filter(|kv| {
+            kv.pages > 0
+                && kv.bytes.is_some()
+                && kv.tokens.len() == kv.pages * self.cfg.page_tokens
+                && kv.pages <= n
+                && prompt[..kv.tokens.len()] == kv.tokens[..]
+        });
         let tokens = &prompt[..n * self.cfg.page_tokens];
         match self.best(prompt) {
             Some((idx, covered)) if covered >= n => {
                 self.entries[idx].stamp = self.clock;
+                self.attach(idx, payload);
             }
             Some((idx, covered))
                 if covered > 0
@@ -167,27 +235,41 @@ impl HostPrefixStore {
             {
                 self.entries[idx].tokens = tokens.to_vec();
                 self.entries[idx].stamp = self.clock;
-                self.count_upload(n - covered);
+                self.stats.stored_pages += (n - covered) as u64;
+                self.attach(idx, payload);
             }
             _ => {
-                self.entries
-                    .push(StoreEntry { tokens: tokens.to_vec(), stamp: self.clock });
-                self.count_upload(n);
+                self.entries.push(StoreEntry {
+                    tokens: tokens.to_vec(),
+                    kv: None,
+                    stamp: self.clock,
+                });
+                self.stats.stored_pages += n as u64;
+                self.attach(self.entries.len() - 1, payload);
             }
         }
         self.evict_to_capacity();
     }
 
-    fn count_upload(&mut self, pages: usize) {
+    /// Attach `payload` to entry `idx` when it deepens the entry's KV
+    /// coverage, booking the actual bytes as an upload.  A shallower
+    /// payload never downgrades a deeper stored one.
+    fn attach(&mut self, idx: usize, payload: Option<PrefixKv>) {
+        let Some(kv) = payload else { return };
+        let have = self.entries[idx].kv.as_ref().map_or(0, |k| k.pages);
+        if kv.pages <= have {
+            return;
+        }
         self.stats.uploads += 1;
-        self.stats.uploaded_pages += pages as u64;
-        self.stats.uploaded_bytes +=
-            (pages * self.cfg.page_tokens * self.cfg.bytes_per_token) as u64;
+        self.stats.uploaded_pages += kv.pages as u64;
+        self.stats.uploaded_bytes += kv.bytes.as_ref().map_or(0, |b| b.len()) as u64;
+        self.entries[idx].kv = Some(kv);
     }
 
     /// Evict least-recently-used entries until the capacity bound
-    /// holds.  A single entry larger than the whole bound stays — a
-    /// store that evicted its only tenant would churn uploads forever.
+    /// holds (an evicted entry's payload dies with it).  A single entry
+    /// larger than the whole bound stays — a store that evicted its
+    /// only tenant would churn uploads forever.
     fn evict_to_capacity(&mut self) {
         while self.pages() > self.cfg.capacity_pages && self.entries.len() > 1 {
             let victim = self
@@ -209,29 +291,34 @@ mod tests {
     use super::*;
 
     fn store(capacity_pages: usize) -> HostPrefixStore {
-        HostPrefixStore::new(PrefixStoreConfig {
-            page_tokens: 4,
-            capacity_pages,
-            bytes_per_token: 10,
-        })
+        HostPrefixStore::new(PrefixStoreConfig { page_tokens: 4, capacity_pages })
+    }
+
+    fn kv(upto: i32, pages: usize, fill: u8) -> PrefixKv {
+        PrefixKv {
+            tokens: (0..upto).collect(),
+            pages,
+            bytes: Some(vec![fill; pages * 64]),
+        }
     }
 
     #[test]
-    fn upload_on_miss_dedups_and_extends() {
+    fn offer_on_miss_dedups_and_extends() {
         let mut s = store(64);
         let prompt: Vec<i32> = (0..10).collect(); // 2 full pages + tail
         s.offer(&prompt);
         assert_eq!((s.entries(), s.pages()), (1, 2));
-        assert_eq!(s.stats().uploaded_pages, 2);
-        assert_eq!(s.stats().uploaded_bytes, 2 * 4 * 10);
-        // resident prefix: no second upload
+        assert_eq!((s.stats().offers, s.stats().stored_pages), (1, 2));
+        // token-only offers move no KV bytes — logical counters only
+        assert_eq!((s.stats().uploads, s.stats().uploaded_bytes), (0, 0));
+        // resident prefix: no second store
         s.offer(&prompt);
-        assert_eq!(s.stats().uploaded_pages, 2);
-        // clean extension uploads only the missing tail page
+        assert_eq!(s.stats().stored_pages, 2);
+        // clean extension stores only the missing tail page
         let longer: Vec<i32> = (0..13).collect(); // 3 full pages
         s.offer(&longer);
         assert_eq!((s.entries(), s.pages()), (1, 3));
-        assert_eq!(s.stats().uploaded_pages, 3);
+        assert_eq!(s.stats().stored_pages, 3);
         // divergent prompt becomes its own entry
         let other: Vec<i32> = (100..108).collect();
         s.offer(&other);
@@ -239,6 +326,7 @@ mod tests {
         // sub-page prompts contribute nothing
         s.offer(&[1, 2, 3]);
         assert_eq!(s.entries(), 2);
+        assert_eq!(s.stats().offers, 4);
     }
 
     #[test]
@@ -253,9 +341,58 @@ mod tests {
         // shared first page only
         assert_eq!(s.probe(&[0, 1, 2, 3, 9, 9, 9, 9]), 1);
         assert_eq!(s.stats().hits, 2);
-        s.record_download(2);
+        // a logical warm books no transfer …
+        s.record_warm(2);
+        assert_eq!(s.stats().warmed_pages, 2);
+        assert_eq!((s.stats().downloads, s.stats().downloaded_bytes), (0, 0));
+        // … a payload download books the actual bytes that moved
+        s.record_download(2, 512);
+        assert_eq!(s.stats().downloads, 1);
         assert_eq!(s.stats().downloaded_pages, 2);
-        assert_eq!(s.stats().downloaded_bytes, 2 * 4 * 10);
+        assert_eq!(s.stats().downloaded_bytes, 512);
+    }
+
+    #[test]
+    fn payload_attaches_upgrades_and_gates_on_prompt() {
+        let mut s = store(64);
+        let prompt: Vec<i32> = (0..12).collect(); // 3 full pages
+        // divergent payload tokens never attach (they would serve
+        // another prompt's KV as this one's)
+        s.offer_with_payload(
+            &prompt,
+            Some(PrefixKv { tokens: vec![9; 4], pages: 1, bytes: Some(vec![0; 64]) }),
+        );
+        assert_eq!(s.stats().uploads, 0);
+        assert!(s.payload_for(&prompt).is_none());
+        // a genuine 2-page payload attaches and counts its real bytes
+        let two = kv(8, 2, 7);
+        s.offer_with_payload(&prompt, Some(two.clone()));
+        assert_eq!(
+            (s.stats().uploads, s.stats().uploaded_pages, s.stats().uploaded_bytes),
+            (1, 2, 128)
+        );
+        assert_eq!(s.payload_for(&prompt), Some(two.clone()));
+        // a shallower payload never downgrades the stored one
+        s.offer_with_payload(&prompt, Some(kv(4, 1, 1)));
+        assert_eq!(s.stats().uploads, 1);
+        assert_eq!(s.payload_for(&prompt), Some(two));
+        // a deeper payload upgrades and books only its own bytes
+        let three = kv(12, 3, 8);
+        s.offer_with_payload(&prompt, Some(three.clone()));
+        assert_eq!((s.stats().uploads, s.stats().uploaded_bytes), (2, 128 + 192));
+        // fetch gates on the *requesting* prompt, not mere residency
+        let extended: Vec<i32> = (0..20).collect();
+        assert_eq!(s.payload_for(&extended), Some(three));
+        assert!(s.payload_for(&[0, 1, 9, 9]).is_none());
+        assert!(s.payload_for(&prompt[..8]).is_none(), "payload deeper than prompt");
+        // a payload without bytes is logical-only and never attaches
+        let mut s2 = store(64);
+        s2.offer_with_payload(
+            &prompt,
+            Some(PrefixKv { tokens: (0..8).collect(), pages: 2, bytes: None }),
+        );
+        assert_eq!(s2.stats().uploads, 0);
+        assert!(s2.payload_for(&prompt).is_none());
     }
 
     #[test]

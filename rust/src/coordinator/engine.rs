@@ -65,10 +65,11 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::expert_stats::ExpertStats;
 use crate::coordinator::frontend::faults::{FaultInjector, FaultSite};
+use crate::coordinator::kvcache::host_tier::{HostOp, HostTierConfig, HostTierStats, PrefixKv};
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager, KvLayout};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::coordinator::sampling::sample_logits;
-use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
+use crate::coordinator::scheduler::{adaptive_chunk_budget, Action, Scheduler, SchedulerConfig};
 use crate::metrics::Histogram;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -132,6 +133,28 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Prefill/decode interleaving policy.
     pub scheduler: SchedulerConfig,
+    /// Reservation-ledger overcommit watermark (paged layout): admission
+    /// may promise growth up to `floor(free × factor)` pages while only
+    /// `free` exist.  `1.0` (the default) is the strict gate — growth
+    /// can never run dry and every preemption path stays inert, bit-
+    /// identical to the pre-hierarchy engine.  Above `1.0` a dry growth
+    /// step spills retained prefixes to the host tier and, failing
+    /// that, preempts victims (youngest-decode-first, never a live CoW
+    /// donor) whose seed-replay regenerates their tokens bit-identically
+    /// on re-admission.  Rejected at [`Engine::new`] unless finite and
+    /// ≥ 1.0.
+    pub overcommit_factor: f64,
+    /// Host-tier (tier 1) capacity in bytes.  `0` (the default)
+    /// disables the tier: preempted slots fall back to plain requeue,
+    /// prefix spills fall back to plain eviction, and the cluster
+    /// prefix store's device path stays a no-op.  Only meaningful on
+    /// the paged layout — the dense layout has no pages to tier.
+    pub host_tier_bytes: usize,
+    /// Derive each mixed step's prefill chunk budget from the front-
+    /// end's observed prompt-token arrival rate and the live decode
+    /// population ([`adaptive_chunk_budget`]) instead of the fixed
+    /// `prefill_chunk_tokens`.  Default off = fixed pacing.
+    pub adaptive_chunking: bool,
     /// Parameter-init seed.
     pub seed: u64,
 }
@@ -154,6 +177,9 @@ impl Default for EngineConfig {
             prefill_chunk_tokens: 16,
             max_queue: 256,
             scheduler: SchedulerConfig::default(),
+            overcommit_factor: 1.0,
+            host_tier_bytes: 0,
+            adaptive_chunking: false,
             seed: 0,
         }
     }
@@ -278,6 +304,17 @@ pub struct EngineMetrics {
     /// Engine ticks retried by the front-end to ride out transient
     /// runtime faults.
     pub retries: u64,
+    /// Decoding slots preempted (requeued, host-pinned where the tier
+    /// had headroom) because an overcommitted growth step ran dry.
+    pub preemptions: u64,
+    /// Preempted requests re-admitted from a host-tier pin (the
+    /// host→device restore half of a swap; plain-requeued preemptions
+    /// re-admit without one).
+    pub swap_ins: u64,
+    /// High-water mark of concurrently admitted slots — the measured
+    /// admitted width an overcommitted ledger buys (and the figure the
+    /// serve bench reports against the preemption-replay tail price).
+    pub peak_admitted: u64,
     /// Prefill chunk advances committed (chunked mode: one per slot per
     /// step that moved its prefill cursor).
     pub prefill_chunks: u64,
@@ -329,6 +366,14 @@ pub struct Engine {
     /// deterministic fault schedule guarding every runtime call site
     /// (disabled by default — one integer increment per call)
     faults: FaultInjector,
+    /// front-end-observed prompt-token arrival rate (tokens/s), fed by
+    /// [`Engine::note_prompt_load`] and consumed by adaptive chunking
+    prompt_load: f64,
+    /// host-tier byte counters already mirrored into the runtime's
+    /// transfer ledger — the cursor behind `sync_tier_transfers`, which
+    /// keeps `record_transfer("kv_host_tier", ..)` byte-exact against
+    /// the tier's own stats
+    tier_synced: HostTierStats,
     /// per-token commit log since the last [`Engine::take_token_events`]
     /// drain: `(request, token)` pushed exactly when a token enters its
     /// request's final output (the streaming front-end forwards these to
@@ -351,6 +396,11 @@ impl Engine {
         // the paged arm below re-validates against the page geometry
         validate_chunk_config(cfg.chunked_prefill, cfg.prefill_chunk_tokens, None)
             .map_err(anyhow::Error::new)?;
+        anyhow::ensure!(
+            cfg.overcommit_factor.is_finite() && cfg.overcommit_factor >= 1.0,
+            "overcommit factor must be a finite value >= 1.0, got {}",
+            cfg.overcommit_factor
+        );
         let prefill = runtime.spec(&cfg.prefill_artifact)?.clone();
         let width = prefill.inputs[0].shape[0];
         let prompt_width = prefill.inputs[0].shape[1];
@@ -360,11 +410,15 @@ impl Engine {
         let max_len = dense_cache_shape[2];
         let vocab = decode.outputs[0].shape[1];
         let num_experts = prefill.meta_usize("num_experts").unwrap_or(8);
-        let kv_cfg = KvCacheConfig {
+        let mut kv_cfg = KvCacheConfig {
             lazy_growth: cfg.lazy_growth,
             share_prefixes: cfg.share_prefixes,
             prefix_cache: cfg.prefix_cache,
             chunk_rows: cfg.chunked_prefill.then_some(cfg.prefill_chunk_tokens),
+            overcommit_factor: cfg.overcommit_factor,
+            // geometry filled in by the paged arm below; the dense
+            // layout has no pages to tier
+            host_tier: HostTierConfig::default(),
         };
 
         // Optional per-tick expert routing telemetry: a decode artifact
@@ -480,6 +534,15 @@ impl Engine {
                      engine's page-append contract [0, 1]",
                     cfg.page_append_artifact
                 );
+                // one host-tier page = one pool page's K+V rows across
+                // every layer, at the pool's element width
+                kv_cfg.host_tier = HostTierConfig {
+                    capacity_bytes: cfg.host_tier_bytes,
+                    page_bytes: 2
+                        * pd.inputs[3].shape[0]
+                        * pd.inputs[3].shape[2..].iter().product::<usize>()
+                        * pd.inputs[3].dtype.size_bytes(),
+                };
                 (
                     KvCacheManager::paged(
                         width,
@@ -618,6 +681,8 @@ impl Engine {
             pos: vec![0; width],
             last_token: vec![0; width],
             faults: FaultInjector::disabled(),
+            prompt_load: 0.0,
+            tier_synced: HostTierStats::default(),
             token_events: Vec::new(),
             metrics: EngineMetrics::default(),
             expert_stats: ExpertStats::new(num_experts),
@@ -761,6 +826,10 @@ impl Engine {
             self.sync_kv_metrics();
             return out;
         }
+        // pre-admission promotion: surface the host tier's best prefix
+        // for the queue head so the gate below sees it as an ordinary
+        // device pool hit (no-op without a tier)
+        self.promote_head()?;
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.width - active as usize;
         // requests the scheduler may admit THIS tick: the FIFO prefix
@@ -834,6 +903,7 @@ impl Engine {
     /// prefill falls into the same permanent-drain recovery the
     /// monolithic engine has for partial per-slot failures.
     fn tick_mixed(&mut self) -> Result<Vec<Response>> {
+        self.promote_head()?;
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.width - active as usize;
         let admissible = self.kv.admissible_now(
@@ -869,12 +939,15 @@ impl Engine {
                 .refill_chunked_with(|req| kv.admit(&req.prompt, req.params.max_new_tokens));
             for &slot in &filled {
                 self.kv.install(slot);
+                self.resume_if_swapped(slot);
                 // scrub the previous occupant's decode-lane state — the
                 // mixed decode uploads full-width vectors every step
                 self.pos[slot] = 0;
                 self.last_token[slot] = 0;
             }
             debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
+            let active = self.batcher.accounting().2;
+            self.metrics.peak_admitted = self.metrics.peak_admitted.max(active);
             chunking.extend(filled);
             chunking.sort_unstable();
         }
@@ -882,7 +955,7 @@ impl Engine {
         // Phase 2: plan chunk advances under the step's token budget
         // (slot-index order; a freshly admitted short prompt can finish
         // its whole prefill in its admission step).
-        let mut budget = self.cfg.prefill_chunk_tokens;
+        let mut budget = self.chunk_budget(decoding.len());
         let mut advances: Vec<(usize, usize, usize)> = Vec::new(); // (slot, cursor', took)
         let mut finishers: Vec<usize> = Vec::new();
         for &i in &chunking {
@@ -985,6 +1058,299 @@ impl Engine {
         self.metrics.prefix_hits = m.prefix_hits;
         self.metrics.prefix_hit_tokens = m.prefix_hit_tokens;
         self.metrics.evictions = m.evictions;
+        self.sync_tier_transfers();
+    }
+
+    /// Mirror the host tier's byte counters into the runtime's counted
+    /// transfer machinery under the `"kv_host_tier"` artifact name.
+    /// The tier books every page that crosses (swap-outs, swap-ins,
+    /// demotions, promotions) at its fixed page size; this forwards
+    /// exactly the deltas since the last sync, so
+    /// `runtime_stats()["kv_host_tier"]` stays byte-exact against
+    /// [`Engine::host_tier_stats`] — the hierarchy's accounting
+    /// contract.  (The raw pool literals `apply_host_ops` stages
+    /// payloads through are deliberately uncounted: the logical page
+    /// traffic is the quantity both ledgers agree on.)
+    fn sync_tier_transfers(&mut self) {
+        let Some(stats) = self.kv.host_tier_stats().cloned() else {
+            return;
+        };
+        let to_host = stats.bytes_to_host - self.tier_synced.bytes_to_host;
+        let to_device = stats.bytes_to_device - self.tier_synced.bytes_to_device;
+        if to_host == 0 && to_device == 0 {
+            return;
+        }
+        self.tier_synced = stats;
+        self.runtime.record_transfer("kv_host_tier", to_device, to_host, 0.0);
+    }
+
+    /// Pre-admission promotion: when the host tier holds a better
+    /// cached prefix for the queue head than the device pool, promote
+    /// it now — the admission gate then sees it as an ordinary retained
+    /// pool hit — and write its captured payload into the promoted
+    /// pages before anything gathers them.
+    fn promote_head(&mut self) -> Result<()> {
+        if !self.kv.host_tier_enabled() {
+            return Ok(());
+        }
+        let head = self.batcher.queued_requests().next().map(|r| r.prompt.clone());
+        if let Some(prompt) = head {
+            if self.kv.promote_for(&prompt) > 0 {
+                self.apply_host_ops()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Book the host→device restore for a freshly admitted slot whose
+    /// request was preempted-and-swapped: its pin leaves the tier and
+    /// the seed-replay regenerates its KV bit-identically.
+    fn resume_if_swapped(&mut self, slot: usize) {
+        let id = match self.batcher.slots()[slot].state {
+            SlotState::Prefilling(id) | SlotState::Chunking(id) => id,
+            _ => return,
+        };
+        if self.kv.swap_in(id.0).is_some() {
+            self.metrics.swap_ins += 1;
+        }
+    }
+
+    /// This step's prefill token budget: the fixed configured budget,
+    /// or — under `adaptive_chunking` — a budget derived from the
+    /// observed prompt-token arrival rate and the live decode
+    /// population.
+    fn chunk_budget(&self, decode_population: usize) -> usize {
+        if !self.cfg.adaptive_chunking {
+            return self.cfg.prefill_chunk_tokens;
+        }
+        adaptive_chunk_budget(
+            self.cfg.prefill_chunk_tokens,
+            self.kv.page_size().unwrap_or(1),
+            self.prompt_load,
+            decode_population,
+            self.width,
+        )
+    }
+
+    /// Make every decoding slot's growth for this step satisfiable.
+    /// Overcommitted admission means free pages can run dry; the
+    /// fallback ladder is: spill retained prefixes to the host tier
+    /// (cheapest — no live request is touched), then preempt the
+    /// youngest fully-private decoder with a host-tier swap, then
+    /// plain-requeue the youngest decoder (always legal — releasing
+    /// shared pages only drops refcounts).  Each preemption shrinks the
+    /// decoding set, so the loop terminates; an empty set has deficit 0.
+    /// Returns the surviving decoders.
+    fn ensure_decode_growth(&mut self, mut decoding: Vec<usize>) -> Result<Vec<usize>> {
+        loop {
+            let growers: Vec<(usize, usize)> =
+                decoding.iter().map(|&i| (i, self.pos[i] as usize)).collect();
+            let deficit = self.kv.growth_deficit(&growers);
+            if deficit == 0 {
+                return Ok(decoding);
+            }
+            if self.kv.reclaim_for_growth(deficit) > 0 {
+                // capture the vacated pages' bytes into the tier NOW:
+                // they are freed-but-unwritten until the growth below
+                // reuses them
+                self.apply_host_ops()?;
+                continue;
+            }
+            let victim = match self.kv.pick_victim(&decoding) {
+                Some(v) => {
+                    self.preempt_slot(v, true);
+                    v
+                }
+                None => match self.kv.youngest_slot(&decoding) {
+                    Some(v) => {
+                        self.preempt_slot(v, false);
+                        v
+                    }
+                    None => anyhow::bail!(
+                        "page deficit of {deficit} with no preemptible \
+                         decoder — the reservation ledger is broken"
+                    ),
+                },
+            };
+            decoding.retain(|&s| s != victim);
+        }
+    }
+
+    /// Preempt one decoding slot: pin its private pages to the host
+    /// tier (`swap: true`, pick-victim-eligible slots only — a CoW
+    /// donor's refcounted pages cannot leave the device) or plain-
+    /// release them, then requeue the request at the queue front with
+    /// its emitted-token high-water mark.  Re-admission replays the
+    /// generation from the seed; the emitted cursor suppresses the
+    /// already-streamed tokens, so delivery stays exactly-once.  The
+    /// victim's KV bytes are NOT captured: the replay rewrites every
+    /// page bit-identically, so the pin is the capacity + accounting
+    /// half of the swap and the restore is recomputed.
+    fn preempt_slot(&mut self, slot: usize, swap: bool) {
+        let SlotState::Decoding(id) = self.batcher.slots()[slot].state else {
+            return;
+        };
+        if !(swap && self.kv.swap_out(slot, id.0, None).is_some()) {
+            self.kv.release(slot, false);
+        }
+        self.batcher.preempt(slot);
+        self.pos[slot] = 0;
+        self.last_token[slot] = 0;
+        self.metrics.preemptions += 1;
+    }
+
+    /// Commit a token to the event log unless the slot is replaying a
+    /// preempted request and has not yet caught up to its emitted
+    /// cursor.  `already_recorded` marks the prefill site, where
+    /// `complete_prefill` pushed the token into `generated` before this
+    /// runs; the decode site pushes afterwards (in `maybe_finish`).
+    fn emit_token(&mut self, slot: usize, id: RequestId, tok: i32, already_recorded: bool) {
+        let s = &self.batcher.slots()[slot];
+        if s.generated.len() + usize::from(!already_recorded) > s.emitted {
+            self.token_events.push((id, tok));
+        }
+    }
+
+    /// Perform the tier's pending real-byte operations: demotions
+    /// capture the vacated device pages' KV bytes into their tier entry
+    /// (the pages are freed-but-unwritten until the step that triggered
+    /// the spill grows into them, so this runs before any `grow_to`);
+    /// promotions write the captured payload into the freshly allocated
+    /// device pages before any artifact gathers them.  A payload-less
+    /// promotion (its capture failed on a genuine runtime fault) writes
+    /// nothing — the pages are rewritten by the next prefill over them.
+    fn apply_host_ops(&mut self) -> Result<()> {
+        for op in self.kv.take_host_ops() {
+            match op {
+                HostOp::Demote { tokens, pages } => {
+                    let payload = self.capture_pages(&pages)?;
+                    self.kv.attach_prefix_payload(&tokens, payload);
+                }
+                HostOp::Promote { pages, payload: Some(bytes) } => {
+                    self.inject_pages(&pages, &bytes)?;
+                }
+                HostOp::Promote { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize `pages`' K+V rows (layer-strided slabs of both pools)
+    /// into one payload, page-major: `[K slab, V slab]` per page.  The
+    /// pool download is a raw literal read — the logical page bytes are
+    /// booked once by the tier and mirrored by `sync_tier_transfers`.
+    fn capture_pages(&self, pages: &[u32]) -> Result<Vec<u8>> {
+        let kc = self.download_raw(&self.k_cache)?;
+        let vc = self.download_raw(&self.v_cache)?;
+        let slab = pool_page_elems(&kc.shape) * kc.dtype.size_bytes();
+        let mut out = Vec::with_capacity(pages.len() * 2 * slab);
+        for &p in pages {
+            read_pool_page(&kc, p as usize, &mut out)?;
+            read_pool_page(&vc, p as usize, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Write a captured payload back into `pages` of both pools (the
+    /// promotion upload).  Whole-pool round-trip: the paged artifacts
+    /// own no partial-page upload path, and only these pages' rows
+    /// change — every in-flight slot's bytes return untouched.
+    fn inject_pages(&mut self, pages: &[u32], payload: &[u8]) -> Result<()> {
+        let mut kc = self.download_raw(&self.k_cache)?;
+        let mut vc = self.download_raw(&self.v_cache)?;
+        let slab = pool_page_elems(&kc.shape) * kc.dtype.size_bytes();
+        anyhow::ensure!(
+            payload.len() == pages.len() * 2 * slab,
+            "promotion payload of {} bytes does not span its {} pages",
+            payload.len(),
+            pages.len()
+        );
+        for (i, &p) in pages.iter().enumerate() {
+            let off = i * 2 * slab;
+            write_pool_page(&mut kc, p as usize, &payload[off..off + slab])?;
+            write_pool_page(&mut vc, p as usize, &payload[off + slab..off + 2 * slab])?;
+        }
+        self.k_cache = self.runtime.upload_tensor(&kc)?;
+        self.v_cache = self.runtime.upload_tensor(&vc)?;
+        Ok(())
+    }
+
+    fn download_raw(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
+        let lit = buf
+            .to_literal_sync()
+            .context("device->host download (kv host tier)")?;
+        Tensor::from_literal(&lit)
+    }
+
+    /// Export `prompt`'s retained prefix KV for the cluster prefix
+    /// store: the tier stages a host copy (device→host, booked under
+    /// `"kv_host_tier"`) and the actual page bytes are captured from
+    /// the pools, so a [`Engine::warm_prefix_kv`] on another replica
+    /// can upload them — the real-engine device path the store's
+    /// park/offer used to stub out.  `None` without a host tier or a
+    /// retained entry.
+    pub fn export_prefix(&mut self, prompt: &[i32]) -> Option<PrefixKv> {
+        let (mut kv, device_pages) = self.kv.export_prefix(prompt)?;
+        if kv.bytes.is_none() && !device_pages.is_empty() {
+            match self.capture_pages(&device_pages) {
+                Ok(bytes) => {
+                    self.kv.attach_prefix_payload(&kv.tokens, bytes.clone());
+                    kv.bytes = Some(bytes);
+                }
+                Err(e) => log::warn!("prefix export byte capture failed: {e:#}"),
+            }
+        }
+        self.sync_tier_transfers();
+        Some(kv)
+    }
+
+    /// Warm-start from a cluster prefix-store payload: ingest the
+    /// captured KV bytes into the host tier (a host-side arrival — no
+    /// device transfer books) and promote them to the device through
+    /// the gated promotion path, uploading the bytes into the promoted
+    /// pages.  Refuses — and parks nothing — without a host tier, a
+    /// payload, or real bytes that actually span the claimed pages:
+    /// the engine must never serve prefix pages whose KV it cannot
+    /// restore.  Returns the pages that reached the device.
+    pub fn warm_prefix_kv(&mut self, prompt: &[i32], payload: Option<&PrefixKv>) -> usize {
+        if !self.kv.host_tier_enabled() {
+            return 0;
+        }
+        let Some(page_size) = self.kv.page_size() else {
+            return 0;
+        };
+        let Some(kv) = payload else { return 0 };
+        let Some(bytes) = &kv.bytes else { return 0 };
+        if kv.pages == 0
+            || kv.pages * page_size > prompt.len()
+            || bytes.len() != kv.pages * self.kv.host_tier_page_bytes()
+        {
+            return 0;
+        }
+        let pages = self.kv.warm_prefix_host(prompt, Some(kv));
+        if let Err(e) = self.apply_host_ops() {
+            log::warn!("warm-start promotion upload failed: {e:#}");
+        }
+        self.sync_tier_transfers();
+        pages
+    }
+
+    /// Feed the front-end's observed prompt-token arrival rate
+    /// (tokens/s over its load window) — the signal adaptive chunking
+    /// scales its per-step budget by.
+    pub fn note_prompt_load(&mut self, prompt_tokens_per_s: f64) {
+        self.prompt_load = prompt_tokens_per_s;
+    }
+
+    /// Host-tier occupancy in bytes (0 without a tier).
+    pub fn host_tier_bytes(&self) -> usize {
+        self.kv.host_tier_bytes()
+    }
+
+    /// Host-tier movement/occupancy counters (`None` on the dense
+    /// layout).
+    pub fn host_tier_stats(&self) -> Option<&HostTierStats> {
+        self.kv.host_tier_stats()
     }
 
     fn do_prefill(&mut self) -> Result<Vec<Response>> {
@@ -1000,8 +1366,11 @@ impl Engine {
             .refill_with(|req| kv.admit(&req.prompt, req.params.max_new_tokens));
         for &slot in &filled {
             self.kv.install(slot);
+            self.resume_if_swapped(slot);
         }
         debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
+        let active = self.batcher.accounting().2;
+        self.metrics.peak_admitted = self.metrics.peak_admitted.max(active);
         if filled.is_empty() {
             // page-starved (or raced-empty) prefill: fall through to a
             // decode step so in-flight sequences retire and free pages —
@@ -1097,7 +1466,7 @@ impl Engine {
             // prompt KV is now written: the slot may donate CoW
             // prefixes (chunked admission gates donors on this)
             self.kv.mark_prefilled(i);
-            self.token_events.push((id, first));
+            self.emit_token(i, id, first, true);
             self.metrics.generated_tokens += 1;
             // a 1-token request can finish right at prefill
             if let Some(resp) = self.maybe_finish(i, first) {
@@ -1120,12 +1489,21 @@ impl Engine {
     /// false` is the mixed step, whose decode fault site was pre-checked
     /// before anything committed.
     fn decode_slots(&mut self, decoding: &[usize], check_faults: bool) -> Result<Vec<Response>> {
+        // Overcommitted reservations can leave this step's growth dry:
+        // spill retained prefixes to the host tier and, failing that,
+        // preempt victims until the survivors fit.  At the strict
+        // factor 1.0 the deficit is always 0 and this returns the set
+        // unchanged.
+        let decoding = self.ensure_decode_growth(decoding.to_vec())?;
+        if decoding.is_empty() {
+            return Ok(Vec::new());
+        }
         // lazy page growth: this tick appends each active slot's KV row
         // at `pos`; any slot whose `pos` crossed into an unallocated
         // page converts one admission-time reservation into a real page
-        // first (the ledger guarantees success — a failure here is a
-        // page-accounting bug, not backpressure)
-        for &i in decoding {
+        // first (the deficit check above guarantees success — a failure
+        // here is a page-accounting bug, not backpressure)
+        for &i in &decoding {
             self.kv.grow_to(i, self.pos[i] as usize)?;
         }
         // the growth above is idempotent, so a fault here (or a failed
@@ -1222,7 +1600,7 @@ impl Engine {
         }
 
         let mut responses = Vec::new();
-        for &i in decoding {
+        for &i in &decoding {
             let tok = self.sample_row(&logits, i)?;
             self.pos[i] = (self.pos[i] + 1).min(self.max_len as i32 - 1);
             self.last_token[i] = tok;
@@ -1230,7 +1608,7 @@ impl Engine {
                 SlotState::Decoding(id) => id,
                 ref s => anyhow::bail!("decoding slot {i} in state {s:?}"),
             };
-            self.token_events.push((id, tok));
+            self.emit_token(i, id, tok, false);
             self.metrics.generated_tokens += 1;
             if let Some(resp) = self.maybe_finish(i, tok) {
                 responses.push(resp);
@@ -1391,6 +1769,9 @@ impl Engine {
         if let Some(slot) = slot {
             self.kv.release(slot, false);
         }
+        // a request cancelled while preempted-and-queued still holds a
+        // host-tier pin; drop it without a restore transfer
+        self.kv.drop_swapped(id.0);
         self.metrics.aborted += 1;
         self.sync_kv_metrics();
         Some(resp)
@@ -1405,6 +1786,7 @@ impl Engine {
         for slot in 0..self.width {
             self.kv.release(slot, false);
         }
+        self.kv.drop_all_swapped();
         self.metrics.aborted += out.len() as u64;
         self.sync_kv_metrics();
         out
@@ -1420,6 +1802,51 @@ fn pop_out<T>(outs: &mut Vec<T>, artifact: &str) -> Result<T> {
     outs.pop().with_context(|| {
         format!("artifact '{artifact}' returned fewer outputs than its manifest declares")
     })
+}
+
+/// f32 elements one pool page occupies in ONE pool (its `page_size`
+/// rows across every layer).  Pool shape `(L, num_pages, page_size,
+/// nh, dh)`.
+fn pool_page_elems(shape: &[usize]) -> usize {
+    shape[0] * shape[2..].iter().product::<usize>()
+}
+
+/// Append page `page`'s layer-strided rows from `pool` onto `out` as
+/// little-endian f32 bytes — one pool's half of a host-tier page slab.
+fn read_pool_page(pool: &Tensor, page: usize, out: &mut Vec<u8>) -> Result<()> {
+    let (l, p) = (pool.shape[0], pool.shape[1]);
+    anyhow::ensure!(page < p, "page {page} outside a pool of {p}");
+    let chunk: usize = pool.shape[2..].iter().product();
+    let v = pool.as_f32()?;
+    for layer in 0..l {
+        let off = (layer * p + page) * chunk;
+        for &x in &v[off..off + chunk] {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    Ok(())
+}
+
+/// Write one pool's page slab (as serialized by [`read_pool_page`])
+/// back into page `page` of `pool`.
+fn write_pool_page(pool: &mut Tensor, page: usize, bytes: &[u8]) -> Result<()> {
+    let (l, p) = (pool.shape[0], pool.shape[1]);
+    anyhow::ensure!(page < p, "page {page} outside a pool of {p}");
+    let chunk: usize = pool.shape[2..].iter().product();
+    anyhow::ensure!(
+        bytes.len() == l * chunk * 4,
+        "page slab of {} bytes does not match the pool geometry",
+        bytes.len()
+    );
+    let v = pool.as_f32_mut()?;
+    for layer in 0..l {
+        let off = (layer * p + page) * chunk;
+        for (i, x) in v[off..off + chunk].iter_mut().enumerate() {
+            let b = (layer * chunk + i) * 4;
+            *x = f32::from_le_bytes([bytes[b], bytes[b + 1], bytes[b + 2], bytes[b + 3]]);
+        }
+    }
+    Ok(())
 }
 
 /// Copy batch-rows `slots` from `src` into `dst`; both (L, B, T, nh, dh).
@@ -1512,6 +1939,40 @@ mod tests {
         assert_eq!(validate_chunk_config(true, 1, None), Ok(()));
         // disabled chunking makes the knobs inert
         assert_eq!(validate_chunk_config(false, 0, Some(8)), Ok(()));
+    }
+
+    #[test]
+    fn pool_page_slabs_round_trip_layer_strided_rows() {
+        // pool (L=3, num_pages=4, page_size=2, nh=1, dh=2): a page's
+        // slab gathers 3 layer-strided chunks of 4 f32s
+        let shape = [3usize, 4, 2, 1, 2];
+        let n: usize = shape.iter().product();
+        let src = Tensor::from_f32(&shape, (0..n).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(pool_page_elems(&shape), 12);
+        let mut slab = Vec::new();
+        read_pool_page(&src, 2, &mut slab).unwrap();
+        assert_eq!(slab.len(), 12 * 4, "elems * f32 bytes");
+        // the slab's first chunk is layer 0's page-2 rows
+        let first = f32::from_le_bytes([slab[0], slab[1], slab[2], slab[3]]);
+        assert_eq!(first, (2 * 4) as f32, "(layer 0 * pages + page 2) * chunk");
+        // writing it into another pool's page 1 plants exactly those
+        // rows, leaving every other page zero
+        let mut dst = Tensor::zeros(crate::tensor::DType::F32, &shape);
+        write_pool_page(&mut dst, 1, &slab).unwrap();
+        let d = dst.as_f32().unwrap();
+        let s = src.as_f32().unwrap();
+        for layer in 0..3 {
+            for page in 0..4 {
+                for j in 0..4 {
+                    let got = d[(layer * 4 + page) * 4 + j];
+                    let want = if page == 1 { s[(layer * 4 + 2) * 4 + j] } else { 0.0 };
+                    assert_eq!(got, want, "layer {layer} page {page} elem {j}");
+                }
+            }
+        }
+        // geometry violations are typed errors, not silent corruption
+        assert!(read_pool_page(&src, 4, &mut Vec::new()).is_err());
+        assert!(write_pool_page(&mut dst, 0, &slab[..8]).is_err());
     }
 
     #[test]

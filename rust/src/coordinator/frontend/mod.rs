@@ -55,6 +55,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::engine::{Engine, EngineMetrics};
+use crate::coordinator::kvcache::host_tier::PrefixKv;
 use crate::coordinator::request::{RequestId, Response, SamplingParams};
 use crate::metrics::Histogram;
 use crate::rng::Rng;
@@ -104,6 +105,28 @@ pub trait ServingEngine {
     fn warm_prefix(&mut self, _prompt: &[i32]) -> usize {
         0
     }
+    /// Download the device KV bytes of `prompt`'s longest full-page
+    /// prefix for the cluster prefix store (see `coordinator::cluster`).
+    /// Routes through the engine's host tier — the only device↔host KV
+    /// path — so the copy is booked against `TransferTotals`.  `None`
+    /// when the engine holds no such prefix or has no host tier to
+    /// stage it in.
+    fn export_prefix(&mut self, _prompt: &[i32]) -> Option<PrefixKv> {
+        None
+    }
+    /// [`Self::warm_prefix`] with an optional KV payload previously
+    /// downloaded from a peer via [`Self::export_prefix`].  Engines with
+    /// a host tier ingest the payload and promote it into the device
+    /// pool (a real KV upload); the default delegates to the
+    /// logical-only `warm_prefix`.
+    fn warm_prefix_kv(&mut self, prompt: &[i32], _payload: Option<&PrefixKv>) -> usize {
+        self.warm_prefix(prompt)
+    }
+    /// Observed prompt-token arrival rate (tokens/s over the
+    /// front-end's recent intake window).  Engines with
+    /// `adaptive_chunking` enabled size the next prefill chunk budget
+    /// from it; the default ignores the signal.
+    fn note_prompt_load(&mut self, _prompt_tokens_per_s: f64) {}
 }
 
 impl ServingEngine for Engine {
@@ -141,6 +164,15 @@ impl ServingEngine for Engine {
     }
     fn metrics_mut(&mut self) -> &mut EngineMetrics {
         &mut self.metrics
+    }
+    fn export_prefix(&mut self, prompt: &[i32]) -> Option<PrefixKv> {
+        Engine::export_prefix(self, prompt)
+    }
+    fn warm_prefix_kv(&mut self, prompt: &[i32], payload: Option<&PrefixKv>) -> usize {
+        Engine::warm_prefix_kv(self, prompt, payload)
+    }
+    fn note_prompt_load(&mut self, prompt_tokens_per_s: f64) {
+        Engine::note_prompt_load(self, prompt_tokens_per_s)
     }
 }
 
@@ -348,6 +380,10 @@ pub struct ServeFrontend<E: ServingEngine> {
     streams: HashMap<u64, TokenStream>,
     /// Time-to-first-streamed-token samples (streaming runs only).
     ttfs: Histogram,
+    /// Sliding window of recently submitted prompt sizes — `(submit
+    /// time, prompt tokens)` — folded into the prompt-load signal the
+    /// engine's adaptive chunking consumes ([`ServingEngine::note_prompt_load`]).
+    recent_prompts: VecDeque<(f64, usize)>,
     attempts: u32,
     fatal: Option<String>,
     ticks: u64,
@@ -368,6 +404,7 @@ impl<E: ServingEngine> ServeFrontend<E> {
             senders: HashMap::new(),
             streams: HashMap::new(),
             ttfs: Histogram::default(),
+            recent_prompts: VecDeque::new(),
             attempts: 0,
             fatal: None,
             ticks: 0,
@@ -501,8 +538,10 @@ impl<E: ServingEngine> ServeFrontend<E> {
                 self.outcomes.push((arr.tag, RequestOutcome::Rejected(reason)));
                 continue;
             }
+            let prompt_tokens = arr.prompt.len();
             match self.engine.submit(arr.prompt, arr.params) {
                 Ok(Some(id)) => {
+                    self.recent_prompts.push_back((now, prompt_tokens));
                     self.live.insert(
                         id,
                         LiveRequest { tag: arr.tag, submitted_at: now, streamed: false },
@@ -528,6 +567,20 @@ impl<E: ServingEngine> ServeFrontend<E> {
                 }
             }
         }
+        // Fold the intake window into the adaptive-chunking load signal.
+        // Engines without `adaptive_chunking` ignore it, so the call is
+        // behaviour-free on the baseline configuration.
+        const LOAD_WINDOW_S: f64 = 1.0;
+        while self
+            .recent_prompts
+            .front()
+            .is_some_and(|&(t, _)| now - t > LOAD_WINDOW_S)
+        {
+            self.recent_prompts.pop_front();
+        }
+        let window_tokens: usize = self.recent_prompts.iter().map(|&(_, n)| n).sum();
+        self.engine
+            .note_prompt_load(window_tokens as f64 / LOAD_WINDOW_S);
     }
 
     /// Cancel every live request past its deadline.  The total-latency

@@ -20,9 +20,12 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::engine::{validate_chunk_config, EngineMetrics};
+use crate::coordinator::kvcache::host_tier::{HostTierConfig, HostTierStats, PrefixKv};
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
-use crate::coordinator::scheduler::{Action, Scheduler, SchedulerConfig};
+use crate::coordinator::scheduler::{
+    adaptive_chunk_budget, Action, Scheduler, SchedulerConfig,
+};
 
 use super::faults::{FaultInjector, FaultSite};
 use super::ServingEngine;
@@ -51,6 +54,17 @@ pub struct SimEngineConfig {
     pub chunked_prefill: bool,
     /// Per-step prompt-token budget for in-chunked-prefill slots.
     pub prefill_chunk_tokens: usize,
+    /// Reservation-ledger overcommit watermark (1.0 = the strict
+    /// baseline gate; see `KvCacheConfig::overcommit_factor`).
+    pub overcommit_factor: f64,
+    /// Host-tier capacity in bytes.  0 disables the tier and keeps the
+    /// single-device pool bit-identical to the pre-hierarchy baseline.
+    pub host_tier_bytes: usize,
+    /// Derive each step's prefill chunk budget from the observed
+    /// prompt-load signal and decode population
+    /// (`scheduler::adaptive_chunk_budget`) instead of the fixed
+    /// `prefill_chunk_tokens`.  Default off = fixed pacing.
+    pub adaptive_chunking: bool,
 }
 
 impl Default for SimEngineConfig {
@@ -66,6 +80,9 @@ impl Default for SimEngineConfig {
             scheduler: SchedulerConfig::default(),
             chunked_prefill: false,
             prefill_chunk_tokens: 16,
+            overcommit_factor: 1.0,
+            host_tier_bytes: 0,
+            adaptive_chunking: false,
         }
     }
 }
@@ -81,6 +98,9 @@ pub struct SimEngine {
     faults: FaultInjector,
     /// Serving metrics (same shape as the real engine's).
     pub metrics: EngineMetrics,
+    /// Last prompt-load signal from the front-end
+    /// (`ServingEngine::note_prompt_load`), tokens/s.
+    prompt_load: f64,
     next_id: u64,
     /// Per-token stream buffer — same contract as the engine's: pushed
     /// only at commit points, drained by [`SimEngine::take_token_events`].
@@ -108,8 +128,20 @@ impl SimEngine {
             Some(cfg.page_size),
         )
         .map_err(anyhow::Error::new)?;
+        anyhow::ensure!(
+            cfg.overcommit_factor.is_finite() && cfg.overcommit_factor >= 1.0,
+            "overcommit factor must be a finite value >= 1.0, got {}",
+            cfg.overcommit_factor
+        );
         let mut kv_cfg = cfg.kv;
         kv_cfg.chunk_rows = cfg.chunked_prefill.then_some(cfg.prefill_chunk_tokens);
+        kv_cfg.overcommit_factor = cfg.overcommit_factor;
+        kv_cfg.host_tier = HostTierConfig {
+            capacity_bytes: cfg.host_tier_bytes,
+            // a sim KV page holds `page_size` rows of 256 logical bytes
+            // each — fixed so host-tier byte arithmetic is deterministic
+            page_bytes: cfg.page_size * 256,
+        };
         let kv = KvCacheManager::paged(
             cfg.width,
             cfg.max_len,
@@ -125,6 +157,7 @@ impl SimEngine {
             pos: vec![0; cfg.width],
             faults: FaultInjector::disabled(),
             metrics: EngineMetrics::default(),
+            prompt_load: 0.0,
             next_id: 0,
             token_events: Vec::new(),
             cfg,
@@ -193,6 +226,7 @@ impl SimEngine {
             self.sync_kv_metrics();
             return out;
         }
+        self.promote_head();
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.cfg.width - active as usize;
         let admissible = self.kv.admissible_now(
@@ -231,6 +265,7 @@ impl SimEngine {
     /// rng streams are untouched, so the retried step replays
     /// bit-identically).
     fn tick_mixed(&mut self) -> Result<Vec<Response>> {
+        self.promote_head();
         let (_, _, active, queued) = self.batcher.accounting();
         let empty = self.cfg.width - active as usize;
         let admissible = self.kv.admissible_now(
@@ -264,13 +299,16 @@ impl SimEngine {
             for &slot in &filled {
                 self.kv.install(slot);
                 self.pos[slot] = 0;
+                self.resume_if_swapped(slot);
             }
             debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
+            let active = self.batcher.accounting().2;
+            self.metrics.peak_admitted = self.metrics.peak_admitted.max(active);
             chunking.extend(filled);
             chunking.sort_unstable();
         }
 
-        let mut budget = self.cfg.prefill_chunk_tokens;
+        let mut budget = self.chunk_budget(decoding.len());
         let mut advances: Vec<(usize, usize, usize)> = Vec::new(); // (slot, cursor', took)
         let mut finishers: Vec<usize> = Vec::new();
         for &i in &chunking {
@@ -304,11 +342,32 @@ impl SimEngine {
         }
 
         let advanced = !advances.is_empty();
+        let mut dropped: Vec<usize> = Vec::new();
         for &(i, cursor, took) in &advances {
-            self.kv.grow_prefill(i, cursor)?;
+            if self.kv.grow_prefill(i, cursor).is_err() {
+                // chunk growth ran dry under overcommit: demote retained
+                // prefixes to the host tier and retry once; if the pool
+                // is still dry, put the slot back at the queue head (the
+                // fault-requeue path — no token sampled yet, so its
+                // eventual replay is bit-identical)
+                self.kv
+                    .reclaim_for_growth(took / self.cfg.page_size.max(1) + 1);
+                if self.kv.grow_prefill(i, cursor).is_err() {
+                    if self.batcher.requeue(i) {
+                        self.kv.release(i, false);
+                        self.pos[i] = 0;
+                        self.metrics.preemptions += 1;
+                    }
+                    dropped.push(i);
+                    continue;
+                }
+            }
             self.batcher.slot_mut(i).prefilled = cursor;
             self.metrics.prefill_chunks += 1;
             self.metrics.chunk_tokens_prefilled += took as u64;
+        }
+        if !dropped.is_empty() {
+            finishers.retain(|i| !dropped.contains(i));
         }
         let mut responses = Vec::new();
         if !finishers.is_empty() {
@@ -323,13 +382,18 @@ impl SimEngine {
                 self.pos[i] = plen;
                 self.batcher.complete_prefill(i, first);
                 self.kv.mark_prefilled(i);
-                self.token_events.push((id, first));
+                self.emit_token(i, id, first, true);
                 self.metrics.generated_tokens += 1;
                 if let Some(resp) = self.maybe_finish(i, first) {
                     responses.push(resp);
                 }
             }
         }
+        let decoding = if decoding.is_empty() {
+            decoding
+        } else {
+            self.ensure_decode_growth(decoding)?
+        };
         if !decoding.is_empty() {
             if advanced {
                 self.metrics.mixed_steps += 1;
@@ -345,7 +409,7 @@ impl SimEngine {
                 };
                 let tok = self.sim_token(i);
                 self.pos[i] = (self.pos[i] + 1).min(self.cfg.max_len - 1);
-                self.token_events.push((id, tok));
+                self.emit_token(i, id, tok, false);
                 self.metrics.generated_tokens += 1;
                 if let Some(resp) = self.maybe_finish(i, tok) {
                     responses.push(resp);
@@ -355,7 +419,120 @@ impl SimEngine {
         Ok(responses)
     }
 
+    /// Host-tier promotion pre-step: before the admission phase,
+    /// re-promote the tier's best cached prefix for the queue head so
+    /// the admission simulation and the gate both see the promoted
+    /// entry through the ordinary retained-pool lookup.
+    fn promote_head(&mut self) {
+        if !self.kv.host_tier_enabled() {
+            return;
+        }
+        let Some(prompt) = self
+            .batcher
+            .queued_requests()
+            .next()
+            .map(|r| r.prompt.clone())
+        else {
+            return;
+        };
+        self.kv.promote_for(&prompt);
+    }
+
+    /// Book the host→device restore for a just-admitted slot whose
+    /// request was swapped out by a preemption (no-op otherwise).  The
+    /// pages themselves re-enter through prefill seed-replay.
+    fn resume_if_swapped(&mut self, slot: usize) {
+        let id = match self.batcher.slots()[slot].state {
+            SlotState::Prefilling(id) | SlotState::Chunking(id) => id,
+            _ => return,
+        };
+        if self.kv.swap_in(id.0).is_some() {
+            self.metrics.swap_ins += 1;
+        }
+    }
+
+    /// This step's prompt-token chunk budget: the fixed configuration
+    /// value, or — with `adaptive_chunking` — the budget derived from
+    /// the front-end's prompt-load signal and the decode population.
+    fn chunk_budget(&self, decode_population: usize) -> usize {
+        if !self.cfg.adaptive_chunking {
+            return self.cfg.prefill_chunk_tokens;
+        }
+        adaptive_chunk_budget(
+            self.cfg.prefill_chunk_tokens,
+            self.cfg.page_size,
+            self.prompt_load,
+            decode_population,
+            self.cfg.width,
+        )
+    }
+
+    /// Ensure every decoding slot can take its next-token KV write.
+    /// When overcommitted growth runs dry: (1) demote retained prefixes
+    /// to the host tier, (2) preempt victims — youngest-decode-first,
+    /// never a CoW donor with live sharers — swapping their private
+    /// pages to the host tier, (3) as the last resort plainly requeue
+    /// the youngest decoder (always legal: releasing shared pages only
+    /// drops refcounts, and seed-replay regenerates the state).
+    /// Returns the decode set that survives this step.
+    fn ensure_decode_growth(&mut self, mut decoding: Vec<usize>) -> Result<Vec<usize>> {
+        loop {
+            let growers: Vec<(usize, usize)> =
+                decoding.iter().map(|&i| (i, self.pos[i])).collect();
+            let deficit = self.kv.growth_deficit(&growers);
+            if deficit == 0 {
+                return Ok(decoding);
+            }
+            if self.kv.reclaim_for_growth(deficit) > 0 {
+                continue;
+            }
+            if let Some(victim) = self.kv.pick_victim(&decoding) {
+                self.preempt_slot(victim, true);
+                decoding.retain(|&i| i != victim);
+                continue;
+            }
+            let Some(victim) = self.kv.youngest_slot(&decoding) else {
+                anyhow::bail!(
+                    "decode growth ran dry ({deficit} pages short) with no \
+                     preemptible slot"
+                );
+            };
+            self.preempt_slot(victim, false);
+            decoding.retain(|&i| i != victim);
+        }
+    }
+
+    /// Preempt one decoding slot: move its private pages to the host
+    /// tier (`swap` — plain release otherwise) and requeue the request
+    /// at the queue head carrying its exactly-once `emitted` cursor.
+    fn preempt_slot(&mut self, slot: usize, swap: bool) {
+        let SlotState::Decoding(id) = self.batcher.slots()[slot].state else {
+            return;
+        };
+        if !(swap && self.kv.swap_out(slot, id.0, None).is_some()) {
+            self.kv.release(slot, false);
+        }
+        self.batcher.preempt(slot);
+        self.pos[slot] = 0;
+        self.metrics.preemptions += 1;
+    }
+
+    /// Push a token event unless it re-delivers a token the client
+    /// already received before a preemption (the slot's `emitted`
+    /// cursor — exactly-once streaming across seed-replays).
+    /// `already_recorded` says whether this token has been pushed into
+    /// the slot's `generated` yet at the call site.
+    fn emit_token(&mut self, slot: usize, id: RequestId, tok: i32, already_recorded: bool) {
+        let s = &self.batcher.slots()[slot];
+        if s.generated.len() + usize::from(!already_recorded) > s.emitted {
+            self.token_events.push((id, tok));
+        }
+    }
+
     fn sync_kv_metrics(&mut self) {
+        // the sim moves no real bytes — discard the tier's op log so it
+        // cannot grow without bound
+        let _ = self.kv.take_host_ops();
         let m = self.kv.metrics().clone();
         self.metrics.page_grows = m.page_grows;
         self.metrics.shared_pages = m.shared_pages;
@@ -372,8 +549,11 @@ impl SimEngine {
             .refill_with(|req| kv.admit(&req.prompt, req.params.max_new_tokens));
         for &slot in &filled {
             self.kv.install(slot);
+            self.resume_if_swapped(slot);
         }
         debug_assert_eq!(self.kv.pending_installs(), 0, "admissions left unbound");
+        let active = self.batcher.accounting().2;
+        self.metrics.peak_admitted = self.metrics.peak_admitted.max(active);
         if filled.is_empty() {
             return self.do_decode();
         }
@@ -400,7 +580,7 @@ impl SimEngine {
             self.pos[i] = plen;
             self.batcher.complete_prefill(i, first);
             self.kv.mark_prefilled(i);
-            self.token_events.push((id, first));
+            self.emit_token(i, id, first, true);
             self.metrics.generated_tokens += 1;
             if let Some(resp) = self.maybe_finish(i, first) {
                 responses.push(resp);
@@ -411,6 +591,10 @@ impl SimEngine {
 
     fn do_decode(&mut self) -> Result<Vec<Response>> {
         let decoding = self.batcher.decoding_slots();
+        if decoding.is_empty() {
+            return Ok(Vec::new());
+        }
+        let decoding = self.ensure_decode_growth(decoding)?;
         if decoding.is_empty() {
             return Ok(Vec::new());
         }
@@ -431,7 +615,7 @@ impl SimEngine {
             };
             let tok = self.sim_token(i);
             self.pos[i] = (self.pos[i] + 1).min(self.cfg.max_len - 1);
-            self.token_events.push((id, tok));
+            self.emit_token(i, id, tok, false);
             self.metrics.generated_tokens += 1;
             if let Some(resp) = self.maybe_finish(i, tok) {
                 responses.push(resp);
@@ -468,6 +652,9 @@ impl SimEngine {
             self.kv.release(slot, false);
             self.pos[slot] = 0;
         }
+        // a request cancelled while preempted-and-queued still holds a
+        // host pin; drop it without a restore transfer
+        self.kv.drop_swapped(id.0);
         self.metrics.aborted += 1;
         self.sync_kv_metrics();
         Some(resp)
@@ -480,6 +667,7 @@ impl SimEngine {
             self.kv.release(slot, false);
             self.pos[slot] = 0;
         }
+        self.kv.drop_all_swapped();
         self.metrics.aborted += out.len() as u64;
         self.sync_kv_metrics();
         out
@@ -503,6 +691,16 @@ impl SimEngine {
     /// True while `id` has produced no token yet.
     pub fn awaiting_first_token(&self, id: RequestId) -> bool {
         self.batcher.awaiting_first_token(id)
+    }
+
+    /// Host-tier occupancy in bytes (0 without a tier).
+    pub fn host_tier_bytes(&self) -> usize {
+        self.kv.host_tier_bytes()
+    }
+
+    /// Host-tier transfer/occupancy stats (`None` on dense layouts).
+    pub fn host_tier_stats(&self) -> Option<&HostTierStats> {
+        self.kv.host_tier_stats()
     }
 }
 
@@ -545,10 +743,22 @@ impl ServingEngine for SimEngine {
     /// Warm-start the replica's retained prefix pool from the host
     /// prefix store.  Safe in the simulator because sim tokens are a
     /// pure function of (seed, prompt) — warmed pages change admission
-    /// arithmetic, never output tokens.  The real engine keeps the
-    /// trait's no-op default until a device KV upload path exists.
+    /// arithmetic, never output tokens.  With a host tier the pages
+    /// route through it (ingest + promote); without one this is the
+    /// direct preload of the pre-hierarchy baseline.
     fn warm_prefix(&mut self, prompt: &[i32]) -> usize {
-        self.kv.preload_prefix(prompt)
+        self.kv.warm_prefix_host(prompt, None)
+    }
+    fn warm_prefix_kv(&mut self, prompt: &[i32], payload: Option<&PrefixKv>) -> usize {
+        self.kv.warm_prefix_host(prompt, payload)
+    }
+    fn export_prefix(&mut self, prompt: &[i32]) -> Option<PrefixKv> {
+        // the sim holds no real bytes: the returned payload carries
+        // page counts and tokens only, which is all sim warm-starts use
+        self.kv.export_prefix(prompt).map(|(kv, _pages)| kv)
+    }
+    fn note_prompt_load(&mut self, prompt_tokens_per_s: f64) {
+        self.prompt_load = prompt_tokens_per_s;
     }
 }
 
@@ -727,5 +937,108 @@ mod tests {
         assert_eq!(reclaimable, usable, "all pages reclaimed after cancel");
         assert_eq!(engine.page_reservations(), Some(0), "reservations freed");
         engine.audit();
+    }
+
+    /// The tentpole end-to-end property: a run that overcommits its
+    /// reservations, preempts the youngest decode to the host tier, and
+    /// later re-admits it must produce bit-identical tokens to a run
+    /// with enough memory to never preempt — and must stream every
+    /// token exactly once across the swap.
+    #[test]
+    fn preempted_run_tokens_equal_unpreempted_run() {
+        type Streams = std::collections::BTreeMap<u64, Vec<i32>>;
+        let run = |cfg: SimEngineConfig| -> (Vec<(u64, Vec<i32>)>, Streams, SimEngine) {
+            let mut engine = SimEngine::new(cfg);
+            for i in 0..3u64 {
+                let prompt: Vec<i32> = (0..8).map(|j| 100 * i as i32 + j).collect();
+                let params = SamplingParams {
+                    max_new_tokens: 17,
+                    seed: 40 + i,
+                    ..Default::default()
+                };
+                engine.submit(prompt, params).expect("admissible").expect("queued");
+            }
+            let mut streams = Streams::new();
+            let mut out = Vec::new();
+            let mut guard = 0;
+            while !engine.is_idle() {
+                out.extend(engine.tick().expect("fault-free tick"));
+                for (id, tok) in engine.take_token_events() {
+                    streams.entry(id.0).or_default().push(tok);
+                }
+                engine.audit();
+                guard += 1;
+                assert!(guard < 10_000, "sim failed to drain");
+            }
+            let mut pairs: Vec<(u64, Vec<i32>)> =
+                out.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+            pairs.sort();
+            (pairs, streams, engine)
+        };
+        // 8 usable pages against 3 requests × 4 pages of reserved
+        // demand: factor 2.0 admits all three and decode growth has to
+        // preempt a victim to the host tier to keep going.
+        let (tight, tight_streams, tight_engine) = run(SimEngineConfig {
+            width: 3,
+            max_len: 32,
+            num_pages: 9,
+            page_size: 8,
+            overcommit_factor: 2.0,
+            host_tier_bytes: 32 * 1024,
+            ..Default::default()
+        });
+        // Roomy baseline: same arrivals, enough pages to never preempt.
+        let (roomy, roomy_streams, roomy_engine) = run(SimEngineConfig {
+            width: 3,
+            max_len: 32,
+            num_pages: 16,
+            page_size: 8,
+            ..Default::default()
+        });
+        assert_eq!(tight, roomy, "preempted requests replay bit-identically");
+        assert!(
+            tight_engine.metrics.preemptions > 0,
+            "memory pressure forced a preemption"
+        );
+        assert!(
+            tight_engine.metrics.swap_ins > 0,
+            "a victim came back from the host tier"
+        );
+        assert_eq!(roomy_engine.metrics.preemptions, 0, "baseline never preempts");
+        // exactly-once streaming: each request's event stream must equal
+        // its final token vector despite the mid-stream preemption
+        for (id, tokens) in &tight {
+            assert_eq!(
+                tight_streams.get(id),
+                Some(tokens),
+                "request {id} streamed exactly once"
+            );
+        }
+        assert_eq!(tight_streams, roomy_streams, "streams agree across schedules");
+        let stats = tight_engine.host_tier_stats().expect("paged layout");
+        assert_eq!(
+            stats.swapped_out_pages,
+            stats.swapped_in_pages + stats.dropped_pin_pages,
+            "every swapped page was restored or dropped on purpose"
+        );
+    }
+
+    /// `overcommit_factor: 1.0` with no host tier must leave every new
+    /// code path inert: no preemption, no swaps, no tier occupancy —
+    /// the pre-hierarchy baseline schedule.
+    #[test]
+    fn default_config_keeps_overcommit_machinery_inert() {
+        let mut engine = SimEngine::new(SimEngineConfig::default());
+        submit_batch(&mut engine, 10);
+        let responses = run_all(&mut engine);
+        assert_eq!(responses.len(), 10);
+        assert_eq!(engine.metrics.preemptions, 0, "strict gate never preempts");
+        assert_eq!(engine.metrics.swap_ins, 0);
+        assert_eq!(engine.host_tier_bytes(), 0);
+        assert_eq!(
+            engine.host_tier_stats(),
+            Some(&HostTierStats::default()),
+            "disabled tier never moves a byte"
+        );
     }
 }

@@ -1,0 +1,597 @@
+//! Host-side KV page tier: the second level of the two-tier cache
+//! hierarchy.
+//!
+//! The device pool ([`super::pagetable::PageAllocator`]) is tier 0; this
+//! module owns tier 1 — a byte-capped host-side store of KV pages.  It
+//! is the **only** code path through which KV page bytes move
+//! device↔host: every byte that crosses is booked in [`HostTierStats`]
+//! and, on the real engine, mirrored into the runtime's counted
+//! transfer machinery (`ExecStats` / `TransferTotals`) under the
+//! `"kv_host_tier"` artifact name, so the two ledgers are byte-exact
+//! against each other.
+//!
+//! Pages live in two classes:
+//!
+//! * **pinned** — a preempted (swapped-out) slot's private pages, keyed
+//!   by request id.  Pinned pages are never LRU-evicted: they are owed
+//!   back to a live request and only leave through
+//!   [`HostTier::unpin`] (re-admission restores them to the device) or
+//!   [`HostTier::drop_pin`] (the request was cancelled; the copy is
+//!   discarded without a restore transfer).
+//! * **free (cached)** — demoted retained-prefix pages, keyed by the
+//!   token prefix they hold.  This class is the host-side extension of
+//!   the device prefix pool: LRU within the class, evicted silently
+//!   under capacity pressure, re-promoted to the device on a prefix
+//!   hit.
+//!
+//! Conservation invariant (audited, and pinned by the chaos suite):
+//! `pinned_bytes + cached_bytes + free_bytes == capacity_bytes` — the
+//! host ledger's analogue of the device pool's
+//! `free + outstanding + retained == usable` partition.
+//!
+//! The simulator engines move no real bytes; their tier entries carry
+//! no payload and the stats count *logical* page bytes
+//! (`pages * page_bytes`).  The real engine stages actual KV bytes
+//! through the same entries: demotions log a [`HostOp::Demote`] whose
+//! device page ids the engine captures (the pool's bytes are intact
+//! until the next device write, so draining the op log at the tick's
+//! admission boundary is sound), promotions log a [`HostOp::Promote`]
+//! carrying the captured payload back for upload.
+
+use std::collections::HashMap;
+
+/// Geometry + capacity of the host tier.  `capacity_bytes == 0`
+/// disables the tier entirely (the PR-8 single-tier baseline).
+#[derive(Clone, Copy, Debug)]
+pub struct HostTierConfig {
+    /// Total host bytes the tier may hold (pinned + cached).  Zero
+    /// disables the tier.
+    pub capacity_bytes: usize,
+    /// Bytes one KV page occupies on the host (the device page's K+V
+    /// rows across all layers; logical in the simulator).
+    pub page_bytes: usize,
+}
+
+impl Default for HostTierConfig {
+    fn default() -> Self {
+        // disabled: single-tier device-only baseline
+        HostTierConfig { capacity_bytes: 0, page_bytes: 4096 }
+    }
+}
+
+/// Byte/page movement counters.  `bytes_to_host` / `bytes_to_device`
+/// are the tier's half of the byte-exactness contract with
+/// `TransferTotals` (see module docs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HostTierStats {
+    /// Bytes moved device → host (swap-outs + demotions).
+    pub bytes_to_host: u64,
+    /// Bytes moved host → device (swap-ins + promotions).
+    pub bytes_to_device: u64,
+    /// Pages pinned by preemptive swap-outs.
+    pub swapped_out_pages: u64,
+    /// Pages restored to the device by swap-ins.
+    pub swapped_in_pages: u64,
+    /// Prefix pages demoted from the device pool's retained set.
+    pub demoted_pages: u64,
+    /// Prefix pages re-promoted to the device on a hit.
+    pub promoted_pages: u64,
+    /// Pinned pages discarded without a restore (cancelled requests).
+    pub dropped_pin_pages: u64,
+    /// Cached-class pages LRU-evicted under capacity pressure.
+    pub evicted_pages: u64,
+    /// Prefix pages ingested from *off-node* (a cluster warm-start's
+    /// payload arriving over the wire) — host-side arrivals that are
+    /// **not** device↔host transfers and therefore book no bytes.
+    pub ingested_pages: u64,
+}
+
+/// A prefix's KV pages exported off the device — the cluster prefix
+/// store's payload.  `bytes` is `None` on the simulator engines (the
+/// movement is logical) and `Some` on the real engine, sized
+/// `pages * page_bytes`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrefixKv {
+    /// The token prefix the pages hold (always a whole number of
+    /// pages' worth of rows).
+    pub tokens: Vec<i32>,
+    /// Full KV pages covered.
+    pub pages: usize,
+    /// The raw page bytes (real engine only).
+    pub bytes: Option<Vec<u8>>,
+}
+
+/// One pending real-byte movement for the engine to perform (drained
+/// via [`HostTier::take_ops`] at the tick's admission boundary; the
+/// simulator drains and discards them).
+#[derive(Clone, Debug)]
+pub enum HostOp {
+    /// Prefix pages left the device for the host: capture these device
+    /// pages' KV bytes into the tier entry keyed by `tokens`.
+    Demote {
+        /// Token prefix keying the tier entry to attach the payload to.
+        tokens: Vec<i32>,
+        /// Device page ids whose bytes must be captured.
+        pages: Vec<u32>,
+    },
+    /// Prefix pages re-entered the device: write `payload` (captured at
+    /// demotion; `None` in the simulator) into these device pages.
+    Promote {
+        /// Freshly allocated device page ids to write into.
+        pages: Vec<u32>,
+        /// The KV bytes captured when the entry was demoted.
+        payload: Option<Vec<u8>>,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct PinnedEntry {
+    pages: usize,
+    payload: Option<Vec<u8>>,
+}
+
+#[derive(Clone, Debug)]
+struct CachedEntry {
+    tokens: Vec<i32>,
+    pages: usize,
+    payload: Option<Vec<u8>>,
+    stamp: u64,
+}
+
+/// The host tier itself (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct HostTier {
+    cfg: HostTierConfig,
+    clock: u64,
+    pins: HashMap<u64, PinnedEntry>,
+    cache: Vec<CachedEntry>,
+    stats: HostTierStats,
+    ops: Vec<HostOp>,
+}
+
+impl HostTier {
+    /// Tier over `cfg`'s capacity.  A zero capacity builds a disabled
+    /// tier: every store/pin refuses, every lookup misses.
+    pub fn new(cfg: HostTierConfig) -> Self {
+        assert!(cfg.page_bytes > 0, "host tier pages must hold bytes");
+        HostTier { cfg, ..Default::default() }
+    }
+
+    /// Whether the tier holds any capacity at all.
+    pub fn enabled(&self) -> bool {
+        self.cfg.capacity_bytes > 0
+    }
+
+    /// Host bytes one KV page occupies.
+    pub fn page_bytes(&self) -> usize {
+        self.cfg.page_bytes
+    }
+
+    /// Total capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.cfg.capacity_bytes
+    }
+
+    /// Bytes held by the pinned (swapped-out slot) class.
+    pub fn pinned_bytes(&self) -> usize {
+        self.pins.values().map(|p| p.pages * self.cfg.page_bytes).sum()
+    }
+
+    /// Bytes held by the free/cached (demoted prefix) class.
+    pub fn cached_bytes(&self) -> usize {
+        self.cache.iter().map(|e| e.pages * self.cfg.page_bytes).sum()
+    }
+
+    /// Uncommitted capacity: `capacity - pinned - cached`.
+    pub fn free_bytes(&self) -> usize {
+        self.cfg.capacity_bytes - self.pinned_bytes() - self.cached_bytes()
+    }
+
+    /// Movement counters.
+    pub fn stats(&self) -> &HostTierStats {
+        &self.stats
+    }
+
+    /// Drain the pending real-byte operations (engine-side; the
+    /// simulator discards them).
+    pub fn take_ops(&mut self) -> Vec<HostOp> {
+        std::mem::take(&mut self.ops)
+    }
+
+    /// Evict cached-class entries (LRU) until at least `need` bytes are
+    /// free; returns whether that was achieved.  Pinned entries are
+    /// never touched.
+    fn evict_cached_until(&mut self, need: usize) -> bool {
+        while self.free_bytes() < need {
+            let Some(oldest) = self
+                .cache
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+            else {
+                return false;
+            };
+            let e = self.cache.swap_remove(oldest);
+            self.stats.evicted_pages += e.pages as u64;
+        }
+        true
+    }
+
+    // ---- pinned class: preemptive swap ----
+
+    /// Whether `pages` more pages could be pinned (evicting cached
+    /// entries if necessary — only other pins are immovable).
+    pub fn can_pin(&self, pages: usize) -> bool {
+        self.enabled()
+            && pages > 0
+            && pages * self.cfg.page_bytes <= self.cfg.capacity_bytes - self.pinned_bytes()
+    }
+
+    /// Pin a preempted slot's `pages` pages under `key` (the request
+    /// id), evicting cached entries to make room.  `payload` carries
+    /// the captured KV bytes on the real engine (`None` in the sim).
+    /// Books the device→host transfer.  Returns `false` (tier
+    /// untouched) when the pages cannot fit or the key is already
+    /// pinned.
+    pub fn pin(&mut self, key: u64, pages: usize, payload: Option<Vec<u8>>) -> bool {
+        if !self.can_pin(pages) || self.pins.contains_key(&key) {
+            return false;
+        }
+        let need = pages * self.cfg.page_bytes;
+        if !self.evict_cached_until(need) {
+            return false;
+        }
+        self.pins.insert(key, PinnedEntry { pages, payload });
+        self.stats.bytes_to_host += need as u64;
+        self.stats.swapped_out_pages += pages as u64;
+        true
+    }
+
+    /// Pages pinned under `key`, if any.
+    pub fn pinned(&self, key: u64) -> Option<usize> {
+        self.pins.get(&key).map(|p| p.pages)
+    }
+
+    /// Release `key`'s pin for re-admission: the pages re-enter the
+    /// device, booking the host→device transfer.  Returns the page
+    /// count and the captured payload.
+    pub fn unpin(&mut self, key: u64) -> Option<(usize, Option<Vec<u8>>)> {
+        let e = self.pins.remove(&key)?;
+        self.stats.bytes_to_device += (e.pages * self.cfg.page_bytes) as u64;
+        self.stats.swapped_in_pages += e.pages as u64;
+        Some((e.pages, e.payload))
+    }
+
+    /// Discard `key`'s pin without a restore (the request was cancelled
+    /// or drained while swapped out): no device transfer happens.
+    pub fn drop_pin(&mut self, key: u64) -> Option<usize> {
+        let e = self.pins.remove(&key)?;
+        self.stats.dropped_pin_pages += e.pages as u64;
+        Some(e.pages)
+    }
+
+    /// Discard every pin (engine drain).  Returns the pages dropped.
+    pub fn drop_all_pins(&mut self) -> usize {
+        let keys: Vec<u64> = self.pins.keys().copied().collect();
+        keys.iter().filter_map(|&k| self.drop_pin(k)).sum()
+    }
+
+    // ---- cached class: demoted prefix pages ----
+
+    /// Demote a retained prefix entry to the host: `tokens` is the full
+    /// token prefix the entry covers, `device_pages` the device page
+    /// ids being vacated (their count prices the transfer; their ids
+    /// go on the op log for the engine's byte capture).  Refuses (and
+    /// books nothing) when the tier is disabled, the entry is already
+    /// covered by a cached entry, or even evicting every cached entry
+    /// could not fit it.
+    pub fn store_prefix(&mut self, tokens: &[i32], device_pages: &[u32]) -> bool {
+        if !self.ingest_prefix(tokens, device_pages.len(), None, true) {
+            return false;
+        }
+        self.ops.push(HostOp::Demote {
+            tokens: tokens.to_vec(),
+            pages: device_pages.to_vec(),
+        });
+        true
+    }
+
+    /// Insert a cached-class entry without logging a capture op: the
+    /// staging path for exports (the engine captures bytes inline;
+    /// `from_device: true` books the device→host transfer) and for
+    /// cluster warm-starts whose payload arrived over the wire
+    /// (`from_device: false` — a host-side arrival, no device transfer
+    /// to book).  Same refusal/eviction rules as [`Self::store_prefix`].
+    pub fn ingest_prefix(
+        &mut self,
+        tokens: &[i32],
+        pages: usize,
+        payload: Option<Vec<u8>>,
+        from_device: bool,
+    ) -> bool {
+        if !self.enabled() || pages == 0 || tokens.is_empty() {
+            return false;
+        }
+        if self
+            .cache
+            .iter()
+            .any(|e| e.tokens.len() >= tokens.len() && e.tokens.starts_with(tokens))
+        {
+            return false; // already covered — no bytes need to move
+        }
+        let need = pages * self.cfg.page_bytes;
+        if need > self.cfg.capacity_bytes - self.pinned_bytes() {
+            return false;
+        }
+        // a shorter entry this one extends is superseded: drop it first
+        // so the class never holds nested duplicates of one prefix
+        self.cache.retain(|e| !tokens.starts_with(&e.tokens));
+        if !self.evict_cached_until(need) {
+            return false;
+        }
+        self.clock += 1;
+        self.cache.push(CachedEntry {
+            tokens: tokens.to_vec(),
+            pages,
+            payload,
+            stamp: self.clock,
+        });
+        if from_device {
+            self.stats.bytes_to_host += need as u64;
+            self.stats.demoted_pages += pages as u64;
+        } else {
+            self.stats.ingested_pages += pages as u64;
+        }
+        true
+    }
+
+    /// Clone the best cached entry for `prompt` without promoting or
+    /// removing it (the export path re-serves an already-staged copy:
+    /// host → wire is the store's concern, no device transfer books).
+    pub fn clone_prefix(&self, prompt: &[i32]) -> Option<(Vec<i32>, usize, Option<Vec<u8>>)> {
+        let i = self.best_prefix(prompt)?;
+        let e = &self.cache[i];
+        Some((e.tokens.clone(), e.pages, e.payload.clone()))
+    }
+
+    /// Attach the real KV bytes captured for a demoted entry (engine
+    /// op-drain path).  Returns whether the entry still exists.
+    pub fn attach_prefix_payload(&mut self, tokens: &[i32], payload: Vec<u8>) -> bool {
+        if let Some(e) = self.cache.iter_mut().find(|e| e.tokens == tokens) {
+            e.payload = Some(payload);
+            return true;
+        }
+        false
+    }
+
+    /// Best cached entry for `prompt` without promoting it: the page
+    /// count of the longest cached token prefix of `prompt`.
+    pub fn peek_prefix(&self, prompt: &[i32]) -> Option<usize> {
+        self.best_prefix(prompt).map(|i| self.cache[i].pages)
+    }
+
+    fn best_prefix(&self, prompt: &[i32]) -> Option<usize> {
+        self.cache
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| prompt.starts_with(&e.tokens))
+            .max_by_key(|(_, e)| (e.pages, e.stamp))
+            .map(|(i, _)| i)
+    }
+
+    /// Promote the best cached entry for `prompt` back to the device:
+    /// removes it, books the host→device transfer, and logs the
+    /// [`HostOp::Promote`] writing its payload into `device_pages`
+    /// (the fresh pages the caller allocated for it).  `None` on miss.
+    /// `device_pages.len()` must equal the entry's page count — the
+    /// caller sizes the allocation from [`Self::peek_prefix`].
+    pub fn take_prefix(
+        &mut self,
+        prompt: &[i32],
+        device_pages: &[u32],
+    ) -> Option<(Vec<i32>, usize)> {
+        let idx = self.best_prefix(prompt)?;
+        let e = self.cache.swap_remove(idx);
+        assert_eq!(
+            device_pages.len(),
+            e.pages,
+            "promotion allocation does not match the demoted entry"
+        );
+        self.stats.bytes_to_device += (e.pages * self.cfg.page_bytes) as u64;
+        self.stats.promoted_pages += e.pages as u64;
+        self.ops.push(HostOp::Promote {
+            pages: device_pages.to_vec(),
+            payload: e.payload,
+        });
+        Some((e.tokens, e.pages))
+    }
+
+    /// Conservation + structure audit; panics on the first violation.
+    /// `pinned + cached + free == capacity` holds by construction of
+    /// [`Self::free_bytes`]; this re-derives both classes from the
+    /// entries and checks the capacity bound and payload sizing.
+    pub fn audit(&self) {
+        let pinned = self.pinned_bytes();
+        let cached = self.cached_bytes();
+        assert!(
+            pinned + cached <= self.cfg.capacity_bytes,
+            "host tier overfull: pinned {pinned} + cached {cached} > cap {}",
+            self.cfg.capacity_bytes
+        );
+        assert_eq!(
+            pinned + cached + self.free_bytes(),
+            self.cfg.capacity_bytes,
+            "host tier partition broken"
+        );
+        for e in &self.cache {
+            assert!(e.pages > 0, "empty cached entry");
+            assert!(!e.tokens.is_empty(), "cached entry holds no tokens");
+            if let Some(p) = &e.payload {
+                assert_eq!(
+                    p.len(),
+                    e.pages * self.cfg.page_bytes,
+                    "cached payload does not span its pages"
+                );
+            }
+        }
+        for (k, p) in &self.pins {
+            assert!(p.pages > 0, "empty pin under key {k}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tier(cap_pages: usize) -> HostTier {
+        HostTier::new(HostTierConfig { capacity_bytes: cap_pages * 64, page_bytes: 64 })
+    }
+
+    #[test]
+    fn disabled_tier_refuses_everything() {
+        let mut t = HostTier::new(HostTierConfig::default());
+        assert!(!t.enabled());
+        assert!(!t.pin(1, 2, None));
+        assert!(!t.store_prefix(&[1, 2, 3], &[4]));
+        assert!(t.peek_prefix(&[1, 2, 3]).is_none());
+        assert_eq!(t.stats(), &HostTierStats::default());
+        t.audit();
+    }
+
+    #[test]
+    fn pin_unpin_round_trip_books_bytes_both_ways() {
+        let mut t = tier(8);
+        assert!(t.pin(7, 3, None));
+        assert_eq!(t.pinned(7), Some(3));
+        assert_eq!(t.pinned_bytes(), 3 * 64);
+        assert_eq!(t.free_bytes(), 5 * 64);
+        let (pages, payload) = t.unpin(7).expect("pinned");
+        assert_eq!((pages, payload), (3, None));
+        assert_eq!(t.pinned_bytes(), 0);
+        assert_eq!(t.stats().bytes_to_host, 3 * 64);
+        assert_eq!(t.stats().bytes_to_device, 3 * 64);
+        assert_eq!(t.stats().swapped_out_pages, 3);
+        assert_eq!(t.stats().swapped_in_pages, 3);
+        t.audit();
+    }
+
+    #[test]
+    fn dropped_pins_move_no_bytes_back() {
+        let mut t = tier(4);
+        assert!(t.pin(1, 2, Some(vec![0u8; 2 * 64])));
+        assert_eq!(t.drop_pin(1), Some(2));
+        assert_eq!(t.stats().bytes_to_device, 0, "discard is not a restore");
+        assert_eq!(t.stats().dropped_pin_pages, 2);
+        assert_eq!(t.drop_pin(1), None, "double drop is clean");
+        t.audit();
+    }
+
+    #[test]
+    fn pins_never_exceed_capacity_and_never_evict_pins() {
+        let mut t = tier(4);
+        assert!(t.pin(1, 3, None));
+        assert!(!t.can_pin(2), "only 1 page of headroom");
+        assert!(!t.pin(2, 2, None), "refused, tier untouched");
+        assert!(t.pin(2, 1, None));
+        assert_eq!(t.free_bytes(), 0);
+        t.audit();
+    }
+
+    #[test]
+    fn demoted_prefixes_promote_back_with_lru_eviction() {
+        let mut t = tier(4);
+        assert!(t.store_prefix(&[1, 2], &[5, 6]));
+        assert!(t.store_prefix(&[9, 9], &[7, 8]));
+        assert_eq!(t.free_bytes(), 0);
+        // a third entry evicts the LRU ([1,2])
+        assert!(t.store_prefix(&[4, 4], &[9, 10]));
+        assert_eq!(t.stats().evicted_pages, 2);
+        assert!(t.peek_prefix(&[1, 2, 3]).is_none(), "evicted");
+        assert_eq!(t.peek_prefix(&[9, 9, 1]), Some(2));
+        // promotion removes the entry and books the restore
+        let fresh = [11u32, 12u32];
+        let (tokens, pages) = t.take_prefix(&[9, 9, 1], &fresh).expect("hit");
+        assert_eq!((tokens.as_slice(), pages), (&[9, 9][..], 2));
+        assert!(t.peek_prefix(&[9, 9, 1]).is_none(), "promoted out");
+        assert_eq!(t.stats().promoted_pages, 2);
+        assert_eq!(t.stats().bytes_to_device, 2 * 64);
+        t.audit();
+    }
+
+    #[test]
+    fn covered_and_superseding_prefixes_dedup() {
+        let mut t = tier(8);
+        assert!(t.store_prefix(&[1, 2, 3, 4], &[5, 6]));
+        assert!(
+            !t.store_prefix(&[1, 2], &[7]),
+            "shorter prefix already covered — no bytes move"
+        );
+        // a longer prefix supersedes the shorter entry
+        assert!(t.store_prefix(&[1, 2, 3, 4, 5, 6], &[5, 6, 7]));
+        assert_eq!(t.cached_bytes(), 3 * 64, "one entry, not nested copies");
+        assert_eq!(t.peek_prefix(&[1, 2, 3, 4, 5, 6, 9]), Some(3));
+        t.audit();
+    }
+
+    #[test]
+    fn ops_log_carries_demote_then_promote_for_engine_capture() {
+        let mut t = tier(4);
+        assert!(t.store_prefix(&[1, 2], &[5, 6]));
+        assert!(t.attach_prefix_payload(&[1, 2], vec![7u8; 2 * 64]));
+        let ops = t.take_ops();
+        assert!(matches!(
+            ops.as_slice(),
+            [HostOp::Demote { tokens, pages }] if tokens == &[1, 2] && pages == &[5, 6]
+        ));
+        let (_, _) = t.take_prefix(&[1, 2, 9], &[8, 9]).expect("hit");
+        let ops = t.take_ops();
+        match ops.as_slice() {
+            [HostOp::Promote { pages, payload }] => {
+                assert_eq!(pages, &[8, 9]);
+                assert_eq!(payload.as_ref().map(|p| p.len()), Some(2 * 64));
+            }
+            other => panic!("unexpected ops {other:?}"),
+        }
+        t.audit();
+    }
+
+    #[test]
+    fn wire_ingest_books_no_device_transfer_and_clones_back() {
+        let mut t = tier(4);
+        // a warm-start payload arrives over the wire: host-side only
+        assert!(t.ingest_prefix(&[1, 2], 2, Some(vec![9u8; 2 * 64]), false));
+        assert_eq!(t.stats().bytes_to_host, 0, "wire arrival is not a device move");
+        assert_eq!(t.stats().ingested_pages, 2);
+        // the export path re-serves the staged copy without promotion
+        let (tokens, pages, payload) = t.clone_prefix(&[1, 2, 3]).expect("staged");
+        assert_eq!((tokens.as_slice(), pages), (&[1, 2][..], 2));
+        assert_eq!(payload.map(|p| p.len()), Some(2 * 64));
+        assert_eq!(t.peek_prefix(&[1, 2, 3]), Some(2), "clone does not consume");
+        assert!(t.take_ops().is_empty(), "no engine capture needed");
+        t.audit();
+    }
+
+    #[test]
+    fn conservation_identity_holds_across_mixed_traffic() {
+        let mut t = tier(6);
+        assert!(t.pin(1, 2, None));
+        assert!(t.store_prefix(&[3, 3, 3], &[4, 5, 6]));
+        assert_eq!(
+            t.pinned_bytes() + t.cached_bytes() + t.free_bytes(),
+            t.capacity_bytes(),
+            "pinned + cached + free == cap"
+        );
+        // pinning under pressure evicts cached, never pins
+        assert!(t.pin(2, 3, None));
+        assert_eq!(t.pinned_bytes(), 5 * 64);
+        assert_eq!(t.cached_bytes(), 0, "cached class gave way");
+        assert_eq!(t.stats().evicted_pages, 3);
+        assert_eq!(
+            t.pinned_bytes() + t.cached_bytes() + t.free_bytes(),
+            t.capacity_bytes()
+        );
+        t.audit();
+    }
+}

@@ -33,12 +33,42 @@
 //! (`prop_prefix_pool_conservation`), and a page with a live
 //! block-table reference is never evicted.
 //!
+//! **Two-tier hierarchy (PR 9).**  The device pool is tier 0 of a
+//! memory hierarchy; [`host_tier`] owns tier 1, a byte-capped host
+//! store, and is the only path KV page bytes take device↔host.  Three
+//! consumers ride on it:
+//!
+//! * **Overcommit + preemptive swap** — with
+//!   [`KvCacheConfig::overcommit_factor`] ` > 1.0` the reservation
+//!   ledger may promise more growth than the free list holds
+//!   (`reserved <= floor(free * factor)` at admission).  When growth
+//!   actually runs dry, the engine picks a victim
+//!   ([`KvCacheManager::pick_victim`]: youngest-admitted decode first,
+//!   never a CoW donor with live sharers), swaps its private pages to
+//!   the host tier ([`KvCacheManager::swap_out`]) and requeues it; on
+//!   re-admission ([`KvCacheManager::swap_in`]) seed-replay regenerates
+//!   its tokens bit-identically to the unpreempted run.
+//! * **Prefix spill** — admission pressure *demotes* retained prefix
+//!   entries to the host tier (`PrefixPool::spill_pages`) instead of
+//!   discarding them, and [`KvCacheManager::promote_for`] re-promotes
+//!   the queue head's prefix on a hit.
+//! * **Cluster prefix export/warm** — [`KvCacheManager::export_prefix`]
+//!   stages a retained prefix's pages into the tier (the real engine
+//!   captures the actual KV bytes) for the cluster prefix store, and
+//!   [`KvCacheManager::warm_prefix_host`] ingests a warm-start payload
+//!   host-side and promotes it to the device on demand.
+//!
+//! At `overcommit_factor: 1.0` with a zero-capacity tier every one of
+//! these paths is inert and the manager is bit-identical to the PR-8
+//! single-tier baseline.
+//!
 //! The manager is pure bookkeeping — no device buffers, no runtime
 //! calls — so the whole policy is unit- and property-testable without
 //! artifacts, and the Python protocol twin
 //! (`python/tests/test_paged_serving_protocol.py`) mirrors it
 //! operation for operation.
 
+pub mod host_tier;
 pub mod pagetable;
 mod prefix_pool;
 
@@ -47,6 +77,7 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use crate::tensor::Tensor;
+use host_tier::{HostOp, HostTier, HostTierConfig, HostTierStats, PrefixKv};
 use pagetable::{PageAllocator, RESERVED_PAGE};
 use prefix_pool::PrefixPool;
 
@@ -92,6 +123,18 @@ pub struct KvCacheConfig {
     /// a sharer could outrun or outlive an unwritten donor and read
     /// garbage or permanently orphan the shared page.
     pub chunk_rows: Option<usize>,
+    /// Reservation-ledger overcommit watermark: admission may promise
+    /// growth up to `floor(free * overcommit_factor)` pages while only
+    /// `free` exist (fresh pages never overcommit — they must exist at
+    /// admission).  `1.0` (default) is the strict PR-8 gate, where
+    /// growth can never run dry; above it the engine must be prepared
+    /// to preempt ([`KvCacheManager::pick_victim`] /
+    /// [`KvCacheManager::swap_out`]) when [`KvCacheManager::grow_to`]
+    /// would starve.
+    pub overcommit_factor: f64,
+    /// Host tier (tier 1) geometry; `capacity_bytes: 0` (default)
+    /// disables the tier and every swap/spill/warm path with it.
+    pub host_tier: HostTierConfig,
 }
 
 impl Default for KvCacheConfig {
@@ -101,6 +144,8 @@ impl Default for KvCacheConfig {
             share_prefixes: true,
             prefix_cache: true,
             chunk_rows: None,
+            overcommit_factor: 1.0,
+            host_tier: HostTierConfig::default(),
         }
     }
 }
@@ -196,6 +241,14 @@ struct PagedBook {
     /// Admissions committed by [`KvCacheManager::admit`] awaiting their
     /// [`KvCacheManager::install`] slot binding, in FIFO order.
     pending: VecDeque<Admission>,
+    /// Host tier (tier 1): pinned swap victims + demoted prefix pages.
+    tier: HostTier,
+    /// Per-slot admission stamp ([`PagedBook::clock`] at install; 0 for
+    /// free slots) — the deterministic age order the victim policy
+    /// ranks by.
+    seq: Vec<u64>,
+    /// Monotonic admission clock feeding `seq`.
+    clock: u64,
 }
 
 /// The KV-cache policy façade (see the module docs).
@@ -233,9 +286,11 @@ impl KvCacheManager {
             );
             cfg.prefix_cache = false;
         }
+        let mut allocator = PageAllocator::new(num_pages, page_size);
+        allocator.set_overcommit(cfg.overcommit_factor);
         KvCacheManager {
             book: Some(PagedBook {
-                allocator: PageAllocator::new(num_pages, page_size),
+                allocator,
                 pool: PrefixPool::default(),
                 pages_per_slot,
                 tables: vec![Vec::new(); width],
@@ -244,6 +299,9 @@ impl KvCacheManager {
                 shared: vec![0; width],
                 prefilled: vec![false; width],
                 pending: VecDeque::new(),
+                tier: HostTier::new(cfg.host_tier),
+                seq: vec![0; width],
+                clock: 0,
             }),
             cfg,
             width,
@@ -489,20 +547,36 @@ impl KvCacheManager {
         if limit == 0 {
             return 0; // steady-state decode tick: skip the donor scan
         }
-        let mut budget = book.allocator.unreserved_pages();
+        // mirror the allocator's two-constraint overcommit gate exactly
+        // (see `admission_budget`): fresh pages must exist now, while
+        // reservations fit the inflated watermark.  At factor 1.0 this
+        // collapses to the PR-8 `need <= unreserved` arithmetic.
+        let factor = book.allocator.overcommit();
+        let budget_of = |free: usize, reserved: usize| {
+            ((free as f64 * factor).floor() as usize).saturating_sub(reserved)
+        };
+        let mut free = book.allocator.free_pages();
+        let mut reserved = book.allocator.reserved_pages();
         let mut extra: Vec<(Vec<i32>, Vec<u32>)> = Vec::new();
         let mut admissible = 0usize;
         for (prompt, max_new) in queued.take(limit) {
             let plan = self.plan(prompt, max_new, &extra);
             let need = plan.fresh + plan.reserve;
-            let fits = need <= budget
+            let short = plan
+                .fresh
+                .saturating_sub(free)
+                .max(need.saturating_sub(budget_of(free, reserved)));
+            let fits = short == 0
                 || (admissible == 0
-                    && need - budget
+                    && short
                         <= book.pool.evictable_pages(&book.allocator, plan.pool_hit));
             if !fits {
                 break;
             }
-            budget = budget.saturating_sub(need);
+            // a head admitted through eviction reclaims `short` pages
+            // into the free list before the gate consumes its fresh
+            free = (free + short).saturating_sub(plan.fresh);
+            reserved += plan.reserve;
             admissible += 1;
             if self.cfg.share_prefixes && self.cfg.chunk_rows.is_none() {
                 // page ids are placeholders — only the table LENGTH
@@ -534,17 +608,28 @@ impl KvCacheManager {
         let plan = self.plan(prompt, max_new, &[]);
         let book = self.book.as_mut().expect("checked above");
         let need = plan.fresh + plan.reserve;
-        if need > book.allocator.unreserved_pages() {
-            // pin the planned shares: LRU eviction must not reclaim the
+        // two-constraint overcommit gate (the sim in `admissible_now`
+        // mirrors this arithmetic term for term): fresh pages must
+        // exist now, reservations fit the inflated watermark
+        let short = |a: &PageAllocator| {
+            plan.fresh
+                .saturating_sub(a.free_pages())
+                .max(need.saturating_sub(a.admission_budget()))
+        };
+        if short(&book.allocator) > 0 {
+            // pin the planned shares: LRU reclamation must not take the
             // very pages this admission is about to reference (and with
             // the pins baked into the refcounts, the evictable count is
-            // exactly what evict_pages could reclaim)
+            // exactly what spill_pages could reclaim)
             for &p in &plan.shared {
                 book.allocator.retain(p);
             }
-            let deficit = need - book.allocator.unreserved_pages();
+            let deficit = short(&book.allocator);
             if deficit <= book.pool.evictable_pages(&book.allocator, None) {
-                let evicted = book.pool.evict_pages(deficit, &mut book.allocator);
+                // demote-don't-discard: the reclaimed prefixes drop to
+                // the host tier where capacity allows
+                let evicted =
+                    book.pool.spill_pages(deficit, &mut book.allocator, &mut book.tier);
                 self.metrics.evictions += evicted as u64;
             }
             // else: genuine starvation — evicting the reclaimable few
@@ -552,14 +637,14 @@ impl KvCacheManager {
             for &p in &plan.shared {
                 book.allocator.release(p);
             }
-            if need > book.allocator.unreserved_pages() {
+            if short(&book.allocator) > 0 {
                 return false;
             }
         }
         let fresh = book
             .allocator
             .admit(plan.fresh, plan.reserve)
-            .expect("admission was gated on unreserved pages");
+            .expect("admission was gated on the overcommit budget");
         for &p in &plan.shared {
             book.allocator.retain(p);
         }
@@ -599,6 +684,8 @@ impl KvCacheManager {
         book.reserved[slot] = adm.reserve;
         book.prompts[slot] = adm.prompt;
         book.prefilled[slot] = false;
+        book.clock += 1;
+        book.seq[slot] = book.clock;
     }
 
     /// Record that `slot`'s prompt KV is fully written (the engine calls
@@ -633,7 +720,15 @@ impl KvCacheManager {
                  (pos {pos}) — lazy-growth accounting bug",
                 book.tables[slot].len(),
             );
-            let page = book.allocator.grow_reserved();
+            let Some(page) = book.allocator.try_grow_reserved() else {
+                // only reachable above overcommit factor 1.0 (strictly
+                // gated, a reservation always has a free page): the
+                // caller must preempt or reclaim before retrying
+                anyhow::bail!(
+                    "slot {slot} growth ran dry under overcommit (pos {pos}) — \
+                     preempt a victim or reclaim retained pages first"
+                );
+            };
             book.reserved[slot] -= 1;
             book.tables[slot].push(page);
             self.metrics.page_grows += 1;
@@ -667,7 +762,12 @@ impl KvCacheManager {
                  left (rows {rows}) — chunked-admission accounting bug",
                 book.tables[slot].len(),
             );
-            let page = book.allocator.grow_reserved();
+            let Some(page) = book.allocator.try_grow_reserved() else {
+                anyhow::bail!(
+                    "slot {slot} chunk growth ran dry under overcommit \
+                     (rows {rows}) — preempt a victim or reclaim first"
+                );
+            };
             book.reserved[slot] -= 1;
             book.tables[slot].push(page);
             self.metrics.page_grows += 1;
@@ -692,6 +792,7 @@ impl KvCacheManager {
         }
         book.shared[slot] = 0;
         book.prefilled[slot] = false;
+        book.seq[slot] = 0;
         if pages.is_empty() {
             return;
         }
@@ -701,6 +802,271 @@ impl KvCacheManager {
         } else {
             book.allocator.free(pages);
         }
+    }
+
+    // ---- two-tier hierarchy: overcommit swap + prefix demotion ----
+
+    /// Whether the host tier holds any capacity (always `false` on the
+    /// dense layout).
+    pub fn host_tier_enabled(&self) -> bool {
+        self.book.as_ref().is_some_and(|b| b.tier.enabled())
+    }
+
+    /// Host-tier movement counters (`None` on the dense layout).
+    pub fn host_tier_stats(&self) -> Option<&HostTierStats> {
+        self.book.as_ref().map(|b| b.tier.stats())
+    }
+
+    /// Bytes currently resident in the host tier (pinned + cached; 0 on
+    /// the dense layout or with the tier disabled).
+    pub fn host_tier_bytes(&self) -> usize {
+        self.book
+            .as_ref()
+            .map_or(0, |b| b.tier.pinned_bytes() + b.tier.cached_bytes())
+    }
+
+    /// Drain the tier's pending real-byte operations (the real engine
+    /// performs them at the tick's admission boundary, while demoted
+    /// device pages are freed-but-unwritten; the simulator discards
+    /// them).
+    pub fn take_host_ops(&mut self) -> Vec<HostOp> {
+        self.book.as_mut().map_or_else(Vec::new, |b| b.tier.take_ops())
+    }
+
+    /// Growth pages the KV writes in `growers` — `(slot, pos)` pairs,
+    /// one per slot about to write at `pos` — would collectively need
+    /// beyond what the free list can supply right now (0 = every
+    /// growth is safe).  Batched so free pages are not double-counted
+    /// across slots growing in the same step.  Only ever positive
+    /// above overcommit factor 1.0.
+    pub fn growth_deficit(&self, growers: &[(usize, usize)]) -> usize {
+        let Some(book) = &self.book else { return 0 };
+        let page_size = book.allocator.page_size();
+        let needed: usize = growers
+            .iter()
+            .map(|&(slot, pos)| {
+                (pos / page_size + 1).saturating_sub(book.tables[slot].len())
+            })
+            .sum();
+        needed.saturating_sub(book.allocator.free_pages())
+    }
+
+    /// The deterministic victim policy: among `candidates` (slot
+    /// indices), the **youngest-admitted** slot whose private pages
+    /// (past its shared prefix) all carry refcount 1 — never a CoW
+    /// donor with live sharers, whose pages could not actually leave
+    /// the device.  `None` when no candidate is eligible.
+    pub fn pick_victim(&self, candidates: &[usize]) -> Option<usize> {
+        let book = self.book.as_ref()?;
+        candidates
+            .iter()
+            .copied()
+            .filter(|&s| !book.tables[s].is_empty())
+            .filter(|&s| {
+                book.tables[s][book.shared[s]..]
+                    .iter()
+                    .all(|&p| book.allocator.refcount(p) == 1)
+            })
+            .max_by_key(|&s| book.seq[s])
+    }
+
+    /// The youngest-admitted slot among `candidates` with a live page
+    /// table, regardless of CoW sharing — the preemption order when
+    /// even the host tier cannot take a swap and the victim must be
+    /// requeued outright (releasing shared pages only drops refcounts,
+    /// so a plain requeue is always legal).
+    pub fn youngest_slot(&self, candidates: &[usize]) -> Option<usize> {
+        let book = self.book.as_ref()?;
+        candidates
+            .iter()
+            .copied()
+            .filter(|&s| !book.tables[s].is_empty())
+            .max_by_key(|&s| book.seq[s])
+    }
+
+    /// Preemptively swap `slot` out: pin its private page count to the
+    /// host tier under `key` (the request id; `payload` carries the
+    /// captured KV bytes on the real engine) and release the slot
+    /// without parking.  Returns the pages pinned, or `None` — tier
+    /// disabled, nothing private to move, or no pin headroom — with
+    /// the slot untouched (the caller falls back to a plain requeue,
+    /// which is always legal).
+    pub fn swap_out(
+        &mut self, slot: usize, key: u64, payload: Option<Vec<u8>>,
+    ) -> Option<usize> {
+        let book = self.book.as_mut()?;
+        let private = book.tables[slot].len().saturating_sub(book.shared[slot]);
+        if private == 0 || !book.tier.pin(key, private, payload) {
+            return None;
+        }
+        self.release(slot, false);
+        Some(private)
+    }
+
+    /// Device page ids private to `slot` (past its shared prefix) — the
+    /// pages whose bytes the real engine captures before a swap-out.
+    pub fn private_pages(&self, slot: usize) -> Vec<u32> {
+        self.book
+            .as_ref()
+            .map_or_else(Vec::new, |b| b.tables[slot][b.shared[slot]..].to_vec())
+    }
+
+    /// Re-admit a previously swapped request: release its host pin,
+    /// booking the host→device restore.  The pages themselves re-enter
+    /// through the ordinary admission + seed-replay path (bit-identical
+    /// regeneration); this is the accounting half.  `None` when `key`
+    /// holds no pin.
+    pub fn swap_in(&mut self, key: u64) -> Option<usize> {
+        let book = self.book.as_mut()?;
+        book.tier.unpin(key).map(|(pages, _payload)| pages)
+    }
+
+    /// Discard a swapped-out request's host copy without a restore (the
+    /// request was cancelled or drained while preempted).
+    pub fn drop_swapped(&mut self, key: u64) -> Option<usize> {
+        self.book.as_mut()?.tier.drop_pin(key)
+    }
+
+    /// Attach the real KV bytes the engine captured for a demoted tier
+    /// entry (the [`HostOp::Demote`] drain path).  Returns whether the
+    /// entry still exists.
+    pub fn attach_prefix_payload(&mut self, tokens: &[i32], payload: Vec<u8>) -> bool {
+        self.book
+            .as_mut()
+            .is_some_and(|b| b.tier.attach_prefix_payload(tokens, payload))
+    }
+
+    /// Host bytes one KV page occupies in the tier (0 on the dense
+    /// layout) — the unit every tier byte counter is denominated in.
+    pub fn host_tier_page_bytes(&self) -> usize {
+        self.book.as_ref().map_or(0, |b| b.tier.page_bytes())
+    }
+
+    /// Discard every host pin (engine `abort_all`).  Returns the pages
+    /// dropped.
+    pub fn drop_all_swapped(&mut self) -> usize {
+        self.book.as_mut().map_or(0, |b| b.tier.drop_all_pins())
+    }
+
+    /// Spill retained prefix pages to cover a growth `deficit` (demoted
+    /// to the host tier where capacity allows, evicted otherwise).
+    /// Returns the device pages reclaimed — the cheap first resort
+    /// before preemption.
+    pub fn reclaim_for_growth(&mut self, deficit: usize) -> usize {
+        let Some(book) = &mut self.book else { return 0 };
+        if deficit == 0 {
+            return 0;
+        }
+        let got = book.pool.spill_pages(deficit, &mut book.allocator, &mut book.tier);
+        self.metrics.evictions += got as u64;
+        got
+    }
+
+    /// Promote the host tier's best cached prefix for `prompt` back to
+    /// the device (the engine calls this for the queue head before its
+    /// admission phase, so `admissible_now`/`admit` see the promoted
+    /// entry through the ordinary pool lookup — no gate arithmetic
+    /// changes).  Gated like a warm preload: only when the tier's
+    /// coverage beats the device pool's and the *unreserved* free pool
+    /// can hold the pages.  Returns the pages promoted.
+    pub fn promote_for(&mut self, prompt: &[i32]) -> usize {
+        if !self.cfg.prefix_cache {
+            return 0;
+        }
+        let Some(book) = &mut self.book else { return 0 };
+        if !book.tier.enabled() {
+            return 0;
+        }
+        let page_size = book.allocator.page_size();
+        let Some(pages) = book.tier.peek_prefix(prompt) else { return 0 };
+        let device = book.pool.lookup(prompt, page_size).map_or(0, |h| h.pages);
+        if pages <= device || pages > book.allocator.unreserved_pages() {
+            return 0;
+        }
+        let Some(fresh) = book.allocator.alloc(pages) else { return 0 };
+        let (tokens, n) = book
+            .tier
+            .take_prefix(prompt, &fresh)
+            .expect("peek_prefix hit cannot miss on take");
+        debug_assert_eq!(n, pages);
+        // park() dedups against whatever the device pool already holds,
+        // freeing any duplicate pages it does not keep
+        book.pool.park(&tokens, fresh, page_size, &mut book.allocator);
+        pages
+    }
+
+    /// Export `prompt`'s retained prefix for the cluster store: an
+    /// already-staged host copy is cloned back directly (no device
+    /// traffic); otherwise the device pool's entry is *copied* into the
+    /// tier (device→host, booked — the device entry stays, so local
+    /// admissions are unaffected) and the device page ids are returned
+    /// for the real engine's byte capture.  `None` when there is
+    /// nothing to export or the tier cannot stage it — the tier is the
+    /// only path off the device, there is no side channel.
+    pub fn export_prefix(&mut self, prompt: &[i32]) -> Option<(PrefixKv, Vec<u32>)> {
+        if !self.cfg.prefix_cache {
+            return None;
+        }
+        let book = self.book.as_mut()?;
+        if !book.tier.enabled() {
+            return None;
+        }
+        let page_size = book.allocator.page_size();
+        let device = book.pool.lookup(prompt, page_size).map_or(0, |h| h.pages);
+        let staged = book.tier.peek_prefix(prompt).unwrap_or(0);
+        if staged >= device && staged > 0 {
+            let (tokens, pages, bytes) =
+                book.tier.clone_prefix(prompt).expect("peeked");
+            return Some((PrefixKv { tokens, pages, bytes }, Vec::new()));
+        }
+        if device == 0 {
+            return None;
+        }
+        let hit = book.pool.lookup(prompt, page_size).expect("device > 0");
+        let pages = book.pool.entry_pages(hit.idx)[..hit.pages].to_vec();
+        let tokens = prompt[..hit.pages * page_size].to_vec();
+        if !book.tier.ingest_prefix(&tokens, hit.pages, None, true) {
+            return None;
+        }
+        Some((
+            PrefixKv { tokens, pages: hit.pages, bytes: None },
+            pages,
+        ))
+    }
+
+    /// Cluster warm-start through the hierarchy: ingest the payload (or
+    /// a logical placeholder) into the host tier's cached class —
+    /// host-side, no device transfer — then promote it to the device on
+    /// the spot through [`Self::promote_for`]'s gated path.  With the
+    /// tier disabled this falls back to the PR-8 single-tier
+    /// [`Self::preload_prefix`] bit for bit.  Returns the pages that
+    /// reached the device (pages left staged host-side count 0, like a
+    /// declined preload — they can still promote on demand later).
+    pub fn warm_prefix_host(&mut self, prompt: &[i32], payload: Option<&PrefixKv>) -> usize {
+        if !self.cfg.prefix_cache {
+            return 0;
+        }
+        if self.book.is_none() {
+            return 0;
+        }
+        if !self.host_tier_enabled() {
+            return self.preload_prefix(prompt);
+        }
+        let book = self.book.as_mut().expect("checked above");
+        let page_size = book.allocator.page_size();
+        let full = prompt.len() / page_size;
+        if full == 0 {
+            return 0;
+        }
+        let (kv_pages, bytes) = match payload {
+            Some(kv) if kv.pages <= full && kv.pages > 0 => {
+                (kv.pages, kv.bytes.clone())
+            }
+            _ => (full, None),
+        };
+        book.tier
+            .ingest_prefix(&prompt[..kv_pages * page_size], kv_pages, bytes, false);
+        self.promote_for(prompt)
     }
 
     /// The `(B, pages_per_slot)` i32 block table for the current slot
@@ -737,6 +1103,7 @@ impl KvCacheManager {
         let Some(book) = &self.book else { return };
         book.allocator.audit();
         book.pool.audit(&book.allocator, book.allocator.page_size());
+        book.tier.audit();
         let mut reserved = 0usize;
         for (slot, table) in book.tables.iter().enumerate() {
             for &p in table {
@@ -1189,5 +1556,171 @@ mod tests {
         assert_eq!(mgr(41, cfg).preload_prefix(&[1; 40]), 0);
         let mut dense = KvCacheManager::dense(4, MAX, KvCacheConfig::default());
         assert_eq!(dense.preload_prefix(&[1; 40]), 0);
+    }
+
+    // ---- two-tier hierarchy: overcommit, swap, demote/promote ----
+
+    /// Page-16 geometry with an overcommit factor and a host tier of
+    /// `cap_pages` 64-byte pages.
+    fn tier_cfg(factor: f64, cap_pages: usize) -> KvCacheConfig {
+        KvCacheConfig {
+            overcommit_factor: factor,
+            host_tier: host_tier::HostTierConfig {
+                capacity_bytes: cap_pages * 64,
+                page_bytes: 64,
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn baseline_config_keeps_every_tier_path_inert() {
+        // factor 1.0 + zero-capacity tier: the PR-8 single-tier manager
+        let mut m = KvCacheManager::paged(4, 64, 9, PAGE, 4, KvCacheConfig::default());
+        assert!(!m.host_tier_enabled());
+        assert_eq!(m.host_tier_bytes(), 0);
+        assert_eq!(m.promote_for(&[1; 32]), 0);
+        assert!(m.export_prefix(&[1; 32]).is_none());
+        assert_eq!(m.growth_deficit(&[(0, 16)]), 0);
+        let prompt: Vec<i32> = (0..32).collect();
+        admit_install(&mut m, 0, &prompt, 16);
+        assert!(m.swap_out(0, 7, None).is_none(), "disabled tier never pins");
+        assert_eq!(m.drop_all_swapped(), 0);
+        m.release(0, true);
+        m.audit();
+    }
+
+    #[test]
+    fn overcommit_admits_past_free_then_swap_unblocks_growth() {
+        let mut m = KvCacheManager::paged(4, 64, 9, PAGE, 4, tier_cfg(1.5, 8));
+        let mut strict = KvCacheManager::paged(4, 64, 9, PAGE, 4, KvCacheConfig::default());
+        let a: Vec<i32> = (0..32).collect();
+        let b: Vec<i32> = (100..132).collect();
+        let d: Vec<i32> = (200..208).collect();
+        for m in [&mut m, &mut strict] {
+            admit_install(m, 0, &a, 32); // fresh 3 + reserve 1
+            admit_install(m, 1, &b, 32); // fresh 3 + reserve 1 → free 2
+        }
+        // D (1 fresh page, nothing reserved): the strict gate has zero
+        // unreserved headroom; the overcommit gate admits against the
+        // inflated watermark — and the sim mirrors both, head-exactly
+        let queued = [(d.as_slice(), 8usize)];
+        assert_eq!(strict.admissible_now(queued.iter().copied(), 1, 2), 0);
+        assert!(!strict.admit(&d, 8), "strict gate starves");
+        assert_eq!(m.admissible_now(queued.iter().copied(), 1, 2), 1);
+        admit_install(&mut m, 2, &d, 8);
+        assert_eq!(m.reservations(), Some(2), "ledger now exceeds free");
+        m.audit();
+        // slot 0 grows into the last free page; slot 1's growth then
+        // runs dry — the victim policy swaps the youngest slot out and
+        // the freed page un-dries the ledger
+        m.grow_to(0, 48).unwrap();
+        assert_eq!(m.growth_deficit(&[(1, 48)]), 1, "free list is dry");
+        assert_eq!(m.reclaim_for_growth(1), 0, "nothing retained to spill");
+        assert_eq!(m.pick_victim(&[2]), Some(2), "youngest private slot");
+        assert_eq!(m.swap_out(2, 99, None), Some(1), "one private page pinned");
+        assert_eq!(m.host_tier_bytes(), 64);
+        assert_eq!(m.growth_deficit(&[(1, 48)]), 0);
+        m.grow_to(1, 48).unwrap();
+        m.audit();
+        // the preempted request is cancelled while swapped: its host
+        // copy drops without a restore transfer
+        assert_eq!(m.drop_swapped(99), Some(1));
+        assert_eq!(m.host_tier_stats().unwrap().bytes_to_device, 0);
+        m.release(0, false);
+        m.release(1, false);
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable, "full conservation after the drain");
+        assert_eq!(m.reservations(), Some(0));
+        m.audit();
+    }
+
+    #[test]
+    fn pressure_demotes_retained_prefixes_and_promote_restores_them() {
+        let mut m = KvCacheManager::paged(4, 64, 8, PAGE, 4, tier_cfg(1.0, 8));
+        let hot: Vec<i32> = (0..32).collect();
+        let cold: Vec<i32> = (100..132).collect();
+        for p in [&hot, &cold] {
+            admit_install(&mut m, 0, p, 16);
+            m.release(0, true);
+        }
+        assert_eq!(m.retained_pages(), Some(4));
+        // a 4-page admission against 3 free: the LRU (hot) entry spills
+        // — wholesale, to the host tier — instead of being discarded
+        let stranger: Vec<i32> = (900..948).collect();
+        admit_install(&mut m, 0, &stranger, 16);
+        let tier = m.host_tier_stats().unwrap();
+        assert_eq!(tier.demoted_pages, 2, "whole hot entry demoted, not lost");
+        assert_eq!(m.host_tier_bytes(), 2 * 64);
+        assert_eq!(m.metrics().evictions, 2, "device-side reclaim still counted");
+        m.release(0, false);
+        // the hot prefix comes back through the gated promotion path
+        assert_eq!(m.promote_for(&hot), 2);
+        assert_eq!(m.host_tier_bytes(), 0);
+        assert_eq!(m.host_tier_stats().unwrap().bytes_to_device, 2 * 64);
+        admit_install(&mut m, 0, &hot, 16);
+        assert_eq!(m.metrics().prefix_hits, 1, "admission hit the promoted entry");
+        m.release(0, true);
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable);
+        m.audit();
+    }
+
+    #[test]
+    fn victim_policy_skips_cow_donors_with_live_sharers() {
+        let mut m = KvCacheManager::paged(4, 64, 9, PAGE, 4, tier_cfg(1.5, 8));
+        let prompt: Vec<i32> = (0..32).collect();
+        admit_install(&mut m, 0, &prompt, 16);
+        m.mark_prefilled(0);
+        admit_install(&mut m, 1, &prompt, 16); // shares slot 0's prefix
+        assert_eq!(m.metrics().shared_pages, 2);
+        // slot 0's prompt pages carry slot 1's references: not a victim
+        assert_eq!(m.pick_victim(&[0]), None, "donor with live sharers is safe");
+        assert_eq!(m.pick_victim(&[0, 1]), Some(1), "the sharer itself is fair game");
+        // the sharer's swap moves only its private (non-borrowed) page
+        assert_eq!(m.swap_out(1, 5, None), Some(1));
+        // with the sharer gone the donor's pages are private again
+        assert_eq!(m.pick_victim(&[0]), Some(0));
+        m.drop_swapped(5);
+        m.release(0, false);
+        let (reclaimable, usable) = m.page_budget().unwrap();
+        assert_eq!(reclaimable, usable);
+        m.audit();
+    }
+
+    #[test]
+    fn warm_and_export_route_through_the_tier() {
+        let mut m = KvCacheManager::paged(2, 64, 9, PAGE, 4, tier_cfg(1.0, 8));
+        let prompt: Vec<i32> = (0..40).collect(); // 2 full pages + remainder
+        // warm-start: wire → host tier → device, promotion booked
+        assert_eq!(m.warm_prefix_host(&prompt, None), 2);
+        assert_eq!(m.retained_pages(), Some(2), "pages reached the device pool");
+        let tier = m.host_tier_stats().unwrap();
+        assert_eq!(tier.ingested_pages, 2, "wire arrival booked as ingest");
+        assert_eq!(tier.bytes_to_device, 2 * 64, "promotion booked the upload");
+        assert_eq!(tier.bytes_to_host, 0, "nothing ever moved off the device");
+        // export stages a device→host copy (the device entry survives)
+        let (kv, device_pages) = m.export_prefix(&prompt).expect("retained entry");
+        assert_eq!((kv.pages, kv.bytes.is_none()), (2, true));
+        assert_eq!(device_pages.len(), 2, "page ids for the engine's capture");
+        assert_eq!(m.retained_pages(), Some(2), "export copies, never steals");
+        assert_eq!(m.host_tier_stats().unwrap().bytes_to_host, 2 * 64);
+        // a second export re-serves the staged host copy: no new bytes
+        let (kv2, pages2) = m.export_prefix(&prompt).expect("staged copy");
+        assert_eq!(kv2.pages, 2);
+        assert!(pages2.is_empty(), "no device capture needed");
+        assert_eq!(m.host_tier_stats().unwrap().bytes_to_host, 2 * 64);
+        // the warmed entry serves admissions exactly like a preload
+        admit_install(&mut m, 0, &prompt, 8);
+        assert_eq!(m.metrics().prefix_hits, 1);
+        m.release(0, true);
+        m.audit();
+        // with the tier disabled, warm falls back to PR-8 preload and
+        // export has no path off the device
+        let mut off = mgr(41, KvCacheConfig::default());
+        assert_eq!(off.warm_prefix_host(&prompt, None), 2);
+        assert_eq!(off.retained_pages(), Some(2));
+        assert_eq!(off.host_tier_bytes(), 0);
+        assert!(off.export_prefix(&prompt).is_none());
     }
 }

@@ -20,6 +20,16 @@
 //!   pages, so a grow request is always satisfiable from reserved
 //!   headroom — lazy growth can never deadlock (`free >= reserved` is a
 //!   structural invariant, asserted on every mutation).
+//! * **Overcommitted lazy growth** (PR 9): with an overcommit factor
+//!   `f > 1` ([`PageAllocator::set_overcommit`]) the admission gate
+//!   relaxes to `fresh + reserve <= floor(free * f) - reserved` —
+//!   `reserved` may exceed `free`, trading the deadlock-freedom
+//!   invariant for admitted width.  Growth can then genuinely run dry
+//!   ([`PageAllocator::try_grow_reserved`] returns `None`); the
+//!   coordinator must preempt a victim slot (swapping its pages to the
+//!   host tier, see `kvcache::host_tier`) to refill the free list
+//!   before converting the reservation.  At `f = 1.0` every gate and
+//!   assert reduces bit-identically to the strict ledger.
 //!
 //! Pages are **refcounted** so prompt-prefix pages can be shared
 //! copy-on-write across block tables: an admission that shares a
@@ -82,6 +92,9 @@ pub struct PageAllocator {
     /// Pages promised to in-flight slots for future growth; kept on the
     /// free list but excluded from admission ([`Self::unreserved_pages`]).
     reserved: usize,
+    /// Reservation-ledger overcommit factor (`>= 1.0`; `1.0` = strict
+    /// deadlock-free ledger).  See the module docs' overcommit bullet.
+    overcommit: f64,
     /// Total pages in the pool, including the reserved page.
     num_pages: usize,
     /// Rows per page.
@@ -104,9 +117,27 @@ impl PageAllocator {
             parked: vec![false; num_pages],
             retained: 0,
             reserved: 0,
+            overcommit: 1.0,
             num_pages,
             page_size,
         }
+    }
+
+    /// Set the reservation-ledger overcommit factor (`>= 1.0`).  At
+    /// `1.0` the allocator is the strict deadlock-free ledger; above it
+    /// `reserved` may exceed `free` up to the factor and growth can run
+    /// dry (see [`Self::try_grow_reserved`]).
+    pub fn set_overcommit(&mut self, factor: f64) {
+        assert!(
+            factor >= 1.0 && factor.is_finite(),
+            "overcommit factor must be a finite value >= 1.0, got {factor}"
+        );
+        self.overcommit = factor;
+    }
+
+    /// The configured reservation-ledger overcommit factor.
+    pub fn overcommit(&self) -> f64 {
+        self.overcommit
     }
 
     /// Rows per page.
@@ -134,12 +165,27 @@ impl PageAllocator {
         self.reserved
     }
 
-    /// Free pages available to *new* admissions: the free list minus the
-    /// growth headroom reserved by in-flight slots.  This is the
-    /// admission gate — gating on it is what makes growth deadlock-free.
+    /// Free pages available to *new* admissions under the **strict**
+    /// ledger: the free list minus the growth headroom reserved by
+    /// in-flight slots (saturating — under overcommit `reserved` may
+    /// legitimately exceed `free`).  Warm-page preloads gate on this
+    /// even when admission overcommits: parked prefix state must never
+    /// consume promised growth headroom.
     pub fn unreserved_pages(&self) -> usize {
-        debug_assert!(self.free.len() >= self.reserved, "reservation ledger corrupt");
-        self.free.len() - self.reserved
+        debug_assert!(
+            self.overcommit > 1.0 || self.free.len() >= self.reserved,
+            "reservation ledger corrupt"
+        );
+        self.free.len().saturating_sub(self.reserved)
+    }
+
+    /// Pages available to *new* admissions under the configured
+    /// overcommit factor: `floor(free * f) - reserved` (saturating).
+    /// At `f = 1.0` this is exactly [`Self::unreserved_pages`] — the
+    /// gate arithmetic is bit-identical to the strict ledger.
+    pub fn admission_budget(&self) -> usize {
+        let inflated = (self.free.len() as f64 * self.overcommit).floor() as usize;
+        inflated.saturating_sub(self.reserved)
     }
 
     /// Pages currently held by at least one slot (refcount ≥ 1 beyond
@@ -173,7 +219,11 @@ impl PageAllocator {
     /// `admit(worst_case, 0)`; lazy admission is `admit(initial,
     /// worst_case - initial - shared)`.
     pub fn admit(&mut self, fresh: usize, reserve: usize) -> Option<Vec<u32>> {
-        if fresh + reserve > self.unreserved_pages() {
+        if fresh + reserve > self.admission_budget() {
+            return None;
+        }
+        // only *reservations* overcommit — fresh pages must exist now
+        if fresh > self.free.len() {
             return None;
         }
         let pages = self.free.split_off(self.free.len() - fresh);
@@ -197,6 +247,9 @@ impl PageAllocator {
     ///
     /// Panics if no reservations exist at all: growing without a
     /// reservation is a coordinator bug that could deadlock admission.
+    /// Panics when growth runs dry — under the strict ledger that is a
+    /// corrupt ledger; under overcommit the coordinator must check
+    /// [`Self::try_grow_reserved`] (or preempt first) instead.
     pub fn grow_reserved(&mut self) -> u32 {
         assert!(self.reserved > 0, "grow without a reservation");
         assert!(!self.free.is_empty(), "reservation ledger corrupt: no free page");
@@ -205,6 +258,19 @@ impl PageAllocator {
         debug_assert_eq!(self.refs[p as usize], 0, "double allocation");
         self.refs[p as usize] = 1;
         p
+    }
+
+    /// [`Self::grow_reserved`] that reports dry growth instead of
+    /// panicking: `None` when the caller holds a reservation but the
+    /// free list is empty — the overcommitted ledger's preemption
+    /// signal.  Still panics when no reservation exists at all (that is
+    /// a coordinator bug under every policy).
+    pub fn try_grow_reserved(&mut self) -> Option<u32> {
+        assert!(self.reserved > 0, "grow without a reservation");
+        if self.free.is_empty() {
+            return None;
+        }
+        Some(self.grow_reserved())
     }
 
     /// Return `n` reservations to the unreserved pool (slot retired or
@@ -364,10 +430,22 @@ impl PageAllocator {
             self.usable_pages(),
             "free/outstanding/retained partition broken"
         );
-        assert!(
-            self.free_pages() >= self.reserved_pages(),
-            "reservation ledger overcommits the free list"
-        );
+        if self.overcommit <= 1.0 {
+            assert!(
+                self.free_pages() >= self.reserved_pages(),
+                "reservation ledger overcommits the free list"
+            );
+        } else {
+            // the overcommitted ledger is bounded by the factor over the
+            // whole usable pool (the admission-time gate is tighter; this
+            // is the coarse structural backstop)
+            let cap = (self.usable_pages() as f64 * self.overcommit).floor() as usize;
+            assert!(
+                self.reserved_pages() <= cap,
+                "reservation ledger exceeds the overcommit cap: {} > {cap}",
+                self.reserved_pages()
+            );
+        }
     }
 }
 
@@ -625,6 +703,78 @@ mod tests {
         a.evict(t[1]);
         assert_eq!(a.free_pages(), 4);
         a.audit();
+    }
+
+    // ---- overcommit watermark (two-tier hierarchy, PR 9) ----
+
+    /// At factor 1.0 the overcommit gate is arithmetic-identical to the
+    /// strict unreserved gate — the PR-8 baseline equivalence at the
+    /// allocator level.
+    #[test]
+    fn overcommit_factor_one_is_the_strict_gate() {
+        let mut a = PageAllocator::new(11, 4);
+        a.set_overcommit(1.0);
+        let t = a.admit(2, 5).unwrap();
+        assert_eq!(a.admission_budget(), a.unreserved_pages());
+        assert!(a.admit(4, 0).is_none(), "strict gate still refuses");
+        assert!(a.admit(2, 1).is_some());
+        // the strict ledger can never run dry: free >= reserved holds
+        assert!(a.free_pages() >= a.reserved_pages());
+        assert!(a.try_grow_reserved().is_some());
+        a.audit();
+        drop(t);
+    }
+
+    #[test]
+    fn overcommit_admits_reservations_beyond_free() {
+        let mut a = PageAllocator::new(9, 4); // 8 usable
+        a.set_overcommit(1.5);
+        // strict ledger: admit(1, 3) twice fills the pool (PR-3 test).
+        // at 1.5x a third lazy slot is admitted on promised-only pages.
+        let s1 = a.admit(1, 3).unwrap();
+        let s2 = a.admit(1, 3).unwrap();
+        assert_eq!(a.unreserved_pages(), 0, "strict headroom exhausted");
+        assert_eq!(a.admission_budget(), 3, "floor(6 * 1.5) - 6");
+        let s3 = a.admit(1, 2).unwrap();
+        assert!(a.reserved_pages() > a.free_pages(), "ledger overcommitted");
+        a.audit();
+        // growth converts until the free list runs dry, then reports it
+        let mut grown = Vec::new();
+        while let Some(p) = a.try_grow_reserved() {
+            grown.push(p);
+        }
+        assert!(a.free_pages() == 0 && a.reserved_pages() > 0, "growth ran dry");
+        // preemption-shaped relief: the victim (s3) frees its page and
+        // returns its untouched growth budget; growth resumes
+        a.free(s3);
+        a.unreserve(2);
+        let p = a.try_grow_reserved().expect("freed pages un-dry growth");
+        a.release(p);
+        a.free(s1);
+        a.free(s2);
+        a.free(grown);
+        a.unreserve(a.reserved_pages());
+        assert_eq!(a.free_pages(), 8);
+        a.audit();
+    }
+
+    #[test]
+    fn overcommit_never_hands_out_missing_fresh_pages() {
+        let mut a = PageAllocator::new(5, 4); // 4 usable
+        a.set_overcommit(2.0);
+        let t = a.alloc(3).unwrap();
+        // budget inflates to 2 but only 1 physical page exists
+        assert_eq!(a.admission_budget(), 2);
+        assert!(a.admit(2, 0).is_none(), "fresh pages must physically exist");
+        assert!(a.admit(1, 1).is_some(), "one fresh + one promised fits");
+        a.free(t);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite value >= 1.0")]
+    fn undercommit_factor_rejected() {
+        let mut a = PageAllocator::new(4, 4);
+        a.set_overcommit(0.5);
     }
 
     /// The satellite reclamation property at the allocator level: an

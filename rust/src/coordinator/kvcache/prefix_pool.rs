@@ -31,6 +31,7 @@
 //! duplicate pages instead of parking them, and a retiring extension of
 //! an existing entry grows that entry in place.
 
+use super::host_tier::HostTier;
 use super::pagetable::PageAllocator;
 
 /// One parked prompt prefix.  `tokens` always spans the entry's pages
@@ -238,6 +239,66 @@ impl PrefixPool {
         evicted
     }
 
+    /// Reclaim up to `want` parked pages like [`Self::evict_pages`],
+    /// but **demote** instead of discard where possible: an LRU entry
+    /// whose pages are all refcount-1 moves wholesale into the host
+    /// tier (tokens + device page ids — the real engine captures the
+    /// bytes through the tier's op log) before its device pages free,
+    /// so the prefix survives admission pressure one level down the
+    /// hierarchy.  Entries pinned by live sharers fall back to tail
+    /// truncation — a tail alone is not a valid token prefix, so it
+    /// cannot demote — and a tier refusal (capacity held by pins)
+    /// degrades to plain eviction.  With the tier disabled this *is*
+    /// [`Self::evict_pages`], bit for bit.  Returns the device pages
+    /// reclaimed.
+    pub fn spill_pages(
+        &mut self, want: usize, alloc: &mut PageAllocator, tier: &mut HostTier,
+    ) -> usize {
+        if !tier.enabled() {
+            return self.evict_pages(want, alloc);
+        }
+        let mut reclaimed = 0usize;
+        while reclaimed < want {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| {
+                    e.pages.last().is_some_and(|&p| alloc.refcount(p) == 1)
+                })
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i);
+            let Some(i) = victim else { break };
+            let whole =
+                self.entries[i].pages.iter().all(|&p| alloc.refcount(p) == 1);
+            if whole {
+                let e = self.entries.swap_remove(i);
+                tier.store_prefix(&e.tokens, &e.pages);
+                for &p in &e.pages {
+                    alloc.evict(p);
+                }
+                reclaimed += e.pages.len();
+            } else {
+                let e = &mut self.entries[i];
+                while reclaimed < want {
+                    match e.pages.last() {
+                        Some(&p) if alloc.refcount(p) == 1 => {
+                            alloc.evict(p);
+                            e.pages.pop();
+                            reclaimed += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                e.tokens.truncate(e.pages.len() * alloc.page_size());
+                if e.pages.is_empty() {
+                    self.entries.swap_remove(i);
+                }
+            }
+        }
+        reclaimed
+    }
+
     /// Drop every entry, releasing the pool's references (only used by
     /// tests/audits; serving keeps the pool alive for the next burst).
     #[cfg(test)]
@@ -382,6 +443,45 @@ mod tests {
         a.release(old_pages[0]); // sharer retires -> retained again
         assert_eq!(pool.evict_all(&mut a), 1);
         assert_eq!(pool.entries(), 0);
+        assert_eq!(a.retained_pages(), 0);
+        a.audit();
+    }
+
+    #[test]
+    fn spill_demotes_whole_entries_and_truncates_pinned_ones() {
+        use super::super::host_tier::{HostTier, HostTierConfig};
+        let mut a = PageAllocator::new(16, PS);
+        let cold: Vec<i32> = (100..108).collect(); // 2 pages, LRU-oldest
+        let (mut pool, cold_pages) = pool_with(&mut a, &cold);
+        let hot: Vec<i32> = (200..212).collect(); // 3 pages, newer
+        {
+            let n = hot.len().div_ceil(PS) + 1;
+            let pages = a.alloc(n).unwrap();
+            pool.park(&hot, pages, PS, &mut a);
+        }
+        assert_eq!(a.retained_pages(), 5);
+        // a live sharer pins the hot entry's head
+        let hot_head = pool.entry_pages(pool.lookup(&hot, PS).unwrap().idx)[0];
+        a.retain(hot_head);
+        let mut tier =
+            HostTier::new(HostTierConfig { capacity_bytes: 1024, page_bytes: 64 });
+        // want 4: the cold entry (all refcount-1) demotes wholesale,
+        // the pinned hot entry only truncates its refcount-1 tail
+        let got = pool.spill_pages(4, &mut a, &mut tier);
+        assert_eq!(got, 4);
+        assert_eq!(tier.stats().demoted_pages, 2, "only the whole entry demoted");
+        assert_eq!(tier.peek_prefix(&cold), Some(2), "cold prefix survives on host");
+        assert!(tier.peek_prefix(&hot).is_none(), "truncated tail cannot demote");
+        assert_eq!(a.refcount(cold_pages[0]), 0, "demoted device pages freed");
+        assert_eq!(pool.lookup(&hot, PS).unwrap().pages, 1, "hot head survives");
+        a.release(hot_head);
+        a.audit();
+        pool.audit(&a, PS);
+        // disabled tier degrades to plain eviction
+        let mut off = HostTier::new(HostTierConfig::default());
+        let got = pool.spill_pages(1, &mut a, &mut off);
+        assert_eq!(got, 1);
+        assert_eq!(off.stats().demoted_pages, 0);
         assert_eq!(a.retained_pages(), 0);
         a.audit();
     }

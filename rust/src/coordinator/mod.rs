@@ -14,7 +14,10 @@
 //! * [`kvcache`]  — the KV-cache manager: page allocator + reservation
 //!   ledger ([`kvcache::pagetable`]), lazy growth, copy-on-write prefix
 //!   sharing, and the LRU-evicted retained prefix pool, behind the
-//!   narrow admit/install/grow/release API the engine drives.
+//!   narrow admit/install/grow/release API the engine drives — plus
+//!   the host memory tier ([`kvcache::host_tier`]) those lean on for
+//!   overcommit (preemptive swap-out under reservation pressure),
+//!   prefix-pool spill, and cross-replica prefix-KV staging.
 //! * [`sampling`] — per-request greedy/temperature/top-k token
 //!   sampling over one logits row (slot-isolated rng streams).
 //! * [`expert_stats`] — per-expert routing load telemetry (the paper's
@@ -64,8 +67,11 @@ pub use frontend::{
 };
 pub use sampling::sample_logits;
 pub use expert_stats::ExpertStats;
+pub use kvcache::host_tier::{
+    HostOp, HostTier, HostTierConfig, HostTierStats, PrefixKv,
+};
 pub use kvcache::pagetable;
 pub use kvcache::pagetable::{PageAllocator, RESERVED_PAGE};
 pub use kvcache::{KvCacheConfig, KvCacheManager, KvLayout, KvMetrics};
 pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};
-pub use scheduler::{MixedStep, Scheduler, SchedulerConfig};
+pub use scheduler::{adaptive_chunk_budget, MixedStep, Scheduler, SchedulerConfig};

@@ -49,12 +49,17 @@ pub struct Request {
     pub params: SamplingParams,
     /// Submission timestamp (TTFT/latency baseline).
     pub arrived: Instant,
+    /// Tokens already streamed to the client before a preemption.  A
+    /// fresh submission has 0; a preempted-and-requeued request carries
+    /// the count forward so the seed-replay suppresses the first
+    /// `emitted` regenerated tokens (exactly-once delivery).
+    pub emitted: usize,
 }
 
 impl Request {
     /// New request arriving now.
     pub fn new(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
-        Request { id: RequestId(id), prompt, params, arrived: Instant::now() }
+        Request { id: RequestId(id), prompt, params, arrived: Instant::now(), emitted: 0 }
     }
 }
 

@@ -60,6 +60,36 @@ impl MixedStep {
     }
 }
 
+/// Adaptive prefill chunk budget (chunked-prefill mode, behind the
+/// engines' `adaptive_chunking` knob): size this step's prompt-token
+/// budget from the observed prompt-token arrival rate (the front-end's
+/// intake window, see `ServingEngine::note_prompt_load`) and the live
+/// decode population, instead of the fixed `base` budget.
+///
+/// Shape: the arrival rate — measured in units of base budgets per
+/// second — scales the budget *up* (a prompt burst widens chunks so the
+/// prefill backlog drains) while the decode share of the batch scales
+/// it *down* (a busy decode batch keeps chunks narrow to protect TPOT).
+/// The result is clamped to `[page_size, 4 * base]`: every chunk still
+/// covers at least one KV page (the chunk-config validity floor), and a
+/// burst can never starve decode entirely.
+///
+/// A pure, total function of its arguments — the budget schedule is
+/// pinned exactly in the tests below.
+pub fn adaptive_chunk_budget(
+    base: usize, page_size: usize, prompt_tokens_per_s: f64,
+    decode_population: usize, width: usize,
+) -> usize {
+    let base = base.max(1);
+    let width = width.max(1);
+    let decode_frac = decode_population.min(width) as f64 / width as f64;
+    let demand = (prompt_tokens_per_s / base as f64).clamp(0.0, 3.0);
+    let scaled = base as f64 * (1.0 + demand) * (1.0 - 0.75 * decode_frac);
+    let floor = page_size.max(1);
+    let cap = (4 * base).max(floor);
+    (scaled as usize).clamp(floor, cap)
+}
+
 /// Pure decision function over the observable batch state.
 #[derive(Clone, Debug)]
 pub struct Scheduler {
@@ -247,6 +277,63 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn adaptive_budget_closed_form_pins() {
+        // demand is measured in base budgets per second; decode share
+        // multiplies the result down — every case below is exact in f64
+        assert_eq!(adaptive_chunk_budget(16, 8, 0.0, 0, 4), 16, "idle = base");
+        assert_eq!(adaptive_chunk_budget(16, 8, 16.0, 0, 4), 32, "demand 1 doubles");
+        assert_eq!(adaptive_chunk_budget(16, 8, 1e9, 0, 4), 64, "capped at 4x base");
+        assert_eq!(
+            adaptive_chunk_budget(16, 8, 0.0, 4, 4),
+            8,
+            "full decode batch floors at one page"
+        );
+        assert_eq!(
+            adaptive_chunk_budget(16, 8, 16.0, 2, 4),
+            20,
+            "half-decode burst: 32 * 0.625"
+        );
+        // degenerate geometries stay total: zero width, page floor above
+        // the cap, garbage rates
+        assert_eq!(adaptive_chunk_budget(16, 8, 0.0, 0, 0), 16);
+        assert_eq!(adaptive_chunk_budget(2, 32, 0.0, 0, 4), 32, "floor wins over cap");
+        assert_eq!(adaptive_chunk_budget(16, 8, f64::NAN, 0, 4), 8, "NaN rate floors");
+    }
+
+    #[test]
+    fn adaptive_budget_schedule_on_a_bursty_trace() {
+        use crate::coordinator::trace::{generate, load_summary, Arrival, TraceConfig};
+        let trace = generate(&TraceConfig {
+            n: 96,
+            arrival: Arrival::Bursty { calm_rate: 2.0, burst_rate: 40.0, dwell_s: 0.5 },
+            seed: 9,
+            ..Default::default()
+        });
+        let load = load_summary(&trace, 0.5);
+        assert!(load.prompt_tokens_per_s > 0.0, "bursty trace offers prompt work");
+        let (base, page, width) = (16, 8, 4);
+        // the budget schedule over the decode population at the trace's
+        // mean prompt rate: monotone non-increasing in decode share,
+        // always within [page, 4 * base]
+        let sched: Vec<usize> = (0..=width)
+            .map(|d| adaptive_chunk_budget(base, page, load.prompt_tokens_per_s, d, width))
+            .collect();
+        for pair in sched.windows(2) {
+            assert!(pair[0] >= pair[1], "budget must shrink with decode load: {sched:?}");
+        }
+        for &b in &sched {
+            assert!((page..=4 * base).contains(&b), "clamp violated: {sched:?}");
+        }
+        // a burst widens the budget relative to the calm mean
+        let calm = adaptive_chunk_budget(base, page, load.prompt_tokens_per_s, 0, width);
+        let burst = adaptive_chunk_budget(base, page, load.peak_tokens_per_s, 0, width);
+        assert!(
+            burst >= calm,
+            "peak-rate budget {burst} below mean-rate budget {calm}"
+        );
     }
 
     #[test]

@@ -153,6 +153,9 @@ fn serve(args: &[String]) -> Result<()> {
         .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)")
         .switch("chunked", "chunked prefill: co-schedule prompt chunks with decode steps")
         .flag("chunk-tokens", "16", "per-step prefill token budget (chunked mode)")
+        .switch("adaptive-chunking", "size the prefill chunk budget from observed load (chunked mode)")
+        .flag("overcommit-factor", "1", "admit KV reservations up to free-pages × this factor (1 = strict)")
+        .flag("host-tier-mb", "0", "host KV tier capacity in MiB for swap/spill (0 = off)")
         .switch("stream", "per-token streaming: report time-to-first-streamed-token")
         .flag("replicas", "1", "engine replicas behind the prefix-affinity router")
         .flag("kill-replica-at-ms", "0", "kill replica 0 at this wall time (0 = off; needs --replicas > 1)");
@@ -163,6 +166,9 @@ fn serve(args: &[String]) -> Result<()> {
         expert_telemetry: true,
         chunked_prefill: a.get_bool("chunked"),
         prefill_chunk_tokens: a.get_usize("chunk-tokens"),
+        adaptive_chunking: a.get_bool("adaptive-chunking"),
+        overcommit_factor: a.get_f64("overcommit-factor"),
+        host_tier_bytes: a.get_usize("host-tier-mb") * 1024 * 1024,
         ..Default::default()
     };
     let replicas = a.get_usize("replicas").max(1);
@@ -266,12 +272,17 @@ fn serve(args: &[String]) -> Result<()> {
         );
         let st = &crep.store;
         println!(
-            "prefix store: {} uploads ({} pages / {})  {} probe hits  \
-             {} pages warm-started ({})",
+            "prefix store: {} offers ({} pages stored)  {} probe hits  \
+             {} pages warm-started",
+            st.offers, st.stored_pages, st.hits, st.warmed_pages,
+        );
+        println!(
+            "prefix store KV bytes: {} uploads ({} pages / {})  \
+             {} downloads ({} pages / {})",
             st.uploads,
             st.uploaded_pages,
             scattermoe::metrics::fmt_bytes(st.uploaded_bytes),
-            st.hits,
+            st.downloads,
             st.downloaded_pages,
             scattermoe::metrics::fmt_bytes(st.downloaded_bytes),
         );
@@ -368,6 +379,19 @@ fn serve(args: &[String]) -> Result<()> {
             m.evictions,
             engine.retained_pages().unwrap_or(0)
         );
+    }
+    if let Some(ts) = engine.host_tier_stats() {
+        if m.preemptions > 0 || ts.bytes_to_host > 0 || ts.bytes_to_device > 0 {
+            println!(
+                "host tier: {} preemptions / {} swap-ins   resident {}   \
+                 to-host {}  to-device {}",
+                m.preemptions,
+                m.swap_ins,
+                scattermoe::metrics::fmt_bytes(engine.host_tier_bytes() as u64),
+                scattermoe::metrics::fmt_bytes(ts.bytes_to_host),
+                scattermoe::metrics::fmt_bytes(ts.bytes_to_device),
+            );
+        }
     }
     // load-balance skew from the decode artifact's expert-counts output
     // (absent on artifact dirs that predate it — nothing to report then)

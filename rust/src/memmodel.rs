@@ -365,6 +365,107 @@ impl KvCacheShape {
         1 + (usable - need) / (need - shared)
     }
 
+    // ---- overcommitted admission: width vs preemption tail latency ----
+
+    /// Pages the overcommitted reservation ledger may promise:
+    /// `floor(usable × factor)` (pagetable.rs `admission_budget` with an
+    /// empty ledger).  `factor = 1.0` is the strict deadlock-free gate.
+    pub fn overcommit_budget(&self, factor: f64) -> usize {
+        assert!(factor >= 1.0 && factor.is_finite(), "factor must be >= 1.0");
+        (self.pool_usable_pages() as f64 * factor).floor() as usize
+    }
+
+    /// Admitted width under the overcommitted ledger (lazy admission +
+    /// prefix sharing).  Two constraints bind, mirroring
+    /// `PageAllocator::admit`: the *ledger* — whole-lifetime
+    /// commitments fit `floor(usable × factor)` — and the *fresh* pages
+    /// resident at admission (prompt pages + one decode page, minus the
+    /// shared prefix), which must exist on device and never overcommit.
+    /// At `factor = 1.0` this reduces exactly to
+    /// [`Self::admitted_width`]; above it the ledger constraint
+    /// relaxes, so decode-heavy requests (small fresh, large reserve)
+    /// gain width while prompt-heavy ones stay fresh-capped.
+    pub fn overcommitted_width(
+        &self, prompt_len: usize, max_new: usize, shared_prefix: usize, factor: f64,
+    ) -> usize {
+        let need = self.request_commitment(prompt_len, max_new);
+        let usable = self.pool_usable_pages();
+        let budget = self.overcommit_budget(factor);
+        if need > budget {
+            return 0;
+        }
+        let prompt_pages = prompt_len.max(1).min(self.max_len).div_ceil(self.page_size);
+        let fresh = (prompt_pages + 1).min(need);
+        let shared = (shared_prefix.min(prompt_len) / self.page_size).min(need - 1);
+        if fresh > usable {
+            return 0; // fresh pages must exist even when the ledger would allow
+        }
+        let w_budget = 1 + (budget - need) / (need - shared);
+        let w_fresh = 1 + (usable - fresh) / (fresh - shared).max(1);
+        w_budget.min(w_fresh)
+    }
+
+    /// Victims a steady state at `width` identical in-flight requests
+    /// must preempt for the whole cohort to reach full decode depth:
+    /// the full-depth page demand beyond the device pool, over the
+    /// private pages one preemption reclaims.  Zero whenever the
+    /// demand fits — in particular at every width the strict gate
+    /// admits, which is why `factor = 1.0` keeps the preemption
+    /// machinery provably inert.
+    pub fn preempted_victims(
+        &self, prompt_len: usize, max_new: usize, shared_prefix: usize, width: usize,
+    ) -> usize {
+        if width == 0 {
+            return 0;
+        }
+        let need = self.request_commitment(prompt_len, max_new);
+        let shared = (shared_prefix.min(prompt_len) / self.page_size).min(need - 1);
+        let demand = need + (width - 1) * (need - shared);
+        demand.saturating_sub(self.pool_usable_pages()).div_ceil(need - shared)
+    }
+
+    /// Host-tier bytes that pin every victim's private pages during the
+    /// swap (K and V over all layers): the capacity floor below which
+    /// preemptions degrade to plain requeues.
+    pub fn host_tier_pin_bytes(
+        &self, prompt_len: usize, max_new: usize, shared_prefix: usize, victims: usize,
+    ) -> usize {
+        let need = self.request_commitment(prompt_len, max_new);
+        let shared = (shared_prefix.min(prompt_len) / self.page_size).min(need - 1);
+        2 * self.layers * victims * (need - shared) * self.page_size * self.row_bytes()
+    }
+
+    /// Worst-victim latency multiplier — the p99 proxy the serve bench
+    /// reports as `serve overcommit p99 TTFT`.  Every preemption
+    /// replays the victim's prompt prefill and decoded-so-far tokens
+    /// from the seed; in the worst case that is the whole request,
+    /// once per time the unluckiest request is chosen (victims spread
+    /// over the cohort, so `ceil(victims / width)` times).  `1.0` when
+    /// nothing preempts.
+    pub fn tail_latency_multiplier(&self, victims: usize, width: usize) -> f64 {
+        if width == 0 || victims == 0 {
+            return 1.0;
+        }
+        1.0 + victims.div_ceil(width) as f64
+    }
+
+    /// The two-tier tradeoff curve: for each overcommit factor,
+    /// `(factor, admitted width, worst-victim tail multiplier)`.  Width
+    /// buys throughput; the multiplier is the tail-latency price paid
+    /// in preemption replays — both non-decreasing in the factor.
+    pub fn width_latency_tradeoff(
+        &self, prompt_len: usize, max_new: usize, shared_prefix: usize, factors: &[f64],
+    ) -> Vec<(f64, usize, f64)> {
+        factors
+            .iter()
+            .map(|&f| {
+                let w = self.overcommitted_width(prompt_len, max_new, shared_prefix, f);
+                let v = self.preempted_victims(prompt_len, max_new, shared_prefix, w);
+                (f, w, self.tail_latency_multiplier(v, w))
+            })
+            .collect()
+    }
+
     // ---- retained prefix pool (prefix caching with LRU eviction) ----
 
     /// Prompt pages a fresh admission must *write* when the leading
@@ -622,5 +723,78 @@ mod tests {
             KvCacheShape { max_len: 16, page_size: 16, slots: 1, ..kv }.admitted_width(16, 16, 0),
             0
         );
+    }
+
+    #[test]
+    fn overcommitted_width_reduces_to_strict_at_factor_one() {
+        // the PR-9 acceptance bound, in model form: factor 1.0 must be
+        // bit-identical to the pre-hierarchy admission gate
+        let kv = KvCacheShape::serve_default();
+        for &(p, b, s) in &[(120, 40, 0), (120, 40, 112), (8, 120, 0), (30, 16, 16)] {
+            assert_eq!(
+                kv.overcommitted_width(p, b, s, 1.0),
+                kv.admitted_width(p, b, s),
+                "strict gate diverged at ({p},{b},{s})"
+            );
+            let w = kv.admitted_width(p, b, s);
+            assert_eq!(kv.preempted_victims(p, b, s, w), 0,
+                       "strict widths must never need preemption");
+        }
+    }
+
+    #[test]
+    fn overcommit_buys_width_for_decode_heavy_requests_only() {
+        let kv = KvCacheShape::serve_default(); // 40 usable pages
+        // decode-heavy: 1 prompt page + 7 reserved -> reservations
+        // dominate, so inflating the ledger doubles the width
+        assert_eq!(kv.overcommitted_width(8, 120, 0, 1.0), 5);
+        assert_eq!(kv.overcommitted_width(8, 120, 0, 2.0), 10);
+        // prompt-heavy: 9 of 10 pages are fresh at admission — fresh
+        // pages never overcommit, so the factor buys nothing
+        assert_eq!(kv.overcommitted_width(120, 40, 0, 1.0), 4);
+        assert_eq!(kv.overcommitted_width(120, 40, 0, 2.0), 4);
+        // sharing shrinks the fresh side too, re-opening the gain
+        assert!(kv.overcommitted_width(120, 40, 112, 2.0)
+                > kv.overcommitted_width(120, 40, 112, 1.0));
+    }
+
+    #[test]
+    fn width_latency_tradeoff_is_monotone_and_priced() {
+        let kv = KvCacheShape::serve_default();
+        let factors = [1.0, 1.5, 2.0, 3.0, 4.0];
+        let curve = kv.width_latency_tradeoff(8, 120, 0, &factors);
+        assert_eq!(curve.len(), factors.len());
+        assert_eq!(curve[0].2, 1.0, "strict gate pays no tail latency");
+        let (mut lw, mut lm) = (0usize, 0.0f64);
+        for &(f, w, m) in &curve {
+            assert!(w >= lw, "width must be non-decreasing (f={f})");
+            assert!(m >= lm, "tail multiplier must be non-decreasing (f={f})");
+            lw = w;
+            lm = m;
+        }
+        // the tradeoff is real: more width AND a worse tail at the top
+        assert!(curve[4].1 > curve[0].1);
+        assert!(curve[4].2 > 1.0, "overcommit must price its preemptions");
+        // victims at the widest point: demand 8*w beyond 40 usable
+        let v = kv.preempted_victims(8, 120, 0, curve[4].1);
+        assert!(v > 0);
+        // and the host tier that pins them is a concrete byte figure
+        let pin = kv.host_tier_pin_bytes(8, 120, 0, v);
+        assert_eq!(pin, 2 * kv.layers * v * 8 * kv.page_size * kv.row_bytes());
+    }
+
+    #[test]
+    fn preempted_victims_count_page_deficit_exactly() {
+        let kv = KvCacheShape::serve_default(); // 40 usable
+        // (8,120): commitment 8 pages, no sharing.  width 10 demands 80
+        // pages at full depth; the 40-page deficit is 5 victims of 8
+        assert_eq!(kv.preempted_victims(8, 120, 0, 10), 5);
+        // shared prefixes count once: (120,40,112) at width 16 demands
+        // 10 + 15*3 = 55; deficit 15 over 3-page victims = 5
+        assert_eq!(kv.preempted_victims(120, 40, 112, 16), 5);
+        assert_eq!(kv.preempted_victims(8, 120, 0, 0), 0, "empty cohort");
+        assert_eq!(kv.tail_latency_multiplier(0, 10), 1.0);
+        assert_eq!(kv.tail_latency_multiplier(5, 10), 2.0, "one replay each");
+        assert_eq!(kv.tail_latency_multiplier(25, 10), 4.0, "three replays worst");
     }
 }

@@ -12,7 +12,11 @@
 //! (`free + outstanding + retained == usable`), the loop never
 //! deadlocks, nothing strands a slot or a reservation, and every
 //! request that completes in both the chaos run and a fault-free run of
-//! the same seed produces bit-identical tokens.
+//! the same seed produces bit-identical tokens.  Its two-tier twin
+//! (`prop_chaos_preemption_conserves_pages_and_tokens`) runs the same
+//! schedules on a page-starved overcommitted pool with a host swap
+//! tier and additionally audits host-tier conservation and
+//! preemption-replay token equality after every step.
 
 use std::collections::BTreeMap;
 
@@ -122,6 +126,8 @@ struct ChaosRun {
     report: ServeReport,
     completed: BTreeMap<u64, Vec<i32>>,
     prefill_chunks: u64,
+    preemptions: u64,
+    swap_ins: u64,
 }
 
 /// Drive one full seeded run: open-loop arrivals, a 7% chance of
@@ -132,7 +138,19 @@ struct ChaosRun {
 fn run_chaos(
     seed: u64, flavor: u64, chunked: bool, faults: Option<FaultInjector>,
 ) -> ChaosRun {
-    let mut engine = SimEngine::new(sim_config(chunked));
+    run_chaos_cfg(seed, flavor, sim_config(chunked), faults)
+}
+
+/// [`run_chaos`] with an explicit sim geometry — the overcommit
+/// property runs a page-starved pool with preemptive swap against a
+/// roomy strict-gate pool over the same schedule.  `audit()` inside the
+/// loop covers both tiers: device
+/// `free + outstanding + retained == usable` and host
+/// `pinned + cached + free == capacity` after every single step.
+fn run_chaos_cfg(
+    seed: u64, flavor: u64, sim: SimEngineConfig, faults: Option<FaultInjector>,
+) -> ChaosRun {
+    let mut engine = SimEngine::new(sim);
     if let Some(f) = faults {
         engine.inject_faults(f);
     }
@@ -176,10 +194,22 @@ fn run_chaos(
         "pages stranded after run (seed {seed}): {reclaimable}/{usable}"
     );
     assert_eq!(fe.engine().page_reservations(), Some(0), "reservations stranded");
+    // host-tier pin conservation: every preemptive swap-out was either
+    // swapped back in or dropped with its request — no pin outlives the
+    // run (demoted prefix pages may legitimately stay cached)
+    if let Some(stats) = fe.engine().host_tier_stats() {
+        assert_eq!(
+            stats.swapped_out_pages,
+            stats.swapped_in_pages + stats.dropped_pin_pages,
+            "host-tier pins stranded after run (seed {seed})"
+        );
+    }
     ChaosRun {
         report: fe.report(),
         completed: completed_tokens(fe.outcomes()),
         prefill_chunks: fe.engine().metrics.prefill_chunks,
+        preemptions: fe.engine().metrics.preemptions,
+        swap_ins: fe.engine().metrics.swap_ins,
     }
 }
 
@@ -259,6 +289,79 @@ fn prop_chaos_mixed_phase_conserves_pages() {
             )?;
             Ok(())
         },
+    );
+}
+
+/// THE two-tier memory acceptance property: under the same random
+/// seeded schedules (arrivals, cancels, deadline expiries), a
+/// page-starved pool running with reservation overcommit and a host
+/// swap tier — where decode growth running dry preempts the youngest
+/// non-donor decode into the host tier and re-admits it later under
+/// seed replay — conserves both tiers after EVERY step (device
+/// `free + outstanding + retained == usable`, host
+/// `pinned + cached + free == capacity`, both audited inside
+/// `run_chaos_cfg`), strands no host pin, loses no outcome, and every
+/// request completing in both the overcommitted run and a roomy
+/// strict-gate run of the same schedule carries bit-identical tokens —
+/// preemption must never shift, duplicate or alter a token.  The
+/// strict-gate run must never preempt at all (factor 1.0 + empty tier
+/// is the inert baseline).
+#[test]
+fn prop_chaos_preemption_conserves_pages_and_tokens() {
+    let preemptions = std::cell::Cell::new(0u64);
+    let swap_ins = std::cell::Cell::new(0u64);
+    check(
+        30,
+        PairGen(U64Range(0, 1 << 20), U64Range(0, 4)),
+        |&(seed, flavor)| {
+            // roomy strict-gate baseline: same schedule, no overcommit
+            let roomy = run_chaos_cfg(
+                seed,
+                flavor,
+                SimEngineConfig { num_pages: 41, ..Default::default() },
+                None,
+            );
+            prop_assert(roomy.report.fatal.is_none(), "roomy strict run halted")?;
+            prop_assert(
+                roomy.preemptions == 0 && roomy.swap_ins == 0,
+                "strict gate must keep the preemption machinery inert",
+            )?;
+            // page-starved overcommitted pool with a host swap tier
+            let tight = run_chaos_cfg(
+                seed,
+                flavor,
+                SimEngineConfig {
+                    num_pages: 13,
+                    overcommit_factor: 3.0,
+                    host_tier_bytes: 1 << 20,
+                    ..Default::default()
+                },
+                None,
+            );
+            preemptions.set(preemptions.get() + tight.preemptions);
+            swap_ins.set(swap_ins.get() + tight.swap_ins);
+            for (tag, tokens) in &tight.completed {
+                if let Some(base) = roomy.completed.get(tag) {
+                    prop_assert(
+                        tokens == base,
+                        "preempted-and-resumed request diverged from strict-run tokens",
+                    )?;
+                }
+            }
+            prop_assert(
+                roomy.report.accounted() == 24 && tight.report.accounted() == 24,
+                "overcommit outcome accounting lost arrivals",
+            )?;
+            Ok(())
+        },
+    );
+    // the schedules must actually exercise the swap path, not just
+    // tolerate it
+    assert!(
+        preemptions.get() > 0 && swap_ins.get() > 0,
+        "no schedule exercised preemptive swap ({} preemptions / {} swap-ins)",
+        preemptions.get(),
+        swap_ins.get(),
     );
 }
 

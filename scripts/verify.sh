@@ -28,7 +28,10 @@ cargo test -q
 # chunk/decode interleavings of the PR-7 random-walk properties.  The
 # suite also carries the PR-8 multi-replica layer (replica-kill
 # schedules over the SimCluster: drain → re-offer → bit-identical
-# replay, per-replica conservation), pinned under the same seeds.
+# replay, per-replica conservation), pinned under the same seeds, and
+# the PR-9 two-tier property (overcommitted ledger: preemptive swap to
+# the host tier conserves both tiers' pages and replays preempted
+# requests' tokens bit-identically; the strict factor stays inert).
 echo "== tier-1: seeded chaos suite (fixed seeds) =="
 SCATTERMOE_TEST_SEED=12648430 cargo test -q --test chaos_props
 SCATTERMOE_TEST_SEED=3735928559 cargo test -q --test chaos_props
@@ -70,10 +73,12 @@ expected = {
          "serve chunked TTFT p50", "serve chunked TTFT p99",
          "serve chunked TPOT p50", "serve chunked TPOT p99",
          "serve replicas goodput", "serve replicas p99 TTFT",
-         "serve replicas reroute count"],
+         "serve replicas reroute count",
+         "serve overcommit admitted width", "serve overcommit p99 TTFT"],
     "bench_reports/BENCH_memory.json":
         ["kv dense (worst case)", "kv paged ctx=", "kv admitted width",
-         "kv retained pool bytes", "kv hot-prompt pages written"],
+         "kv retained pool bytes", "kv hot-prompt pages written",
+         "kv host tier bytes"],
 }
 ok = True
 for path, needles in expected.items():
