@@ -45,7 +45,9 @@ fn main() -> Result<()> {
         .flag("replicas", "2", "multi-replica pass: engines behind the prefix-affinity router (<2 = skip)")
         .flag("kill-replica-at-ms", "0", "multi-replica pass: kill replica 0 at this wall time (0 = off)")
         .flag("overcommit-factor", "2", "overcommit pass: reservation-ledger watermark (1 = strict gate)")
-        .flag("host-tier-mb", "8", "overcommit pass: host-tier capacity for preemptive swap (MiB)");
+        .flag("host-tier-mb", "8", "overcommit pass: host-tier capacity for preemptive swap (MiB)")
+        .flag("ep-degree", "2", "expert-parallel pass: simulated mesh devices (<2 = skip)")
+        .flag("rebalance-cv", "0.25", "expert-parallel pass: device-load CV that triggers hot-expert replication (0 = off)");
     let a = cli.parse();
 
     let rt = std::sync::Arc::new(Runtime::open(&scattermoe::default_artifact_dir())?);
@@ -477,6 +479,83 @@ fn main() -> Result<()> {
             ),
             Measurement::scalar("serve overcommit preemptions", om.preemptions as f64),
         ]);
+    }
+    // expert-parallel pass: the SAME arrival schedule through an engine
+    // that shards its experts over a simulated D-device mesh and feeds
+    // the decode artifact's per-expert counts to the placement layer.
+    // The mesh is observational — tokens are bit-identical to the main
+    // pass — but its cost model scores every step serially vs shortcut-
+    // overlapped and its rebalancer replicates hot experts.  CI gates
+    // the overlap-ratio / comm-bytes / load-CV keys.
+    let ep_degree = a.get_usize("ep-degree");
+    if ep_degree > 1 {
+        let rebalance_cv = a.get_f64("rebalance-cv").max(0.0);
+        let mut ep_engine = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                expert_telemetry: true,
+                chunked_prefill: a.get_bool("chunked"),
+                prefill_chunk_tokens: a.get_usize("chunk-tokens"),
+                ep_degree,
+                rebalance_cv,
+                ..Default::default()
+            },
+        )?;
+        // same warmup as the main pass: compile time stays out of TTFT
+        ep_engine
+            .submit(vec![3, 4, 5], SamplingParams { max_new_tokens: 2, ..Default::default() })?;
+        ep_engine.run_to_completion()?;
+        let mut ep_fe = ServeFrontend::new(ep_engine, fe_cfg);
+        ep_fe.push_arrivals(arrivals.clone());
+        let ep_rep = ep_fe.run();
+        let ep_engine = ep_fe.engine();
+        println!(
+            "\n=== expert-parallel pass ({ep_degree} devices, rebalance CV {rebalance_cv}) ==="
+        );
+        if let Some(fault) = ep_rep.fatal.as_deref() {
+            println!("RUN HALTED by permanent fault: {fault}");
+        }
+        if let Some(mesh) = ep_engine.mesh() {
+            let ms = mesh.stats();
+            // per-device ledgers must reconcile before CI reads them
+            ms.check();
+            println!(
+                "mesh: {} routed tokens over {} steps  dispatch+combine {}  \
+                 step-time overlap ratio {:.3} (serial {:.1} ms, overlapped {:.1} ms)",
+                ms.routed_tokens,
+                ms.steps,
+                fmt_bytes(ms.total_comm_bytes()),
+                ms.overlap_ratio(),
+                ms.serial_s * 1e3,
+                ms.overlapped_s * 1e3,
+            );
+            let pl = mesh.placement();
+            let replicas: usize = (0..pl.num_experts()).map(|e| pl.replica_count(e)).sum();
+            println!(
+                "placement: {} replicas / {} experts  {} replications  {} retirements  \
+                 device-load CV {:.3} (last rebalance window {:.3} -> {:.3})",
+                replicas,
+                pl.num_experts(),
+                ms.replications,
+                ms.retirements,
+                ms.device_load_cv(),
+                mesh.cv_before_last_rebalance(),
+                mesh.cv_after_last_rebalance(),
+            );
+            rows.extend([
+                Measurement::scalar("serve ep step-time overlap ratio", ms.overlap_ratio()),
+                Measurement::scalar("serve ep comm bytes", ms.total_comm_bytes() as f64),
+                Measurement::scalar(
+                    "serve ep load CV before rebalance",
+                    mesh.cv_before_last_rebalance(),
+                ),
+                Measurement::scalar(
+                    "serve ep load CV after rebalance",
+                    mesh.cv_after_last_rebalance(),
+                ),
+                Measurement::scalar("serve ep goodput (tok/s)", ep_rep.goodput_tok_s()),
+            ]);
+        }
     }
     // multi-replica pass: the SAME arrival schedule fanned out over an
     // engine pool behind the prefix-affinity router, optionally killing

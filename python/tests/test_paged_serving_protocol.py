@@ -53,6 +53,19 @@ simulated:
   bit-identically to ``retained`` and the preemption machinery is
   provably inert.
 
+PR 10 adds an *observational* expert-parallel layer rather than a new
+admission policy: ``_Mesh`` twins ``rust/src/coordinator/mesh/`` —
+round-robin expert placement over a simulated ``D``-device mesh,
+deterministic count splitting across sorted replica sets (base ``c // R``
+per replica, remainder to the lowest-numbered ones), per-device
+dispatch/combine byte ledgers with the ``(D-1)/D`` cross-device
+fraction, and the sliding-window CV rebalancer with its exactly-once
+replicate/retire event log.  The mesh consumes only the per-expert
+routed counts ``decode_step_paged`` reports
+(``return_expert_counts=True``) and has no token-bearing API, so a
+meshed run must match the meshless run bit for bit — asserted below
+alongside per-device count conservation on every step.
+
 All runs must emit bit-for-bit identical tokens, across admission waves
 that force page reuse, growth, cross-wave prefix sharing, idle-gap
 retention hits, and eviction.  This is the Python twin of the Rust
@@ -388,6 +401,162 @@ class _HostTier:
         assert self.pinned() + self.cached + free == self.cap
 
 
+def _cv(loads):
+    """Coefficient of variation (population std / mean) of device loads;
+    0.0 for an empty or all-zero vector — the `cv_of` NaN-guard twin."""
+    if not loads:
+        return 0.0
+    total = sum(loads)
+    if total == 0:
+        return 0.0
+    mean = total / len(loads)
+    var = sum((x - mean) ** 2 for x in loads) / len(loads)
+    return var ** 0.5 / mean
+
+
+class _Mesh:
+    """Twin of `rust/src/coordinator/mesh/`: expert-parallel placement
+    over ``D`` simulated devices.  Strictly observational — it consumes
+    per-step routed expert counts and never tokens, so by construction
+    it cannot perturb emitted streams.  Mirrors the Rust layer exactly:
+    round-robin homes (``e % D``, never retired), sorted replica sets,
+    the remainder-to-lowest split rule, per-device dispatch/combine byte
+    ledgers with the ``(D-1)/D`` cross-device fraction in integer
+    arithmetic, and the windowed CV rebalancer (retire fully-cold
+    non-home replicas, then replicate the highest per-replica-share
+    expert onto the least-loaded device until the window CV is back
+    under threshold; the window resets after any action so events are
+    exactly-once per state change)."""
+
+    BYTES_PER_TOKEN = 2048  # OverlapModel::default().bytes_per_token
+
+    def __init__(self, ep_degree, num_experts, cv_threshold=0.0,
+                 window=8, max_actions=4):
+        assert ep_degree >= 1 and num_experts >= 1
+        self.d, self.e = ep_degree, num_experts
+        self.replicas = [[e % ep_degree] for e in range(num_experts)]
+        self.cv_threshold = cv_threshold
+        self.window, self.max_actions = window, max_actions
+        self.win = []
+        self.steps = 0
+        self.routed = 0
+        self.device_tokens = [0] * ep_degree
+        self.dispatch = [0] * ep_degree
+        self.combine = [0] * ep_degree
+        self.events = []  # ("replicate" | "retire", step, expert, device)
+        self.cv_before = None  # last full window, before its actions
+        self.cv_after = None
+
+    def _split(self, e, c):
+        """(device, share) pairs for count ``c`` of expert ``e``: base
+        ``c // R`` each, remainder to the lowest-numbered replicas."""
+        reps = self.replicas[e]
+        base, rem = divmod(int(c), len(reps))
+        return [(dev, base + (1 if i < rem else 0))
+                for i, dev in enumerate(reps)]
+
+    def _loads(self, counts):
+        loads = [0] * self.d
+        for e in range(self.e):
+            for dev, share in self._split(e, counts[e]):
+                loads[dev] += share
+        return loads
+
+    def observe(self, counts):
+        """Feed one decode step's per-expert routed counts; asserts the
+        device split conserves them exactly, accumulates the byte
+        ledgers, and runs the rebalancer."""
+        counts = [int(c) for c in counts]
+        assert len(counts) == self.e and all(c >= 0 for c in counts)
+        self.steps += 1
+        step_dev = self._loads(counts)
+        assert sum(step_dev) == sum(counts), "device split lost tokens"
+        self.routed += sum(counts)
+        for dev in range(self.d):
+            self.device_tokens[dev] += step_dev[dev]
+            # uniform sources: a (D-1)/D fraction of rows is remote;
+            # a single device moves nothing by construction
+            wire = (0 if self.d == 1 else
+                    step_dev[dev] * self.BYTES_PER_TOKEN
+                    * (self.d - 1) // self.d)
+            self.dispatch[dev] += wire
+            self.combine[dev] += wire  # one row up, one row back
+        self._rebalance(counts)
+        return step_dev
+
+    def _rebalance(self, counts):
+        if self.cv_threshold <= 0.0:
+            return  # the inert `ep_degree: D` baseline
+        self.win.append(counts)
+        if len(self.win) > self.window:
+            self.win.pop(0)
+        if len(self.win) < self.window:
+            return
+        sums = [sum(col) for col in zip(*self.win)]
+        events = []
+        # retire replicas of experts the window saw nothing of; the
+        # home replica always survives
+        for e in range(self.e):
+            if sums[e] > 0 or len(self.replicas[e]) < 2:
+                continue
+            home = e % self.d
+            for dev in [d for d in self.replicas[e] if d != home]:
+                self.replicas[e].remove(dev)
+                events.append(("retire", self.steps, e, dev))
+        self.cv_before = _cv(self._loads(sums))
+        if self.cv_before > self.cv_threshold:
+            for _ in range(self.max_actions):
+                loads = self._loads(sums)
+                if _cv(loads) <= self.cv_threshold:
+                    break
+                planned = self._plan_replication(sums, loads)
+                if planned is None:
+                    break
+                e, dev = planned
+                self.replicas[e] = sorted(self.replicas[e] + [dev])
+                events.append(("replicate", self.steps, e, dev))
+        self.cv_after = _cv(self._loads(sums))
+        if events:
+            self.win = []  # a burst is acted on once, not once per step
+        self.events.extend(events)
+
+    def _plan_replication(self, sums, loads):
+        """Highest per-replica share expert onto the least-loaded device
+        not hosting it; ties break to the lowest id on both axes."""
+        order = sorted(range(self.e),
+                       key=lambda e: (-sums[e] / len(self.replicas[e]), e))
+        for e in order:
+            if sums[e] == 0:
+                break
+            cands = [(loads[d], d) for d in range(self.d)
+                     if d not in self.replicas[e]]
+            if cands:
+                return e, min(cands)[1]
+        return None
+
+    def check(self):
+        """MeshStats::check + the exactly-once event-log invariant."""
+        assert sum(self.device_tokens) == self.routed, \
+            "device token ledger != routed total"
+        assert self.dispatch == self.combine, "dispatch/combine asymmetric"
+        if self.d == 1:
+            assert sum(self.dispatch) == 0, "single device moved bytes"
+        # replay the event log against a replica-set state machine: a
+        # Replicate must insert a fresh (expert, device), a Retire must
+        # remove a present non-home one — duplicates are protocol bugs
+        state = {(e, e % self.d) for e in range(self.e)}
+        for kind, _step, e, dev in self.events:
+            if kind == "replicate":
+                assert (e, dev) not in state, f"duplicate replicate {(e, dev)}"
+                state.add((e, dev))
+            else:
+                assert dev != e % self.d, "home replica retired"
+                assert (e, dev) in state, f"retire of absent replica {(e, dev)}"
+                state.discard((e, dev))
+        live = {(e, d) for e in range(self.e) for d in self.replicas[e]}
+        assert live == state, "event log does not replay to the placement"
+
+
 def _plan(prompt, max_new, lazy, donors, pool=None, chunked=False):
     """Twin of KvCacheManager::plan: (shared, fresh, reserve, cow_copy,
     pool_hit_pages) — the pool is probed strictly last, so live donors
@@ -430,7 +599,7 @@ def _plan(prompt, max_new, lazy, donors, pool=None, chunked=False):
 
 
 def _serve(params, mode, cancel=None, phases=None, chunk_fault=False,
-           overcommit=3.0):
+           overcommit=3.0, mesh=None):
     """Drive the serving loop under one policy; returns (tokens, alloc,
     stats).  ``phases`` is a list of request lists: each phase drains
     fully before the next is enqueued — the idle gap only the retained
@@ -442,7 +611,11 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False,
     pages and reservations reclaimed and nothing committed, so the
     re-admission must replay bit-identically.  ``overcommit`` (swap
     mode only) is the reservation-ledger factor: 1.0 is the strict
-    gate, provably inert preemption machinery."""
+    gate, provably inert preemption machinery.  ``mesh`` (paged modes)
+    attaches an observational ``_Mesh``: every decode step's per-expert
+    routed counts are split across its devices and conservation-checked
+    — tokens are unaffected by construction (the mesh has no
+    token-bearing API)."""
     assert mode in ("dense", "eager", "lazy", "retained", "chunked", "swap")
     paged = mode != "dense"
     lazy = mode in ("lazy", "retained", "chunked", "swap")
@@ -679,7 +852,13 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False,
                 assert alloc.refs[tables[s][needed - 1]] == 1
         p = jnp.asarray(np.array(pos, np.int32))
         t = jnp.asarray(np.array(last, np.int32))
-        if paged:
+        if paged and mesh is not None:
+            logits, kc, vc, counts = tr.decode_step_paged(
+                params, kc, vc, block_table(suppress=suppress), p, t, TINY,
+                return_expert_counts=True,
+            )
+            mesh.observe(np.asarray(counts))
+        elif paged:
             logits, kc, vc = tr.decode_step_paged(
                 params, kc, vc, block_table(suppress=suppress), p, t, TINY
             )
@@ -778,6 +957,8 @@ def _serve(params, mode, cancel=None, phases=None, chunk_fault=False,
                 pool.audit(alloc)
                 if host is not None:
                     host.check_conservation()
+                if mesh is not None:
+                    mesh.check()
         assert not queue and all(s is None for s in slots), "phase did not drain"
     if host is not None:
         assert not host.pins, "host-tier pins stranded after the run"
@@ -968,3 +1149,83 @@ def test_never_admissible_request_rejected_at_submit_queue_drains():
         tiny.release(table)
     tiny.check_conservation()
     assert sorted(tiny.free) == [1, 2]
+
+
+def test_mesh_layer_is_observational_and_conserves_device_counts():
+    """PR 10's twin acceptance: the expert-parallel mesh consumes the
+    real per-expert routed counts ``decode_step_paged`` reports and
+    must (a) leave every emitted token bit-identical to the meshless
+    run — it has no token-bearing API, so this is a type-level fact the
+    test pins against regression — (b) conserve counts across the
+    device split on every step, and (c) move zero bytes at
+    ``ep_degree`` 1 and exactly the ``(D-1)/D`` cross-device fraction
+    otherwise.  A rebalancing mesh over the same trace must also stay
+    bit-identical: a rebalance moves FLOPs and bytes, never tokens."""
+    params = tr.init_params(TINY, jax.random.PRNGKey(0))
+    base, _, _ = _serve(params, "lazy")
+
+    one = _Mesh(ep_degree=1, num_experts=TINY.num_experts)
+    tokens_1, _, _ = _serve(params, "lazy", mesh=one)
+    assert tokens_1 == base, "ep_degree 1 must be bit-identical"
+    one.check()
+    assert one.steps > 0 and one.routed > 0, "mesh saw no decode telemetry"
+    assert one.device_tokens == [one.routed], "D=1: everything lands home"
+    assert sum(one.dispatch) == 0, "single device must move no bytes"
+
+    two = _Mesh(ep_degree=2, num_experts=TINY.num_experts)
+    tokens_2, _, _ = _serve(params, "lazy", mesh=two)
+    assert tokens_2 == base, "the mesh is observational: tokens unchanged"
+    two.check()
+    assert two.routed == one.routed, "same trace, same routed telemetry"
+    assert sum(two.device_tokens) == two.routed, "device split lost tokens"
+    # D=2: exactly half of every device's rows are remote, so the
+    # integer ledger is exact: routed * bytes_per_token / 2
+    assert sum(two.dispatch) == two.routed * two.BYTES_PER_TOKEN // 2
+    assert two.events == [], "no rebalancer configured, no events"
+
+    reb = _Mesh(ep_degree=2, num_experts=TINY.num_experts,
+                cv_threshold=0.25, window=4)
+    tokens_r, _, _ = _serve(params, "lazy", mesh=reb)
+    assert tokens_r == base, "rebalancing must never change routed outputs"
+    reb.check()  # includes the exactly-once event-log replay
+    assert reb.routed == one.routed
+
+
+def test_mesh_rebalancer_replicates_hot_retires_cold_exactly_once():
+    """Scripted twin of the Rust rebalance acceptance: a hot expert 0 on
+    D=2 (homes 0,1,0,1) loads device 0 at 400/step vs 200 → CV 1/3 over
+    the window; one replication splits it 600/600 and lands CV 1/6.
+    Feeding the same schedule 12 more steps must not duplicate the
+    event, and a cold phase retires the idle replica — the full event
+    log is deterministic, down to the step numbers."""
+    mesh = _Mesh(ep_degree=2, num_experts=4, cv_threshold=0.25,
+                 window=4, max_actions=4)
+    hot = [300, 100, 100, 100]
+    for _ in range(4):
+        mesh.observe(hot)
+    assert mesh.events == [("replicate", 4, 0, 1)], mesh.events
+    assert abs(mesh.cv_before - 1 / 3) < 1e-9
+    assert abs(mesh.cv_after - 1 / 6) < 1e-9
+    assert mesh.cv_after <= 0.25, "one replication lands under threshold"
+    assert mesh.replicas[0] == [0, 1]
+    for _ in range(12):
+        mesh.observe(hot)  # replicated windows stay under threshold
+    assert len(mesh.events) == 1, f"duplicate events: {mesh.events}"
+    # cumulative device ledger: 4 skewed steps (400/200) then 12
+    # balanced ones (250/350) → loads 4600/5000, CV 1/24
+    assert mesh.device_tokens == [4600, 5000]
+    assert abs(_cv(mesh.device_tokens) - 1 / 24) < 1e-9
+    # expert 0 goes cold: mixed windows replicate e1 (step 19, CV
+    # 200/750 > 0.25), then the all-cold window retires e0's idle
+    # replica (step 23) — and nothing fires twice
+    for _ in range(8):
+        mesh.observe([0, 100, 100, 100])
+    assert mesh.events == [
+        ("replicate", 4, 0, 1),
+        ("replicate", 19, 1, 0),
+        ("retire", 23, 0, 1),
+    ], mesh.events
+    assert mesh.replicas[0] == [0], "home survives the retirement"
+    assert mesh.replicas[1] == [0, 1]
+    assert mesh.cv_after == 0.0
+    mesh.check()

@@ -64,6 +64,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::expert_stats::ExpertStats;
+use crate::coordinator::mesh::{MeshConfig, MeshSim, OverlapModel, RebalanceConfig};
 use crate::coordinator::frontend::faults::{FaultInjector, FaultSite};
 use crate::coordinator::kvcache::host_tier::{HostOp, HostTierConfig, HostTierStats, PrefixKv};
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager, KvLayout};
@@ -153,8 +154,24 @@ pub struct EngineConfig {
     /// Derive each mixed step's prefill chunk budget from the front-
     /// end's observed prompt-token arrival rate and the live decode
     /// population ([`adaptive_chunk_budget`]) instead of the fixed
-    /// `prefill_chunk_tokens`.  Default off = fixed pacing.
+    /// `prefill_chunk_tokens`.  Default **on** since the PR-10
+    /// validation run (bursty trace, TTFT p99 improved with no TPOT
+    /// regression on the gated `serve chunked` keys); `false` restores
+    /// the PR-9 fixed-budget baseline.  Only consulted when
+    /// `chunked_prefill` is on.
     pub adaptive_chunking: bool,
+    /// Devices in the simulated expert-parallel mesh ([`MeshSim`]).
+    /// `1` (the default) disables the mesh entirely — no placement
+    /// table, no comm accounting, bit-identical to the pre-mesh
+    /// engine.  Degrees above 1 require `expert_telemetry`, since the
+    /// mesh is driven by the decode artifact's per-expert counts.
+    /// Tokens are never touched either way: the mesh only moves where
+    /// an expert's FLOPs and bytes land.
+    pub ep_degree: usize,
+    /// Device-load CV threshold for the mesh's hot-expert rebalancer.
+    /// `0.0` (the default) pins placement for the whole run — the
+    /// `ep_degree: D`, rebalancing-off baseline.
+    pub rebalance_cv: f64,
     /// Parameter-init seed.
     pub seed: u64,
 }
@@ -179,7 +196,9 @@ impl Default for EngineConfig {
             scheduler: SchedulerConfig::default(),
             overcommit_factor: 1.0,
             host_tier_bytes: 0,
-            adaptive_chunking: false,
+            adaptive_chunking: true,
+            ep_degree: 1,
+            rebalance_cv: 0.0,
             seed: 0,
         }
     }
@@ -385,6 +404,12 @@ pub struct Engine {
     /// Per-expert routing load telemetry (fed by the decode artifact's
     /// `expert_counts_output` when the lowering exposes it).
     pub expert_stats: ExpertStats,
+    /// Simulated expert-parallel mesh (`None` at `ep_degree: 1`): fed
+    /// the same per-expert counts as `expert_stats`, it accounts where
+    /// each expert's tokens and dispatch/combine bytes land and lets
+    /// the rebalancer move placement.  Strictly observational — it has
+    /// no token-bearing API, so `ep_degree` can never change outputs.
+    mesh: Option<MeshSim>,
     next_id: u64,
 }
 
@@ -400,6 +425,18 @@ impl Engine {
             cfg.overcommit_factor.is_finite() && cfg.overcommit_factor >= 1.0,
             "overcommit factor must be a finite value >= 1.0, got {}",
             cfg.overcommit_factor
+        );
+        anyhow::ensure!(cfg.ep_degree >= 1, "ep_degree must be >= 1 (1 = no mesh)");
+        anyhow::ensure!(
+            cfg.ep_degree == 1 || cfg.expert_telemetry,
+            "ep_degree {} needs expert_telemetry: the mesh is driven by the \
+             decode artifact's per-expert routed counts",
+            cfg.ep_degree
+        );
+        anyhow::ensure!(
+            cfg.rebalance_cv.is_finite() && cfg.rebalance_cv >= 0.0,
+            "rebalance_cv must be a finite value >= 0.0 (0 = rebalancing off), got {}",
+            cfg.rebalance_cv
         );
         let prefill = runtime.spec(&cfg.prefill_artifact)?.clone();
         let width = prefill.inputs[0].shape[0];
@@ -686,6 +723,17 @@ impl Engine {
             token_events: Vec::new(),
             metrics: EngineMetrics::default(),
             expert_stats: ExpertStats::new(num_experts),
+            mesh: (cfg.ep_degree > 1).then(|| {
+                MeshSim::new(MeshConfig {
+                    ep_degree: cfg.ep_degree,
+                    num_experts,
+                    rebalance: (cfg.rebalance_cv > 0.0).then(|| RebalanceConfig {
+                        cv_threshold: cfg.rebalance_cv,
+                        ..Default::default()
+                    }),
+                    model: OverlapModel::default(),
+                })
+            }),
             runtime,
             cfg,
             next_id: 0,
@@ -721,6 +769,12 @@ impl Engine {
     /// Which on-device layout carries the KV state.
     pub fn kv_layout(&self) -> KvLayout {
         self.kv.layout()
+    }
+
+    /// The simulated expert-parallel mesh, when `ep_degree > 1`
+    /// (placement, per-device accounting, rebalance event log).
+    pub fn mesh(&self) -> Option<&MeshSim> {
+        self.mesh.as_ref()
     }
 
     /// Reclaimable / total usable pool pages (`None` on the dense
@@ -1596,6 +1650,11 @@ impl Engine {
                 let c: Vec<u64> =
                     t.as_i32()?.iter().map(|&x| x.max(0) as u64).collect();
                 self.expert_stats.record_counts(&c);
+                // the mesh observes the SAME counts: placement decides
+                // where those tokens' FLOPs/bytes land, never their value
+                if let Some(mesh) = self.mesh.as_mut() {
+                    mesh.observe_step(&c);
+                }
             }
         }
 

@@ -7,6 +7,26 @@
 //! of variation, and the padding waste a block-padded implementation
 //! *would* have incurred on the observed distribution.
 
+/// Coefficient of variation of a count vector (0 = perfectly balanced).
+///
+/// Total-zero windows are a fact of life for the consumers of this
+/// number — an empty decode step, a telemetry gap, a rebalancer window
+/// that saw no traffic — and the naive `sd / mean` is NaN there, which
+/// poisons every threshold comparison downstream (`NaN > t` is false,
+/// `NaN < t` is false, and a NaN stored in a report breaks JSON).  The
+/// guard lives here, once, so `ExpertStats::load_cv` and the mesh
+/// rebalancer's sliding-window CV share it.
+pub fn cv_of(counts: &[u64]) -> f64 {
+    let n = counts.len() as f64;
+    let total: u64 = counts.iter().sum();
+    if n == 0.0 || total == 0 {
+        return 0.0;
+    }
+    let mean = total as f64 / n;
+    let var = counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
 /// Streaming per-expert load statistics.
 #[derive(Clone, Debug)]
 pub struct ExpertStats {
@@ -60,20 +80,10 @@ impl ExpertStats {
     }
 
     /// Coefficient of variation of the per-expert load (0 = perfectly
-    /// balanced; grows with imbalance).
+    /// balanced; grows with imbalance).  Delegates to [`cv_of`], so the
+    /// all-zero-window guard is shared with the mesh rebalancer.
     pub fn load_cv(&self) -> f64 {
-        let n = self.counts.len() as f64;
-        if n == 0.0 || self.total() == 0 {
-            return 0.0;
-        }
-        let mean = self.total() as f64 / n;
-        let var = self
-            .counts
-            .iter()
-            .map(|&c| (c as f64 - mean).powi(2))
-            .sum::<f64>()
-            / n;
-        var.sqrt() / mean
+        cv_of(&self.counts)
     }
 
     /// Padding waste ratio a Megablocks-style implementation would incur
@@ -137,6 +147,28 @@ mod tests {
         let mut s = ExpertStats::new(3);
         s.record_counts(&[5, 20, 1]);
         assert_eq!(s.hottest(), vec![1, 0, 2]);
+    }
+
+    /// Regression: a window with zero routed tokens (empty decode step,
+    /// telemetry gap) must report CV 0.0, never NaN — the rebalancer
+    /// compares this against a threshold and NaN makes every comparison
+    /// silently false.
+    #[test]
+    fn all_zero_window_cv_is_zero_not_nan() {
+        assert_eq!(cv_of(&[]), 0.0);
+        assert_eq!(cv_of(&[0, 0, 0, 0]), 0.0);
+        assert!(!cv_of(&[0, 0]).is_nan());
+        let s = ExpertStats::new(8);
+        assert_eq!(s.load_cv(), 0.0, "fresh stats are balanced, not NaN");
+        let mut gap = ExpertStats::new(8);
+        gap.record_counts(&[0; 8]); // a recorded-but-empty batch
+        assert_eq!(gap.load_cv(), 0.0);
+    }
+
+    #[test]
+    fn cv_of_matches_hand_value() {
+        // [3, 1]: mean 2, sd 1 → CV 0.5
+        assert!((cv_of(&[3, 1]) - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -20,8 +20,10 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, SlotState};
 use crate::coordinator::engine::{validate_chunk_config, EngineMetrics};
+use crate::coordinator::expert_stats::ExpertStats;
 use crate::coordinator::kvcache::host_tier::{HostTierConfig, HostTierStats, PrefixKv};
 use crate::coordinator::kvcache::{KvCacheConfig, KvCacheManager};
+use crate::coordinator::mesh::{MeshConfig, MeshSim, OverlapModel, RebalanceConfig};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::coordinator::scheduler::{
     adaptive_chunk_budget, Action, Scheduler, SchedulerConfig,
@@ -63,8 +65,18 @@ pub struct SimEngineConfig {
     /// Derive each step's prefill chunk budget from the observed
     /// prompt-load signal and decode population
     /// (`scheduler::adaptive_chunk_budget`) instead of the fixed
-    /// `prefill_chunk_tokens`.  Default off = fixed pacing.
+    /// `prefill_chunk_tokens`.  Off here (unlike the real engine's
+    /// PR-10 default flip) so the chunk-accounting tests keep their
+    /// fixed-budget arithmetic.
     pub adaptive_chunking: bool,
+    /// Experts in the synthetic routing schedule (the sim derives a
+    /// deterministic, hot-skewed expert per decoded token).
+    pub num_experts: usize,
+    /// Devices in the simulated expert-parallel mesh (1 = no mesh,
+    /// bit-identical baseline — the mesh is observational either way).
+    pub ep_degree: usize,
+    /// Device-load CV threshold for hot-expert replication (0 = off).
+    pub rebalance_cv: f64,
 }
 
 impl Default for SimEngineConfig {
@@ -83,6 +95,9 @@ impl Default for SimEngineConfig {
             overcommit_factor: 1.0,
             host_tier_bytes: 0,
             adaptive_chunking: false,
+            num_experts: 8,
+            ep_degree: 1,
+            rebalance_cv: 0.0,
         }
     }
 }
@@ -105,6 +120,13 @@ pub struct SimEngine {
     /// Per-token stream buffer — same contract as the engine's: pushed
     /// only at commit points, drained by [`SimEngine::take_token_events`].
     token_events: Vec<(RequestId, i32)>,
+    /// Synthetic per-expert routing telemetry (every decoded token is
+    /// assigned a deterministic, hot-skewed expert).
+    pub expert_stats: ExpertStats,
+    /// Simulated expert-parallel mesh (`None` at `ep_degree: 1`), fed
+    /// the same synthetic counts — observational only, like the real
+    /// engine's.
+    mesh: Option<MeshSim>,
 }
 
 impl SimEngine {
@@ -133,6 +155,17 @@ impl SimEngine {
             "overcommit factor must be a finite value >= 1.0, got {}",
             cfg.overcommit_factor
         );
+        anyhow::ensure!(
+            cfg.ep_degree >= 1,
+            "ep_degree must be >= 1 (1 = no expert parallelism), got {}",
+            cfg.ep_degree
+        );
+        anyhow::ensure!(cfg.num_experts >= 1, "num_experts must be >= 1");
+        anyhow::ensure!(
+            cfg.rebalance_cv.is_finite() && cfg.rebalance_cv >= 0.0,
+            "rebalance_cv must be a finite value >= 0.0 (0 disables), got {}",
+            cfg.rebalance_cv
+        );
         let mut kv_cfg = cfg.kv;
         kv_cfg.chunk_rows = cfg.chunked_prefill.then_some(cfg.prefill_chunk_tokens);
         kv_cfg.overcommit_factor = cfg.overcommit_factor;
@@ -160,8 +193,25 @@ impl SimEngine {
             prompt_load: 0.0,
             next_id: 0,
             token_events: Vec::new(),
+            expert_stats: ExpertStats::new(cfg.num_experts),
+            mesh: (cfg.ep_degree > 1).then(|| {
+                MeshSim::new(MeshConfig {
+                    ep_degree: cfg.ep_degree,
+                    num_experts: cfg.num_experts,
+                    rebalance: (cfg.rebalance_cv > 0.0).then(|| RebalanceConfig {
+                        cv_threshold: cfg.rebalance_cv,
+                        ..RebalanceConfig::default()
+                    }),
+                    model: OverlapModel::default(),
+                })
+            }),
             cfg,
         })
+    }
+
+    /// The simulated expert-parallel mesh, when `ep_degree > 1`.
+    pub fn mesh(&self) -> Option<&MeshSim> {
+        self.mesh.as_ref()
     }
 
     /// Drain the per-token stream buffer (same contract as the engine).
@@ -174,9 +224,14 @@ impl SimEngine {
         self.faults = faults;
     }
 
-    /// Page-allocator conservation audit; panics on violation.
+    /// Page-allocator conservation audit; panics on violation.  With a
+    /// mesh, also reconciles its per-device byte/token ledgers
+    /// ([`MeshStats::check`](crate::coordinator::mesh::MeshStats::check)).
     pub fn audit(&self) {
         self.kv.audit();
+        if let Some(mesh) = &self.mesh {
+            mesh.stats().check();
+        }
     }
 
     /// Conservation counters: (admitted, finished, active, queued).
@@ -402,12 +457,14 @@ impl SimEngine {
                 self.kv.grow_to(i, self.pos[i])?;
             }
             self.metrics.decode_steps += 1;
+            let mut counts = vec![0u64; self.cfg.num_experts];
             for i in decoding {
                 let id = match self.batcher.slots()[i].state {
                     SlotState::Decoding(id) => id,
                     ref s => anyhow::bail!("decoding slot {i} in state {s:?}"),
                 };
                 let tok = self.sim_token(i);
+                counts[sim_expert(tok, self.cfg.num_experts)] += 1;
                 self.pos[i] = (self.pos[i] + 1).min(self.cfg.max_len - 1);
                 self.emit_token(i, id, tok, false);
                 self.metrics.generated_tokens += 1;
@@ -415,6 +472,7 @@ impl SimEngine {
                     responses.push(resp);
                 }
             }
+            self.observe_experts(&counts);
         }
         Ok(responses)
     }
@@ -608,12 +666,14 @@ impl SimEngine {
             .map_err(anyhow::Error::new)?;
         self.metrics.decode_steps += 1;
         let mut responses = Vec::new();
+        let mut counts = vec![0u64; self.cfg.num_experts];
         for i in decoding {
             let id = match self.batcher.slots()[i].state {
                 SlotState::Decoding(id) => id,
                 ref s => anyhow::bail!("decoding slot {i} in state {s:?}"),
             };
             let tok = self.sim_token(i);
+            counts[sim_expert(tok, self.cfg.num_experts)] += 1;
             self.pos[i] = (self.pos[i] + 1).min(self.cfg.max_len - 1);
             self.emit_token(i, id, tok, false);
             self.metrics.generated_tokens += 1;
@@ -621,6 +681,7 @@ impl SimEngine {
                 responses.push(resp);
             }
         }
+        self.observe_experts(&counts);
         Ok(responses)
     }
 
@@ -633,6 +694,16 @@ impl SimEngine {
             acc.wrapping_mul(0x0100_0000_01B3).wrapping_add(t as u64)
         });
         ((slot.rng.next_u64() ^ h) & 0x7FFF) as i32
+    }
+
+    /// Record one decode step's synthetic per-expert routing counts:
+    /// stats always, the mesh when enabled.  Reads the token stream the
+    /// step already committed, so enabling a mesh can never perturb it.
+    fn observe_experts(&mut self, counts: &[u64]) {
+        self.expert_stats.record_counts(counts);
+        if let Some(mesh) = self.mesh.as_mut() {
+            mesh.observe_step(counts);
+        }
     }
 
     fn maybe_finish(&mut self, slot: usize, tok: i32) -> Option<Response> {
@@ -760,6 +831,21 @@ impl ServingEngine for SimEngine {
     fn note_prompt_load(&mut self, prompt_tokens_per_s: f64) {
         self.prompt_load = prompt_tokens_per_s;
     }
+}
+
+/// Deterministic, hot-skewed expert assignment for one simulated token.
+///
+/// A pure function of the already-committed token, so expert telemetry
+/// (and any mesh consuming it) can never perturb the token stream.  The
+/// quadratic map `e = ⌊E·x²/M²⌋` over a hashed uniform `x` puts
+/// `P(e=k) = √((k+1)/E) − √(k/E)` — monotonically decreasing in `k` —
+/// so low expert ids run hot, giving the mesh the routing skew the
+/// paper's telemetry sections report.
+fn sim_expert(tok: i32, num_experts: usize) -> usize {
+    const M: u64 = 1 << 12;
+    let h = (tok as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40;
+    let x = h % M;
+    ((x * x * num_experts as u64) / (M * M)) as usize
 }
 
 #[cfg(test)]
@@ -1040,5 +1126,59 @@ mod tests {
             Some(&HostTierStats::default()),
             "disabled tier never moves a byte"
         );
+    }
+
+    /// The mesh is observational: enabling `ep_degree: 2` (with the
+    /// rebalancer armed) must leave every generated token bit-identical
+    /// to the meshless baseline, while its per-device ledgers reconcile
+    /// against the routing telemetry.
+    #[test]
+    fn mesh_is_observational_and_ledgers_reconcile() {
+        let run = |ep_degree: usize, rebalance_cv: f64| {
+            let mut engine = SimEngine::try_new(SimEngineConfig {
+                ep_degree,
+                rebalance_cv,
+                ..Default::default()
+            })
+            .expect("valid mesh config");
+            submit_batch(&mut engine, 10);
+            let out = run_all(&mut engine);
+            let mut pairs: Vec<(u64, Vec<i32>)> =
+                out.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+            pairs.sort();
+            (pairs, engine)
+        };
+        let (baseline, plain) = run(1, 0.0);
+        let (meshed_tokens, meshed) = run(2, 0.25);
+        assert_eq!(baseline, meshed_tokens, "the mesh never touches tokens");
+        assert!(plain.mesh().is_none(), "ep_degree 1 builds no mesh");
+        let stats = meshed.mesh().expect("ep_degree 2 builds a mesh").stats();
+        stats.check();
+        assert_eq!(
+            stats.routed_tokens,
+            meshed.expert_stats.total(),
+            "every routed token landed on exactly one device"
+        );
+        assert_eq!(
+            stats.routed_tokens, plain.expert_stats.total(),
+            "identical schedules route identical token totals"
+        );
+        assert!(stats.steps > 0, "decode steps were observed");
+        assert!(
+            stats.overlapped_s <= stats.serial_s,
+            "overlap can never lose to the serial schedule"
+        );
+    }
+
+    #[test]
+    fn try_new_rejects_degenerate_mesh_configs() {
+        let cfg = SimEngineConfig { ep_degree: 0, ..Default::default() };
+        assert!(SimEngine::try_new(cfg).is_err(), "zero devices");
+        let cfg = SimEngineConfig { rebalance_cv: f64::NAN, ..Default::default() };
+        assert!(SimEngine::try_new(cfg).is_err(), "NaN threshold");
+        let cfg = SimEngineConfig { rebalance_cv: -0.5, ..Default::default() };
+        assert!(SimEngine::try_new(cfg).is_err(), "negative threshold");
+        let cfg = SimEngineConfig { num_experts: 0, ..Default::default() };
+        assert!(SimEngine::try_new(cfg).is_err(), "zero experts");
     }
 }

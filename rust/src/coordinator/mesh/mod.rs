@@ -1,0 +1,297 @@
+//! Simulated expert-parallel device mesh — L3's first model-scaling
+//! layer.
+//!
+//! ScatterMoE's kernel story ends at one accelerator; serving a model
+//! whose experts outgrow a device means sharding the E experts over a
+//! D-device mesh and paying dispatch/combine communication every MoE
+//! step.  This module builds that layer the way the repo builds every
+//! risky layer: as a deterministic simulation first, with the
+//! single-device path (`ep_degree: 1`) bit-identical to not having the
+//! module at all.
+//!
+//! Three pieces, mirroring the papers they model:
+//!
+//! * [`placement`] — the expert → (home device, replica set) table.
+//!   Routing never changes; placement only decides *where* an expert's
+//!   FLOPs and bytes land.
+//! * [`overlap`] — a memmodel-style cost model scoring each step both
+//!   serially (`compute + comm`) and shortcut-connected
+//!   (`max(compute, comm)`), per arXiv 2404.05019.
+//! * [`rebalance`] — telemetry-driven hot-expert replication (per
+//!   arXiv 2605.11537): watch the device-load CV over a sliding window
+//!   of `expert_counts`, replicate hot experts onto underloaded
+//!   devices, retire cold replicas, log typed events exactly once.
+//!
+//! [`MeshSim`] is the facade the engine drives: it *observes* the
+//! per-step expert counts the PR-5 telemetry already downloads and
+//! accounts tokens, bytes and step times per device ([`MeshStats`],
+//! reconciled like `TransferTotals`).  It has no token-bearing API by
+//! construction — the bit-identity guarantee is type-level, not
+//! behavioral.
+
+pub mod overlap;
+pub mod placement;
+pub mod rebalance;
+
+pub use overlap::{OverlapModel, StepTime};
+pub use placement::ExpertPlacement;
+pub use rebalance::{PlacementEvent, RebalanceConfig, Rebalancer};
+
+use crate::coordinator::expert_stats::cv_of;
+
+/// Mesh geometry + policies for one engine.
+#[derive(Clone, Debug)]
+pub struct MeshConfig {
+    /// Devices in the simulated mesh (1 = single-device baseline).
+    pub ep_degree: usize,
+    /// Experts sharded across the mesh.
+    pub num_experts: usize,
+    /// Hot-expert replication policy; `None` pins placement for the
+    /// whole run (the `ep_degree: D`, rebalancing-off baseline).
+    pub rebalance: Option<RebalanceConfig>,
+    /// Cost-model rates for the overlap score.
+    pub model: OverlapModel,
+}
+
+/// Per-device token/byte accounting and step-time totals, reconciled
+/// every step the same way `TransferTotals` reconciles host↔device
+/// traffic: sums must match exactly or the mesh is lying.
+#[derive(Clone, Debug)]
+pub struct MeshStats {
+    /// Observed decode steps.
+    pub steps: u64,
+    /// Total routed tokens observed (sum of every step's counts).
+    pub routed_tokens: u64,
+    /// Tokens landed per device (sums to `routed_tokens`).
+    pub device_tokens: Vec<u64>,
+    /// Dispatch bytes terminated per device.
+    pub dispatch_bytes: Vec<u64>,
+    /// Combine bytes sourced per device (symmetric with dispatch).
+    pub combine_bytes: Vec<u64>,
+    /// Accumulated serial-schedule step time, seconds.
+    pub serial_s: f64,
+    /// Accumulated shortcut-connected step time, seconds.
+    pub overlapped_s: f64,
+    /// Replicate actions taken by the rebalancer.
+    pub replications: u64,
+    /// Retire actions taken by the rebalancer.
+    pub retirements: u64,
+}
+
+impl MeshStats {
+    fn new(ep_degree: usize) -> Self {
+        MeshStats {
+            steps: 0,
+            routed_tokens: 0,
+            device_tokens: vec![0; ep_degree],
+            dispatch_bytes: vec![0; ep_degree],
+            combine_bytes: vec![0; ep_degree],
+            serial_s: 0.0,
+            overlapped_s: 0.0,
+            replications: 0,
+            retirements: 0,
+        }
+    }
+
+    /// All dispatch + combine bytes that crossed the mesh.
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.dispatch_bytes.iter().sum::<u64>() + self.combine_bytes.iter().sum::<u64>()
+    }
+
+    /// Shortcut-connected step time over the serial baseline
+    /// (`<= 1.0`; `1.0` exactly on a single device, `< 1.0` whenever
+    /// compute and comm both ran).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.serial_s == 0.0 {
+            return 1.0;
+        }
+        self.overlapped_s / self.serial_s
+    }
+
+    /// CV of the cumulative per-device token loads (0.0 for an empty
+    /// run — the satellite's all-zero guard applies here too).
+    pub fn device_load_cv(&self) -> f64 {
+        cv_of(&self.device_tokens)
+    }
+
+    /// Hard reconciliation: per-device tokens sum to every routed
+    /// token, dispatch and combine stay symmetric, and the overlapped
+    /// schedule never exceeds the serial one.  Panics on violation —
+    /// chaos runs call this after every step.
+    pub fn check(&self) {
+        let landed: u64 = self.device_tokens.iter().sum();
+        assert_eq!(
+            landed, self.routed_tokens,
+            "mesh lost tokens: {landed} landed vs {} routed",
+            self.routed_tokens
+        );
+        let dispatch: u64 = self.dispatch_bytes.iter().sum();
+        let combine: u64 = self.combine_bytes.iter().sum();
+        assert_eq!(dispatch, combine, "dispatch/combine bytes diverged");
+        assert!(
+            self.overlapped_s <= self.serial_s + 1e-12,
+            "overlap schedule slower than serial"
+        );
+    }
+}
+
+/// The facade the engine tick drives: feed it each decode step's
+/// per-expert counts and it maintains placement, byte/time accounting,
+/// and the rebalancer's event log.  Tokens never pass through here.
+#[derive(Clone, Debug)]
+pub struct MeshSim {
+    placement: ExpertPlacement,
+    model: OverlapModel,
+    rebalancer: Option<Rebalancer>,
+    stats: MeshStats,
+    events: Vec<PlacementEvent>,
+    step: u64,
+}
+
+impl MeshSim {
+    /// A mesh with round-robin initial placement.
+    pub fn new(cfg: MeshConfig) -> Self {
+        MeshSim {
+            placement: ExpertPlacement::new(cfg.num_experts, cfg.ep_degree),
+            model: cfg.model,
+            rebalancer: cfg.rebalance.map(Rebalancer::new),
+            stats: MeshStats::new(cfg.ep_degree),
+            events: Vec::new(),
+            step: 0,
+        }
+    }
+
+    /// Observe one decode step's per-expert routed counts: split them
+    /// over the placement, account per-device tokens and wire bytes,
+    /// score the step under both schedules, then let the rebalancer
+    /// react.  Panics if the split fails conservation — the split *is*
+    /// the claim this layer makes.
+    pub fn observe_step(&mut self, counts: &[u64]) {
+        let d = self.placement.ep_degree();
+        let split = self.placement.split_counts(counts);
+        let routed: u64 = counts.iter().sum();
+        let mut dev_tokens = vec![0u64; d];
+        let mut dev_comm = vec![0u64; d];
+        for (dev, per_expert) in split.iter().enumerate() {
+            let landed: u64 = per_expert.iter().sum();
+            let wire = self.model.dispatch_bytes(landed, d);
+            dev_tokens[dev] = landed;
+            dev_comm[dev] = 2 * wire;
+            self.stats.device_tokens[dev] += landed;
+            self.stats.dispatch_bytes[dev] += wire;
+            self.stats.combine_bytes[dev] += wire;
+        }
+        let landed: u64 = dev_tokens.iter().sum();
+        assert_eq!(landed, routed, "mesh split must conserve routed counts");
+        let st = self.model.step_time(&dev_tokens, &dev_comm);
+        self.stats.serial_s += st.serial_s();
+        self.stats.overlapped_s += st.overlapped_s();
+        self.stats.steps += 1;
+        self.stats.routed_tokens += routed;
+        if let Some(rb) = &mut self.rebalancer {
+            let events = rb.observe(self.step, counts, &mut self.placement);
+            for e in &events {
+                match e {
+                    PlacementEvent::Replicate { .. } => self.stats.replications += 1,
+                    PlacementEvent::Retire { .. } => self.stats.retirements += 1,
+                }
+            }
+            self.events.extend(events);
+        }
+        self.step += 1;
+    }
+
+    /// The live placement table.
+    pub fn placement(&self) -> &ExpertPlacement {
+        &self.placement
+    }
+
+    /// Accumulated accounting.
+    pub fn stats(&self) -> &MeshStats {
+        &self.stats
+    }
+
+    /// Every placement change so far, in order.
+    pub fn events(&self) -> &[PlacementEvent] {
+        &self.events
+    }
+
+    /// Device-load CV of the last full rebalancer window before it
+    /// acted (0.0 with rebalancing off or before the first window).
+    pub fn cv_before_last_rebalance(&self) -> f64 {
+        self.rebalancer.as_ref().map_or(0.0, Rebalancer::last_cv_before)
+    }
+
+    /// Device-load CV of that window after its placement actions.
+    pub fn cv_after_last_rebalance(&self) -> f64 {
+        self.rebalancer.as_ref().map_or(0.0, Rebalancer::last_cv_after)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh(ep_degree: usize, rebalance: Option<RebalanceConfig>) -> MeshSim {
+        MeshSim::new(MeshConfig {
+            ep_degree,
+            num_experts: 4,
+            rebalance,
+            model: OverlapModel::default(),
+        })
+    }
+
+    #[test]
+    fn degree_one_mesh_is_inert() {
+        let mut m = mesh(1, None);
+        for _ in 0..16 {
+            m.observe_step(&[40, 1, 1, 1]);
+        }
+        m.stats().check();
+        assert_eq!(m.stats().total_comm_bytes(), 0, "one device moves no bytes");
+        assert!((m.stats().overlap_ratio() - 1.0).abs() < 1e-12);
+        assert!(m.events().is_empty());
+    }
+
+    #[test]
+    fn split_conserves_and_bytes_reconcile() {
+        let mut m = mesh(4, None);
+        m.observe_step(&[10, 3, 0, 7]);
+        m.observe_step(&[0, 0, 0, 0]); // empty decode step: fine
+        m.observe_step(&[1, 1, 1, 1]);
+        m.stats().check();
+        assert_eq!(m.stats().routed_tokens, 24);
+        assert_eq!(m.stats().device_tokens.iter().sum::<u64>(), 24);
+        assert!(m.stats().total_comm_bytes() > 0);
+    }
+
+    #[test]
+    fn skewed_load_overlap_beats_serial() {
+        let mut m = mesh(2, None);
+        for _ in 0..8 {
+            m.observe_step(&[300, 100, 100, 100]);
+        }
+        m.stats().check();
+        let ratio = m.stats().overlap_ratio();
+        assert!(ratio < 1.0, "overlap must hide a phase: ratio {ratio}");
+        assert!(ratio >= 0.5, "overlap can at best halve the step: ratio {ratio}");
+    }
+
+    #[test]
+    fn rebalance_reduces_device_cv_and_counts_actions() {
+        let mut m = mesh(2, Some(RebalanceConfig { cv_threshold: 0.25, window: 4, max_actions: 4 }));
+        for _ in 0..4 {
+            m.observe_step(&[300, 100, 100, 100]);
+        }
+        m.stats().check();
+        assert_eq!(m.stats().replications, 1);
+        assert!(m.cv_after_last_rebalance() < m.cv_before_last_rebalance());
+        assert!(m.cv_after_last_rebalance() <= 0.25);
+        // post-rebalance steps split the hot expert across both devices
+        let before = m.stats().device_tokens.clone();
+        m.observe_step(&[300, 100, 100, 100]);
+        let after = &m.stats().device_tokens;
+        assert_eq!(after[0] - before[0], 250, "150 of e0 + e2's 100");
+        assert_eq!(after[1] - before[1], 350, "150 of e0 + e1+e3's 200");
+    }
+}

@@ -1,0 +1,128 @@
+//! Shortcut-connected overlap cost model (memmodel-style, deterministic).
+//!
+//! Serial expert parallelism pays `compute + comm` per MoE step: the
+//! all-to-all dispatch, then expert FLOPs, then the all-to-all combine,
+//! each waiting for the previous phase.  Shortcut-connected scheduling
+//! (decompose the step so communication for one slice overlaps with
+//! computation of another) drives the step toward `max(compute, comm)`
+//! — the overlapped phase hides the cheaper of the two entirely.  This
+//! module scores both schedules from the same per-device loads so the
+//! serving benches can report the ratio, exactly the way `memmodel.rs`
+//! scores KV layouts: closed-form, no clocks, reproducible.
+
+/// Per-device compute/communication rates for the cost model.
+///
+/// The defaults are sized so dispatch/combine traffic is *visible*
+/// against expert compute on the testbed geometry (2 KiB activation
+/// rows, a link an order of magnitude slower than local compute) —
+/// the regime where overlap actually matters.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapModel {
+    /// Expert FLOP throughput per device, routed tokens per second.
+    pub compute_tok_s: f64,
+    /// Interconnect bandwidth per device, bytes per second.
+    pub link_bytes_s: f64,
+    /// Activation row moved per routed token, bytes (dispatch and
+    /// combine are symmetric: one row up, one row back).
+    pub bytes_per_token: u64,
+}
+
+impl Default for OverlapModel {
+    fn default() -> Self {
+        OverlapModel {
+            compute_tok_s: 1e6,
+            link_bytes_s: 4e9,
+            bytes_per_token: 2048,
+        }
+    }
+}
+
+/// One MoE step scored by phase; serial and overlapped schedules are
+/// both derived from the same two phase times.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTime {
+    /// Slowest device's expert-compute time, seconds.
+    pub compute_s: f64,
+    /// Slowest device's dispatch+combine wire time, seconds.
+    pub comm_s: f64,
+}
+
+impl StepTime {
+    /// The serial schedule: communication then compute, no overlap.
+    pub fn serial_s(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+
+    /// The shortcut-connected schedule: the cheaper phase hides under
+    /// the dearer one.
+    pub fn overlapped_s(&self) -> f64 {
+        self.compute_s.max(self.comm_s)
+    }
+}
+
+impl OverlapModel {
+    /// Bytes that cross the network when `tokens` land on one replica of
+    /// a `D`-device mesh: sources are uniformly spread, so a `(D-1)/D`
+    /// fraction of rows is remote.  Zero on a single device — the
+    /// `ep_degree: 1` baseline pays no communication by construction.
+    pub fn dispatch_bytes(&self, tokens: u64, ep_degree: usize) -> u64 {
+        if ep_degree <= 1 {
+            return 0;
+        }
+        tokens * self.bytes_per_token * (ep_degree as u64 - 1) / ep_degree as u64
+    }
+
+    /// Score one step from per-device token loads and per-device total
+    /// (dispatch + combine) wire bytes.  Both phases run at the pace of
+    /// their slowest device — the mesh steps in lockstep.
+    pub fn step_time(&self, device_tokens: &[u64], device_comm_bytes: &[u64]) -> StepTime {
+        let compute_s =
+            device_tokens.iter().copied().max().unwrap_or(0) as f64 / self.compute_tok_s;
+        let comm_s =
+            device_comm_bytes.iter().copied().max().unwrap_or(0) as f64 / self.link_bytes_s;
+        StepTime { compute_s, comm_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_device_moves_no_bytes() {
+        let m = OverlapModel::default();
+        assert_eq!(m.dispatch_bytes(1000, 1), 0);
+        let st = m.step_time(&[1000], &[0]);
+        assert!((st.serial_s() - st.overlapped_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_device_fraction_scales_with_degree() {
+        let m = OverlapModel { bytes_per_token: 100, ..Default::default() };
+        // D=2: half the rows are remote; D=4: three quarters
+        assert_eq!(m.dispatch_bytes(10, 2), 500);
+        assert_eq!(m.dispatch_bytes(10, 4), 750);
+    }
+
+    #[test]
+    fn overlap_never_slower_than_serial() {
+        let m = OverlapModel::default();
+        let st = m.step_time(&[400, 100], &[123_456, 654_321]);
+        assert!(st.overlapped_s() <= st.serial_s() + 1e-15);
+    }
+
+    #[test]
+    fn overlap_beats_serial_when_both_phases_busy() {
+        // hand numbers: 1e6 tok/s, 1e6 B/s link.  200 tokens on the
+        // slow device = 200 µs compute; 100 bytes = 100 µs comm.
+        let m = OverlapModel {
+            compute_tok_s: 1e6,
+            link_bytes_s: 1e6,
+            bytes_per_token: 1,
+        };
+        let st = m.step_time(&[200, 50], &[100, 40]);
+        assert!((st.serial_s() - 300e-6).abs() < 1e-12);
+        assert!((st.overlapped_s() - 200e-6).abs() < 1e-12);
+        assert!(st.overlapped_s() < st.serial_s());
+    }
+}

@@ -1,0 +1,181 @@
+//! Expert → device placement table for the simulated mesh.
+//!
+//! Placement is the *only* thing expert parallelism is allowed to move:
+//! routing (which expert a token wants) is fixed upstream by the router,
+//! and the placement table decides which of the `D` mesh devices runs
+//! that expert's FLOPs and terminates its dispatch/combine traffic.
+//! Everything here is deterministic — round-robin home devices, sorted
+//! replica sets, and a remainder-to-lowest-replica split rule — so two
+//! runs over the same counts produce byte-identical accounting, and a
+//! placement change can never alter routed outputs (tokens never pass
+//! through this table; only counts do).
+
+/// Expert → (home device, replica set) table over a `D`-device mesh.
+#[derive(Clone, Debug)]
+pub struct ExpertPlacement {
+    ep_degree: usize,
+    /// Per-expert sorted device list; the round-robin home device is
+    /// always a member and never retires.
+    replicas: Vec<Vec<usize>>,
+}
+
+impl ExpertPlacement {
+    /// Round-robin initial placement: expert `e` homes on device
+    /// `e % ep_degree` with no extra replicas.
+    pub fn new(num_experts: usize, ep_degree: usize) -> Self {
+        assert!(ep_degree >= 1, "mesh needs at least one device");
+        let replicas = (0..num_experts).map(|e| vec![e % ep_degree]).collect();
+        ExpertPlacement { ep_degree, replicas }
+    }
+
+    /// Number of devices in the mesh.
+    pub fn ep_degree(&self) -> usize {
+        self.ep_degree
+    }
+
+    /// Number of experts placed.
+    pub fn num_experts(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The home device of expert `e` (never retires).
+    pub fn home(&self, e: usize) -> usize {
+        e % self.ep_degree
+    }
+
+    /// Sorted device list currently hosting expert `e`.
+    pub fn replicas(&self, e: usize) -> &[usize] {
+        &self.replicas[e]
+    }
+
+    /// Total replicas across all experts (`num_experts` at rest).
+    pub fn replica_count(&self) -> usize {
+        self.replicas.iter().map(Vec::len).sum()
+    }
+
+    /// Host expert `e` on device `d` too.  Returns `false` (and changes
+    /// nothing) when `d` already hosts `e`.
+    pub fn add_replica(&mut self, e: usize, d: usize) -> bool {
+        assert!(d < self.ep_degree, "device {d} outside the mesh");
+        let reps = &mut self.replicas[e];
+        match reps.binary_search(&d) {
+            Ok(_) => false,
+            Err(pos) => {
+                reps.insert(pos, d);
+                true
+            }
+        }
+    }
+
+    /// Retire expert `e`'s replica on device `d`.  Refuses (returns
+    /// `false`) for the home device or an absent replica — an expert is
+    /// never left unplaced.
+    pub fn remove_replica(&mut self, e: usize, d: usize) -> bool {
+        if d == self.home(e) {
+            return false;
+        }
+        let reps = &mut self.replicas[e];
+        match reps.binary_search(&d) {
+            Ok(pos) => {
+                reps.remove(pos);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Split per-expert routed counts across each expert's replicas:
+    /// `c / R` to every replica, remainder to the lowest-numbered ones.
+    /// Returns `[device][expert]` counts whose sum over devices equals
+    /// `counts` exactly — the conservation law the chaos property and
+    /// the Python twin both assert.
+    pub fn split_counts(&self, counts: &[u64]) -> Vec<Vec<u64>> {
+        let e_n = self.replicas.len();
+        let mut split = vec![vec![0u64; e_n]; self.ep_degree];
+        for (e, &c) in counts.iter().enumerate().take(e_n) {
+            let reps = &self.replicas[e];
+            let base = c / reps.len() as u64;
+            let rem = (c % reps.len() as u64) as usize;
+            for (i, &d) in reps.iter().enumerate() {
+                split[d][e] = base + u64::from(i < rem);
+            }
+        }
+        split
+    }
+
+    /// Per-device token loads under the current placement (the
+    /// expert-axis sum of [`Self::split_counts`]).
+    pub fn device_loads(&self, counts: &[u64]) -> Vec<u64> {
+        let mut loads = vec![0u64; self.ep_degree];
+        for (e, &c) in counts.iter().enumerate().take(self.replicas.len()) {
+            let reps = &self.replicas[e];
+            let base = c / reps.len() as u64;
+            let rem = (c % reps.len() as u64) as usize;
+            for (i, &d) in reps.iter().enumerate() {
+                loads[d] += base + u64::from(i < rem);
+            }
+        }
+        loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_homes() {
+        let p = ExpertPlacement::new(8, 4);
+        for e in 0..8 {
+            assert_eq!(p.home(e), e % 4);
+            assert_eq!(p.replicas(e), &[e % 4]);
+        }
+        assert_eq!(p.replica_count(), 8);
+    }
+
+    #[test]
+    fn split_conserves_counts() {
+        let mut p = ExpertPlacement::new(4, 2);
+        assert!(p.add_replica(0, 1));
+        let counts = [7u64, 3, 0, 5];
+        let split = p.split_counts(&counts);
+        for (e, &c) in counts.iter().enumerate() {
+            let landed: u64 = split.iter().map(|dev| dev[e]).sum();
+            assert_eq!(landed, c, "expert {e} lost tokens in the split");
+        }
+        // 7 over replicas {0,1}: 4 to the lower-numbered device, 3 up
+        assert_eq!(split[0][0], 4);
+        assert_eq!(split[1][0], 3);
+    }
+
+    #[test]
+    fn device_loads_match_split() {
+        let mut p = ExpertPlacement::new(4, 2);
+        p.add_replica(2, 1);
+        let counts = [9u64, 1, 8, 2];
+        let split = p.split_counts(&counts);
+        let loads = p.device_loads(&counts);
+        for (d, load) in loads.iter().enumerate() {
+            assert_eq!(*load, split[d].iter().sum::<u64>());
+        }
+        assert_eq!(loads.iter().sum::<u64>(), counts.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn add_replica_is_idempotent() {
+        let mut p = ExpertPlacement::new(4, 2);
+        assert!(p.add_replica(0, 1));
+        assert!(!p.add_replica(0, 1), "second add must be a no-op");
+        assert_eq!(p.replicas(0), &[0, 1]);
+    }
+
+    #[test]
+    fn home_replica_never_retires() {
+        let mut p = ExpertPlacement::new(4, 2);
+        p.add_replica(0, 1);
+        assert!(!p.remove_replica(0, 0), "home must refuse retirement");
+        assert!(p.remove_replica(0, 1));
+        assert!(!p.remove_replica(0, 1), "absent replica refuses too");
+        assert_eq!(p.replicas(0), &[0]);
+    }
+}

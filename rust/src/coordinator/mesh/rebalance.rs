@@ -1,0 +1,282 @@
+//! Telemetry-driven hot-expert replication.
+//!
+//! The router's per-expert counts (the PR-5 `expert_counts` telemetry)
+//! arrive every decode step; this module watches their *device-level*
+//! skew over a sliding window and, when the load CV crosses a
+//! threshold, replicates the hottest expert onto the least-loaded
+//! device — and retires replicas of experts that went fully cold.  All
+//! decisions are pure functions of the window and the placement table
+//! (deterministic tie-breaks: lowest expert id, lowest device id), are
+//! logged as typed [`PlacementEvent`]s exactly once per actual state
+//! change, and never touch routing — a rebalance moves FLOPs and bytes,
+//! never tokens.
+
+use std::collections::VecDeque;
+
+use super::placement::ExpertPlacement;
+use crate::coordinator::expert_stats::cv_of;
+
+/// Rebalancer thresholds and window geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct RebalanceConfig {
+    /// Device-load CV above which a full window triggers replication.
+    /// `0.0` disables the rebalancer entirely (the `ep_degree: D`
+    /// bit-identical baseline).
+    pub cv_threshold: f64,
+    /// Sliding window length in observed decode steps.
+    pub window: usize,
+    /// Upper bound on replications per triggered rebalance.
+    pub max_actions: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { cv_threshold: 0.25, window: 8, max_actions: 4 }
+    }
+}
+
+/// A placement change, logged exactly once per action.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementEvent {
+    /// A hot expert gained a replica on an underloaded device.
+    Replicate {
+        /// Mesh step at which the action fired.
+        step: u64,
+        /// Replicated expert.
+        expert: usize,
+        /// Device gaining the replica.
+        device: usize,
+    },
+    /// A cold expert's non-home replica retired.
+    Retire {
+        /// Mesh step at which the action fired.
+        step: u64,
+        /// Expert losing the replica.
+        expert: usize,
+        /// Device dropping the replica.
+        device: usize,
+    },
+}
+
+/// Sliding-window load watcher + deterministic placement planner.
+#[derive(Clone, Debug)]
+pub struct Rebalancer {
+    cfg: RebalanceConfig,
+    window: VecDeque<Vec<u64>>,
+    last_cv_before: f64,
+    last_cv_after: f64,
+}
+
+impl Rebalancer {
+    /// A rebalancer with an empty window.
+    pub fn new(cfg: RebalanceConfig) -> Self {
+        Rebalancer { cfg, window: VecDeque::new(), last_cv_before: 0.0, last_cv_after: 0.0 }
+    }
+
+    /// Device-load CV of the most recent full window *before* it acted.
+    pub fn last_cv_before(&self) -> f64 {
+        self.last_cv_before
+    }
+
+    /// Device-load CV of the same window after its placement actions.
+    pub fn last_cv_after(&self) -> f64 {
+        self.last_cv_after
+    }
+
+    /// Feed one decode step's per-expert counts; once the window is
+    /// full, retire fully-cold replicas and replicate hot experts until
+    /// the device-load CV is back under the threshold (or devices run
+    /// out).  Mutates `placement` and returns the typed event log for
+    /// this observation; the window resets after any action so a burst
+    /// is acted on once, not once per step.
+    pub fn observe(
+        &mut self, step: u64, counts: &[u64], placement: &mut ExpertPlacement,
+    ) -> Vec<PlacementEvent> {
+        if self.cfg.cv_threshold <= 0.0 {
+            return Vec::new();
+        }
+        self.window.push_back(counts.to_vec());
+        while self.window.len() > self.cfg.window {
+            self.window.pop_front();
+        }
+        if self.window.len() < self.cfg.window {
+            return Vec::new();
+        }
+        let sums = self.window_sums(placement.num_experts());
+        let mut events = Vec::new();
+        // retire replicas of experts the window saw nothing of — the
+        // home replica always stays, so cold experts stay servable
+        for e in 0..placement.num_experts() {
+            if sums[e] > 0 || placement.replicas(e).len() < 2 {
+                continue;
+            }
+            let extras: Vec<usize> =
+                placement.replicas(e).iter().copied().filter(|&d| d != placement.home(e)).collect();
+            for d in extras {
+                if placement.remove_replica(e, d) {
+                    events.push(PlacementEvent::Retire { step, expert: e, device: d });
+                }
+            }
+        }
+        self.last_cv_before = cv_of(&placement.device_loads(&sums));
+        if self.last_cv_before > self.cfg.cv_threshold {
+            for _ in 0..self.cfg.max_actions {
+                let loads = placement.device_loads(&sums);
+                if cv_of(&loads) <= self.cfg.cv_threshold {
+                    break;
+                }
+                let Some((expert, device)) = plan_replication(placement, &sums, &loads) else {
+                    break;
+                };
+                if placement.add_replica(expert, device) {
+                    events.push(PlacementEvent::Replicate { step, expert, device });
+                }
+            }
+        }
+        self.last_cv_after = cv_of(&placement.device_loads(&sums));
+        if !events.is_empty() {
+            self.window.clear();
+        }
+        events
+    }
+
+    /// Per-expert totals over the current window.
+    fn window_sums(&self, num_experts: usize) -> Vec<u64> {
+        let mut sums = vec![0u64; num_experts];
+        for step_counts in &self.window {
+            for (s, &c) in sums.iter_mut().zip(step_counts) {
+                *s += c;
+            }
+        }
+        sums
+    }
+}
+
+/// The single replication that helps most: the expert with the highest
+/// per-replica load share, placed on the least-loaded device not
+/// already hosting it.  Ties break to the lowest id on both axes; no
+/// candidate device → `None`.
+fn plan_replication(
+    placement: &ExpertPlacement, sums: &[u64], loads: &[u64],
+) -> Option<(usize, usize)> {
+    let mut order: Vec<usize> = (0..placement.num_experts()).collect();
+    order.sort_by(|&a, &b| {
+        let share_a = sums[a] as f64 / placement.replicas(a).len() as f64;
+        let share_b = sums[b] as f64 / placement.replicas(b).len() as f64;
+        share_b.partial_cmp(&share_a).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for e in order {
+        if sums[e] == 0 {
+            break;
+        }
+        let device = loads
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| !placement.replicas(e).contains(d))
+            .min_by_key(|&(d, &l)| (l, d))
+            .map(|(d, _)| d);
+        if let Some(d) = device {
+            return Some((e, d));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(
+        rb: &mut Rebalancer, p: &mut ExpertPlacement, counts: &[u64], steps: u64,
+    ) -> Vec<PlacementEvent> {
+        let mut events = Vec::new();
+        for s in 0..steps {
+            events.extend(rb.observe(s, counts, p));
+        }
+        events
+    }
+
+    /// Satellite regression: an all-zero count window (empty decode
+    /// step / telemetry gap) must yield CV 0.0 — not NaN — so the
+    /// threshold comparison is well-defined and the rebalancer stays
+    /// quiet instead of acting on garbage.
+    #[test]
+    fn all_zero_window_is_well_defined() {
+        let mut p = ExpertPlacement::new(4, 2);
+        let mut rb = Rebalancer::new(RebalanceConfig { window: 3, ..Default::default() });
+        let events = feed(&mut rb, &mut p, &[0, 0, 0, 0], 10);
+        assert!(events.is_empty(), "all-zero windows must not act");
+        assert_eq!(rb.last_cv_before(), 0.0, "CV of an all-zero window is 0, not NaN");
+        assert!(!rb.last_cv_before().is_nan());
+        assert_eq!(p.replica_count(), 4, "placement untouched");
+    }
+
+    #[test]
+    fn hot_expert_replicates_onto_underloaded_device() {
+        // E=4 on D=2 (homes 0,1,0,1): expert 0 is hot, so device 0
+        // carries 400/step vs device 1's 200 → CV 1/3 > 0.25.
+        let mut p = ExpertPlacement::new(4, 2);
+        let mut rb = Rebalancer::new(RebalanceConfig {
+            cv_threshold: 0.25,
+            window: 4,
+            max_actions: 4,
+        });
+        let events = feed(&mut rb, &mut p, &[300, 100, 100, 100], 4);
+        assert_eq!(
+            events,
+            vec![PlacementEvent::Replicate { step: 3, expert: 0, device: 1 }],
+            "hottest expert replicates onto the underloaded device, once"
+        );
+        assert!((rb.last_cv_before() - 1.0 / 3.0).abs() < 1e-9);
+        // e0's window sum 1200 now splits 600/600, so the device loads
+        // become 600+400 = 1000 vs 600+400+400 = 1400 → CV 1/6
+        assert!((rb.last_cv_after() - 1.0 / 6.0).abs() < 1e-9);
+        assert!(rb.last_cv_after() <= 0.25, "CV drops below threshold");
+        assert_eq!(p.replicas(0), &[0, 1]);
+    }
+
+    #[test]
+    fn events_fire_exactly_once_per_state_change() {
+        let mut p = ExpertPlacement::new(4, 2);
+        let mut rb = Rebalancer::new(RebalanceConfig {
+            cv_threshold: 0.25,
+            window: 2,
+            max_actions: 4,
+        });
+        // keep feeding the same hot schedule well past the first action:
+        // once replicated, the window CV stays under threshold and no
+        // duplicate Replicate events may appear
+        let events = feed(&mut rb, &mut p, &[300, 100, 100, 100], 40);
+        let replicates = events
+            .iter()
+            .filter(|e| matches!(e, PlacementEvent::Replicate { expert: 0, device: 1, .. }))
+            .count();
+        assert_eq!(replicates, 1, "placement events are exactly-once: {events:?}");
+    }
+
+    #[test]
+    fn cold_expert_retires_extra_replicas() {
+        let mut p = ExpertPlacement::new(4, 2);
+        p.add_replica(0, 1);
+        let mut rb = Rebalancer::new(RebalanceConfig { window: 2, ..Default::default() });
+        // expert 0 went cold; its non-home replica on device 1 retires.
+        // (The surviving load is balanced — e2 on device 0 vs e1+e3 on
+        // device 1 — so the retirement is the only action.)
+        let events = feed(&mut rb, &mut p, &[0, 50, 100, 50], 2);
+        assert_eq!(events, vec![PlacementEvent::Retire { step: 1, expert: 0, device: 1 }]);
+        assert_eq!(p.replicas(0), &[0], "home survives the retirement");
+    }
+
+    #[test]
+    fn zero_threshold_disables_rebalancing() {
+        let mut p = ExpertPlacement::new(4, 2);
+        let mut rb = Rebalancer::new(RebalanceConfig {
+            cv_threshold: 0.0,
+            window: 2,
+            max_actions: 4,
+        });
+        let events = feed(&mut rb, &mut p, &[1000, 0, 0, 0], 20);
+        assert!(events.is_empty(), "threshold 0 is the inert baseline");
+        assert_eq!(p.replica_count(), 4);
+    }
+}

@@ -22,6 +22,11 @@
 //!   sampling over one logits row (slot-isolated rng streams).
 //! * [`expert_stats`] — per-expert routing load telemetry (the paper's
 //!   imbalance story made observable: padding waste, load CV).
+//! * [`mesh`]     — simulated expert-parallel device mesh: an expert →
+//!   (device, replica set) placement table, a shortcut-connected
+//!   overlap cost model (`max(compute, comm)` vs the serial
+//!   `compute + comm`), and a telemetry-driven hot-expert rebalancer —
+//!   with `ep_degree: 1` bit-identical to no mesh at all.
 //! * [`trace`]    — reproducible arrival-process generation (Poisson,
 //!   bursty) for the serving experiments.
 //! * [`engine`]   — ties it together around [`crate::runtime::Runtime`]:
@@ -43,6 +48,7 @@ pub mod engine;
 pub mod expert_stats;
 pub mod frontend;
 pub mod kvcache;
+pub mod mesh;
 pub mod request;
 pub mod sampling;
 pub mod scheduler;
@@ -66,7 +72,11 @@ pub use frontend::{
     RetryPolicy, ServeFrontend, ServingEngine, StreamEvent, TokenStream,
 };
 pub use sampling::sample_logits;
-pub use expert_stats::ExpertStats;
+pub use expert_stats::{cv_of, ExpertStats};
+pub use mesh::{
+    ExpertPlacement, MeshConfig, MeshSim, MeshStats, OverlapModel, PlacementEvent,
+    RebalanceConfig, Rebalancer, StepTime,
+};
 pub use kvcache::host_tier::{
     HostOp, HostTier, HostTierConfig, HostTierStats, PrefixKv,
 };

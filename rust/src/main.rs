@@ -153,9 +153,11 @@ fn serve(args: &[String]) -> Result<()> {
         .flag("shed-depth", "0", "shed arrivals when the queue reaches this depth (0 = off)")
         .switch("chunked", "chunked prefill: co-schedule prompt chunks with decode steps")
         .flag("chunk-tokens", "16", "per-step prefill token budget (chunked mode)")
-        .switch("adaptive-chunking", "size the prefill chunk budget from observed load (chunked mode)")
+        .switch("fixed-chunking", "restore the fixed per-step chunk budget (adaptive sizing is the default)")
         .flag("overcommit-factor", "1", "admit KV reservations up to free-pages × this factor (1 = strict)")
         .flag("host-tier-mb", "0", "host KV tier capacity in MiB for swap/spill (0 = off)")
+        .flag("ep-degree", "1", "devices in the simulated expert-parallel mesh (1 = no mesh)")
+        .flag("rebalance-cv", "0", "device-load CV threshold for hot-expert replication (0 = off)")
         .switch("stream", "per-token streaming: report time-to-first-streamed-token")
         .flag("replicas", "1", "engine replicas behind the prefix-affinity router")
         .flag("kill-replica-at-ms", "0", "kill replica 0 at this wall time (0 = off; needs --replicas > 1)");
@@ -166,9 +168,11 @@ fn serve(args: &[String]) -> Result<()> {
         expert_telemetry: true,
         chunked_prefill: a.get_bool("chunked"),
         prefill_chunk_tokens: a.get_usize("chunk-tokens"),
-        adaptive_chunking: a.get_bool("adaptive-chunking"),
+        adaptive_chunking: !a.get_bool("fixed-chunking"),
         overcommit_factor: a.get_f64("overcommit-factor"),
         host_tier_bytes: a.get_usize("host-tier-mb") * 1024 * 1024,
+        ep_degree: a.get_usize("ep-degree").max(1),
+        rebalance_cv: a.get_f64("rebalance-cv"),
         ..Default::default()
     };
     let replicas = a.get_usize("replicas").max(1);
@@ -409,6 +413,34 @@ fn serve(args: &[String]) -> Result<()> {
             es.total(),
             es.load_cv(),
             hottest.join(" ")
+        );
+    }
+    // simulated expert-parallel mesh (--ep-degree > 1): where those
+    // routed tokens' FLOPs and bytes landed, and what overlap bought
+    if let Some(mesh) = engine.mesh() {
+        let ms = mesh.stats();
+        ms.check();
+        println!(
+            "ep mesh ({} devices): {} tokens over {} steps  comm {}  \
+             step-time overlap ratio {:.3} (serial {:.1} ms → overlapped {:.1} ms)",
+            mesh.placement().ep_degree(),
+            ms.routed_tokens,
+            ms.steps,
+            scattermoe::metrics::fmt_bytes(ms.total_comm_bytes()),
+            ms.overlap_ratio(),
+            ms.serial_s * 1e3,
+            ms.overlapped_s * 1e3,
+        );
+        println!(
+            "ep placement: {} replicas / {} experts  {} replications  {} retirements  \
+             device-load CV {:.3} (last rebalance window {:.3} → {:.3})",
+            mesh.placement().replica_count(),
+            mesh.placement().num_experts(),
+            ms.replications,
+            ms.retirements,
+            ms.device_load_cv(),
+            mesh.cv_before_last_rebalance(),
+            mesh.cv_after_last_rebalance(),
         );
     }
     Ok(())

@@ -507,6 +507,111 @@ impl KvCacheShape {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Expert parallelism: dispatch/combine comm vs shortcut overlap
+// ---------------------------------------------------------------------------
+
+/// Expert-parallel decode-step geometry — the analytic twin of the
+/// serving mesh's cost model (`coordinator::mesh::overlap`): experts
+/// sharded over `ep_degree` devices, every routed slot's activation
+/// dispatched to its expert's device and its output combined back.  A
+/// serial schedule pays `compute + comm` per step; the shortcut-
+/// connected schedule overlaps the two phases and pays
+/// `max(compute, comm)`.
+#[derive(Clone, Copy, Debug)]
+pub struct EpStepShape {
+    /// Devices the experts are sharded over (1 = no expert parallelism).
+    pub ep_degree: usize,
+    /// Activation bytes moved per routed slot, each direction.
+    pub bytes_per_token: usize,
+    /// Per-device expert FFN throughput, tokens/s.
+    pub compute_tok_s: f64,
+    /// Per-device interconnect bandwidth, bytes/s.
+    pub link_bytes_s: f64,
+}
+
+impl EpStepShape {
+    /// The serve bench's mesh configuration (`OverlapModel::default`
+    /// rates at 2 devices).
+    pub fn serve_default() -> Self {
+        EpStepShape {
+            ep_degree: 2,
+            bytes_per_token: 2048,
+            compute_tok_s: 1e6,
+            link_bytes_s: 4e9,
+        }
+    }
+
+    /// One-direction wire bytes for a device holding `tokens` routed
+    /// slots: with experts spread uniformly at random over `D` devices a
+    /// `(D-1)/D` fraction of slots originate off-device.  Integer
+    /// arithmetic matches the mesh ledger; `D = 1` moves nothing.
+    pub fn device_dispatch_bytes(&self, tokens: usize) -> usize {
+        if self.ep_degree <= 1 {
+            return 0;
+        }
+        tokens * self.bytes_per_token * (self.ep_degree - 1) / self.ep_degree
+    }
+
+    /// Comm seconds for one step: the slowest device's dispatch plus the
+    /// symmetric combine.
+    pub fn comm_s(&self, device_tokens: &[usize]) -> f64 {
+        let worst = device_tokens
+            .iter()
+            .map(|&t| self.device_dispatch_bytes(t))
+            .max()
+            .unwrap_or(0);
+        2.0 * worst as f64 / self.link_bytes_s
+    }
+
+    /// Compute seconds for one step: the hottest device binds.
+    pub fn compute_s(&self, device_tokens: &[usize]) -> f64 {
+        device_tokens.iter().copied().max().unwrap_or(0) as f64 / self.compute_tok_s
+    }
+
+    /// Serial schedule: dispatch, then compute, then combine.
+    pub fn serial_step_s(&self, device_tokens: &[usize]) -> f64 {
+        self.compute_s(device_tokens) + self.comm_s(device_tokens)
+    }
+
+    /// Shortcut-connected schedule: comm for chunk `i+1` rides under
+    /// compute for chunk `i`, so the longer phase hides the shorter.
+    pub fn overlapped_step_s(&self, device_tokens: &[usize]) -> f64 {
+        self.compute_s(device_tokens).max(self.comm_s(device_tokens))
+    }
+
+    /// `overlapped / serial` — 1.0 for an empty step, 0.5 at perfect
+    /// compute/comm balance, approaching 1.0 when either phase
+    /// dominates.
+    pub fn overlap_ratio(&self, device_tokens: &[usize]) -> f64 {
+        let serial = self.serial_step_s(device_tokens);
+        if serial == 0.0 {
+            return 1.0;
+        }
+        self.overlapped_step_s(device_tokens) / serial
+    }
+
+    /// One hot-expert replication action, in model form: move half the
+    /// hottest device's load onto the coldest device (the rebalancer's
+    /// deterministic split of a replicated expert's counts).  Returns
+    /// the post-action per-device loads.
+    pub fn replicate_hottest(&self, device_tokens: &[usize]) -> Vec<usize> {
+        let mut loads = device_tokens.to_vec();
+        if loads.len() < 2 {
+            return loads;
+        }
+        let hot = (0..loads.len()).max_by_key(|&i| loads[i]).unwrap_or(0);
+        let cold = (0..loads.len()).min_by_key(|&i| loads[i]).unwrap_or(0);
+        if loads[hot] == loads[cold] {
+            return loads; // already balanced — nothing worth moving
+        }
+        let moved = loads[hot] / 2;
+        loads[hot] -= moved;
+        loads[cold] += moved;
+        loads
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -781,6 +886,72 @@ mod tests {
         // and the host tier that pins them is a concrete byte figure
         let pin = kv.host_tier_pin_bytes(8, 120, 0, v);
         assert_eq!(pin, 2 * kv.layers * v * 8 * kv.page_size * kv.row_bytes());
+    }
+
+    #[test]
+    fn ep_degree_one_pays_no_comm() {
+        let ep = EpStepShape { ep_degree: 1, ..EpStepShape::serve_default() };
+        assert_eq!(ep.device_dispatch_bytes(1000), 0);
+        assert_eq!(ep.comm_s(&[1000]), 0.0);
+        let r = ep.overlap_ratio(&[1000]);
+        assert!((r - 1.0).abs() < 1e-12, "no comm means nothing to hide: {r}");
+        assert_eq!(ep.overlap_ratio(&[]), 1.0, "empty step well-defined");
+    }
+
+    #[test]
+    fn cross_device_fraction_tracks_degree() {
+        let mk = |d| EpStepShape {
+            ep_degree: d,
+            bytes_per_token: 10,
+            ..EpStepShape::serve_default()
+        };
+        // (D-1)/D of 100 tokens × 10 B cross the wire
+        assert_eq!(mk(2).device_dispatch_bytes(100), 500);
+        assert_eq!(mk(4).device_dispatch_bytes(100), 750);
+        assert_eq!(mk(8).device_dispatch_bytes(100), 875);
+    }
+
+    #[test]
+    fn overlap_halves_balanced_steps_and_never_loses() {
+        // rates tuned so compute == comm exactly: the 2.048 GB/s link
+        // moves a token's 2 × 1024 cross-device bytes in the same 1 µs
+        // the FFN spends computing it
+        let tuned = EpStepShape {
+            ep_degree: 2,
+            bytes_per_token: 2048,
+            compute_tok_s: 1e6,
+            link_bytes_s: 2.048e9,
+        };
+        assert!((tuned.overlap_ratio(&[500, 500]) - 0.5).abs() < 1e-12);
+        // the serve-default rates on the skewed trace sit strictly
+        // between the 0.5 floor and 1.0: compute 300 µs, comm 153.6 µs
+        // → serial 453.6 µs, overlapped 300 µs
+        let serve = EpStepShape::serve_default();
+        let r = serve.overlap_ratio(&[300, 100]);
+        assert!((r - 300.0 / 453.6).abs() < 1e-9, "ratio {r}");
+        assert!((0.5..1.0).contains(&r));
+        assert!(
+            serve.overlapped_step_s(&[300, 100]) <= serve.serial_step_s(&[300, 100]),
+            "overlap can never lose to the serial schedule"
+        );
+    }
+
+    #[test]
+    fn replicating_the_hot_expert_cuts_step_time() {
+        let ep = EpStepShape::serve_default();
+        let before = [400, 100];
+        let after = ep.replicate_hottest(&before);
+        assert_eq!(after, vec![200, 300], "half the hot load moves to the cold device");
+        assert_eq!(
+            after.iter().sum::<usize>(),
+            before.iter().sum::<usize>(),
+            "replication moves tokens, never creates them"
+        );
+        assert!(ep.overlapped_step_s(&after) < ep.overlapped_step_s(&before));
+        assert!(ep.serial_step_s(&after) < ep.serial_step_s(&before));
+        // a balanced mesh has nothing worth moving
+        assert_eq!(ep.replicate_hottest(&[250, 250]), vec![250, 250]);
+        assert_eq!(ep.replicate_hottest(&[7]), vec![7], "one device, no peer");
     }
 
     #[test]

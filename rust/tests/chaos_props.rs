@@ -32,7 +32,9 @@ use scattermoe::coordinator::frontend::{
     RetryPolicy, ServeFrontend, StreamEvent, TokenStream,
 };
 use scattermoe::coordinator::trace::{generate, Arrival, TraceConfig};
-use scattermoe::coordinator::SamplingParams;
+use scattermoe::coordinator::{
+    MeshConfig, MeshSim, OverlapModel, PlacementEvent, RebalanceConfig, SamplingParams,
+};
 use scattermoe::rng::Rng;
 use scattermoe::testkit::{check, prop_assert, PairGen, U64Range};
 
@@ -846,6 +848,243 @@ fn scripted_replica_death_drains_reoffers_and_replays() {
     // per-replica split covers the merged accounting exactly
     let split: u64 = report.per_replica.iter().map(ServeReport::accounted).sum();
     assert_eq!(split, n, "per-replica reports cover each request once");
+}
+
+// ---------------------------------------------------------------------------
+// Expert-parallel mesh chaos: placement conservation + rebalance scripts
+// ---------------------------------------------------------------------------
+
+/// Mesh evidence one chaos run produces, on top of the usual outcome
+/// accounting.
+struct MeshChaosRun {
+    report: ServeReport,
+    completed: BTreeMap<u64, Vec<i32>>,
+    routed_total: u64,
+    device_total: u64,
+    expert_total: u64,
+    events: Vec<PlacementEvent>,
+}
+
+/// `run_chaos` over a meshed sim: same front-end policies, cancels and
+/// deadlines, with `audit()` after every step now also reconciling the
+/// mesh's per-device ledgers.  Returns the placement evidence the
+/// property asserts on.
+fn run_mesh_chaos(
+    seed: u64, flavor: u64, ep_degree: usize, rebalance_cv: f64,
+    faults: Option<FaultInjector>,
+) -> MeshChaosRun {
+    let mut engine = SimEngine::try_new(SimEngineConfig {
+        ep_degree,
+        rebalance_cv,
+        ..Default::default()
+    })
+    .expect("valid mesh geometry");
+    if let Some(f) = faults {
+        engine.inject_faults(f);
+    }
+    let cfg = FrontendConfig {
+        intake: IntakePolicy {
+            max_pending: 64,
+            shed_queue_depth: Some(48),
+            shed_min_free_frac: None,
+        },
+        ttft_deadline_s: Some(0.25),
+        deadline_s: Some(1.5),
+        retry: RetryPolicy { max_retries: 3, base_backoff_s: 0.001, ..Default::default() },
+        clock: ClockMode::Virtual { tick_s: 0.01 },
+        stream: false,
+    };
+    let mut fe = ServeFrontend::new(engine, cfg);
+    fe.push_arrivals(arrivals_for(seed, flavor));
+    let mut cancel_rng = Rng::new(seed ^ 0xCA9CE1);
+    let mut steps = 0u64;
+    loop {
+        let status = fe.step();
+        fe.engine().audit(); // pages AND mesh ledgers, every step
+        steps += 1;
+        assert!(steps < 50_000, "no-deadlock bound exceeded (seed {seed})");
+        match status {
+            FrontendStatus::Running => {
+                if cancel_rng.below(100) < 7 {
+                    if let Some(&id) = fe.live_ids().first() {
+                        fe.cancel(id);
+                    }
+                }
+            }
+            FrontendStatus::Done | FrontendStatus::Halted => break,
+        }
+    }
+    let expert_total = fe.engine().expert_stats.total();
+    let (routed_total, device_total, events) = fe
+        .engine()
+        .mesh()
+        .map(|m| {
+            m.stats().check();
+            (
+                m.stats().routed_tokens,
+                m.stats().device_tokens.iter().sum(),
+                m.events().to_vec(),
+            )
+        })
+        .unwrap_or((expert_total, expert_total, Vec::new()));
+    MeshChaosRun {
+        completed: completed_tokens(fe.outcomes()),
+        report: fe.report(),
+        routed_total,
+        device_total,
+        expert_total,
+        events,
+    }
+}
+
+/// Placement events must record each replica-set state change exactly
+/// once: a `Replicate` of an already-live replica or a `Retire` of an
+/// absent one means the rebalancer double-fired.
+fn assert_events_exactly_once(events: &[PlacementEvent]) -> Result<(), String> {
+    let mut live: std::collections::BTreeSet<(usize, usize)> = Default::default();
+    for e in events {
+        match *e {
+            PlacementEvent::Replicate { expert, device, .. } => {
+                if !live.insert((expert, device)) {
+                    return Err(format!("duplicate Replicate of e{expert} on d{device}"));
+                }
+            }
+            PlacementEvent::Retire { expert, device, .. } => {
+                if !live.remove(&(expert, device)) {
+                    return Err(format!("Retire of absent replica e{expert} on d{device}"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// THE expert-parallel acceptance property: under random skewed routing
+/// (the sim's hot-biased synthetic expert schedule) on a 2–4 device
+/// mesh with hot-expert rebalancing armed, per-device routed counts
+/// conserve exactly (sum over devices == the telemetry's expert_counts
+/// total, re-checked with the byte ledgers after every step by
+/// `audit()`), placement events fire exactly once per state change, and
+/// every token is bit-identical to the meshless (`ep_degree: 1`) run —
+/// fault-free runs agree on every outcome, and chaos-run survivors
+/// agree with the fault-free baseline.
+#[test]
+fn prop_mesh_placement_conserves_counts_and_tokens() {
+    check(
+        30,
+        PairGen(U64Range(0, 1 << 20), U64Range(0, 4)),
+        |&(seed, flavor)| {
+            let ep_degree = 2 + (flavor % 3) as usize; // 2, 3 or 4 devices
+            // meshless fault-free baseline: the bit-identity reference
+            let baseline = run_chaos(seed, flavor, false, None);
+            prop_assert(baseline.report.fatal.is_none(), "fault-free run halted")?;
+            // same schedule, mesh on, fault-free: outcomes must be equal
+            let meshed = run_mesh_chaos(seed, flavor, ep_degree, 0.25, None);
+            prop_assert(
+                meshed.completed == baseline.completed,
+                "an observational mesh changed a token or an outcome",
+            )?;
+            prop_assert(
+                meshed.device_total == meshed.routed_total
+                    && meshed.routed_total == meshed.expert_total,
+                "per-device routed counts lost conservation",
+            )?;
+            prop_assert(
+                assert_events_exactly_once(&meshed.events).is_ok(),
+                "placement events double-fired",
+            )?;
+            // chaos run over the mesh: seeded transient + permanent
+            // faults; survivors still match the fault-free tokens
+            let chaos = run_mesh_chaos(
+                seed,
+                flavor,
+                ep_degree,
+                0.25,
+                Some(FaultInjector::seeded(seed ^ 0xFA17, 4000, 0.05, 0.002)),
+            );
+            for (tag, tokens) in &chaos.completed {
+                if let Some(base) = baseline.completed.get(tag) {
+                    prop_assert(
+                        tokens == base,
+                        "meshed chaos survivor diverged from fault-free tokens",
+                    )?;
+                }
+            }
+            prop_assert(
+                chaos.device_total == chaos.routed_total
+                    && chaos.routed_total == chaos.expert_total,
+                "chaos run lost per-device count conservation",
+            )?;
+            prop_assert(
+                assert_events_exactly_once(&chaos.events).is_ok(),
+                "chaos placement events double-fired",
+            )?;
+            prop_assert(
+                baseline.report.accounted() == 24
+                    && meshed.report.accounted() == 24
+                    && chaos.report.accounted() == 24,
+                "mesh outcome accounting lost arrivals",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+/// Scripted hot-expert rebalance acceptance: a sustained skewed
+/// schedule trips the CV threshold, the rebalancer replicates the hot
+/// expert onto the underloaded device, and the measured device-load CV
+/// drops from above the threshold to at-or-below it — then stays there
+/// (no further events) while the skew persists, because the replicated
+/// placement now absorbs it.
+#[test]
+fn scripted_hot_expert_rebalance_drops_cv_below_threshold() {
+    let threshold = 0.25;
+    let mut mesh = MeshSim::new(MeshConfig {
+        ep_degree: 2,
+        num_experts: 4,
+        rebalance: Some(RebalanceConfig {
+            cv_threshold: threshold,
+            window: 4,
+            max_actions: 4,
+        }),
+        model: OverlapModel::default(),
+    });
+    // hot schedule: e0 (home device 0) carries 3x its peers — device
+    // loads 400 vs 200 per step, CV 1/3 > threshold
+    for _ in 0..4 {
+        mesh.observe_step(&[300, 100, 100, 100]);
+    }
+    mesh.stats().check();
+    assert_eq!(mesh.stats().replications, 1, "one replication fixes this skew");
+    assert!(
+        mesh.cv_before_last_rebalance() > threshold,
+        "the window that tripped was over threshold: {}",
+        mesh.cv_before_last_rebalance()
+    );
+    assert!(
+        mesh.cv_after_last_rebalance() <= threshold,
+        "replication must land the CV at or below threshold: {}",
+        mesh.cv_after_last_rebalance()
+    );
+    assert!(mesh.cv_after_last_rebalance() < mesh.cv_before_last_rebalance());
+    assert_events_exactly_once(mesh.events()).expect("exactly-once events");
+    // the same skew, continued: the replicated placement absorbs it
+    // without further actions, and the ledgers keep reconciling
+    let events_after_fix = mesh.events().len();
+    for _ in 0..12 {
+        mesh.observe_step(&[300, 100, 100, 100]);
+    }
+    mesh.stats().check();
+    assert_eq!(
+        mesh.events().len(),
+        events_after_fix,
+        "a balanced placement must not keep firing events"
+    );
+    assert!(
+        mesh.stats().device_load_cv() < 1.0 / 3.0,
+        "cumulative device loads rebalanced: CV {}",
+        mesh.stats().device_load_cv()
+    );
 }
 
 /// An impossible request (prompt beyond the compiled width) rejects at

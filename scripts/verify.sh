@@ -74,7 +74,9 @@ expected = {
          "serve chunked TPOT p50", "serve chunked TPOT p99",
          "serve replicas goodput", "serve replicas p99 TTFT",
          "serve replicas reroute count",
-         "serve overcommit admitted width", "serve overcommit p99 TTFT"],
+         "serve overcommit admitted width", "serve overcommit p99 TTFT",
+         "serve ep step-time overlap ratio", "serve ep comm bytes",
+         "serve ep load CV"],
     "bench_reports/BENCH_memory.json":
         ["kv dense (worst case)", "kv paged ctx=", "kv admitted width",
          "kv retained pool bytes", "kv hot-prompt pages written",
